@@ -1,0 +1,69 @@
+"""Shared benchmark environment: one profiling campaign + fitted models,
+cached on disk so every per-figure benchmark reuses the same §5.4 models."""
+
+from __future__ import annotations
+
+import json
+import os
+import pickle
+import time
+from typing import Dict, Tuple
+
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+os.makedirs(RESULTS_DIR, exist_ok=True)
+
+_CACHE = os.path.join(RESULTS_DIR, "synpa_models.pkl")
+
+
+def get_env(force: bool = False):
+    """(machine, models, workloads_dict) — cached across benchmarks."""
+    from repro.core import isc
+    from repro.smt import machine as mc
+    from repro.smt import training, workloads
+
+    machine = mc.SMTMachine(mc.MachineParams(), seed=0)
+    wls = workloads.make_workloads(machine)
+    if not force and os.path.exists(_CACHE):
+        with open(_CACHE, "rb") as f:
+            payload = pickle.load(f)
+        from repro.core import regression
+        import jax.numpy as jnp
+
+        models = {
+            name: regression.CategoryModel(
+                coeffs=jnp.asarray(c), mse=jnp.asarray(m), n_categories=n)
+            for name, (c, m, n) in payload.items()
+        }
+        return machine, models, wls
+    t0 = time.time()
+    models, _data = training.build_all_models(
+        machine, solo_quanta=60, pair_quanta=12)
+    payload = {
+        name: (np.asarray(m.coeffs), np.asarray(m.mse), m.n_categories)
+        for name, m in models.items()
+    }
+    with open(_CACHE, "wb") as f:
+        pickle.dump(payload, f)
+    print(f"# fitted SYNPA models in {time.time() - t0:.1f}s (cached)")
+    return machine, models, wls
+
+
+def save_json(name: str, obj) -> str:
+    path = os.path.join(RESULTS_DIR, name)
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=2)
+    return path
+
+
+def load_json(name: str):
+    path = os.path.join(RESULTS_DIR, name)
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return None
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,55 @@
+"""Paper Figure 6: SYNPA3_N vs SYNPA4_N speedups over Linux (TT and IPC).
+
+Validates: SYNPA4 ~38% TT speedup on Mixed workloads; SYNPA4 >= SYNPA3 with
+large divergence on high-horizontal-waste workloads; IPC gains small.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row
+from benchmarks.workload_race import group_mean, race, speedups
+
+
+def main(quick: bool = False) -> str:
+    from repro.core import isc
+    from repro.core.baselines import LinuxScheduler
+    from repro.core.synpa import SynpaScheduler
+    from benchmarks.common import get_env
+
+    _m, models, _w = get_env()
+    t0 = time.time()
+    res = race(
+        "fig6_race.json",
+        {
+            "linux": lambda: LinuxScheduler(),
+            "SYNPA3_N": lambda: SynpaScheduler(isc.SYNPA3_N,
+                                               models["SYNPA3_N"]),
+            "SYNPA4_N": lambda: SynpaScheduler(isc.SYNPA4_N,
+                                               models["SYNPA4_N"]),
+        },
+        quick=quick,
+    )
+    us = (time.time() - t0) * 1e6 / max(len(res), 1)
+    tt, ipc = speedups(res)
+    s4_fb = group_mean(tt["SYNPA4_N"], "fb")
+    s3_fb = group_mean(tt["SYNPA3_N"], "fb")
+    s4_all = float(np.mean(list(tt["SYNPA4_N"].values())))
+    ipc4 = float(np.mean(list(ipc["SYNPA4_N"].values())))
+    diverging = sorted(
+        w for w in tt["SYNPA4_N"]
+        if tt["SYNPA4_N"][w] - tt["SYNPA3_N"][w] > 0.10)
+    derived = (f"mixed_TT: SYNPA4 {100*(s4_fb-1):.1f}% (paper ~38%), "
+               f"SYNPA3 {100*(s3_fb-1):.1f}%; all_TT SYNPA4 "
+               f"{100*(s4_all-1):.1f}%; IPC x{ipc4:.3f}; "
+               f"SYNPA4>>SYNPA3 on {diverging[:6]}")
+    if not quick:
+        assert s4_fb > s3_fb - 0.02 and s4_fb > 1.15
+    return csv_row("fig6_synpa3_vs_4", us, derived)
+
+
+if __name__ == "__main__":
+    print(main())

@@ -1,0 +1,55 @@
+"""Paper Figure 8: the three SYNPA4 variants (GT100 handling).
+
+Validates §7.2: the variants are statistically tied; SYNPA4_R-FEBE is the
+most consistent (always >= Linux in TT).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row, get_env
+from benchmarks.workload_race import group_mean, race, speedups
+
+
+def main(quick: bool = False) -> str:
+    from repro.core import isc
+    from repro.core.baselines import LinuxScheduler
+    from repro.core.synpa import SynpaScheduler
+
+    _m, models, _w = get_env()
+    t0 = time.time()
+    res = race(
+        "fig8_race.json",
+        {
+            "linux": lambda: LinuxScheduler(),
+            "SYNPA4_N": lambda: SynpaScheduler(isc.SYNPA4_N,
+                                               models["SYNPA4_N"]),
+            "SYNPA4_R-FE": lambda: SynpaScheduler(isc.SYNPA4_R_FE,
+                                                  models["SYNPA4_R-FE"]),
+            "SYNPA4_R-FEBE": lambda: SynpaScheduler(
+                isc.SYNPA4_R_FEBE, models["SYNPA4_R-FEBE"]),
+        },
+        quick=quick,
+    )
+    us = (time.time() - t0) * 1e6 / max(len(res), 1)
+    tt, _ipc = speedups(res)
+    means = {p: float(np.mean(list(v.values())))
+             for p, v in tt.items() if p != "linux"}
+    frac_ge1 = {
+        p: float(np.mean([v >= 0.995 for v in tt[p].values()]))
+        for p in means
+    }
+    spread = max(means.values()) - min(means.values())
+    derived = (f"variant_mean_TT={ {p: round(v,3) for p,v in means.items()} }; "
+               f"spread={spread:.3f} (tied, paper finding); "
+               f"frac_workloads_>=linux={ {p: round(v,2) for p,v in frac_ge1.items()} }")
+    if not quick:
+        assert spread < 0.08, "GT100 variants should be statistically tied"
+    return csv_row("fig8_synpa4_variants", us, derived)
+
+
+if __name__ == "__main__":
+    print(main())

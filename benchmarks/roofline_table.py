@@ -1,0 +1,62 @@
+"""Deliverable (g): assemble the roofline table from the dry-run records.
+
+Reads the cached per-cell JSONs produced by ``repro.launch.dryrun`` and
+prints the full (arch x shape) table with the three roofline terms, the
+dominant bottleneck, the useful-FLOPs ratio and per-device memory.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+
+from benchmarks.common import RESULTS_DIR, csv_row, save_json
+
+
+def load_table(mode: str = "full", mesh: str = "16x16"):
+    paths = sorted(glob.glob(os.path.join(
+        RESULTS_DIR, "dryrun", f"*__{mesh}__{mode}.json")))
+    rows = []
+    for p in paths:
+        with open(p) as f:
+            r = json.load(f)
+        if r.get("mesh") == mesh:   # '*__16x16__*' also globs '2x16x16'
+            rows.append(r)
+    return rows
+
+
+def main(quick: bool = False) -> str:
+    t0 = time.time()
+    rows = load_table()
+    mp_rows = load_table(mode="scan", mesh="2x16x16")
+    us = (time.time() - t0) * 1e6
+    if not rows:
+        return csv_row("roofline_table", us,
+                       "PENDING (dry-run sweep still compiling)")
+    from repro.launch.roofline import RooflineTerms, format_table
+
+    terms = []
+    for r in rows:
+        terms.append(RooflineTerms(
+            arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+            n_devices=r["n_devices"], hlo_flops=r["hlo_flops"],
+            hlo_bytes=r["hlo_bytes"], collective_bytes=r["collective_bytes"],
+            collective_breakdown=r["collective_breakdown"],
+            model_flops_global=r["model_flops_global"],
+            bytes_per_device=r.get("bytes_per_device")))
+    print(format_table(terms))
+    save_json("roofline_table.json", rows)
+    dominants = {}
+    for r in rows:
+        dominants[r["dominant"]] = dominants.get(r["dominant"], 0) + 1
+    n_fit = sum(1 for r in rows if r.get("fits_hbm"))
+    derived = (f"cells={len(rows)} single-pod baselined, "
+               f"{len(mp_rows)} multi-pod compiled; dominant={dominants}; "
+               f"fits_16GiB={n_fit}/{len(rows)}")
+    return csv_row("roofline_table", us, derived)
+
+
+if __name__ == "__main__":
+    print(main())

@@ -1,0 +1,59 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``--quick`` subsamples the
+workload suite for CI-speed runs.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", type=str, default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (
+        colocation,
+        fig2_stacks,
+        fig6_synpa3_vs_4,
+        fig7_ccdf,
+        fig8_variants,
+        fig9_hysched,
+        roofline_table,
+        table3_model,
+    )
+
+    suites = [
+        ("fig2", fig2_stacks.main),
+        ("table3", table3_model.main),
+        ("fig6", fig6_synpa3_vs_4.main),
+        ("fig7", fig7_ccdf.main),
+        ("fig8", fig8_variants.main),
+        ("fig9", fig9_hysched.main),
+        ("colocation", colocation.main),
+        ("roofline", roofline_table.main),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites:
+        if args.only and args.only != name:
+            continue
+        try:
+            print(fn(quick=args.quick), flush=True)
+        except Exception:
+            failures += 1
+            print(f"{name},nan,FAILED", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

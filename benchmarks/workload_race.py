@@ -1,0 +1,71 @@
+"""Shared workload-race engine for Figures 6/8/9: run policies over the 35
+workloads with repeats + outlier filtering, cache per-figure results."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Sequence
+
+import numpy as np
+
+from benchmarks.common import load_json, save_json
+
+
+def race(
+    cache_name: str,
+    policy_factories: Dict[str, Callable[[], object]],
+    workload_names: Sequence[str] = None,
+    repeats: int = 4,
+    quick: bool = False,
+    force: bool = False,
+) -> Dict:
+    """Returns {workload: {policy: {tt, avg_tt, ipc}}} (TT = makespan, s)."""
+    from repro.smt import metrics, workloads
+    from benchmarks.common import get_env
+
+    cached = None if force else load_json(cache_name)
+    machine, models, wls = get_env()
+    names = list(workload_names or wls.keys())
+    if quick:
+        names = [n for n in names
+                 if n in ("fb0", "fb1", "fb2", "be0", "be1", "fe0")]
+        repeats = 2
+    need = [w for w in names
+            if not cached or w not in cached
+            or any(p not in cached[w] for p in policy_factories)]
+    results = dict(cached or {})
+    for w in need:
+        profs = workloads.workload_profiles(wls[w])
+        results.setdefault(w, {})
+        for pname, factory in policy_factories.items():
+            if pname in results[w]:
+                continue
+            st = metrics.run_repeated(
+                machine, profs, factory, repeats=repeats,
+                base_seed=abs(hash(w)) % 100_000)
+            results[w][pname] = {
+                "tt": st.makespan_s,
+                "avg_tt": st.avg_turnaround_s,
+                "ipc": st.ipc_geomean,
+                "cv": st.cv,
+            }
+            save_json(cache_name, results)  # interrupt-safe incremental save
+    save_json(cache_name, results)
+    return {w: results[w] for w in names if w in results}
+
+
+def speedups(results: Dict, baseline: str = "linux"):
+    """{policy: {workload: tt_speedup}} + per-group averages."""
+    out: Dict[str, Dict[str, float]] = {}
+    ipc: Dict[str, Dict[str, float]] = {}
+    for w, row in results.items():
+        base = row[baseline]
+        for pname, r in row.items():
+            out.setdefault(pname, {})[w] = base["tt"] / max(r["tt"], 1e-9)
+            ipc.setdefault(pname, {})[w] = r["ipc"] / max(base["ipc"], 1e-9)
+    return out, ipc
+
+
+def group_mean(per_workload: Dict[str, float], prefix: str) -> float:
+    vals = [v for w, v in per_workload.items() if w.startswith(prefix)]
+    return float(np.mean(vals)) if vals else float("nan")

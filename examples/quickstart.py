@@ -1,0 +1,60 @@
+"""Quickstart: the paper's pipeline end-to-end in ~a minute.
+
+1. Characterise applications with ISC stacks (Figure 2).
+2. Fit the Eq. 4 performance model (Table 3).
+3. Schedule one mixed workload with SYNPA4 vs Linux and compare turnaround.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import isc
+from repro.core.baselines import LinuxScheduler
+from repro.core.synpa import SynpaScheduler
+from repro.smt import machine as mc
+from repro.smt import training, workloads
+from repro.smt.apps import APP_PROFILES
+
+
+def main():
+    machine = mc.SMTMachine(mc.MachineParams(), seed=0)
+
+    # -- 1. ISC stacks ------------------------------------------------------
+    print("== ISC stacks (paper Fig. 2) ==")
+    for prof in APP_PROFILES[:6]:
+        samples, _ = machine.run_solo(prof, 10, noisy=False)
+        c = np.array([s.as_tuple() for s in samples])
+        raw = np.asarray(
+            isc.raw_stack(c[:, 0], c[:, 1], c[:, 2], c[:, 3])).mean(0)
+        case = "GT100" if raw[:3].sum() > 1 else "LT100"
+        print(f"  {prof.name:14s} DI={raw[0]:.2f} FE={raw[1]:.2f} "
+              f"BE={raw[2]:.2f}  height={raw[:3].sum():.2f} ({case})")
+
+    # -- 2. fit the Eq. 4 model --------------------------------------------
+    print("== fitting Eq. 4 models (paper §5.4, reduced campaign) ==")
+    models, _ = training.build_all_models(
+        machine, solo_quanta=30, pair_quanta=6)
+    m4 = models["SYNPA4_R-FEBE"]
+    print(f"  SYNPA4_R-FEBE MSE per category: "
+          f"{np.asarray(m4.mse)[:4].round(4)}")
+
+    # -- 3. race SYNPA4 vs Linux on one mixed workload ----------------------
+    wls = workloads.make_workloads(machine)
+    profs = workloads.workload_profiles(wls["fb1"])
+    print(f"== workload fb1: {[p.name for p in profs]} ==")
+    tt = {}
+    for name, policy in (
+        ("linux", LinuxScheduler()),
+        ("SYNPA4", SynpaScheduler(isc.SYNPA4_R_FEBE, m4)),
+    ):
+        res = machine.run_workload(profs, policy, seed=1)
+        tt[name] = res.makespan_s
+        print(f"  {name:8s} turnaround {res.makespan_s:6.2f}s  "
+              f"IPC geomean {res.ipc_geomean:.3f}")
+    print(f"  -> SYNPA4 speedup over Linux: "
+          f"{100 * (tt['linux'] / tt['SYNPA4'] - 1):.1f}%  (paper: ~38%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""End-to-end training driver: train a ~100M-parameter LM for a few hundred
+steps on synthetic data and verify the loss drops, with checkpoint/resume.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+
+import argparse
+import tempfile
+
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--size", choices=("tiny", "100m"), default="tiny",
+                    help="'100m' is the full-size example config "
+                         "(slow on CPU; the natural choice on a TPU slice)")
+    args = ap.parse_args()
+
+    if args.size == "100m":
+        # ~100M-parameter reduction of the llama3.2 family (same structure).
+        overrides = dict(
+            n_layers=12, d_model=768, n_heads=12, n_kv_heads=4, d_ff=2304,
+            vocab_size=16384, dtype="float32", param_dtype="float32",
+        )
+        batch, seq = 8, 128
+    else:
+        overrides = dict(
+            n_layers=4, d_model=256, n_heads=4, n_kv_heads=2, d_ff=768,
+            vocab_size=4096, dtype="float32", param_dtype="float32",
+        )
+        batch, seq = 4, 96
+    with tempfile.TemporaryDirectory() as ckpt:
+        out = train(
+            args.arch, smoke=True, overrides=overrides,
+            steps=args.steps, batch=batch, seq=seq, lr=3e-3,
+            ckpt_dir=ckpt, ckpt_every=100,
+        )
+    drop = out["first_loss"] - out["final_loss"]
+    print(f"# loss {out['first_loss']:.3f} -> {out['final_loss']:.3f} "
+          f"(drop {drop:.3f}) over {out['steps']} steps")
+    assert drop > 0.5, "training must make clear progress on synthetic data"
+    print("# OK: loss fell by more than 0.5 nats")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.checkpoint.ckpt import load_tree, save_tree
+from repro.checkpoint.manager import CheckpointManager

@@ -1,0 +1,31 @@
+"""Architecture configs (one module per assigned arch) + input shapes."""
+
+from repro.configs.shapes import SHAPES, InputShape, shapes_for
+from repro.configs import (
+    gemma_7b,
+    hymba_1_5b,
+    kimi_k2_1t_a32b,
+    llama3_2_3b,
+    llama_3_2_vision_11b,
+    qwen1_5_0_5b,
+    qwen2_moe_a2_7b,
+    rwkv6_3b,
+    starcoder2_3b,
+    whisper_large_v3,
+)
+
+ARCH_MODULES = {
+    "llama3.2-3b": llama3_2_3b,
+    "qwen1.5-0.5b": qwen1_5_0_5b,
+    "starcoder2-3b": starcoder2_3b,
+    "gemma-7b": gemma_7b,
+    "kimi-k2-1t-a32b": kimi_k2_1t_a32b,
+    "qwen2-moe-a2.7b": qwen2_moe_a2_7b,
+    "llama-3.2-vision-11b": llama_3_2_vision_11b,
+    "whisper-large-v3": whisper_large_v3,
+    "hymba-1.5b": hymba_1_5b,
+    "rwkv6-3b": rwkv6_3b,
+}
+
+CONFIGS = {name: mod.CONFIG for name, mod in ARCH_MODULES.items()}
+SMOKE_CONFIGS = {name: mod.SMOKE_CONFIG for name, mod in ARCH_MODULES.items()}

@@ -1,0 +1,29 @@
+"""qwen2-moe-a2.7b [moe]: 24L d_model=2048 16H (GQA kv=16) d_ff=1408
+vocab=151936, MoE 60 routed top-4 + 4 shared.  [hf:Qwen/Qwen1.5-MoE-A2.7B; hf]"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-moe-a2.7b",
+    family="moe",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1408,
+    vocab_size=151_936,
+    mlp_activation="swiglu",
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    norm="rmsnorm",
+    n_experts=60,
+    n_experts_per_token=4,
+    n_shared_experts=4,
+    moe_d_ff=1408,
+    capacity_factor=1.25,
+)
+
+SMOKE_CONFIG = CONFIG.scaled(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=64, vocab_size=256,
+    n_experts=6, n_experts_per_token=2, n_shared_experts=2, moe_d_ff=64,
+)

@@ -1,0 +1,22 @@
+"""The paper's primary contribution: the SYNPA family of T2C policies.
+
+Layers (paper section in brackets):
+
+* ``isc``        — ISC stack construction and the ISCX_Y repair family (§3-4)
+* ``regression`` — the Eq. 4 per-category performance model (§5.2)
+* ``matching``   — Edmonds' Blossom matching + oracles (§5.3 step 3)
+* ``synpa``      — the quantum-loop SYNPA schedulers (§5.3)
+* ``baselines``  — Linux CFS-like, Hy-Sched, random, oracle (§7)
+* ``colocation`` — beyond-paper: SYNPA applied to TPU-job roofline stacks
+"""
+
+from repro.core import baselines, isc, matching, regression, synpa
+from repro.core.isc import (
+    STACK_METHODS,
+    SYNPA3_N,
+    SYNPA4_N,
+    SYNPA4_R_FE,
+    SYNPA4_R_FEBE,
+    StackMethod,
+)
+from repro.core.synpa import Scheduler, SynpaScheduler

@@ -1,0 +1,123 @@
+"""Beyond-paper: SYNPA applied to TPU-job co-location.
+
+The paper's two-step structure — (1) a bounded-telemetry performance stack
+per workload, (2) a pairwise interference model + Blossom matching — maps
+onto multi-tenant TPU serving directly.  The dry-run roofline decomposition
+*is* the ISC stack of a TPU job:
+
+    ISC category      TPU analogue (from ``launch.roofline``)
+    ---------------   -------------------------------------------------
+    Dispatch (DI)     compute term        (MXU-busy fraction)
+    Frontend (FE)     collective term     (ICI-bound fraction)
+    Backend  (BE)     memory term         (HBM-bandwidth-bound fraction)
+    Horiz. waste (HW) 1 - useful_flops_ratio  (padding/remat/capacity waste)
+
+Two jobs co-located on a slice contend for HBM bandwidth (superlinear, like
+the paper's LLC/DRAM term) and ICI links (like the fetch path), while MXU
+time slices roughly additively.  We reuse the *identical* machinery: job
+stacks -> Eq. 4 model -> Blossom.  For evaluation, jobs are translated into
+``AppProfile``s and run on the calibrated interference simulator, giving a
+ground-truth makespan to score placements against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.smt.apps import AppProfile, Phase
+
+
+def job_stack_from_record(record: Dict) -> np.ndarray:
+    """Dry-run roofline record -> 4-category stack (DI, FE, BE, HW)."""
+    comp = float(record["compute_s"])
+    mem = float(record["memory_s"])
+    coll = float(record["collective_s"])
+    useful = float(record.get("useful_flops_ratio", 1.0))
+    waste = comp * max(1.0 - min(useful, 1.0), 0.0)
+    di = max(comp - waste, 1e-6)
+    total = di + mem + coll + waste
+    return np.array([di, coll, mem, waste]) / total
+
+
+def job_profile(name: str, stack: np.ndarray) -> AppProfile:
+    """Translate a job stack into an AppProfile for the simulator.
+
+    DI -> full-dispatch fraction, FE -> frontend stalls (ICI), BE -> backend
+    stalls (HBM), HW -> partial-dispatch cycles.  Memory sensitivity scales
+    with how HBM-bound the job is (bandwidth-saturation victims are the
+    bandwidth-hungry jobs themselves), fetch sensitivity with ICI share.
+    """
+    di, fe, be, hw = (float(x) for x in stack)
+    phase = Phase(
+        x_fe=min(fe, 0.9),
+        x_be=min(be, 0.9),
+        x_hw=min(hw, 0.9),
+        fill=0.5,
+        duration=25,
+    )
+    return AppProfile(
+        name=name,
+        phases=(phase,),
+        omega=0.05,
+        retire=0.98,
+        mem_sens=min(0.3 + be, 1.0),
+        fetch_sens=min(0.3 + fe, 1.0),
+    )
+
+
+@dataclasses.dataclass
+class ColocationPlan:
+    pairs: List[Tuple[int, int]]
+    predicted_cost: float
+    job_names: List[str]
+
+    def named_pairs(self) -> List[Tuple[str, str]]:
+        return [(self.job_names[i], self.job_names[j]) for i, j in self.pairs]
+
+
+def plan_colocation(
+    records: Sequence[Dict],
+    model,
+    matcher: str = "auto",
+) -> ColocationPlan:
+    """Pair 2N jobs onto N shared slices with the SYNPA pipeline.
+
+    records: dry-run roofline records (the jobs' measured stacks).
+    model:   a fitted Eq. 4 CategoryModel (from the simulator campaign — the
+             interference *structure* transfers; see DESIGN.md §2).
+    """
+    from repro.core import matching, regression
+
+    stacks = np.stack([job_stack_from_record(r) for r in records])
+    cost = np.asarray(regression.pair_cost_matrix(model, stacks))
+    pairs = matching.min_cost_pairs(cost, method=matcher)
+    return ColocationPlan(
+        pairs=pairs,
+        predicted_cost=matching.matching_cost(cost, pairs),
+        job_names=[f"{r['arch']}/{r['shape']}" for r in records],
+    )
+
+
+def evaluate_placement(
+    records: Sequence[Dict],
+    pairs: Sequence[Tuple[int, int]],
+    params=None,
+) -> float:
+    """Ground-truth mean slowdown of a placement (simulator oracle)."""
+    from repro.smt.machine import MachineParams, true_slowdown
+
+    params = params or MachineParams()
+    profiles = [
+        job_profile(f"{r['arch']}/{r['shape']}", job_stack_from_record(r))
+        for r in records
+    ]
+    total = 0.0
+    for i, j in pairs:
+        total += true_slowdown(profiles[i].phase(0), profiles[i],
+                               profiles[j].phase(0), params)
+        total += true_slowdown(profiles[j].phase(0), profiles[j],
+                               profiles[i].phase(0), params)
+    return total / (2 * len(pairs))

@@ -1,0 +1,230 @@
+"""ISC (Instructions and Stall Cycles) stacks — the paper's Section 3/4.
+
+The ISC stack characterises where an application's execution cycles go, built
+at the *dispatch* stage of a ``width``-wide SMT core from only four PMU events
+(paper Table 1):
+
+    CPU_CYCLES      total cycles
+    STALL_FRONTEND  cycles with no op dispatched because the queue is empty
+    STALL_BACKEND   cycles with no op dispatched, backend resource unavailable
+    INST_SPEC       speculatively executed ops (proxy for dispatched ops)
+
+Raw categories (fractions of CPU_CYCLES):
+
+    DI  = INST_SPEC / (width * CPU_CYCLES)   "full dispatch equivalent cycles"
+    FE  = STALL_FRONTEND / CPU_CYCLES
+    BE  = STALL_BACKEND  / CPU_CYCLES
+
+A real PMU never makes these sum to exactly 1.0:
+
+* **LT100** (sum < 1): the gap is *horizontal waste* — cycles where 1..width-1
+  slots were filled; they are counted neither as stalls nor as full DI cycles.
+* **GT100** (sum > 1): stall events overlap (both FE and BE fire in one cycle)
+  and are double counted.
+
+The paper's family of repairs (Sections 4.2/4.3), all implemented here:
+
+    LT100:  ISC3_A-BE   assign the gap to Backend            (SYNPA3 classic)
+            ISC4        new 4th category "Horizontal waste"  (SYNPA4)
+    GT100:  ISC3_N      proportional normalisation of all categories
+            ISC3_R-FE   subtract the whole excess from Frontend
+            ISC3_R-FEBE subtract the excess from FE and BE, weighted by size
+
+Stacks are represented as ``(..., 4)`` arrays in the fixed category order
+``(DI, FE, BE, HW)``; three-category methods simply leave ``HW == 0``.  All
+functions are pure jnp and broadcast over leading batch dimensions, so a whole
+workload's stacks are repaired in one call (and under ``jit`` if desired).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Tuple
+
+import jax.numpy as jnp
+
+# Fixed category order used across the whole framework.
+CAT_DI = 0
+CAT_FE = 1
+CAT_BE = 2
+CAT_HW = 3
+N_CATS = 4
+CATEGORY_NAMES: Tuple[str, ...] = ("dispatch", "frontend", "backend", "horiz_waste")
+
+DISPATCH_WIDTH = 4  # ThunderX2 (Vulcan) is 4-wide at dispatch.
+
+_EPS = 1e-9
+
+
+class LT100Method(enum.Enum):
+    """Repairs for stacks capturing < 100% of cycles (paper §4.2)."""
+
+    ISC3_A_BE = "isc3_a_be"  # assign not-accounted cycles to Backend
+    ISC4 = "isc4"            # expose them as the Horizontal-waste category
+
+
+class GT100Method(enum.Enum):
+    """Repairs for stacks exceeding 100% of cycles (paper §4.3)."""
+
+    ISC3_N = "isc3_n"            # normalise all categories proportionally
+    ISC3_R_FE = "isc3_r_fe"      # subtract all the excess from Frontend
+    ISC3_R_FEBE = "isc3_r_febe"  # weighted removal from Frontend and Backend
+
+
+@dataclasses.dataclass(frozen=True)
+class StackMethod:
+    """A (LT100, GT100) repair pair = one member of the ISCX_Y family."""
+
+    lt100: LT100Method
+    gt100: GT100Method
+
+    @property
+    def n_categories(self) -> int:
+        return 4 if self.lt100 is LT100Method.ISC4 else 3
+
+    @property
+    def name(self) -> str:
+        lt = {LT100Method.ISC3_A_BE: "3", LT100Method.ISC4: "4"}[self.lt100]
+        gt = {
+            GT100Method.ISC3_N: "N",
+            GT100Method.ISC3_R_FE: "R-FE",
+            GT100Method.ISC3_R_FEBE: "R-FEBE",
+        }[self.gt100]
+        return f"ISC{lt}_{gt}"
+
+
+# The four SYNPA variants' stack methods (paper Table 2).
+SYNPA3_N = StackMethod(LT100Method.ISC3_A_BE, GT100Method.ISC3_N)
+SYNPA4_N = StackMethod(LT100Method.ISC4, GT100Method.ISC3_N)
+SYNPA4_R_FE = StackMethod(LT100Method.ISC4, GT100Method.ISC3_R_FE)
+SYNPA4_R_FEBE = StackMethod(LT100Method.ISC4, GT100Method.ISC3_R_FEBE)
+
+STACK_METHODS = {
+    "SYNPA3_N": SYNPA3_N,
+    "SYNPA4_N": SYNPA4_N,
+    "SYNPA4_R-FE": SYNPA4_R_FE,
+    "SYNPA4_R-FEBE": SYNPA4_R_FEBE,
+}
+
+
+def raw_stack(
+    cpu_cycles,
+    stall_frontend,
+    stall_backend,
+    inst_spec,
+    width: int = DISPATCH_WIDTH,
+):
+    """Raw (unrepaired) ISC stack from PMU counters.
+
+    Returns an ``(..., 4)`` array ``(DI, FE, BE, 0)``; the sum of the first
+    three columns is the measured stack height (may be <1 or >1).
+    """
+    cycles = jnp.maximum(jnp.asarray(cpu_cycles, jnp.float64 if False else jnp.float32), _EPS)
+    di = jnp.asarray(inst_spec, jnp.float32) / (width * cycles)
+    fe = jnp.asarray(stall_frontend, jnp.float32) / cycles
+    be = jnp.asarray(stall_backend, jnp.float32) / cycles
+    hw = jnp.zeros_like(di)
+    return jnp.stack([di, fe, be, hw], axis=-1)
+
+
+def stack_height(stack):
+    """Measured height of a raw stack (sum of DI, FE, BE; HW excluded)."""
+    return stack[..., CAT_DI] + stack[..., CAT_FE] + stack[..., CAT_BE]
+
+
+def _repair_lt100(stack, method: LT100Method):
+    """Expand a <100% stack to exactly 1.0 (paper §4.2). Gap must be >= 0."""
+    gap = jnp.maximum(1.0 - stack_height(stack), 0.0)
+    di, fe, be = stack[..., CAT_DI], stack[..., CAT_FE], stack[..., CAT_BE]
+    if method is LT100Method.ISC3_A_BE:
+        # SYNPA3: the not-accounted cycles are assumed to be Backend stalls.
+        return jnp.stack([di, fe, be + gap, jnp.zeros_like(di)], axis=-1)
+    elif method is LT100Method.ISC4:
+        # SYNPA4: expose them as a distinct Horizontal-waste category.
+        return jnp.stack([di, fe, be, gap], axis=-1)
+    raise ValueError(f"unknown LT100 method {method}")
+
+
+def _repair_gt100(stack, method: GT100Method):
+    """Shrink a >100% stack to exactly 1.0 (paper §4.3). Excess must be >= 0.
+
+    GT100 stacks always have three categories (horizontal waste is, by
+    construction, only visible when the measured height is below 100%).
+    """
+    di, fe, be = stack[..., CAT_DI], stack[..., CAT_FE], stack[..., CAT_BE]
+    height = di + fe + be
+    excess = jnp.maximum(height - 1.0, 0.0)
+    hw = jnp.zeros_like(di)
+    if method is GT100Method.ISC3_N:
+        # Proportional: every category contributed to the overlap according
+        # to its weight in the stack.
+        scale = 1.0 / jnp.maximum(height, _EPS)
+        return jnp.stack([di * scale, fe * scale, be * scale, hw], axis=-1)
+    elif method is GT100Method.ISC3_R_FE:
+        # All the excess is attributed to the (over-reported) Frontend stalls.
+        # If FE is smaller than the excess, the remainder spills to Backend so
+        # the stack still sums to 1 (the paper does not hit this corner; we
+        # keep the repair total-preserving and non-negative).
+        take_fe = jnp.minimum(fe, excess)
+        rest = excess - take_fe
+        take_be = jnp.minimum(be, rest)
+        rest2 = rest - take_be
+        return jnp.stack([di - rest2, fe - take_fe, be - take_be, hw], axis=-1)
+    elif method is GT100Method.ISC3_R_FEBE:
+        # Weighted removal from both stall categories (paper's recommended
+        # design choice, Conclusions): each stall category absorbs a share of
+        # the excess proportional to its size.
+        denom = jnp.maximum(fe + be, _EPS)
+        take_fe = excess * fe / denom
+        take_be = excess * be / denom
+        new_fe = fe - take_fe
+        new_be = be - take_be
+        return jnp.stack([di, new_fe, new_be, hw], axis=-1)
+    raise ValueError(f"unknown GT100 method {method}")
+
+
+def build_stack(raw, method: StackMethod):
+    """Repair a raw ISC stack into a 100%-height stack with ``method``.
+
+    ``raw`` is an ``(..., 4)`` array from :func:`raw_stack`.  LT100 rows use
+    ``method.lt100``; GT100 rows use ``method.gt100``.  The result always sums
+    to 1 along the last axis (up to float error) and is non-negative.
+    """
+    raw = jnp.asarray(raw)
+    lt = _repair_lt100(raw, method.lt100)
+    gt = _repair_gt100(raw, method.gt100)
+    is_lt = (stack_height(raw) <= 1.0)[..., None]
+    out = jnp.where(is_lt, lt, gt)
+    return jnp.clip(out, 0.0, None)
+
+
+def build_stack_from_counters(
+    cpu_cycles,
+    stall_frontend,
+    stall_backend,
+    inst_spec,
+    method: StackMethod,
+    width: int = DISPATCH_WIDTH,
+):
+    """Convenience: PMU counters -> repaired ISC stack."""
+    return build_stack(
+        raw_stack(cpu_cycles, stall_frontend, stall_backend, inst_spec, width),
+        method,
+    )
+
+
+def collapse_hw_into_be(stack):
+    """Fold Horizontal waste into Backend (turn a 4-cat stack into 3-cat).
+
+    Used when comparing 3- and 4-category policies on identical inputs.
+    """
+    di, fe, be, hw = (stack[..., i] for i in range(N_CATS))
+    return jnp.stack([di, fe, be + hw, jnp.zeros_like(di)], axis=-1)
+
+
+def active_categories(method: StackMethod):
+    """Indices of the categories a method actually uses."""
+    if method.n_categories == 4:
+        return (CAT_DI, CAT_FE, CAT_BE, CAT_HW)
+    return (CAT_DI, CAT_FE, CAT_BE)

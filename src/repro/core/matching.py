@@ -1,0 +1,575 @@
+"""Pair selection — the paper's Step 3 (Blossom algorithm, Edmonds 1965).
+
+Given the all-pairs predicted-degradation matrix produced by the Eq. 4 model,
+SYNPA selects the perfect matching of the 2N runnable applications onto N SMT
+cores with minimum total predicted degradation.  The paper uses the Blossom
+algorithm because it "considers all the possibilities and selects the optimal
+choice with minimum overhead, even if the number of applications increases".
+
+Three engines are provided:
+
+* :func:`max_weight_matching` — a faithful O(V^3) primal-dual implementation
+  of Edmonds' maximum-weight matching for general graphs (Galil's formulation,
+  in the style of the classic ``mwmatching`` reference implementation).  Exact.
+* :func:`_dp_min_cost_pairs` — exact bitmask dynamic program, O(2^N * N).
+  Used as an independent oracle in tests (property-tested against blossom).
+* :func:`_greedy_min_cost_pairs` — greedy + 2-opt local search for very large
+  N (cluster-scale co-location, thousands of jobs), near-optimal in practice.
+
+:func:`min_cost_pairs` picks the right engine and is the only entry point the
+schedulers use.  Costs may be floats; they are scaled to integers internally
+so the blossom dual arithmetic is exact.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+Pairs = List[Tuple[int, int]]
+
+_INT_SCALE = 10**6
+
+
+# ---------------------------------------------------------------------------
+# Edmonds maximum-weight matching (general graphs, primal-dual, exact).
+# ---------------------------------------------------------------------------
+def max_weight_matching(
+    edges: Sequence[Tuple[int, int, int]], maxcardinality: bool = False
+) -> List[int]:
+    """Maximum-weight matching on a general graph.
+
+    ``edges`` is a list of ``(i, j, weight)`` with integer weights (callers
+    must pre-scale floats; exactness of the dual updates requires integers).
+    Returns ``mate`` such that ``mate[v]`` is the vertex matched to ``v`` or
+    ``-1``.  With ``maxcardinality=True`` the matching has maximum cardinality
+    among all matchings, and maximum weight among those.
+    """
+    if not edges:
+        return []
+
+    nedge = len(edges)
+    nvertex = 0
+    for (i, j, _w) in edges:
+        assert i >= 0 and j >= 0 and i != j
+        nvertex = max(nvertex, i + 1, j + 1)
+
+    maxweight = max(0, max(w for (_i, _j, w) in edges))
+
+    # endpoint[p] = vertex at endpoint p; edge k has endpoints 2k and 2k+1.
+    endpoint = [edges[p // 2][p % 2] for p in range(2 * nedge)]
+    # neighbend[v] = remote endpoints of edges incident to v.
+    neighbend: List[List[int]] = [[] for _ in range(nvertex)]
+    for k in range(nedge):
+        i, j, _w = edges[k]
+        neighbend[i].append(2 * k + 1)
+        neighbend[j].append(2 * k)
+
+    mate = nvertex * [-1]
+    # label: 0 = free, 1 = S, 2 = T (per top-level blossom; 5 marks visited).
+    label = (2 * nvertex) * [0]
+    labelend = (2 * nvertex) * [-1]
+    inblossom = list(range(nvertex))
+    blossomparent = (2 * nvertex) * [-1]
+    blossomchilds: List = (2 * nvertex) * [None]
+    blossombase = list(range(nvertex)) + nvertex * [-1]
+    blossomendps: List = (2 * nvertex) * [None]
+    bestedge = (2 * nvertex) * [-1]
+    blossombestedges: List = (2 * nvertex) * [None]
+    unusedblossoms = list(range(nvertex, 2 * nvertex))
+    dualvar = nvertex * [maxweight] + nvertex * [0]
+    allowedge = nedge * [False]
+    queue: List[int] = []
+
+    def slack(k: int) -> int:
+        i, j, wt = edges[k]
+        return dualvar[i] + dualvar[j] - 2 * wt
+
+    def blossom_leaves(b: int):
+        if b < nvertex:
+            yield b
+        else:
+            for t in blossomchilds[b]:
+                if t < nvertex:
+                    yield t
+                else:
+                    yield from blossom_leaves(t)
+
+    def assign_label(w: int, t: int, p: int) -> None:
+        b = inblossom[w]
+        assert label[w] == 0 and label[b] == 0
+        label[w] = label[b] = t
+        labelend[w] = labelend[b] = p
+        bestedge[w] = bestedge[b] = -1
+        if t == 1:
+            queue.extend(blossom_leaves(b))
+        elif t == 2:
+            base = blossombase[b]
+            assert mate[base] >= 0
+            assign_label(endpoint[mate[base]], 1, mate[base] ^ 1)
+
+    def scan_blossom(v: int, w: int) -> int:
+        """Trace back from v and w; return the common ancestor base or -1."""
+        path = []
+        base = -1
+        while v != -1 or w != -1:
+            b = inblossom[v]
+            if label[b] & 4:
+                base = blossombase[b]
+                break
+            assert label[b] == 1
+            path.append(b)
+            label[b] = 5
+            assert labelend[b] == mate[blossombase[b]]
+            if labelend[b] == -1:
+                v = -1  # reached a single (unmatched) vertex
+            else:
+                v = endpoint[labelend[b]]
+                b = inblossom[v]
+                assert label[b] == 2
+                assert labelend[b] >= 0
+                v = endpoint[labelend[b]]
+            if w != -1:
+                v, w = w, v
+        for b in path:
+            label[b] = 1
+        return base
+
+    def add_blossom(base: int, k: int) -> None:
+        """Make a new blossom from edge k with the given base."""
+        v, w, _wt = edges[k]
+        bb = inblossom[base]
+        bv = inblossom[v]
+        bw = inblossom[w]
+        b = unusedblossoms.pop()
+        blossombase[b] = base
+        blossomparent[b] = -1
+        blossomparent[bb] = b
+        blossomchilds[b] = path = []
+        blossomendps[b] = endps = []
+        while bv != bb:
+            blossomparent[bv] = b
+            path.append(bv)
+            endps.append(labelend[bv])
+            assert label[bv] == 2 or (
+                label[bv] == 1 and labelend[bv] == mate[blossombase[bv]]
+            )
+            assert labelend[bv] >= 0
+            v = endpoint[labelend[bv]]
+            bv = inblossom[v]
+        path.append(bb)
+        path.reverse()
+        endps.reverse()
+        endps.append(2 * k)
+        while bw != bb:
+            blossomparent[bw] = b
+            path.append(bw)
+            endps.append(labelend[bw] ^ 1)
+            assert label[bw] == 2 or (
+                label[bw] == 1 and labelend[bw] == mate[blossombase[bw]]
+            )
+            assert labelend[bw] >= 0
+            w = endpoint[labelend[bw]]
+            bw = inblossom[w]
+        assert label[bb] == 1
+        label[b] = 1
+        labelend[b] = labelend[bb]
+        dualvar[b] = 0
+        for leaf in blossom_leaves(b):
+            if label[inblossom[leaf]] == 2:
+                # This T-vertex now becomes an S-vertex; add it to the queue.
+                queue.append(leaf)
+            inblossom[leaf] = b
+        # Compute the new blossom's best edges.
+        bestedgeto = (2 * nvertex) * [-1]
+        for bv in path:
+            if blossombestedges[bv] is None:
+                nblists = [
+                    [p // 2 for p in neighbend[leaf]] for leaf in blossom_leaves(bv)
+                ]
+            else:
+                nblists = [blossombestedges[bv]]
+            for nblist in nblists:
+                for k2 in nblist:
+                    i, j, _w2 = edges[k2]
+                    if inblossom[j] == b:
+                        i, j = j, i
+                    bj = inblossom[j]
+                    if (
+                        bj != b
+                        and label[bj] == 1
+                        and (bestedgeto[bj] == -1 or slack(k2) < slack(bestedgeto[bj]))
+                    ):
+                        bestedgeto[bj] = k2
+            blossombestedges[bv] = None
+            bestedge[bv] = -1
+        blossombestedges[b] = [k2 for k2 in bestedgeto if k2 != -1]
+        bestedge[b] = -1
+        for k2 in blossombestedges[b]:
+            if bestedge[b] == -1 or slack(k2) < slack(bestedge[b]):
+                bestedge[b] = k2
+
+    def expand_blossom(b: int, endstage: bool) -> None:
+        for s in blossomchilds[b]:
+            blossomparent[s] = -1
+            if s < nvertex:
+                inblossom[s] = s
+            elif endstage and dualvar[s] == 0:
+                expand_blossom(s, endstage)
+            else:
+                for leaf in blossom_leaves(s):
+                    inblossom[leaf] = s
+        if (not endstage) and label[b] == 2:
+            # Relabel sub-blossoms from the entry child around to the base.
+            assert labelend[b] >= 0
+            entrychild = inblossom[endpoint[labelend[b] ^ 1]]
+            j = blossomchilds[b].index(entrychild)
+            if j & 1:
+                j -= len(blossomchilds[b])
+                jstep = 1
+                endptrick = 0
+            else:
+                jstep = -1
+                endptrick = 1
+            p = labelend[b]
+            while j != 0:
+                label[endpoint[p ^ 1]] = 0
+                label[endpoint[blossomendps[b][j - endptrick] ^ endptrick ^ 1]] = 0
+                assign_label(endpoint[p ^ 1], 2, p)
+                allowedge[blossomendps[b][j - endptrick] // 2] = True
+                j += jstep
+                p = blossomendps[b][j - endptrick] ^ endptrick
+                allowedge[p // 2] = True
+                j += jstep
+            bv = blossomchilds[b][j]
+            label[endpoint[p ^ 1]] = label[bv] = 2
+            labelend[endpoint[p ^ 1]] = labelend[bv] = p
+            bestedge[bv] = -1
+            j += jstep
+            while blossomchilds[b][j] != entrychild:
+                bv = blossomchilds[b][j]
+                if label[bv] == 1:
+                    j += jstep
+                    continue
+                leaf = None
+                for leaf in blossom_leaves(bv):
+                    if label[leaf] != 0:
+                        break
+                if leaf is not None and label[leaf] != 0:
+                    assert label[leaf] == 2
+                    assert inblossom[leaf] == bv
+                    label[leaf] = 0
+                    label[endpoint[mate[blossombase[bv]]]] = 0
+                    assign_label(leaf, 2, labelend[leaf])
+                j += jstep
+        label[b] = labelend[b] = -1
+        blossomchilds[b] = blossomendps[b] = None
+        blossombase[b] = -1
+        blossombestedges[b] = None
+        bestedge[b] = -1
+        unusedblossoms.append(b)
+
+    def augment_blossom(b: int, v: int) -> None:
+        t = v
+        while blossomparent[t] != b:
+            t = blossomparent[t]
+        if t >= nvertex:
+            augment_blossom(t, v)
+        i = j = blossomchilds[b].index(t)
+        if i & 1:
+            j -= len(blossomchilds[b])
+            jstep = 1
+            endptrick = 0
+        else:
+            jstep = -1
+            endptrick = 1
+        while j != 0:
+            j += jstep
+            t = blossomchilds[b][j]
+            p = blossomendps[b][j - endptrick] ^ endptrick
+            if t >= nvertex:
+                augment_blossom(t, endpoint[p])
+            j += jstep
+            t = blossomchilds[b][j]
+            if t >= nvertex:
+                augment_blossom(t, endpoint[p ^ 1])
+            mate[endpoint[p]] = p ^ 1
+            mate[endpoint[p ^ 1]] = p
+        blossomchilds[b] = blossomchilds[b][i:] + blossomchilds[b][:i]
+        blossomendps[b] = blossomendps[b][i:] + blossomendps[b][:i]
+        blossombase[b] = blossombase[blossomchilds[b][0]]
+        assert blossombase[b] == blossombase[v]
+
+    def augment_matching(k: int) -> None:
+        v, w, _wt = edges[k]
+        for (s, p) in ((v, 2 * k + 1), (w, 2 * k)):
+            while True:
+                bs = inblossom[s]
+                assert label[bs] == 1
+                assert labelend[bs] == mate[blossombase[bs]]
+                if bs >= nvertex:
+                    augment_blossom(bs, s)
+                mate[s] = p
+                if labelend[bs] == -1:
+                    break
+                t = endpoint[labelend[bs]]
+                bt = inblossom[t]
+                assert label[bt] == 2
+                assert labelend[bt] >= 0
+                s = endpoint[labelend[bt]]
+                j = endpoint[labelend[bt] ^ 1]
+                assert blossombase[bt] == t
+                if inblossom[j] >= nvertex:
+                    augment_blossom(inblossom[j], j)
+                mate[j] = labelend[bt]
+                p = labelend[bt] ^ 1
+
+    # Main loop: one stage per augmentation.
+    for _stage in range(nvertex):
+        label[:] = (2 * nvertex) * [0]
+        bestedge[:] = (2 * nvertex) * [-1]
+        for b in range(nvertex, 2 * nvertex):
+            blossombestedges[b] = None
+        allowedge[:] = nedge * [False]
+        queue[:] = []
+        for v in range(nvertex):
+            if mate[v] == -1 and label[inblossom[v]] == 0:
+                assign_label(v, 1, -1)
+        augmented = False
+        while True:
+            while queue and not augmented:
+                v = queue.pop()
+                assert label[inblossom[v]] == 1
+                for p in neighbend[v]:
+                    k = p // 2
+                    w = endpoint[p]
+                    if inblossom[v] == inblossom[w]:
+                        continue
+                    kslack = 0
+                    if not allowedge[k]:
+                        kslack = slack(k)
+                        if kslack <= 0:
+                            allowedge[k] = True
+                    if allowedge[k]:
+                        if label[inblossom[w]] == 0:
+                            assign_label(w, 2, p ^ 1)
+                        elif label[inblossom[w]] == 1:
+                            base = scan_blossom(v, w)
+                            if base >= 0:
+                                add_blossom(base, k)
+                            else:
+                                augment_matching(k)
+                                augmented = True
+                                break
+                        elif label[w] == 0:
+                            assert label[inblossom[w]] == 2
+                            label[w] = 2
+                            labelend[w] = p ^ 1
+                    elif label[inblossom[w]] == 1:
+                        b = inblossom[v]
+                        if bestedge[b] == -1 or kslack < slack(bestedge[b]):
+                            bestedge[b] = k
+                    elif label[w] == 0:
+                        if bestedge[w] == -1 or kslack < slack(bestedge[w]):
+                            bestedge[w] = k
+            if augmented:
+                break
+            # Dual update.
+            deltatype = -1
+            delta = deltaedge = deltablossom = None
+            if not maxcardinality:
+                deltatype = 1
+                delta = min(dualvar[:nvertex])
+            for v in range(nvertex):
+                if label[inblossom[v]] == 0 and bestedge[v] != -1:
+                    d = slack(bestedge[v])
+                    if deltatype == -1 or d < delta:
+                        delta = d
+                        deltatype = 2
+                        deltaedge = bestedge[v]
+            for b in range(2 * nvertex):
+                if blossomparent[b] == -1 and label[b] == 1 and bestedge[b] != -1:
+                    kslack = slack(bestedge[b])
+                    d = kslack // 2 if isinstance(kslack, int) else kslack / 2
+                    if deltatype == -1 or d < delta:
+                        delta = d
+                        deltatype = 3
+                        deltaedge = bestedge[b]
+            for b in range(nvertex, 2 * nvertex):
+                if (
+                    blossombase[b] >= 0
+                    and blossomparent[b] == -1
+                    and label[b] == 2
+                    and (deltatype == -1 or dualvar[b] < delta)
+                ):
+                    delta = dualvar[b]
+                    deltatype = 4
+                    deltablossom = b
+            if deltatype == -1:
+                # No further improvement possible (max-cardinality optimum).
+                deltatype = 1
+                delta = max(0, min(dualvar[:nvertex]))
+            # Apply the delta to the duals.
+            for v in range(nvertex):
+                if label[inblossom[v]] == 1:
+                    dualvar[v] -= delta
+                elif label[inblossom[v]] == 2:
+                    dualvar[v] += delta
+            for b in range(nvertex, 2 * nvertex):
+                if blossombase[b] >= 0 and blossomparent[b] == -1:
+                    if label[b] == 1:
+                        dualvar[b] += delta
+                    elif label[b] == 2:
+                        dualvar[b] -= delta
+            # Take action on the minimum-delta structure.
+            if deltatype == 1:
+                break
+            elif deltatype == 2:
+                allowedge[deltaedge] = True
+                i, j, _w2 = edges[deltaedge]
+                if label[inblossom[i]] == 0:
+                    i, j = j, i
+                assert label[inblossom[i]] == 1
+                queue.append(i)
+            elif deltatype == 3:
+                allowedge[deltaedge] = True
+                i, j, _w2 = edges[deltaedge]
+                assert label[inblossom[i]] == 1
+                queue.append(i)
+            elif deltatype == 4:
+                expand_blossom(deltablossom, False)
+        if not augmented:
+            break
+        # End of stage: expand all S-blossoms with zero dual.
+        for b in range(nvertex, 2 * nvertex):
+            if (
+                blossomparent[b] == -1
+                and blossombase[b] >= 0
+                and label[b] == 1
+                and dualvar[b] == 0
+            ):
+                expand_blossom(b, True)
+
+    for v in range(nvertex):
+        if mate[v] >= 0:
+            mate[v] = endpoint[mate[v]]
+    return mate
+
+
+# ---------------------------------------------------------------------------
+# Exact bitmask DP oracle (tests) and greedy engine (very large N).
+# ---------------------------------------------------------------------------
+def _dp_min_cost_pairs(cost: np.ndarray) -> Pairs:
+    """Exact minimum-cost perfect matching by subset DP.  O(2^N * N)."""
+    n = cost.shape[0]
+    assert n % 2 == 0 and n <= 22, "DP oracle limited to small even N"
+    full = (1 << n) - 1
+    INF = float("inf")
+    dp = np.full(1 << n, INF)
+    choice = np.full(1 << n, -1, dtype=np.int64)
+    dp[0] = 0.0
+    for mask in range(1 << n):
+        if dp[mask] == INF:
+            continue
+        # First unset bit.
+        i = 0
+        while mask >> i & 1:
+            i += 1
+        if i >= n:
+            continue
+        for j in range(i + 1, n):
+            if not (mask >> j & 1):
+                nm = mask | (1 << i) | (1 << j)
+                c = dp[mask] + float(cost[i, j])
+                if c < dp[nm]:
+                    dp[nm] = c
+                    choice[nm] = i * n + j
+    pairs: Pairs = []
+    mask = full
+    while mask:
+        ij = int(choice[mask])
+        i, j = divmod(ij, n)
+        pairs.append((i, j))
+        mask &= ~((1 << i) | (1 << j))
+    return sorted(pairs)
+
+
+def _greedy_min_cost_pairs(cost: np.ndarray, two_opt_rounds: int = 4) -> Pairs:
+    """Greedy matching + 2-opt pair-swap local search.  O(N^2 log N)."""
+    n = cost.shape[0]
+    order = np.dstack(np.unravel_index(np.argsort(cost, axis=None), cost.shape))[0]
+    used = np.zeros(n, dtype=bool)
+    pairs: Pairs = []
+    for i, j in order:
+        if i < j and not used[i] and not used[j]:
+            used[i] = used[j] = True
+            pairs.append((int(i), int(j)))
+            if 2 * len(pairs) == n:
+                break
+    # 2-opt: try re-pairing every pair of pairs.
+    for _ in range(two_opt_rounds):
+        improved = False
+        for a in range(len(pairs)):
+            for b in range(a + 1, len(pairs)):
+                i, j = pairs[a]
+                k, l = pairs[b]
+                cur = cost[i, j] + cost[k, l]
+                alt1 = cost[i, k] + cost[j, l]
+                alt2 = cost[i, l] + cost[j, k]
+                if alt1 < cur and alt1 <= alt2:
+                    pairs[a], pairs[b] = (i, k), (j, l)
+                    improved = True
+                elif alt2 < cur:
+                    pairs[a], pairs[b] = (i, l), (j, k)
+                    improved = True
+        if not improved:
+            break
+    return sorted(tuple(sorted(p)) for p in pairs)
+
+
+def min_cost_pairs(cost: np.ndarray, method: str = "auto") -> Pairs:
+    """Minimum-total-cost perfect matching of an even set of applications.
+
+    cost: (N, N) symmetric matrix; cost[i, j] = predicted degradation if i and
+    j share a core.  Diagonal is ignored.  Returns N/2 sorted (i, j) pairs.
+
+    method: 'blossom' (exact, default for N <= 512), 'greedy' (large N),
+    'dp' (exact oracle, N <= 22), or 'auto'.
+    """
+    cost = np.asarray(cost, dtype=np.float64)
+    n = cost.shape[0]
+    assert cost.shape == (n, n) and n % 2 == 0, "need an even number of apps"
+    if n == 0:
+        return []
+    if n == 2:
+        return [(0, 1)]
+    if method == "auto":
+        method = "blossom" if n <= 512 else "greedy"
+    if method == "dp":
+        return _dp_min_cost_pairs(cost)
+    if method == "greedy":
+        return _greedy_min_cost_pairs(cost)
+    assert method == "blossom", method
+
+    # Convert min-cost to max-weight with exact integer arithmetic.
+    off = ~np.eye(n, dtype=bool)
+    finite = np.clip(cost[off], -1e12, 1e12)
+    cmax = float(finite.max()) if finite.size else 0.0
+    cmin = float(finite.min()) if finite.size else 0.0
+    span = max(cmax - cmin, 1e-12)
+    edges = []
+    for i in range(n):
+        for j in range(i + 1, n):
+            c = min(max(float(cost[i, j]), cmin), cmax)
+            w = int(round((cmax - c) / span * _INT_SCALE))
+            edges.append((i, j, w))
+    mate = max_weight_matching(edges, maxcardinality=True)
+    pairs = sorted({tuple(sorted((v, m))) for v, m in enumerate(mate) if m >= 0})
+    assert len(pairs) == n // 2, "blossom failed to produce a perfect matching"
+    return [tuple(p) for p in pairs]
+
+
+def matching_cost(cost: np.ndarray, pairs: Pairs) -> float:
+    """Total cost of a matching."""
+    return float(sum(cost[i, j] for i, j in pairs))

@@ -1,0 +1,232 @@
+"""Per-category linear regression performance model — the paper's Eq. 4.
+
+For every ISC category ``C`` a tiny linear model predicts the *cycles spent in
+category C while executing a fixed window of instructions in SMT mode,
+normalised by the ST cycles of that window*:
+
+    C_smt(i|j) = alpha_C + beta_C * C_st(i) + gamma_C * C_st(j)
+                 + rho_C * C_st(i) * C_st(j)                          (Eq. 4)
+
+Units (this matches the paper's Table 3 coefficients and MSE magnitudes):
+
+* ST stacks ``C_st`` are fractions of ST cycles — they sum to 1.
+* SMT values ``C_smt`` are *per-ST-cycle* — the instruction-aligned mapping
+  of §5.4 ("the number of committed instructions allows us to map the
+  category values...").  Their sum is the application's slowdown (>= 1):
+  e.g. a Dispatch component near beta = 0.9..1 (full-dispatch-equivalent
+  cycles are invariant to interference), a Frontend component that grows
+  ~1.4x regardless of the co-runner, and a Backend component dominated by
+  the *co-runner's* backend pressure (gamma = 1.44 in the paper).
+
+Consequently the predicted slowdown is the predicted SMT stack *height* —
+every category contributes, which is exactly why the stack construction
+(SYNPA3 vs SYNPA4, N vs R-FE vs R-FEBE) matters for scheduling quality.
+
+Operations (paper §5.3 steps 1-2):
+
+* :func:`fit`              — least-squares coefficients + per-category MSE.
+* :func:`forward`          — ST stacks of a pair -> predicted per-ST-cycle SMT
+                             category values of the first application.
+* :func:`predict_slowdown` — sum of the forward components.
+* :func:`inverse`          — measured SMT stack *fractions* of the currently
+                             co-running pair -> estimated ST stacks
+                             (normalised to 1).  Solved by a fixed-point over
+                             the unknown per-app slowdowns with damped Newton
+                             on each category's coupled bilinear system.
+* :func:`pair_cost_matrix` — dense all-pairs cost (XLA reference for the
+                             ``repro.kernels.pair_score`` Pallas kernel).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import isc
+
+_EPS = 1e-8
+MIN_SLOWDOWN = 0.25
+MAX_SLOWDOWN = 16.0
+
+
+@dataclasses.dataclass(frozen=True)
+class CategoryModel:
+    """Fitted Eq. 4 coefficients for one stack method.
+
+    coeffs: (4, 4) array, rows in ISC category order (DI, FE, BE, HW), columns
+            (alpha, beta, gamma, rho).  Rows beyond ``n_categories`` are zero.
+    mse:    (4,) training mean-squared error per category (paper §5.2).
+    n_categories: 3 or 4 (SYNPA3 vs SYNPA4 stacks).
+    """
+
+    coeffs: jnp.ndarray
+    mse: jnp.ndarray
+    n_categories: int
+
+
+def design_matrix(c_i, c_j):
+    """Rows of the Eq. 4 design: [1, C_i, C_j, C_i*C_j]."""
+    c_i = jnp.asarray(c_i, jnp.float32)
+    c_j = jnp.asarray(c_j, jnp.float32)
+    one = jnp.ones_like(c_i)
+    return jnp.stack([one, c_i, c_j, c_i * c_j], axis=-1)
+
+
+def fit(
+    st_i,
+    st_j,
+    smt_i,
+    n_categories: int,
+    ridge: float = 1e-6,
+) -> CategoryModel:
+    """Least-squares fit of Eq. 4, one independent model per category.
+
+    st_i:  (S, 4) ST stack (fractions, height 1) of the measured app.
+    st_j:  (S, 4) ST stack of its co-runner.
+    smt_i: (S, 4) instruction-aligned SMT category values (per ST cycle).
+    """
+    st_i = jnp.asarray(st_i, jnp.float32)
+    st_j = jnp.asarray(st_j, jnp.float32)
+    smt_i = jnp.asarray(smt_i, jnp.float32)
+
+    coeffs, mses = [], []
+    eye = jnp.eye(4, dtype=jnp.float32)
+    for c in range(n_categories):
+        X = design_matrix(st_i[:, c], st_j[:, c])
+        y = smt_i[:, c]
+        gram = X.T @ X + ridge * eye
+        w = jnp.linalg.solve(gram, X.T @ y)
+        coeffs.append(w)
+        mses.append(jnp.mean((X @ w - y) ** 2))
+    while len(coeffs) < isc.N_CATS:
+        coeffs.append(jnp.zeros(4, jnp.float32))
+        mses.append(jnp.zeros((), jnp.float32))
+    return CategoryModel(
+        coeffs=jnp.stack(coeffs[: isc.N_CATS]),
+        mse=jnp.stack(mses[: isc.N_CATS]),
+        n_categories=n_categories,
+    )
+
+
+def forward(model: CategoryModel, st_i, st_j):
+    """Eq. 4 forward: ST stacks -> per-ST-cycle SMT category values of i."""
+    st_i = jnp.asarray(st_i, jnp.float32)
+    st_j = jnp.asarray(st_j, jnp.float32)
+    a, b, g, r = (model.coeffs[:, k] for k in range(4))
+    pred = a + b * st_i + g * st_j + r * st_i * st_j
+    mask = (jnp.arange(isc.N_CATS) < model.n_categories).astype(pred.dtype)
+    return jnp.clip(pred * mask, 0.0, None)
+
+
+def predict_slowdown(model: CategoryModel, st_i, st_j):
+    """Predicted slowdown of i next to j = predicted SMT stack height."""
+    s = jnp.sum(forward(model, st_i, st_j), axis=-1)
+    return jnp.clip(s, MIN_SLOWDOWN, MAX_SLOWDOWN)
+
+
+def inverse(
+    model: CategoryModel,
+    frac_i,
+    frac_j,
+    n_steps: int = 80,
+    lr: float = 1.5,
+):
+    """Invert Eq. 4 (paper §5.3 step 1).
+
+    Inputs are the *measured SMT stack fractions* of the two applications
+    currently sharing a core (each sums to 1).  We search for the two ST
+    stacks (height 1) whose forward predictions are *parallel* to the
+    measured fractions, i.e. minimise
+
+        || forward(x, y) - (sum forward(x, y)) * frac_i ||^2  +  (i <-> j)
+
+    over the product of simplices, parameterising each stack with a masked
+    softmax and running Adam-style gradient steps (fully jit-able; the whole
+    solve is a ``lax.scan``).  The per-app scale that drops out is the
+    slowdown itself, so no separate fixed-point over slowdowns is needed.
+    """
+    frac_i = jnp.asarray(frac_i, jnp.float32)
+    frac_j = jnp.asarray(frac_j, jnp.float32)
+    mask = (jnp.arange(isc.N_CATS) < model.n_categories).astype(frac_i.dtype)
+
+    def to_simplex(z):
+        e = jnp.exp(z - jnp.max(z, axis=-1, keepdims=True)) * mask
+        return e / jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), _EPS)
+
+    def residual(zs):
+        """Per-batch-element residual (independent across elements)."""
+        z_i, z_j = zs
+        x, y = to_simplex(z_i), to_simplex(z_j)
+        p_i = forward(model, x, y)
+        p_j = forward(model, y, x)
+        r_i = p_i - jnp.sum(p_i, -1, keepdims=True) * frac_i
+        r_j = p_j - jnp.sum(p_j, -1, keepdims=True) * frac_j
+        return jnp.sum(r_i * r_i, -1) + jnp.sum(r_j * r_j, -1)
+
+    def loss(zs):
+        return jnp.sum(residual(zs))
+
+    grad_fn = jax.grad(loss)
+
+    def step(carry, _):
+        zs, m = carry
+        g = grad_fn(zs)
+        # Heavy-ball momentum keeps the solve cheap yet fast-converging.
+        m = tuple(0.7 * mm + gg for mm, gg in zip(m, g))
+        zs = tuple(z - lr * mm for z, mm in zip(zs, m))
+        return (zs, m), None
+
+    def solve_from(z0_i, z0_j):
+        init = ((z0_i, z0_j), (jnp.zeros_like(z0_i), jnp.zeros_like(z0_j)))
+        (zs, _m), _ = jax.lax.scan(step, init, None, length=n_steps)
+        return zs
+
+    # Two starts guard against the occasional flat basin: (a) the measured
+    # fractions themselves, (b) the uniform stack.  Keep the lower-residual.
+    za = solve_from(
+        jnp.log(jnp.clip(frac_i, 1e-4, None)),
+        jnp.log(jnp.clip(frac_j, 1e-4, None)),
+    )
+    zb = solve_from(jnp.zeros_like(frac_i), jnp.zeros_like(frac_j))
+    better_b = (residual(zb) < residual(za))[..., None]
+    z_i = jnp.where(better_b, zb[0], za[0])
+    z_j = jnp.where(better_b, zb[1], za[1])
+    return to_simplex(z_i), to_simplex(z_j)
+
+
+def pair_cost_matrix(model: CategoryModel, st_stacks):
+    """Dense all-pairs cost: cost[i, j] = slowdown(i|j) + slowdown(j|i).
+
+    st_stacks: (N, 4) ST stacks.  Returns (N, N) symmetric; diagonal is set
+    huge so an application never pairs with itself.
+    """
+    st = jnp.asarray(st_stacks, jnp.float32)
+    n = st.shape[0]
+    s_ij = predict_slowdown(model, st[:, None, :], st[None, :, :])  # i next to j
+    cost = s_ij + s_ij.T
+    big = jnp.full((n,), 1e9, cost.dtype)
+    return cost.at[jnp.arange(n), jnp.arange(n)].set(big)
+
+
+def profile_to_training_set(
+    st_stacks: np.ndarray,
+    pair_smt_values: np.ndarray,
+    pairs: Sequence[Tuple[int, int]],
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Assemble (st_i, st_j, smt_i) training triples from profiling runs.
+
+    st_stacks:       (A, 4) per-app ST stacks.
+    pair_smt_values: (P, 2, 4) per-pair instruction-aligned SMT values.
+    pairs:           length-P list of (i, j) app indices.
+    """
+    xs_i, xs_j, ys = [], [], []
+    for p, (i, j) in enumerate(pairs):
+        xs_i.append(st_stacks[i]); xs_j.append(st_stacks[j])
+        ys.append(pair_smt_values[p, 0])
+        xs_i.append(st_stacks[j]); xs_j.append(st_stacks[i])
+        ys.append(pair_smt_values[p, 1])
+    return np.stack(xs_i), np.stack(xs_j), np.stack(ys)

@@ -1,0 +1,110 @@
+"""SYNPA — the family of SMT thread-to-core allocation policies (paper §5).
+
+Every quantum (100 ms), a SYNPA policy:
+
+  Step 0. reads the PMU counters of every application and builds its measured
+          ISC stack with the variant's (LT100, GT100) repair pair (Table 2);
+  Step 1. applies the Eq. 4 model *inversely* to the current pairs to recover
+          the stack each application would have had running alone (ST mode),
+          renormalised to height 1;
+  Step 2. applies the forward model to every candidate pair (both directions)
+          to predict each pair's mutual slowdown;
+  Step 3. runs the Blossom algorithm on the predicted-degradation matrix and
+          pins the selected pairs to cores for the next quantum.
+
+The per-quantum pipeline (stack repair -> inverse -> all-pairs forward) is a
+single jitted JAX function; Step 3 runs the exact Edmonds matching on host.
+The all-pairs forward model is also available as a Pallas TPU kernel
+(``repro.kernels.pair_score``) for cluster-scale N; at N = 8 the XLA path is
+used.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import isc, matching, regression
+
+Pair = Tuple[int, int]
+
+
+class Scheduler:
+    """Base interface shared by SYNPA, the baselines and Hy-Sched."""
+
+    name = "base"
+
+    def reset(self, n_apps: int, rng: np.random.Generator, machine=None) -> None:
+        self.n_apps = n_apps
+        self.rng = rng
+        self.machine = machine
+
+    def schedule(self, quantum: int, samples, prev_pairs: List[Pair]) -> List[Pair]:
+        raise NotImplementedError
+
+    # helpers ---------------------------------------------------------------
+    def _random_pairs(self) -> List[Pair]:
+        perm = self.rng.permutation(self.n_apps)
+        return [(int(perm[2 * k]), int(perm[2 * k + 1])) for k in range(self.n_apps // 2)]
+
+    @staticmethod
+    def _counters_array(samples) -> np.ndarray:
+        """(N, 5) array: cycles, stall_fe, stall_be, inst_spec, inst_retired."""
+        return np.array([s.as_tuple() for s in samples], dtype=np.float32)
+
+
+def _partner_index(pairs: Sequence[Pair], n: int) -> np.ndarray:
+    partner = np.zeros(n, dtype=np.int32)
+    for i, j in pairs:
+        partner[i] = j
+        partner[j] = i
+    return partner
+
+
+def make_synpa_pipeline(method: isc.StackMethod, model: regression.CategoryModel):
+    """One jitted function: PMU counters + current partners -> pair costs.
+
+    Returns ``fn(counters (N,5) f32, partner (N,) i32) -> (cost (N,N), st (N,4))``.
+    """
+
+    @jax.jit
+    def pipeline(counters: jnp.ndarray, partner: jnp.ndarray):
+        raw = isc.raw_stack(
+            counters[:, 0], counters[:, 1], counters[:, 2], counters[:, 3]
+        )
+        smt = isc.build_stack(raw, method)               # Step 0
+        smt_partner = smt[partner]
+        st, _ = regression.inverse(model, smt, smt_partner)  # Step 1
+        cost = regression.pair_cost_matrix(model, st)        # Step 2
+        return cost, st
+
+    return pipeline
+
+
+class SynpaScheduler(Scheduler):
+    """One member of the SYNPA family, e.g. SYNPA4_R-FEBE."""
+
+    def __init__(
+        self,
+        method: isc.StackMethod,
+        model: regression.CategoryModel,
+        name: Optional[str] = None,
+        matcher: str = "auto",
+    ):
+        self.method = method
+        self.model = model
+        self.name = name or f"SYNPA{method.n_categories}_{method.name.split('_', 1)[1]}"
+        self.matcher = matcher
+        self._pipeline = make_synpa_pipeline(method, model)
+
+    def schedule(self, quantum, samples, prev_pairs):
+        if any(s is None for s in samples) or not prev_pairs:
+            return self._random_pairs()
+        counters = self._counters_array(samples)
+        partner = _partner_index(prev_pairs, self.n_apps)
+        cost, _st = self._pipeline(jnp.asarray(counters), jnp.asarray(partner))
+        return matching.min_cost_pairs(np.asarray(cost), method=self.matcher)  # Step 3

@@ -1,0 +1,2 @@
+from repro.ft.elastic import ElasticTopology, replan_after_failure
+from repro.ft.heartbeat import HeartbeatMonitor

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+* ``pair_score``       — the paper's policy hot loop: all-pairs Eq. 4
+                         slowdown scoring (O(N^2 C) per scheduling quantum).
+* ``flash_attention``  — online-softmax prefill attention (causal + sliding
+                         window, GQA-aware BlockSpecs).
+* ``decode_attention`` — single-token GQA decode over long KV caches (the
+                         HBM-bound inner loop of the decode_* cells).
+* ``rmsnorm``          — fused row norm + scale.
+
+Each package: kernel.py (pl.pallas_call + BlockSpec tiling), ops.py (jit'd
+wrapper: padding, head mapping, interpret plumbing, XLA fallback), ref.py
+(pure-jnp oracle for the allclose sweeps).
+"""

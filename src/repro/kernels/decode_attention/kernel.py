@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: single-token GQA decode over a long KV cache.
+
+The decode_* cells are HBM-bound: each new token must stream the entire
+(valid prefix of the) KV cache once.  The kernel's job is to hit that
+streaming bound:
+
+* grid = (B, Hkv, S/BK) — KV-block axis innermost/sequential; the f32
+  accumulator for all ``group`` query heads of one KV head lives in VMEM
+  scratch, so K/V tiles are read exactly once from HBM;
+* all grouped query heads (group = Hq/Hkv) ride along in one program —
+  GQA's arithmetic-intensity advantage (group MACs per KV byte) is realised
+  instead of re-streaming K/V per query head;
+* per-sequence valid length arrives as a (B, 1) i32 array in VMEM; masked
+  tail positions contribute exp(NEG_INF) = 0.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_K = 512
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *,
+                   scale: float, window: int, block_k: int, kv_steps: int):
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (G, D) grouped query heads
+    k = k_ref[0, :, 0].astype(jnp.float32)       # (BK, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)       # (BK, D)
+    length = len_ref[0, 0]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale        # (G, BK)
+    kpos = kj * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 1)
+    valid = kpos <= length
+    if window > 0:
+        valid &= kpos > length - window
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    safe = m_new > NEG_INF * 0.5
+    alpha = jnp.where(safe, jnp.exp(m_prev - m_new), 0.0)
+    p = jnp.where(safe, jnp.exp(s - m_new), 0.0)
+    l_ref[...] = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kj == kv_steps - 1)
+    def _finish():
+        l = l_ref[...]
+        o_ref[0, 0] = (acc_ref[...] / jnp.where(l == 0.0, 1.0, l)
+                       ).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q, k_cache, v_cache, lengths, *,
+                            window: int = 0,
+                            block_k: int = DEFAULT_BLOCK_K,
+                            interpret: bool = False):
+    """q: (B, Hkv, G, D); k/v_cache: (B, S, Hkv, D); lengths: (B, 1) i32.
+    S % block_k == 0 (ops.py pads).  Returns (B, Hkv, G, D)."""
+    b, hkv, g, d = q.shape
+    s = k_cache.shape[1]
+    grid = (b, hkv, s // block_k)
+    kernel = functools.partial(
+        _decode_kernel, scale=d ** -0.5, window=window,
+        block_k=block_k, kv_steps=s // block_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b_, h, j: (b_, h, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, d), lambda b_, h, j: (b_, j, h, 0)),
+            pl.BlockSpec((1, block_k, 1, d), lambda b_, h, j: (b_, j, h, 0)),
+            pl.BlockSpec((1, 1), lambda b_, h, j: (b_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda b_, h, j: (b_, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_cache, v_cache, lengths)

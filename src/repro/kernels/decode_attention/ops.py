@@ -1,0 +1,37 @@
+"""Public wrapper for decode attention: GQA reshape, padding, dispatch."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import (
+    DEFAULT_BLOCK_K,
+    decode_attention_pallas,
+)
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "impl", "block_k"))
+def decode_attention(q, k_cache, v_cache, lengths, window: int = 0,
+                     impl: str = "xla", block_k: int = DEFAULT_BLOCK_K):
+    """q: (B, Hq, D); k/v_cache: (B, S, Hkv, D); lengths: (B,) i32."""
+    if impl == "xla":
+        return decode_attention_ref(q, k_cache, v_cache, lengths, window)
+    b, hq, d = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    group = hq // hkv
+    pad_s = (-s) % block_k
+    kc, vc = k_cache, v_cache
+    if pad_s:
+        kc = jnp.pad(kc, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+        vc = jnp.pad(vc, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+    qg = q.reshape(b, hkv, group, d)
+    out = decode_attention_pallas(
+        qg, kc, vc, lengths.reshape(b, 1).astype(jnp.int32),
+        window=window, block_k=block_k,
+        interpret=(impl == "pallas_interpret"))
+    return out.reshape(b, hq, d)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for single-token GQA decode attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths, window: int = 0):
+    """q: (B, Hq, D) one query per sequence; k/v_cache: (B, S, Hkv, D);
+    lengths: (B,) int32 — positions [0, len] are valid (len = current pos).
+
+    Returns (B, Hq, D).
+    """
+    b, hq, d = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, d)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qg.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * (d ** -0.5)
+    kpos = jnp.arange(s)[None, :]
+    valid = kpos <= lengths[:, None]
+    if window > 0:
+        valid &= kpos > (lengths[:, None] - window)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", probs,
+                     v_cache.astype(jnp.float32))
+    return out.reshape(b, hq, d).astype(q.dtype)

@@ -1,0 +1,56 @@
+"""Public flash-attention wrapper: layout, padding, backend dispatch.
+
+Model code calls with (B, S, H, D) layout; the kernel wants (B, H, S, D).
+Sequence lengths are padded to the block size; padded key positions are
+masked out by the causal/global position mask (padded q rows are sliced
+away).  ``impl="xla"`` routes to the oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import (
+    DEFAULT_BLOCK_K,
+    DEFAULT_BLOCK_Q,
+    flash_attention_pallas,
+)
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "interpret", "block_q", "block_k"))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    interpret: bool = False,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K):
+    """q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, D) -> (B, Sq, Hq, D)."""
+    b, sq, hq, d = q.shape
+    skv = k.shape[1]
+    pad_q = (-sq) % block_q
+    pad_k = (-skv) % block_k
+    qt = jnp.moveaxis(q, 1, 2)
+    kt = jnp.moveaxis(k, 1, 2)
+    vt = jnp.moveaxis(v, 1, 2)
+    if pad_q:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    out = flash_attention_pallas(
+        qt, kt, vt, causal=causal, window=window, kv_len=skv,
+        block_q=block_q, block_k=block_k, interpret=interpret)
+    out = jnp.moveaxis(out, 1, 2)
+    return out[:, :sq]
+
+
+def attention(q, k, v, causal: bool = True, window: int = 0,
+              impl: str = "xla", **kw):
+    if impl == "xla":
+        return attention_ref(q, k, v, causal=causal, window=window)
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           interpret=(impl == "pallas_interpret"), **kw)

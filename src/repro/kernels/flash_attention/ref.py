@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for flash attention (causal / sliding-window, GQA)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, causal: bool = True, window: int = 0):
+    """q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, D) with Hq % Hkv == 0.
+
+    Returns (B, Sq, Hq, D) in q's dtype; softmax in f32.
+    """
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    qg = q.reshape(b, sq, hkv, group, d)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32) * (d ** -0.5)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, sq, hq, d).astype(q.dtype)

@@ -1,0 +1,32 @@
+"""Public wrapper for the pair-score kernel: padding + backend dispatch."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pair_score.kernel import BLOCK, pair_score_pallas
+from repro.kernels.pair_score.ref import DIAG, pair_cost_ref
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_categories", "impl", "block"))
+def pair_costs(st, coeffs, n_categories: int = 4, impl: str = "xla",
+               block: int = BLOCK):
+    """All-pairs SYNPA pair costs.
+
+    st: (N, C) ST stacks.  coeffs: (C, 4) Eq. 4 coefficients.
+    impl: "xla" (oracle path, default on CPU), "pallas" (TPU),
+    "pallas_interpret" (CPU validation of the TPU kernel body).
+    """
+    if impl == "xla":
+        return pair_cost_ref(st, coeffs, n_categories)
+    n = st.shape[0]
+    pad = (-n) % block
+    stp = jnp.pad(st.astype(jnp.float32), ((0, pad), (0, 0)))
+    out = pair_score_pallas(
+        stp, coeffs, n_categories=n_categories, block=block,
+        interpret=(impl == "pallas_interpret"))
+    return out[:n, :n]

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the all-pairs Eq. 4 pair-scoring kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+MIN_SLOWDOWN = 0.25
+MAX_SLOWDOWN = 16.0
+DIAG = 1e9
+
+
+def pair_cost_ref(st, coeffs, n_categories: int = 4):
+    """st: (N, C) ST stacks; coeffs: (C, 4) rows (alpha, beta, gamma, rho).
+
+    Returns (N, N) f32: cost[i, j] = slowdown(i|j) + slowdown(j|i), diagonal
+    set to ``DIAG``.
+    """
+    st = jnp.asarray(st, jnp.float32)
+    coeffs = jnp.asarray(coeffs, jnp.float32)
+    c = st.shape[-1]
+    mask = (jnp.arange(c) < n_categories).astype(jnp.float32)
+    a, b, g, r = coeffs[:, 0], coeffs[:, 1], coeffs[:, 2], coeffs[:, 3]
+    x_i = st[:, None, :]
+    x_j = st[None, :, :]
+    pred = (a + b * x_i + g * x_j + r * x_i * x_j) * mask
+    s_ij = jnp.clip(jnp.sum(jnp.clip(pred, 0.0, None), -1),
+                    MIN_SLOWDOWN, MAX_SLOWDOWN)
+    cost = s_ij + s_ij.T
+    n = st.shape[0]
+    idx = jnp.arange(n)
+    return cost.at[idx, idx].set(DIAG)

@@ -1,0 +1,43 @@
+"""Pallas TPU kernel: fused RMSNorm (one HBM pass, f32 statistics).
+
+Rows are tiled (BT, D) into VMEM; the mean-square reduction, rsqrt and scale
+multiply fuse into a single pass so the activation is read once and written
+once (the XLA lowering is usually fused too — this kernel exists as the
+pattern-template and to pin the f32-statistics behaviour for bf16 inputs).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_T = 256
+
+
+def _rmsnorm_kernel(x_ref, scale_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)            # (BT, D)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * scale_ref[...].astype(jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def rms_norm_pallas(x, scale, eps: float = 1e-6,
+                    block_t: int = DEFAULT_BLOCK_T,
+                    interpret: bool = False):
+    """x: (T, D) with T % block_t == 0 (ops.py pads); scale: (D,)."""
+    t, d = x.shape
+    kernel = functools.partial(_rmsnorm_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(t // block_t,),
+        in_specs=[
+            pl.BlockSpec((block_t, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_t, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
+        interpret=interpret,
+    )(x, scale)

@@ -1,0 +1,29 @@
+"""Public wrapper for fused RMSNorm."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rmsnorm.kernel import DEFAULT_BLOCK_T, rms_norm_pallas
+from repro.kernels.rmsnorm.ref import rms_norm_ref
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "impl", "block_t"))
+def rms_norm(x, scale, eps: float = 1e-6, impl: str = "xla",
+             block_t: int = DEFAULT_BLOCK_T):
+    """x: (..., D) -> same shape; f32 statistics regardless of dtype."""
+    if impl == "xla":
+        return rms_norm_ref(x, scale, eps)
+    shape = x.shape
+    d = shape[-1]
+    xt = x.reshape(-1, d)
+    t = xt.shape[0]
+    pad = (-t) % block_t
+    if pad:
+        xt = jnp.pad(xt, ((0, pad), (0, 0)))
+    out = rms_norm_pallas(xt, scale, eps=eps, block_t=block_t,
+                          interpret=(impl == "pallas_interpret"))
+    return out[:t].reshape(shape)

@@ -1,0 +1,386 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input shape x mesh) cell this driver
+
+    1. builds the production mesh (16x16 single pod / 2x16x16 multi-pod)
+       over 512 placeholder host devices,
+    2. constructs abstract state via ``jax.eval_shape`` (no allocation),
+    3. ``jit(step).lower(**input_specs).compile()`` with explicit
+       in/out shardings from the ShardingPlan,
+    4. prints ``memory_analysis()`` (does it fit 16 GB/chip?) and
+       ``cost_analysis()`` (FLOPs/bytes), parses collective bytes from the
+       HLO, and writes the roofline terms JSON consumed by
+       ``benchmarks/roofline`` and EXPERIMENTS.md.
+
+The two XLA_FLAGS lines above MUST precede every other import — jax locks
+the device count on first initialisation.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b \
+        --shape train_4k [--multi-pod] [--json out.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, shapes_for
+from repro.data.synthetic import make_batch_specs
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.models.registry import build_model, get_config, list_archs
+from repro.optim.adamw import AdamWConfig
+from repro.sharding import axis_rules, logical_to_mesh, make_plan, param_partition_specs
+from repro.train.step import TrainStepBuilder
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "benchmarks", "results", "dryrun")
+
+
+# --------------------------------------------------------------------- specs
+def input_specs(arch: str, shape_name: str, cfg=None) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of a cell."""
+    cfg = cfg or get_config(arch)
+    shape = SHAPES[shape_name]
+    return make_batch_specs(cfg, shape.seq_len, shape.global_batch, shape.kind)
+
+
+def _batch_sharding(specs, plan, mesh, batch_shardable: bool):
+    ba = "batch" if batch_shardable else None   # logical name, not mesh axes
+
+    def spec_for(leaf):
+        from repro.sharding.plan import sanitize_spec
+        dims = [ba] + [None] * (len(leaf.shape) - 1)
+        spec = logical_to_mesh(dims, plan.activation_rules)
+        spec = sanitize_spec(spec, tuple(leaf.shape), dict(mesh.shape))
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(spec_for, specs)
+
+
+def _cache_sharding(cache_shapes, plan, mesh, batch_shardable: bool):
+    """Partition specs for the decode cache pytree."""
+    rules = plan.activation_rules
+    ba = "batch" if batch_shardable else None   # logical name, not mesh axes
+
+    def spec_for_path(path, leaf):
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        nd = len(leaf.shape)
+        if name in ("k", "v"):          # (L, B, S, Hkv, hd)
+            dims = [None, ba, "kv_seq", "kv_heads", None]
+        elif name == "ssm":              # (L, B, d_inner, N)
+            dims = [None, ba, "mlp", None]
+        elif name.endswith("wkv"):       # (L, B, H, hd, hd)
+            dims = [None, ba, None, None, None]
+        elif name in ("image_embeds", "enc"):  # (B, T, d)
+            dims = [ba, None, None]
+        elif nd >= 2:
+            dims = [None, ba] + [None] * (nd - 2)
+        else:
+            dims = [None] * nd
+        from repro.sharding.plan import sanitize_spec
+        spec = logical_to_mesh(dims[:nd], rules)
+        spec = sanitize_spec(spec, tuple(leaf.shape), dict(mesh.shape))
+        return NamedSharding(mesh, spec)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec_for_path(p, l) for p, l in flat])
+
+
+def count_params(shapes_tree) -> int:
+    return int(sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes_tree)))
+
+
+def active_params(cfg, total: int) -> float:
+    """MoE: only top-k routed experts are active per token."""
+    if cfg.n_experts == 0:
+        return float(total)
+    routed = (cfg.n_layers * cfg.n_experts * 3
+              * cfg.d_model * cfg.resolved_moe_d_ff)
+    frac = cfg.n_experts_per_token / cfg.n_experts
+    return float(total - routed + routed * frac)
+
+
+# ---------------------------------------------------------------------- cell
+def _compile_variant(arch, shape_name, multi_pod, overrides, fsdp,
+                     rules_override=None, opt_kw=None):
+    """Build + lower + compile one variant; returns (compiled, hlo, meta)."""
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch, **overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    batch_shardable = shape.global_batch >= (
+        np.prod([mesh.shape[a]
+                 for a in (("pod", "data") if multi_pod else ("data",))]))
+    shard_kv_seq = (shape.kind == "decode") and not batch_shardable
+    plan = make_plan(multi_pod=multi_pod, fsdp=fsdp,
+                     shard_kv_seq=shard_kv_seq)
+    if rules_override:
+        import dataclasses as _dc
+        rules = dict(plan.activation_rules)
+        rules.update(rules_override)
+        plan = _dc.replace(plan, activation_rules=rules)
+    model = build_model(cfg)
+    batch_specs = input_specs(arch, shape_name, cfg)
+
+    with mesh, axis_rules(plan.activation_rules, mesh):
+        if shape.kind == "train":
+            builder = TrainStepBuilder(model, AdamWConfig(**(opt_kw or {})))
+            state_shapes = builder.state_shapes()
+            state_spec = param_partition_specs(state_shapes, plan, mesh)
+            state_shard = jax.tree.map(
+                lambda s: NamedSharding(mesh, s), state_spec,
+                is_leaf=lambda x: isinstance(x, P))
+            batch_shard = _batch_sharding(batch_specs, plan, mesh,
+                                          batch_shardable)
+            step = jax.jit(
+                builder.train_step,
+                in_shardings=(state_shard, batch_shard),
+                out_shardings=(state_shard, None),
+                donate_argnums=(0,),
+            )
+            lowered = step.lower(state_shapes, batch_specs)
+            n_params = count_params(state_shapes["params"])
+            tokens = shape.global_batch * shape.seq_len
+            mflops = rl.model_flops(active_params(cfg, n_params), tokens,
+                                    "train")
+        elif shape.kind == "prefill":
+            params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+            p_spec = param_partition_specs(params_shapes, plan, mesh)
+            p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), p_spec,
+                                   is_leaf=lambda x: isinstance(x, P))
+            batch_shard = _batch_sharding(batch_specs, plan, mesh,
+                                          batch_shardable)
+
+            def prefill(params, batch):
+                logits, _ = model.forward(params, batch)
+                return logits
+
+            step = jax.jit(prefill, in_shardings=(p_shard, batch_shard))
+            lowered = step.lower(params_shapes, batch_specs)
+            n_params = count_params(params_shapes)
+            tokens = shape.global_batch * shape.seq_len
+            mflops = rl.model_flops(active_params(cfg, n_params), tokens,
+                                    "inference")
+        else:  # decode
+            params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+            p_spec = param_partition_specs(params_shapes, plan, mesh)
+            p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), p_spec,
+                                   is_leaf=lambda x: isinstance(x, P))
+            cache_shapes = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len))
+            cache_shard = _cache_sharding(cache_shapes, plan, mesh,
+                                          batch_shardable)
+            tok_shard = _batch_sharding(batch_specs, plan, mesh,
+                                        batch_shardable)
+
+            def serve_step(params, cache, tokens):
+                return model.decode_step(params, cache, tokens)
+
+            step = jax.jit(
+                serve_step,
+                in_shardings=(p_shard, cache_shard, tok_shard["tokens"]),
+                out_shardings=(None, cache_shard),
+                donate_argnums=(1,),
+            )
+            lowered = step.lower(params_shapes, cache_shapes,
+                                 batch_specs["tokens"])
+            n_params = count_params(params_shapes)
+            mflops = rl.model_flops(active_params(cfg, n_params),
+                                    shape.global_batch, "inference")
+
+        compiled = lowered.compile()
+
+    meta = dict(mesh_name=mesh_name, n_dev=n_dev, n_params=n_params,
+                mflops=mflops)
+    return compiled, meta
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool = False,
+    overrides: Optional[Dict[str, Any]] = None,
+    verbose: bool = True,
+    fsdp: bool = True,
+    dual_lowering: bool = True,
+    scan_only: bool = False,
+    rules_override: Optional[Dict[str, Any]] = None,
+    opt_kw: Optional[Dict[str, Any]] = None,
+) -> Dict[str, Any]:
+    """Lower + compile one (arch, shape, mesh) cell; return roofline record.
+
+    Methodology (CPU-backend dry-run): the cell is lowered TWICE — once with
+    the layer loop *unrolled* (XLA HloCostAnalysis does not multiply
+    while-loop bodies by trip count, so only unrolled HLO gives honest
+    FLOP/collective counts) and once *scanned* (whose memory_analysis
+    reflects per-layer buffer liveness).  FLOPs/bytes/collectives come from
+    the unrolled artifact; bytes-per-device from the scanned one.
+    """
+    shape = SHAPES[shape_name]
+    overrides = dict(overrides or {})
+    if shape.kind == "train":
+        overrides.setdefault("remat", "full")
+    overrides.setdefault("scan_layers", bool(scan_only))
+    if scan_only:
+        dual_lowering = False
+    cfg = get_config(arch, **overrides)
+    if cfg.n_experts > 0:
+        overrides.setdefault("moe_dispatch", "shard_map")
+        cfg = get_config(arch, **overrides)
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        raise ValueError(
+            f"{arch} is full-attention; long_500k is skipped (DESIGN.md)")
+
+    t0 = time.time()
+    compiled, meta = _compile_variant(arch, shape_name, multi_pod,
+                                      overrides, fsdp,
+                                      rules_override=rules_override,
+                                      opt_kw=opt_kw)
+    compile_s = time.time() - t0
+    hlo = compiled.as_text()
+    terms = rl.terms_from_compiled(
+        arch, shape_name, meta["mesh_name"], meta["n_dev"], compiled, hlo,
+        meta["mflops"])
+    mem_analysis_repr = str(compiled.memory_analysis())
+
+    if dual_lowering and not cfg.scan_layers:
+        try:
+            compiled_scan, _meta2 = _compile_variant(
+                arch, shape_name, multi_pod,
+                dict(overrides, scan_layers=True), fsdp,
+                rules_override=rules_override, opt_kw=opt_kw)
+            ma = compiled_scan.memory_analysis()
+            mem_analysis_repr = str(ma)
+            mem = float(
+                getattr(ma, "temp_size_in_bytes", 0)
+                + getattr(ma, "argument_size_in_bytes", 0)
+                - getattr(ma, "alias_size_in_bytes", 0))
+            terms = dataclasses.replace(terms, bytes_per_device=mem)
+        except Exception as e:  # pragma: no cover — diagnostics only
+            print(f"  (scanned memory lowering failed: {e})")
+
+    record = terms.as_dict()
+    record.update(
+        compile_s=compile_s,
+        n_params=meta["n_params"],
+        fits_hbm=bool((terms.bytes_per_device or 0) <= 16 * 2**30),
+        collective_counts=rl.collective_counts_from_hlo(hlo),
+        overrides=overrides,
+        fsdp=fsdp,
+        rules_override=rules_override or {},
+        opt_kw=opt_kw or {},
+    )
+    if verbose:
+        print(f"== {arch} x {shape_name} on {meta['mesh_name']} ==")
+        print(f"  memory_analysis (scanned): {mem_analysis_repr}")
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        print(f"  cost_analysis (unrolled): flops={cost.get('flops', 0):.3e} "
+              f"bytes={cost.get('bytes accessed', 0):.3e}")
+        print(f"  collective bytes/dev: {terms.collective_bytes:.3e} "
+              f"{record['collective_counts']}")
+        print(f"  terms: compute={terms.compute_s:.4f}s "
+              f"memory={terms.memory_s:.4f}s "
+              f"collective={terms.collective_s:.4f}s "
+              f"-> dominant={terms.dominant}")
+        print(f"  useful_flops_ratio={terms.useful_flops_ratio:.3f} "
+              f"roofline_fraction={terms.roofline_fraction:.3f} "
+              f"bytes/dev={(terms.bytes_per_device or 0)/2**30:.2f}GiB "
+              f"fits_hbm={record['fits_hbm']} compile={compile_s:.1f}s")
+    return record
+
+
+def all_cells(multi_pod: bool):
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for shape in shapes_for(cfg):
+            yield arch, shape.name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--json", type=str, default=None)
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg override key=value (repeatable)")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--scan-only", action="store_true",
+                    help="single (scanned) lowering: fast coherence proof")
+    ap.add_argument("--cache-dir", type=str, default=None,
+                    help="write/read per-cell JSON records here")
+    args = ap.parse_args()
+
+    if args.list:
+        for arch, shape in all_cells(args.multi_pod):
+            print(arch, shape)
+        return
+
+    overrides: Dict[str, Any] = {}
+    for kv in args.override:
+        k, v = kv.split("=", 1)
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        overrides[k] = v
+
+    records = []
+    cells = (list(all_cells(args.multi_pod)) if args.all
+             else [(args.arch, args.shape)])
+    for arch, shape in cells:
+        cache_path = None
+        if args.cache_dir:
+            os.makedirs(args.cache_dir, exist_ok=True)
+            mesh_tag = "2x16x16" if args.multi_pod else "16x16"
+            mode = "scan" if args.scan_only else "full"
+            fname = f"{arch}__{shape}__{mesh_tag}__{mode}.json".replace("/", "_")
+            cache_path = os.path.join(args.cache_dir, fname)
+            if os.path.exists(cache_path):
+                with open(cache_path) as f:
+                    records.append(json.load(f))
+                print(f"CACHED {arch} x {shape}")
+                continue
+        try:
+            rec = run_cell(arch, shape, multi_pod=args.multi_pod,
+                           overrides=dict(overrides),
+                           fsdp=not args.no_fsdp,
+                           scan_only=args.scan_only)
+        except ValueError as e:
+            print(f"SKIP {arch} x {shape}: {e}")
+            continue
+        except Exception as e:
+            print(f"FAIL {arch} x {shape}: {type(e).__name__}: {e}")
+            continue
+        records.append(rec)
+        if cache_path:
+            with open(cache_path, "w") as f:
+                json.dump(rec, f, indent=2)
+
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(records, f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,218 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+TPU v5e constants (the deployment target; this container is CPU-only so
+terms are *derived*, not measured):
+
+    peak compute   197 TFLOP/s bf16 per chip
+    HBM bandwidth  819 GB/s per chip
+    ICI link       ~50 GB/s per link
+
+Sources:
+* ``compiled.cost_analysis()`` -> HLO FLOPs and bytes accessed (per-device —
+  the SPMD module is the per-device program).
+* collective bytes are NOT in cost_analysis: we parse the optimized HLO text
+  and sum the operand sizes of every all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute instruction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  bf16[256,1024]{1,0}   or   f32[]   or   u32[8]
+_TYPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\((.*)$"
+)
+
+
+def _type_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes of every collective op, by collective kind.
+
+    ``-start``/``-done`` async pairs are counted once (on the start op).
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    out["total"] = 0
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        if "-done(" in line:   # async completion: already counted at -start
+            continue
+        kind = m.group(2)
+        operand_part = m.group(3)
+        # operand types appear inside the parens: f32[128,64]{1,0} %name, ...
+        nbytes = 0
+        for tm in _TYPE_RE.finditer(operand_part):
+            nbytes += _type_bytes(tm.group(1), tm.group(2))
+        if nbytes == 0:
+            # fall back to the result type(s) on the lhs
+            for tm in _TYPE_RE.finditer(m.group(1)):
+                nbytes += _type_bytes(tm.group(1), tm.group(2))
+        out[kind] += nbytes
+        out["total"] += nbytes
+    return out
+
+
+def collective_counts_from_hlo(hlo_text: str) -> Dict[str, int]:
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if m and "-done(" not in line:
+            counts[m.group(2)] += 1
+    return counts
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    """Per-device roofline decomposition of one compiled step."""
+
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    hlo_flops: float               # per device
+    hlo_bytes: float               # per device (HBM traffic proxy)
+    collective_bytes: float        # per device
+    collective_breakdown: Dict[str, int]
+    model_flops_global: float      # 6*N*D (train) / 2*N*D (inference)
+    bytes_per_device: Optional[float] = None   # from memory_analysis
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        """The step-time lower bound = max of the three terms (full overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO FLOPs x devices): how much compiled compute is
+        'useful' — catches remat recompute, dispatch waste, padding."""
+        total = self.hlo_flops * self.n_devices
+        return self.model_flops_global / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute roofline fraction if the step ran exactly at the
+        bound: (model FLOPs / devices / peak) / bound_s.  The score to push up
+        for compute-bound cells; for memory/collective-bound cells the lever
+        is the dominant term itself."""
+        ideal_s = self.model_flops_global / self.n_devices / PEAK_FLOPS
+        return ideal_s / self.bound_s if self.bound_s else 0.0
+
+    def as_dict(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "n_devices": self.n_devices,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "collective_bytes": self.collective_bytes,
+            "collective_breakdown": self.collective_breakdown,
+            "model_flops_global": self.model_flops_global,
+            "bytes_per_device": self.bytes_per_device,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "bound_s": self.bound_s,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops(n_params_active: float, tokens: float, kind: str) -> float:
+    """6*N*D for training, 2*N*D for inference forward passes."""
+    return (6.0 if kind == "train" else 2.0) * n_params_active * tokens
+
+
+def terms_from_compiled(
+    arch: str, shape: str, mesh_name: str, n_devices: int,
+    compiled, hlo_text: str, model_flops_global: float,
+) -> RooflineTerms:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older API returned a per-program list
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes_from_hlo(hlo_text)
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        mem = float(
+            getattr(ma, "temp_size_in_bytes", 0)
+            + getattr(ma, "argument_size_in_bytes", 0)
+            + getattr(ma, "output_size_in_bytes", 0)
+            - getattr(ma, "alias_size_in_bytes", 0)
+        )
+    except Exception:
+        pass
+    return RooflineTerms(
+        arch=arch, shape=shape, mesh=mesh_name, n_devices=n_devices,
+        hlo_flops=flops, hlo_bytes=nbytes,
+        collective_bytes=float(coll["total"]),
+        collective_breakdown={k: v for k, v in coll.items() if k != "total"},
+        model_flops_global=model_flops_global,
+        bytes_per_device=mem,
+    )
+
+
+def format_table(rows: List[RooflineTerms]) -> str:
+    hdr = (f"{'arch':22s} {'shape':12s} {'mesh':9s} "
+           f"{'compute_s':>10s} {'memory_s':>10s} {'collect_s':>10s} "
+           f"{'dominant':>10s} {'useful':>7s} {'roofl%':>7s} {'GiB/dev':>8s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        gib = (r.bytes_per_device or 0) / 2**30
+        lines.append(
+            f"{r.arch:22s} {r.shape:12s} {r.mesh:9s} "
+            f"{r.compute_s:10.4f} {r.memory_s:10.4f} {r.collective_s:10.4f} "
+            f"{r.dominant:>10s} {r.useful_flops_ratio:7.3f} "
+            f"{100*r.roofline_fraction:6.1f}% {gib:8.2f}")
+    return "\n".join(lines)

@@ -1,0 +1,2 @@
+from repro.models.config import ModelConfig
+from repro.models.registry import build_model, get_config, list_archs

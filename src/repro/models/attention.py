@@ -1,0 +1,191 @@
+"""Attention: GQA/MQA/MHA with RoPE, causal + sliding-window masks,
+cross-attention, and single-token decode against a KV cache.
+
+The prefill/training path can route through the Pallas flash-attention
+kernel (``cfg.attention_impl = "pallas"``; ``"pallas_interpret"`` for CPU
+validation); the default ``"xla"`` path is used by the multi-pod dry-run
+(TPU Pallas cannot lower on the CPU backend).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+from repro.sharding import shard
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ModelConfig, d_model: Optional[int] = None) -> Dict:
+    d = d_model or cfg.d_model
+    hd = cfg.resolved_head_dim
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    p = {
+        "wq": layers.truncated_normal(k1, (d, cfg.n_heads, hd), d**-0.5,
+                                      cfg.weight_dtype()),
+        "wk": layers.truncated_normal(k2, (d, cfg.n_kv_heads, hd), d**-0.5,
+                                      cfg.weight_dtype()),
+        "wv": layers.truncated_normal(k3, (d, cfg.n_kv_heads, hd), d**-0.5,
+                                      cfg.weight_dtype()),
+        "wo": layers.truncated_normal(
+            k4, (cfg.n_heads, hd, d), (cfg.n_heads * hd) ** -0.5,
+            cfg.weight_dtype()),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads, hd), cfg.weight_dtype())
+        p["bk"] = jnp.zeros((cfg.n_kv_heads, hd), cfg.weight_dtype())
+        p["bv"] = jnp.zeros((cfg.n_kv_heads, hd), cfg.weight_dtype())
+    return p
+
+
+def _project_qkv(params: Dict, x, cfg: ModelConfig):
+    q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"], preferred_element_type=F32)
+    k = jnp.einsum("bsd,dnh->bsnh", x, params["wk"], preferred_element_type=F32)
+    v = jnp.einsum("bsd,dnh->bsnh", x, params["wv"], preferred_element_type=F32)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(F32)
+        k = k + params["bk"].astype(F32)
+        v = v + params["bv"].astype(F32)
+    return q.astype(x.dtype), k.astype(x.dtype), v.astype(x.dtype)
+
+
+def _mask(q_len: int, kv_len: int, causal: bool, window: int, q_offset=0):
+    """(q_len, kv_len) boolean mask; True = attend."""
+    qpos = jnp.arange(q_len)[:, None] + q_offset
+    kpos = jnp.arange(kv_len)[None, :]
+    m = jnp.ones((q_len, kv_len), bool)
+    if causal:
+        m &= kpos <= qpos
+    if window > 0:
+        m &= kpos > qpos - window
+    return m
+
+
+def _sdpa(q, k, v, mask, cfg: ModelConfig):
+    """Grouped scaled-dot-product attention (XLA path).
+
+    q: (B, Sq, Hq, hd); k/v: (B, Skv, Hkv, hd); mask: (Sq, Skv) or None.
+    """
+    b, sq, hq, hd = q.shape
+    hkv = k.shape[2]
+    group = hq // hkv
+    q = q.reshape(b, sq, hkv, group, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", q, k, preferred_element_type=F32)
+    scores = scores * (hd**-0.5)
+    if mask is not None:
+        scores = jnp.where(mask[None, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs.astype(v.dtype), v,
+                     preferred_element_type=F32)
+    return out.reshape(b, sq, hq, hd).astype(v.dtype)
+
+
+def _sdpa_pallas(q, k, v, cfg: ModelConfig, causal: bool, window: int):
+    from repro.kernels.flash_attention import ops as fa_ops
+
+    interpret = cfg.attention_impl == "pallas_interpret"
+    return fa_ops.flash_attention(
+        q, k, v, causal=causal, window=window, interpret=interpret
+    )
+
+
+def attention(
+    params: Dict,
+    x,
+    cfg: ModelConfig,
+    positions=None,
+    causal: bool = True,
+    rope: bool = True,
+) -> jnp.ndarray:
+    """Full-sequence self-attention (training / prefill)."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(params, x, cfg)
+    if rope:
+        pos = positions if positions is not None else jnp.arange(s)[None, :]
+        cos, sin = layers.rope_angles(pos, cfg.resolved_head_dim, cfg.rope_theta)
+        q = layers.apply_rope(q, cos, sin)
+        k = layers.apply_rope(k, cos, sin)
+    q = shard(q, "batch", None, "heads", None)
+    k = shard(k, "batch", None, "kv_heads", None)
+    v = shard(v, "batch", None, "kv_heads", None)
+    if cfg.attention_impl in ("pallas", "pallas_interpret"):
+        out = _sdpa_pallas(q, k, v, cfg, causal, cfg.sliding_window)
+    else:
+        mask = _mask(s, s, causal, cfg.sliding_window)
+        out = _sdpa(q, k, v, mask, cfg)
+    out = shard(out, "batch", None, "heads", None)
+    return jnp.einsum("bsnh,nhd->bsd", out, params["wo"],
+                      preferred_element_type=F32).astype(x.dtype)
+
+
+def cross_attention(params: Dict, x, kv_src, cfg: ModelConfig) -> jnp.ndarray:
+    """Cross-attention: queries from ``x``, keys/values from ``kv_src``
+    (image patch embeddings or audio encoder output).  No RoPE, no mask."""
+    q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"], preferred_element_type=F32)
+    k = jnp.einsum("btd,dnh->btnh", kv_src, params["wk"],
+                   preferred_element_type=F32)
+    v = jnp.einsum("btd,dnh->btnh", kv_src, params["wv"],
+                   preferred_element_type=F32)
+    q, k, v = (t.astype(x.dtype) for t in (q, k, v))
+    out = _sdpa(q, k, v, None, cfg)
+    return jnp.einsum("bsnh,nhd->bsd", out, params["wo"],
+                      preferred_element_type=F32).astype(x.dtype)
+
+
+# ------------------------------------------------------------------ decode
+def decode_attention(
+    params: Dict,
+    x,
+    k_cache,
+    v_cache,
+    pos,
+    cfg: ModelConfig,
+    rope: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token decode step with per-sequence positions.
+
+    x: (B, 1, d); k_cache/v_cache: (B, max_len, Hkv, hd); pos: (B,) int32 —
+    each sequence's current length (write index).  Per-slot positions are
+    what makes continuous batching slot-reuse correct: a freshly reset slot
+    (pos=0) masks out every stale cache entry.
+    """
+    b, one, _ = x.shape
+    assert one == 1
+    max_len = k_cache.shape[1]
+    pos = jnp.asarray(pos, jnp.int32).reshape(b)
+    q, k, v = _project_qkv(params, x, cfg)
+    if rope:
+        cos, sin = layers.rope_angles(pos[:, None], cfg.resolved_head_dim,
+                                      cfg.rope_theta)
+        q = layers.apply_rope(q, cos, sin)
+        k = layers.apply_rope(k, cos, sin)
+    bidx = jnp.arange(b)
+    k_cache = k_cache.at[bidx, pos].set(k[:, 0].astype(k_cache.dtype))
+    v_cache = v_cache.at[bidx, pos].set(v[:, 0].astype(v_cache.dtype))
+    k_cache = shard(k_cache, "batch", "kv_seq", "kv_heads", None)
+    v_cache = shard(v_cache, "batch", "kv_seq", "kv_heads", None)
+
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, hd)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qg, k_cache,
+                        preferred_element_type=F32) * (hd**-0.5)
+    kpos = jnp.arange(max_len)[None, :]
+    valid = kpos <= pos[:, None]
+    if cfg.sliding_window > 0:
+        valid &= kpos > (pos[:, None] - cfg.sliding_window)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", probs.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=F32)
+    out = out.reshape(b, 1, hq, hd).astype(x.dtype)
+    y = jnp.einsum("bsnh,nhd->bsd", out, params["wo"],
+                   preferred_element_type=F32).astype(x.dtype)
+    return y, k_cache, v_cache

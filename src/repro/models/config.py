@@ -1,0 +1,86 @@
+"""Unified model configuration covering all 10 assigned architectures."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | vlm | audio | hybrid | ssm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0            # 0 -> d_model // n_heads
+    mlp_activation: str = "swiglu"   # swiglu | geglu | gelu
+    qkv_bias: bool = False
+    rope_theta: float = 500_000.0
+    norm: str = "rmsnorm"        # rmsnorm | layernorm
+    tie_embeddings: bool = False
+    logit_softcap: float = 0.0
+    embed_scale: bool = False    # gemma: scale embeddings by sqrt(d_model)
+    # MoE
+    n_experts: int = 0
+    n_experts_per_token: int = 0
+    n_shared_experts: int = 0
+    moe_d_ff: int = 0            # per-expert hidden dim (0 -> d_ff)
+    capacity_factor: float = 1.25
+    router_noise: float = 0.0
+    # SSM / hybrid
+    ssm_state: int = 0
+    ssm_heads: int = 0           # rwkv6 heads (d_model // 64 if 0)
+    sliding_window: int = 0      # 0 = full causal attention
+    # VLM (cross-attention layers)
+    cross_attn_every: int = 0    # every k-th layer gets image cross-attention
+    n_image_tokens: int = 0
+    # audio (encoder-decoder)
+    encoder_layers: int = 0
+    encoder_seq: int = 0         # precomputed frame-embedding length (stub)
+    # numerics / execution
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+    remat: str = "none"          # none | dots | full
+    attention_impl: str = "xla"  # xla | pallas | pallas_interpret
+    moe_dispatch: str = "scatter"  # scatter | einsum | shard_map
+    scan_layers: bool = True     # False unrolls the layer loop (the dry-run
+                                 # uses unrolled HLO: XLA cost analysis does
+                                 # not multiply while-bodies by trip count)
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def resolved_moe_d_ff(self) -> int:
+        return self.moe_d_ff or self.d_ff
+
+    @property
+    def resolved_ssm_heads(self) -> int:
+        return self.ssm_heads or max(self.d_model // 64, 1)
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch serve 500k-token contexts? (SSM state and/or
+        sliding-window attention keep per-token cost O(1) in context len.)"""
+        return self.family in ("ssm", "hybrid")
+
+    def activation_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def weight_dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def scaled(self, **overrides) -> "ModelConfig":
+        """A reduced copy for smoke tests (same family/features)."""
+        return dataclasses.replace(self, **overrides)

@@ -1,0 +1,130 @@
+"""Core layers: norms, embeddings, MLPs, RoPE.  Pure-functional JAX.
+
+Parameters are plain nested dicts; initialisers take an explicit PRNG key.
+All matmuls accumulate in float32 (``preferred_element_type``) regardless of
+the bf16 storage dtype — the numerically-safe TPU idiom.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import shard
+
+F32 = jnp.float32
+
+
+def truncated_normal(key, shape, stddev, dtype):
+    return (stddev * jax.random.truncated_normal(key, -2.0, 2.0, shape, F32)).astype(dtype)
+
+
+# ------------------------------------------------------------------- norms
+def init_norm(d: int, dtype) -> Dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(params: Dict, x, eps: float = 1e-6):
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(F32)).astype(x.dtype)
+
+
+def layer_norm(params: Dict, x, eps: float = 1e-5):
+    xf = x.astype(F32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(F32)).astype(x.dtype)
+
+
+def apply_norm(kind: str, params: Dict, x):
+    return rms_norm(params, x) if kind == "rmsnorm" else layer_norm(params, x)
+
+
+# -------------------------------------------------------------- embeddings
+def init_embedding(key, vocab: int, d: int, dtype) -> Dict:
+    return {"table": truncated_normal(key, (vocab, d), 1.0, dtype)}
+
+
+def embed(params: Dict, ids, scale: bool = False):
+    table = params["table"]
+    x = jnp.take(table, ids, axis=0)
+    if scale:
+        x = x * jnp.asarray(table.shape[1] ** 0.5, x.dtype)
+    return x
+
+
+def init_unembed(key, d: int, vocab: int, dtype) -> Dict:
+    return {"kernel": truncated_normal(key, (d, vocab), d**-0.5, dtype)}
+
+
+def unembed(params: Dict, x, softcap: float = 0.0):
+    logits = jnp.einsum("...d,dv->...v", x, params["kernel"],
+                        preferred_element_type=F32)
+    if softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits
+
+
+def tied_unembed(embed_params: Dict, x, softcap: float = 0.0):
+    logits = jnp.einsum("...d,vd->...v", x, embed_params["table"],
+                        preferred_element_type=F32)
+    if softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits
+
+
+# --------------------------------------------------------------------- MLP
+def init_mlp(key, d: int, d_ff: int, activation: str, dtype) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "wi": truncated_normal(k1, (d, d_ff), d**-0.5, dtype),
+        "wo": truncated_normal(k2, (d_ff, d), d_ff**-0.5, dtype),
+    }
+    if activation in ("swiglu", "geglu"):
+        p["wi_gate"] = truncated_normal(k3, (d, d_ff), d**-0.5, dtype)
+    return p
+
+
+def mlp(params: Dict, x, activation: str):
+    h = jnp.einsum("...d,df->...f", x, params["wi"], preferred_element_type=F32)
+    if activation == "swiglu":
+        g = jnp.einsum("...d,df->...f", x, params["wi_gate"],
+                       preferred_element_type=F32)
+        h = jax.nn.silu(g) * h
+    elif activation == "geglu":
+        g = jnp.einsum("...d,df->...f", x, params["wi_gate"],
+                       preferred_element_type=F32)
+        h = jax.nn.gelu(g, approximate=True) * h
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    h = h.astype(x.dtype)
+    if h.ndim == 3:
+        h = shard(h, "batch", None, "mlp")
+    return jnp.einsum("...f,fd->...d", h, params["wo"],
+                      preferred_element_type=F32).astype(x.dtype)
+
+
+# -------------------------------------------------------------------- RoPE
+def rope_angles(positions, head_dim: int, theta: float):
+    """positions: (..., S) int32 -> (cos, sin) of shape (..., S, head_dim/2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=F32) / half))
+    ang = positions.astype(F32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., S, H, head_dim); cos/sin: (..., S, half) broadcast over H."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    # insert the head axis: (..., S, half) -> (..., S, 1, half)
+    c = jnp.expand_dims(cos, -2).astype(F32)
+    s = jnp.expand_dims(sin, -2).astype(F32)
+    x1f, x2f = x1.astype(F32), x2.astype(F32)
+    out = jnp.concatenate([x1f * c - x2f * s, x2f * c + x1f * s], axis=-1)
+    return out.astype(x.dtype)

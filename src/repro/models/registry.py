@@ -1,0 +1,36 @@
+"""Architecture registry: ``--arch <id>`` -> config + model."""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import Model
+
+
+def _configs() -> Dict[str, ModelConfig]:
+    from repro.configs import CONFIGS  # local import: configs import models
+
+    return CONFIGS
+
+
+def _smoke_configs() -> Dict[str, ModelConfig]:
+    from repro.configs import SMOKE_CONFIGS
+
+    return SMOKE_CONFIGS
+
+
+def list_archs() -> List[str]:
+    return sorted(_configs().keys())
+
+
+def get_config(name: str, smoke: bool = False, **overrides) -> ModelConfig:
+    table = _smoke_configs() if smoke else _configs()
+    if name not in table:
+        raise KeyError(f"unknown arch {name!r}; available: {list_archs()}")
+    cfg = table[name]
+    return cfg.scaled(**overrides) if overrides else cfg
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,250 @@
+"""State-space sequence mixers: a Mamba-style selective SSM (Hymba's parallel
+heads) and the RWKV6 "Finch" recurrence with data-dependent decay.
+
+Both provide a full-sequence path (``lax.scan`` over time — O(S) compute,
+O(1) state, which is what makes the 500k-token decode shape feasible) and a
+single-token decode path operating on an explicit recurrent state:
+
+    mamba state:  (B, d_inner, N)
+    rwkv6 state:  wkv (B, H, hd, hd) + token-shift buffers (B, d) x2
+
+Simplifications vs the reference CUDA implementations (see DESIGN.md):
+the Mamba depthwise causal conv is omitted (the selective-scan core is kept),
+and RWKV6's low-rank "token-shift LoRA" is collapsed into per-channel mixing
+coefficients.  Neither affects the systems behaviour (state size, scan
+structure, FLOPs order) that this framework studies.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+from repro.sharding import shard
+
+F32 = jnp.float32
+
+
+# =============================================================== Mamba-like
+def init_mamba(key, cfg: ModelConfig, d_inner: int = 0) -> Dict:
+    d = cfg.d_model
+    di = d_inner or 2 * d
+    n = cfg.ssm_state or 16
+    ks = jax.random.split(key, 8)
+    wd = cfg.weight_dtype()
+    return {
+        "w_in": layers.truncated_normal(ks[0], (d, di), d**-0.5, wd),
+        "w_gate": layers.truncated_normal(ks[1], (d, di), d**-0.5, wd),
+        "w_dt": layers.truncated_normal(ks[2], (di, di), di**-0.5, wd),
+        "b_dt": jnp.full((di,), -4.6, F32),  # softplus^-1(0.01)
+        "w_b": layers.truncated_normal(ks[3], (di, n), di**-0.5, wd),
+        "w_c": layers.truncated_normal(ks[4], (di, n), di**-0.5, wd),
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=F32), (di, 1))),
+        "d_skip": jnp.ones((di,), F32),
+        "w_out": layers.truncated_normal(ks[5], (di, d), di**-0.5, wd),
+    }
+
+
+def _mamba_inputs(params: Dict, x):
+    xin = jnp.einsum("...d,df->...f", x, params["w_in"],
+                     preferred_element_type=F32)
+    z = jnp.einsum("...d,df->...f", x, params["w_gate"],
+                   preferred_element_type=F32)
+    dt = jax.nn.softplus(
+        jnp.einsum("...f,fg->...g", xin, params["w_dt"],
+                   preferred_element_type=F32) + params["b_dt"])
+    bmat = jnp.einsum("...f,fn->...n", xin, params["w_b"],
+                      preferred_element_type=F32)
+    cmat = jnp.einsum("...f,fn->...n", xin, params["w_c"],
+                      preferred_element_type=F32)
+    return xin, z, dt, bmat, cmat
+
+
+def _mamba_step(params, state, xin_t, z_t, dt_t, b_t, c_t):
+    """state: (B, di, N).  One recurrence step, float32 state."""
+    a = -jnp.exp(params["a_log"])                       # (di, N)
+    da = jnp.exp(dt_t[..., None] * a)                   # (B, di, N)
+    db = dt_t[..., None] * b_t[..., None, :]            # (B, di, N)
+    state = da * state + db * xin_t[..., None]
+    y = jnp.einsum("bfn,bn->bf", state, c_t) + params["d_skip"] * xin_t
+    y = y * jax.nn.silu(z_t)
+    return state, y
+
+
+def mamba_forward(params: Dict, x, cfg: ModelConfig):
+    """Full-sequence selective scan.  x: (B, S, d) -> (B, S, d)."""
+    b, s, d = x.shape
+    xin, z, dt, bmat, cmat = _mamba_inputs(params, x)
+    di = xin.shape[-1]
+    n = params["w_b"].shape[-1]
+    state0 = jnp.zeros((b, di, n), F32)
+
+    def step(state, ts):
+        xin_t, z_t, dt_t, b_t, c_t = ts
+        state, y = _mamba_step(params, state, xin_t, z_t, dt_t, b_t, c_t)
+        return state, y
+
+    # scan over time: move S to the leading axis
+    ts = tuple(jnp.moveaxis(t, 1, 0) for t in (xin, z, dt, bmat, cmat))
+    _, ys = jax.lax.scan(step, state0, ts)
+    y = jnp.moveaxis(ys, 0, 1)                           # (B, S, di)
+    y = shard(y.astype(x.dtype), "batch", None, "mlp")
+    return jnp.einsum("bsf,fd->bsd", y, params["w_out"],
+                      preferred_element_type=F32).astype(x.dtype)
+
+
+def mamba_decode(params: Dict, x, state, cfg: ModelConfig):
+    """One-token decode.  x: (B, 1, d); state: (B, di, N)."""
+    xin, z, dt, bmat, cmat = _mamba_inputs(params, x[:, 0])
+    state, y = _mamba_step(params, state, xin, z, dt, bmat, cmat)
+    y = y.astype(x.dtype)
+    out = jnp.einsum("bf,fd->bd", y, params["w_out"],
+                     preferred_element_type=F32).astype(x.dtype)
+    return out[:, None, :], state
+
+
+def mamba_state_shape(cfg: ModelConfig, batch: int, d_inner: int = 0):
+    di = d_inner or 2 * cfg.d_model
+    return (batch, di, cfg.ssm_state or 16)
+
+
+# ==================================================================== RWKV6
+def init_rwkv6(key, cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    h = cfg.resolved_ssm_heads
+    hd = d // h
+    ks = jax.random.split(key, 10)
+    wd = cfg.weight_dtype()
+    return {
+        # time-mixing
+        "mu_r": jnp.full((d,), 0.5, F32),
+        "mu_k": jnp.full((d,), 0.5, F32),
+        "mu_v": jnp.full((d,), 0.5, F32),
+        "mu_w": jnp.full((d,), 0.5, F32),
+        "mu_g": jnp.full((d,), 0.5, F32),
+        "w_r": layers.truncated_normal(ks[0], (d, d), d**-0.5, wd),
+        "w_k": layers.truncated_normal(ks[1], (d, d), d**-0.5, wd),
+        "w_v": layers.truncated_normal(ks[2], (d, d), d**-0.5, wd),
+        "w_w": layers.truncated_normal(ks[3], (d, d), d**-0.5 * 0.1, wd),
+        "b_w": jnp.full((d,), -2.0, F32),   # decay ~ exp(-exp(-2)) ~ 0.87
+        "w_g": layers.truncated_normal(ks[4], (d, d), d**-0.5, wd),
+        "u_bonus": layers.truncated_normal(ks[5], (h, hd), 0.5, F32),
+        "w_out": layers.truncated_normal(ks[6], (d, d), d**-0.5, wd),
+        "ln_x": jnp.ones((d,), F32),
+        # channel-mixing
+        "mu_ck": jnp.full((d,), 0.5, F32),
+        "mu_cr": jnp.full((d,), 0.5, F32),
+        "w_ck": layers.truncated_normal(ks[7], (d, int(3.5 * d)), d**-0.5, wd),
+        "w_cv": layers.truncated_normal(ks[8], (int(3.5 * d), d),
+                                        (3.5 * d)**-0.5, wd),
+        "w_cr": layers.truncated_normal(ks[9], (d, d), d**-0.5, wd),
+    }
+
+
+def _rwkv_time_inputs(params: Dict, x, x_prev):
+    """x/x_prev: (..., d) current and token-shifted inputs."""
+    def mix(mu):
+        return x * (1 - mu) + x_prev * mu
+
+    r = jnp.einsum("...d,de->...e", mix(params["mu_r"]), params["w_r"],
+                   preferred_element_type=F32)
+    k = jnp.einsum("...d,de->...e", mix(params["mu_k"]), params["w_k"],
+                   preferred_element_type=F32)
+    v = jnp.einsum("...d,de->...e", mix(params["mu_v"]), params["w_v"],
+                   preferred_element_type=F32)
+    g = jnp.einsum("...d,de->...e", mix(params["mu_g"]), params["w_g"],
+                   preferred_element_type=F32)
+    # data-dependent decay in (0, 1)
+    wraw = jnp.einsum("...d,de->...e", mix(params["mu_w"]), params["w_w"],
+                      preferred_element_type=F32) + params["b_w"]
+    w = jnp.exp(-jnp.exp(wraw))
+    return r, k, v, g, w
+
+
+def _rwkv_heads(t, h):
+    return t.reshape(t.shape[:-1] + (h, t.shape[-1] // h))
+
+
+def _rwkv_step(params, wkv, r, k, v, w, h):
+    """wkv: (B, H, hd, hd) state; r/k/v/w: (B, d) f32."""
+    rh, kh, vh, wh = (_rwkv_heads(t, h) for t in (r, k, v, w))
+    u = params["u_bonus"]
+    kv = kh[..., :, None] * vh[..., None, :]                 # (B,H,hd,hd)
+    out = jnp.einsum("bhk,bhkv->bhv", rh, wkv + u[..., :, None] * kv)
+    wkv = wh[..., :, None] * wkv + kv
+    return wkv, out
+
+
+def rwkv6_time_mix(params: Dict, x, cfg: ModelConfig):
+    """Full-sequence wkv6.  x: (B, S, d) -> (B, S, d)."""
+    b, s, d = x.shape
+    h = cfg.resolved_ssm_heads
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, g, w = _rwkv_time_inputs(params, x.astype(F32),
+                                      x_prev.astype(F32))
+    wkv0 = jnp.zeros((b, h, d // h, d // h), F32)
+
+    def step(wkv, ts):
+        r_t, k_t, v_t, w_t = ts
+        wkv, out = _rwkv_step(params, wkv, r_t, k_t, v_t, w_t, h)
+        return wkv, out
+
+    ts = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    _, outs = jax.lax.scan(step, wkv0, ts)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, d)          # (B,S,d)
+    out = out * params["ln_x"] * jax.nn.silu(g)
+    out = shard(out.astype(x.dtype), "batch", None, "mlp")
+    return jnp.einsum("bsd,de->bse", out, params["w_out"],
+                      preferred_element_type=F32).astype(x.dtype)
+
+
+def rwkv6_channel_mix(params: Dict, x, x_prev):
+    """Squared-ReLU channel mixing with token shift."""
+    xf, pf = x.astype(F32), x_prev.astype(F32)
+    xk = xf * (1 - params["mu_ck"]) + pf * params["mu_ck"]
+    xr = xf * (1 - params["mu_cr"]) + pf * params["mu_cr"]
+    k = jnp.einsum("...d,df->...f", xk, params["w_ck"],
+                   preferred_element_type=F32)
+    k = jnp.square(jax.nn.relu(k))
+    v = jnp.einsum("...f,fd->...d", k, params["w_cv"],
+                   preferred_element_type=F32)
+    r = jax.nn.sigmoid(jnp.einsum("...d,de->...e", xr, params["w_cr"],
+                                  preferred_element_type=F32))
+    return (r * v).astype(x.dtype)
+
+
+def rwkv6_time_decode(params: Dict, a, state: Dict, cfg: ModelConfig):
+    """One-token time-mixing step.
+
+    a: (B, d) — the *normalised* block input at this step.  state holds the
+    wkv matrix and the previous normalised input ("x_tm", token shift).
+    Returns (out (B, d), new_state_parts).
+    """
+    h = cfg.resolved_ssm_heads
+    af = a.astype(F32)
+    r, k, v, g, w = _rwkv_time_inputs(params, af, state["x_tm"])
+    wkv, out = _rwkv_step(params, state["wkv"], r, k, v, w, h)
+    out = out.reshape(af.shape) * params["ln_x"] * jax.nn.silu(g)
+    y = jnp.einsum("bd,de->be", out.astype(a.dtype), params["w_out"],
+                   preferred_element_type=F32).astype(a.dtype)
+    return y, {"wkv": wkv, "x_tm": af}
+
+
+def rwkv6_channel_decode(params: Dict, b, x_cm):
+    """One-token channel-mixing step.  b: (B, d) normalised input."""
+    y = rwkv6_channel_mix(params, b[:, None, :], x_cm[:, None, :])
+    return y[:, 0], b.astype(F32)
+
+
+def rwkv6_state_shapes(cfg: ModelConfig, batch: int) -> Dict:
+    h = cfg.resolved_ssm_heads
+    hd = cfg.d_model // h
+    return {
+        "wkv": (batch, h, hd, hd),
+        "x_tm": (batch, cfg.d_model),
+        "x_cm": (batch, cfg.d_model),
+    }

@@ -1,0 +1,510 @@
+"""Model assembly for all assigned architecture families.
+
+One :class:`Model` facade per architecture, built from a :class:`ModelConfig`:
+
+* ``init(rng)``                          -> params pytree (blocks stacked over
+                                            layers for ``lax.scan``)
+* ``forward(params, batch)``             -> (logits, aux) full-sequence
+                                            (training / prefill)
+* ``init_cache(batch, max_len)``         -> decode cache pytree
+* ``decode_step(params, cache, tokens)`` -> (logits, cache) one new token
+
+Families:
+
+    dense   pre-norm blocks: x += attn(n(x)); x += mlp(n(x))
+    moe     mlp replaced by routed experts (+ shared experts)
+    vlm     every ``cross_attn_every``-th block is an *extra* image
+            cross-attention block (Llama-3.2-Vision style); image patch
+            embeddings come precomputed from the stub frontend
+    audio   whisper-style encoder-decoder; stub conv frontend provides frame
+            embeddings; decoder blocks = self-attn + cross-attn + mlp
+    hybrid  hymba: attention and a Mamba mixer run in *parallel* in every
+            block, outputs averaged; sliding-window attention keeps the KV
+            cache bounded (ring buffer) => sub-quadratic long decode
+    ssm     rwkv6: attention-free; time-mix + channel-mix blocks
+
+Sliding-window KV caches are ring buffers of size ``min(window, max_len)``;
+SSM/RWKV state is O(1) in context length.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import layers, moe as moe_mod, ssm as ssm_mod
+from repro.models.config import ModelConfig
+from repro.sharding import shard
+
+F32 = jnp.float32
+
+
+def _remat(fn: Callable, mode: str) -> Callable:
+    if mode == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    if mode == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_saveable)
+    return fn
+
+
+def _stack_init(key, n: int, init_fn: Callable[[Any], Dict]) -> Dict:
+    """vmap an initialiser over layer indices -> leaves with leading (n,)."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+
+def _scan_or_loop(fn, carry, xs, use_scan: bool):
+    """lax.scan or an unrolled Python loop over the leading (layer) axis.
+
+    Unrolling trades HLO size for (a) exact cost_analysis (XLA does not
+    multiply while-loop bodies by trip count) and (b) per-layer collective
+    visibility; scanning keeps compile time flat at depth.  Both paths are
+    numerically identical.
+    """
+    if use_scan:
+        return jax.lax.scan(fn, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        xi = jax.tree.map(lambda a: a[i], xs)
+        carry, y = fn(carry, xi)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        stacked = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    else:
+        stacked = None
+    return carry, stacked
+
+
+# ============================================================ block bodies
+def _init_block(key, cfg: ModelConfig) -> Dict:
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    p: Dict[str, Any] = {
+        "ln1": layers.init_norm(cfg.d_model, F32),
+        "ln2": layers.init_norm(cfg.d_model, F32),
+    }
+    if cfg.family == "ssm":
+        p["rwkv"] = ssm_mod.init_rwkv6(k1, cfg)
+        return p
+    p["attn"] = attn_mod.init_attention(k1, cfg)
+    if cfg.family == "hybrid":
+        p["ssm"] = ssm_mod.init_mamba(k2, cfg)
+    if cfg.family == "moe":
+        p["moe"] = moe_mod.init_moe(k3, cfg)
+    else:
+        p["mlp"] = layers.init_mlp(k4, cfg.d_model, cfg.d_ff,
+                                   cfg.mlp_activation, cfg.weight_dtype())
+    return p
+
+
+def _block_forward(params: Dict, x, cfg: ModelConfig, positions=None):
+    """(B, S, d) -> ((B, S, d), aux) for one block (full sequence)."""
+    aux = jnp.zeros((), F32)
+    if cfg.family == "ssm":
+        a = layers.apply_norm(cfg.norm, params["ln1"], x)
+        x = x + ssm_mod.rwkv6_time_mix(params["rwkv"], a, cfg)
+        b = layers.apply_norm(cfg.norm, params["ln2"], x)
+        b_prev = jnp.pad(b, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+        x = x + ssm_mod.rwkv6_channel_mix(params["rwkv"], b, b_prev)
+        return x, aux
+    a = layers.apply_norm(cfg.norm, params["ln1"], x)
+    att = attn_mod.attention(params["attn"], a, cfg, positions=positions)
+    if cfg.family == "hybrid":
+        ssm_out = ssm_mod.mamba_forward(params["ssm"], a, cfg)
+        x = x + 0.5 * (att + ssm_out)
+    else:
+        x = x + att
+    h = layers.apply_norm(cfg.norm, params["ln2"], x)
+    if cfg.family == "moe":
+        y, aux = moe_mod.moe_layer(params["moe"], h, cfg)
+        x = x + y
+    else:
+        x = x + layers.mlp(params["mlp"], h, cfg.mlp_activation)
+    x = shard(x, "batch", None, "embed")
+    return x, aux
+
+
+# ------------------------------------------------------------ cross blocks
+def _init_cross_block(key, cfg: ModelConfig) -> Dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": layers.init_norm(cfg.d_model, F32),
+        "ln2": layers.init_norm(cfg.d_model, F32),
+        "attn": attn_mod.init_attention(k1, cfg),
+        "mlp": layers.init_mlp(k2, cfg.d_model, cfg.d_ff,
+                               cfg.mlp_activation, cfg.weight_dtype()),
+        "gate": jnp.zeros((), F32),  # zero-init gated cross-attn
+    }
+
+
+def _cross_block_forward(params: Dict, x, kv_src, cfg: ModelConfig):
+    a = layers.apply_norm(cfg.norm, params["ln1"], x)
+    ca = attn_mod.cross_attention(params["attn"], a, kv_src, cfg)
+    # keep the residual stream dtype stable (the f32 gate would otherwise
+    # promote a bf16 carry and break the layer scan)
+    x = x + (jnp.tanh(params["gate"]) * ca.astype(F32)).astype(x.dtype)
+    h = layers.apply_norm(cfg.norm, params["ln2"], x)
+    x = x + layers.mlp(params["mlp"], h, cfg.mlp_activation)
+    return x
+
+
+# ================================================================== Model
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------- init
+    def init(self, rng) -> Dict:
+        cfg = self.cfg
+        k_embed, k_blocks, k_cross, k_enc, k_out = jax.random.split(rng, 5)
+        params: Dict[str, Any] = {
+            "embed": layers.init_embedding(k_embed, cfg.vocab_size,
+                                           cfg.d_model, cfg.weight_dtype()),
+            "final_norm": layers.init_norm(cfg.d_model, F32),
+        }
+        if cfg.family == "vlm":
+            n_cross = cfg.n_layers // cfg.cross_attn_every
+            n_self = cfg.n_layers - n_cross
+            params["blocks"] = _stack_init(
+                k_blocks, n_self, lambda k: _init_block(k, cfg))
+            params["cross_blocks"] = _stack_init(
+                k_cross, n_cross, lambda k: _init_cross_block(k, cfg))
+        elif cfg.family == "audio":
+            params["blocks"] = _stack_init(
+                k_blocks, cfg.n_layers, lambda k: _init_block(k, cfg))
+            params["dec_cross"] = _stack_init(
+                k_cross, cfg.n_layers, lambda k: _init_cross_block(k, cfg))
+            params["encoder"] = _stack_init(
+                k_enc, cfg.encoder_layers, lambda k: _init_block(k, cfg))
+            params["enc_norm"] = layers.init_norm(cfg.d_model, F32)
+        else:
+            params["blocks"] = _stack_init(
+                k_blocks, cfg.n_layers, lambda k: _init_block(k, cfg))
+        if not cfg.tie_embeddings:
+            params["unembed"] = layers.init_unembed(
+                k_out, cfg.d_model, cfg.vocab_size, cfg.weight_dtype())
+        return params
+
+    # ------------------------------------------------------------ helpers
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = layers.apply_norm(cfg.norm, params["final_norm"], x)
+        if cfg.tie_embeddings:
+            return layers.tied_unembed(params["embed"], x, cfg.logit_softcap)
+        return layers.unembed(params["unembed"], x, cfg.logit_softcap)
+
+    def _embed(self, params, tokens):
+        x = layers.embed(params["embed"], tokens, scale=self.cfg.embed_scale)
+        x = x.astype(self.cfg.activation_dtype())
+        return shard(x, "batch", None, "embed")
+
+    def _encoder(self, params, frames):
+        """Whisper encoder over stub frame embeddings (non-causal)."""
+        cfg = self.cfg
+        x = frames.astype(cfg.activation_dtype())
+
+        def scan_fn(h, p):
+            # encoder: bidirectional attention (causal=False), no rope decay
+            a = layers.apply_norm(cfg.norm, p["ln1"], h)
+            att = attn_mod.attention(p["attn"], a, cfg, causal=False)
+            h = h + att
+            m = layers.apply_norm(cfg.norm, p["ln2"], h)
+            h = h + layers.mlp(p["mlp"], m, cfg.mlp_activation)
+            return h, None
+
+        enc_fn = _remat(scan_fn, cfg.remat) if cfg.remat != "none" else scan_fn
+        x, _ = _scan_or_loop(enc_fn, x, params["encoder"], cfg.scan_layers)
+        return layers.apply_norm(cfg.norm, params["enc_norm"], x)
+
+    # ------------------------------------------------------------ forward
+    def forward(self, params: Dict, batch: Dict) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Full-sequence forward.  batch: tokens (B, S) [+ modality extras].
+
+        Returns (logits (B, S, V) f32, aux_loss scalar).
+        """
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = self._embed(params, tokens)
+
+        if cfg.family == "vlm":
+            kv_src = batch["image_embeds"].astype(x.dtype)
+            return self._forward_vlm(params, x, kv_src)
+        if cfg.family == "audio":
+            enc = self._encoder(params, batch["audio_frames"])
+            return self._forward_audio(params, x, enc)
+
+        block_fn = _remat(
+            lambda p, h: _block_forward(p, h, cfg=cfg), cfg.remat)
+
+        def scan_fn(h, p):
+            h, aux = block_fn(p, h)
+            return h, aux
+
+        x, auxs = _scan_or_loop(scan_fn, x, params["blocks"], cfg.scan_layers)
+        return self._logits(params, x), jnp.sum(auxs)
+
+    def _forward_vlm(self, params, x, kv_src):
+        cfg = self.cfg
+        n_cross = cfg.n_layers // cfg.cross_attn_every
+        per_group = cfg.cross_attn_every - 1  # self blocks per group
+
+        def self_fn(h, p):
+            h, aux = _block_forward(p, h, dataclasses.replace(cfg, family="dense"))
+            return h, aux
+
+        def group_fn(h, p):
+            h, auxs = _scan_or_loop(self_fn, h, p["self"], cfg.scan_layers)
+            h = _cross_block_forward(p["cross"], h, kv_src, cfg)
+            return h, jnp.sum(auxs)
+
+        group_fn = _remat(group_fn, cfg.remat) if cfg.remat != "none" else group_fn
+        # reshape self blocks into (n_groups, per_group, ...)
+        grouped_self = jax.tree.map(
+            lambda a: a.reshape((n_cross, per_group) + a.shape[1:]),
+            params["blocks"])
+        grouped = {"self": grouped_self, "cross": params["cross_blocks"]}
+        x, auxs = _scan_or_loop(group_fn, x, grouped, cfg.scan_layers)
+        return self._logits(params, x), jnp.sum(auxs)
+
+    def _forward_audio(self, params, x, enc):
+        cfg = self.cfg
+
+        def dec_fn(h, p):
+            blk, cross = p["blk"], p["cross"]
+            h, aux = _block_forward(blk, h, dataclasses.replace(cfg, family="dense"))
+            h = _cross_block_forward(cross, h, enc, cfg)
+            return h, aux
+
+        dec_fn = _remat(dec_fn, cfg.remat) if cfg.remat != "none" else dec_fn
+        x, auxs = _scan_or_loop(
+            dec_fn, x, {"blk": params["blocks"], "cross": params["dec_cross"]},
+            cfg.scan_layers)
+        return self._logits(params, x), jnp.sum(auxs)
+
+    # -------------------------------------------------------------- cache
+    def cache_len(self, max_len: int) -> int:
+        if self.cfg.sliding_window > 0:
+            return min(self.cfg.sliding_window, max_len)
+        return max_len
+
+    def init_cache(self, batch: int, max_len: int, extras: Optional[Dict] = None
+                   ) -> Dict:
+        """Decode cache:  kv ring buffers and/or recurrent states, stacked
+        over layers (leading L axis) so decode scans over them."""
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        cl = self.cache_len(max_len)
+        cache: Dict[str, Any] = {"pos": jnp.zeros((batch,), jnp.int32)}
+        kv_dtype = cfg.activation_dtype()
+        if cfg.family == "ssm":
+            shapes = ssm_mod.rwkv6_state_shapes(cfg, batch)
+            cache["rwkv"] = {
+                k: jnp.zeros((cfg.n_layers,) + s, F32)
+                for k, s in shapes.items()
+            }
+            return cache
+        cache["k"] = jnp.zeros((cfg.n_layers, batch, cl, cfg.n_kv_heads, hd),
+                               kv_dtype)
+        cache["v"] = jnp.zeros_like(cache["k"])
+        if cfg.family == "hybrid":
+            cache["ssm"] = jnp.zeros(
+                (cfg.n_layers,) + ssm_mod.mamba_state_shape(cfg, batch), F32)
+        if cfg.family == "vlm":
+            n_cross = cfg.n_layers // cfg.cross_attn_every
+            cache["image_embeds"] = jnp.zeros(
+                (batch, cfg.n_image_tokens, cfg.d_model), kv_dtype)
+            # self-attn blocks only need (n_layers - n_cross) kv buffers
+            n_self = cfg.n_layers - n_cross
+            cache["k"] = jnp.zeros((n_self, batch, cl, cfg.n_kv_heads, hd),
+                                   kv_dtype)
+            cache["v"] = jnp.zeros_like(cache["k"])
+        if cfg.family == "audio":
+            cache["enc"] = jnp.zeros((batch, cfg.encoder_seq, cfg.d_model),
+                                     kv_dtype)
+        if extras:
+            cache.update(extras)
+        return cache
+
+    # --------------------------------------------------------- decode step
+    def decode_step(self, params: Dict, cache: Dict, tokens) -> Tuple:
+        """tokens: (B, 1) -> (logits (B, 1, V), new cache)."""
+        cfg = self.cfg
+        x = self._embed(params, tokens)
+        pos = cache["pos"]  # (B,) per-slot positions
+
+        if cfg.family == "ssm":
+            x, new_states = self._decode_rwkv(params, cache, x)
+            cache = dict(cache, rwkv=new_states, pos=pos + 1)
+            return self._logits(params, x), cache
+
+        if cfg.family == "vlm":
+            return self._decode_vlm(params, cache, x)
+        if cfg.family == "audio":
+            return self._decode_audio(params, cache, x)
+
+        def scan_fn(h, layer):
+            p, k_c, v_c, ssm_state = layer
+            a = layers.apply_norm(cfg.norm, p["ln1"], h)
+            att, k_c, v_c = self._decode_attn(p["attn"], a, k_c, v_c, pos)
+            if cfg.family == "hybrid":
+                ssm_out, ssm_state = ssm_mod.mamba_decode(p["ssm"], a,
+                                                          ssm_state, cfg)
+                h = h + 0.5 * (att + ssm_out)
+            else:
+                h = h + att
+            m = layers.apply_norm(cfg.norm, p["ln2"], h)
+            if cfg.family == "moe":
+                y, _aux = moe_mod.moe_layer(p["moe"], m, cfg)
+                h = h + y
+            else:
+                h = h + layers.mlp(p["mlp"], m, cfg.mlp_activation)
+            return h, (k_c, v_c, ssm_state)
+
+        ssm_states = cache.get("ssm")
+        if ssm_states is None:
+            ssm_states = jnp.zeros((cfg.n_layers, 1, 1, 1), F32)  # dummy
+        x, (new_k, new_v, new_ssm) = _scan_or_loop(
+            scan_fn, x, (params["blocks"], cache["k"], cache["v"], ssm_states),
+            cfg.scan_layers)
+        cache = dict(cache, k=new_k, v=new_v, pos=pos + 1)
+        if "ssm" in cache:
+            cache["ssm"] = new_ssm
+        return self._logits(params, x), cache
+
+    def _decode_attn(self, p_attn, a, k_c, v_c, pos):
+        """Single-token attention against a (ring) KV cache."""
+        cfg = self.cfg
+        cl = k_c.shape[1]
+        if cfg.sliding_window > 0 and cfg.sliding_window <= cl:
+            # ring buffer: logical position -> slot (pos % window)
+            return _ring_decode_attention(p_attn, a, k_c, v_c, pos, cfg)
+        return attn_mod.decode_attention(p_attn, a, k_c, v_c, pos, cfg)
+
+    def _decode_rwkv(self, params, cache, x):
+        cfg = self.cfg
+        states = cache["rwkv"]
+
+        def scan_fn(h, layer):
+            p, wkv, x_tm, x_cm = layer
+            a = layers.apply_norm(cfg.norm, p["ln1"], h[:, 0])
+            y, new_t = ssm_mod.rwkv6_time_decode(
+                p["rwkv"], a, {"wkv": wkv, "x_tm": x_tm}, cfg)
+            h = h + y[:, None, :]
+            b = layers.apply_norm(cfg.norm, p["ln2"], h[:, 0])
+            y2, new_cm = ssm_mod.rwkv6_channel_decode(p["rwkv"], b, x_cm)
+            h = h + y2[:, None, :]
+            return h, (new_t["wkv"], new_t["x_tm"], new_cm)
+
+        x, (wkv, x_tm, x_cm) = _scan_or_loop(
+            scan_fn, x,
+            (params["blocks"], states["wkv"], states["x_tm"], states["x_cm"]),
+            cfg.scan_layers)
+        return x, {"wkv": wkv, "x_tm": x_tm, "x_cm": x_cm}
+
+    def _decode_vlm(self, params, cache, x):
+        cfg = self.cfg
+        pos = cache["pos"]
+        kv_src = cache["image_embeds"]
+        n_cross = cfg.n_layers // cfg.cross_attn_every
+        per_group = cfg.cross_attn_every - 1
+        grouped_self = jax.tree.map(
+            lambda a: a.reshape((n_cross, per_group) + a.shape[1:]),
+            params["blocks"])
+        k_g = cache["k"].reshape((n_cross, per_group) + cache["k"].shape[1:])
+        v_g = cache["v"].reshape((n_cross, per_group) + cache["v"].shape[1:])
+
+        def self_fn(h, layer):
+            p, k_c, v_c = layer
+            a = layers.apply_norm(cfg.norm, p["ln1"], h)
+            att, k_c, v_c = attn_mod.decode_attention(p["attn"], a, k_c, v_c,
+                                                      pos, cfg)
+            h = h + att
+            m = layers.apply_norm(cfg.norm, p["ln2"], h)
+            h = h + layers.mlp(p["mlp"], m, cfg.mlp_activation)
+            return h, (k_c, v_c)
+
+        def group_fn(h, layer):
+            p_self, p_cross, k_c, v_c = layer
+            h, (k_c, v_c) = _scan_or_loop(self_fn, h, (p_self, k_c, v_c),
+                                          cfg.scan_layers)
+            h = _cross_block_forward(p_cross, h, kv_src, cfg)
+            return h, (k_c, v_c)
+
+        x, (new_k, new_v) = _scan_or_loop(
+            group_fn, x, (grouped_self, params["cross_blocks"], k_g, v_g),
+            cfg.scan_layers)
+        cache = dict(
+            cache,
+            k=new_k.reshape(cache["k"].shape),
+            v=new_v.reshape(cache["v"].shape),
+            pos=pos + 1,
+        )
+        return self._logits(params, x), cache
+
+    def _decode_audio(self, params, cache, x):
+        cfg = self.cfg
+        pos = cache["pos"]
+        enc = cache["enc"]
+
+        def dec_fn(h, layer):
+            p, p_cross, k_c, v_c = layer
+            a = layers.apply_norm(cfg.norm, p["ln1"], h)
+            att, k_c, v_c = attn_mod.decode_attention(p["attn"], a, k_c, v_c,
+                                                      pos, cfg)
+            h = h + att
+            m = layers.apply_norm(cfg.norm, p["ln2"], h)
+            h = h + layers.mlp(p["mlp"], m, cfg.mlp_activation)
+            h = _cross_block_forward(p_cross, h, enc, cfg)
+            return h, (k_c, v_c)
+
+        x, (new_k, new_v) = _scan_or_loop(
+            dec_fn, x,
+            (params["blocks"], params["dec_cross"], cache["k"], cache["v"]),
+            cfg.scan_layers)
+        cache = dict(cache, k=new_k, v=new_v, pos=pos + 1)
+        return self._logits(params, x), cache
+
+
+def _ring_decode_attention(p_attn, a, k_c, v_c, pos, cfg):
+    """Sliding-window decode against a ring-buffer KV cache.
+
+    The cache holds each slot's last ``window`` tokens; buffer index =
+    position % window, per slot.  RoPE is applied at absolute positions
+    before caching, so ring rotation does not disturb relative phases.
+    """
+    b = a.shape[0]
+    hd = cfg.resolved_head_dim
+    cl = k_c.shape[1]
+    pos = jnp.asarray(pos, jnp.int32).reshape(b)
+    write_idx = pos % jnp.maximum(cl, 1)
+    q, k, v = attn_mod._project_qkv(p_attn, a, cfg)
+    cos, sin = layers.rope_angles(pos[:, None], hd, cfg.rope_theta)
+    q = layers.apply_rope(q, cos, sin)
+    k = layers.apply_rope(k, cos, sin)
+    bidx = jnp.arange(b)
+    k_c = k_c.at[bidx, write_idx].set(k[:, 0].astype(k_c.dtype))
+    v_c = v_c.at[bidx, write_idx].set(v[:, 0].astype(v_c.dtype))
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, hd)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qg, k_c,
+                        preferred_element_type=F32) * (hd**-0.5)
+    slot = jnp.arange(cl)[None, :]
+    # a slot is valid once written (ring full => all written)
+    written = jnp.where((pos + 1 >= cl)[:, None],
+                        jnp.ones((b, cl), bool),
+                        slot <= write_idx[:, None])
+    scores = jnp.where(written[:, None, None, :], scores, attn_mod.NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", probs.astype(v_c.dtype), v_c,
+                     preferred_element_type=F32)
+    out = out.reshape(b, 1, hq, hd).astype(a.dtype)
+    y = jnp.einsum("bsnh,nhd->bsd", out, p_attn["wo"],
+                   preferred_element_type=F32).astype(a.dtype)
+    return y, k_c, v_c

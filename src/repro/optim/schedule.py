@@ -1,0 +1,21 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def cosine_schedule(step, total_steps: int, peak: float, floor: float = 0.0):
+    frac = jnp.clip(step.astype(F32) / max(total_steps, 1), 0.0, 1.0)
+    return floor + 0.5 * (peak - floor) * (1.0 + jnp.cos(jnp.pi * frac))
+
+
+def linear_warmup_cosine(step, warmup: int, total_steps: int, peak: float,
+                         floor: float = 0.0):
+    step = step.astype(F32)
+    warm = peak * step / max(warmup, 1)
+    decay_frac = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+    cos = floor + 0.5 * (peak - floor) * (1.0 + jnp.cos(jnp.pi * decay_frac))
+    return jnp.where(step < warmup, warm, cos)

@@ -1,0 +1,157 @@
+"""Serving engine: prefill + decode steps and simple continuous batching.
+
+``serve_step`` (one new token for the whole batch against the KV cache /
+recurrent state) is what the ``decode_*`` and ``long_*`` dry-run shapes
+lower.  The engine also provides a host-side continuous-batching loop for
+the runnable serving example: finished sequences are replaced in place so
+the decode batch stays full (slot-reuse, the core idea of production
+serving schedulers).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import Model
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    model: Model
+    max_len: int
+    batch_size: int
+
+    def __post_init__(self):
+        self._prefill = jax.jit(self._prefill_impl)
+        self._step = jax.jit(self._step_impl)
+
+    # ----------------------------------------------------------- prefill
+    def _prefill_impl(self, params, batch):
+        logits, _aux = self.model.forward(params, batch)
+        return logits
+
+    def prefill(self, params, batch) -> jnp.ndarray:
+        return self._prefill(params, batch)
+
+    def prefill_into_cache(self, params, tokens, extras: Optional[Dict] = None):
+        """Sequential prefill through decode steps (correct for every family
+        incl. ring buffers and SSM state; the fused flash prefill is the perf
+        path, this is the semantics path)."""
+        b, s = tokens.shape
+        cache = self.model.init_cache(b, self.max_len, extras=extras)
+        logits = None
+        for t in range(s):
+            logits, cache = self._step(params, cache, tokens[:, t:t + 1])
+        return logits, cache
+
+    # ------------------------------------------------------------- step
+    def _step_impl(self, params, cache, tokens):
+        return self.model.decode_step(params, cache, tokens)
+
+    def serve_step(self, params, cache, tokens):
+        """One new token for the whole running batch."""
+        return self._step(params, cache, tokens)
+
+    # ---------------------------------------------- continuous batching
+    def reset_slots(self, cache, slot_mask: np.ndarray):
+        """Reset the per-slot state of every True slot (position -> 0,
+        recurrent states zeroed).  Stale KV entries need no clearing: the
+        per-slot position mask already hides them."""
+        keep = jnp.asarray(~slot_mask)
+        cache = dict(cache)
+        cache["pos"] = jnp.where(keep, cache["pos"], 0)
+
+        def zero_state(x, batch_axis: int):
+            shape = [1] * x.ndim
+            shape[batch_axis] = -1
+            return x * keep.astype(x.dtype).reshape(shape)
+
+        if "ssm" in cache:                    # (L, B, d_inner, N)
+            cache["ssm"] = zero_state(cache["ssm"], 1)
+        if "rwkv" in cache:
+            cache["rwkv"] = {
+                k: zero_state(v, 1) for k, v in cache["rwkv"].items()
+            }
+        return cache
+
+    def generate(
+        self,
+        params,
+        prompts: List[np.ndarray],
+        max_new_tokens: int = 32,
+        eos_id: int = -1,
+        greedy: bool = True,
+        extras: Optional[Dict] = None,
+        rng: Optional[jax.Array] = None,
+    ) -> List[np.ndarray]:
+        """Continuous-batching host loop over ``batch_size`` decode slots.
+
+        Requests queue up; whenever a slot finishes (EOS or token budget) it
+        is reset and the next queued prompt streams in while the other slots
+        keep decoding — the batch never drains.  Correctness relies on
+        per-slot cache positions (see ``Model.decode_step``).
+        """
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        queue = list(enumerate(prompts))
+        results: Dict[int, List[int]] = {}
+        b = self.batch_size
+        cache = self.model.init_cache(b, self.max_len, extras=extras)
+        slot_req = [-1] * b                   # request id per slot
+        slot_left = [0] * b                   # generation budget left
+        feed: List[List[int]] = [[] for _ in range(b)]
+        cur = np.zeros((b, 1), np.int32)
+
+        def assign(slot: int) -> bool:
+            if not queue:
+                slot_req[slot] = -1
+                feed[slot] = []
+                return False
+            rid, prompt = queue.pop(0)
+            slot_req[slot] = rid
+            slot_left[slot] = max_new_tokens
+            results[rid] = []
+            feed[slot] = [int(t) for t in prompt]
+            return True
+
+        for s in range(b):
+            assign(s)
+
+        while any(r >= 0 for r in slot_req):
+            step_tok = np.zeros((b, 1), np.int32)
+            feeding = [False] * b
+            for s in range(b):
+                if feed[s]:
+                    step_tok[s, 0] = feed[s].pop(0)
+                    feeding[s] = True
+                else:
+                    step_tok[s, 0] = cur[s, 0]
+            logits, cache = self.serve_step(params, cache,
+                                            jnp.asarray(step_tok))
+            if greedy:
+                nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+            else:
+                rng, sub = jax.random.split(rng)
+                nxt = np.asarray(jax.random.categorical(sub, logits[:, -1]))
+            reset_mask = np.zeros(b, bool)
+            for s in range(b):
+                rid = slot_req[s]
+                if rid < 0:
+                    continue
+                if feeding[s] and feed[s]:
+                    continue                   # still streaming the prompt
+                results[rid].append(int(nxt[s]))
+                slot_left[s] -= 1
+                if slot_left[s] <= 0 or int(nxt[s]) == eos_id:
+                    if assign(s):
+                        reset_mask[s] = True   # new request takes the slot
+            if reset_mask.any():
+                cache = self.reset_slots(cache, reset_mask)
+            cur = nxt[:, None].astype(np.int32)
+        return [np.array(results[i]) for i in sorted(results)]

@@ -1,0 +1,2 @@
+from repro.sharding.ctx import axis_rules, current_rules, logical_to_mesh, shard
+from repro.sharding.plan import ShardingPlan, make_plan, param_partition_specs

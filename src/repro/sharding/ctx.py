@@ -1,0 +1,91 @@
+"""Logical-axis sharding context.
+
+Models annotate activations with *logical* axis names ("batch", "embed",
+"experts", ...).  The launcher installs a rule set mapping logical names to
+mesh axes; inside ``jit`` under an active mesh the annotation becomes a
+``with_sharding_constraint``, otherwise it is a no-op — so the same model
+code runs on 1 CPU device and on a 512-chip multi-pod mesh unchanged.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+_state = threading.local()
+
+
+def current_rules() -> Dict[str, MeshAxes]:
+    return getattr(_state, "rules", {})
+
+
+def _current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Dict[str, MeshAxes], mesh: Optional[Mesh] = None):
+    """Install logical->mesh axis rules (and optionally the mesh itself)."""
+    old_rules = getattr(_state, "rules", None)
+    old_mesh = getattr(_state, "mesh", None)
+    _state.rules = dict(rules)
+    _state.mesh = mesh
+    try:
+        yield
+    finally:
+        if old_rules is None:
+            del _state.rules
+        else:
+            _state.rules = old_rules
+        _state.mesh = old_mesh
+
+
+def logical_to_mesh(logical_axes: Sequence[Optional[str]],
+                    rules: Optional[Dict[str, MeshAxes]] = None) -> P:
+    """Translate per-dimension logical names into a PartitionSpec."""
+    rules = current_rules() if rules is None else rules
+    spec = []
+    used = set()
+    for name in logical_axes:
+        axes = rules.get(name) if name is not None else None
+        # A mesh axis may appear only once in a PartitionSpec.
+        if axes is None:
+            spec.append(None)
+            continue
+        if isinstance(axes, str):
+            axes = (axes,)
+        axes = tuple(a for a in axes if a not in used)
+        used.update(axes)
+        spec.append(axes if len(axes) != 1 else axes[0])
+        if not axes:
+            spec[-1] = None
+    return P(*spec)
+
+
+def shard(x, *logical_axes: Optional[str]):
+    """Constrain ``x``'s sharding by logical axis names (no-op without rules).
+
+    Example: ``x = shard(x, "batch", None, "embed")`` for a (B, S, D) tensor.
+    """
+    rules = current_rules()
+    if not rules:
+        return x
+    if x.ndim != len(logical_axes):
+        raise ValueError(
+            f"rank mismatch: tensor has {x.ndim} dims, got {len(logical_axes)} names"
+        )
+    spec = logical_to_mesh(logical_axes, rules)
+    mesh = _current_mesh()
+    try:
+        if mesh is not None:
+            return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        # No mesh context available (e.g. pure CPU eager tests): no-op.
+        return x

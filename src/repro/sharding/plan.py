@@ -1,0 +1,201 @@
+"""Sharding plans: parameter partition rules + logical activation rules.
+
+A :class:`ShardingPlan` bundles everything the launcher needs to distribute a
+model on a mesh:
+
+* ``param_rules`` — ordered (regex, logical_axes) rules matched against the
+  '/'-joined parameter path; first match wins.  Logical axes are translated
+  through ``activation_rules`` into mesh axes.
+* ``activation_rules`` — logical axis name -> mesh axis (or tuple), used both
+  for activations (via ``repro.sharding.shard``) and parameter specs.
+
+Presets:
+
+* ``tp``    — tensor parallelism over the "model" axis (heads/ff/experts/vocab).
+* ``fsdp``  — additionally shard the weights' d_model dimension (and optimizer
+  state) over the "data" axis, ZeRO-3 style.
+* ``ep``    — experts over the "model" axis (MoE); composes with fsdp.
+* sequence sharding for long-context decode: the KV-cache length dimension
+  shards over "data" ("kv_seq" rule), turning decode attention into a
+  collective reduction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sharding.ctx import MeshAxes, logical_to_mesh
+
+Rule = Tuple[str, Tuple[Optional[str], ...]]
+
+
+def default_activation_rules(multi_pod: bool, fsdp: bool = True,
+                             shard_kv_seq: bool = False) -> Dict[str, MeshAxes]:
+    data_axes: MeshAxes = ("pod", "data") if multi_pod else ("data",)
+    rules: Dict[str, MeshAxes] = {
+        "batch": data_axes,
+        "embed": None,               # activations keep d_model replicated
+        "heads": "model",
+        "kv_heads": "model",
+        "mlp": "model",
+        "experts": "model",
+        "vocab": "model",
+        "param_embed": "data" if fsdp else None,   # ZeRO-3 weight shard axis
+        "param_vocab": "model",
+        "kv_seq": "data" if shard_kv_seq else None,
+        "seq": None,
+    }
+    return rules
+
+
+# Ordered parameter rules.  Paths look like:
+#   blocks/attn/wq, blocks/attn/wkv, blocks/mlp/wi, blocks/moe/experts_wi, ...
+# Every leaf under 'blocks/' carries a leading layer (scan) dimension, which
+# is never sharded -> logical name None in first position.
+def default_param_rules() -> List[Rule]:
+    return [
+        # embeddings / unembedding
+        (r"embed/table$", ("param_vocab", "param_embed")),
+        (r"unembed/kernel$", ("param_embed", "param_vocab")),
+        # attention projections (layer-stacked)
+        (r"attn/wq$", (None, "param_embed", "heads", None)),
+        (r"attn/wk$", (None, "param_embed", "kv_heads", None)),
+        (r"attn/wv$", (None, "param_embed", "kv_heads", None)),
+        (r"attn/wo$", (None, "heads", None, "param_embed")),
+        (r"attn/(bq|bk|bv)$", (None, "kv_heads", None)),
+        # dense MLP
+        (r"mlp/wi(_gate)?$", (None, "param_embed", "mlp")),
+        (r"mlp/wo$", (None, "mlp", "param_embed")),
+        # MoE
+        (r"moe/router$", (None, "param_embed", "experts")),
+        (r"moe/experts_wi(_gate)?$", (None, "experts", "param_embed", None)),
+        (r"moe/experts_wo$", (None, "experts", None, "param_embed")),
+        (r"moe/shared_wi(_gate)?$", (None, "param_embed", "mlp")),
+        (r"moe/shared_wo$", (None, "mlp", "param_embed")),
+        # SSM / RWKV blocks: shard the inner channel dim over "model"
+        (r"(ssm|rwkv)/.*(w_in|w_gate|wx|w_proj)$", (None, "param_embed", "mlp")),
+        (r"(ssm|rwkv)/.*w_out$", (None, "mlp", "param_embed")),
+        (r"(ssm|rwkv)/", None),  # small per-channel params: replicate
+        # norms, biases, scalars: replicated
+        (r"(norm|scale|bias|ln)", None),
+    ]
+
+
+def sanitize_spec(spec: P, shape: Tuple[int, ...],
+                  mesh_shape: Optional[Dict[str, int]]) -> P:
+    """Drop sharding on dimensions the mesh cannot divide evenly.
+
+    ``jit`` in/out shardings require exact divisibility (unlike activation
+    constraints, which GSPMD pads).  E.g. 8 KV heads cannot shard 16-way:
+    the entry is cleared and the tensor stays replicated on that dim — the
+    dry-run then *shows* the cost, which is exactly the kind of signal the
+    perf loop iterates on.
+    """
+    if mesh_shape is None:
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, entries):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = (entry,) if isinstance(entry, str) else tuple(entry)
+        prod = 1
+        for a in axes:
+            prod *= mesh_shape.get(a, 1)
+        out.append(entry if prod > 0 and dim % prod == 0 else None)
+    return P(*out)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    activation_rules: Dict[str, MeshAxes]
+    param_rules: Tuple[Rule, ...]
+    multi_pod: bool = False
+    fsdp: bool = True
+
+    def spec_for_path(self, path: str, ndim: int,
+                      shape: Optional[Tuple[int, ...]] = None,
+                      mesh_shape: Optional[Dict[str, int]] = None) -> P:
+        for pattern, logical in self.param_rules:
+            if re.search(pattern, path):
+                if logical is None:
+                    return P()
+                if len(logical) != ndim:
+                    # Rule written for the layer-stacked layout; tolerate
+                    # non-stacked params by trimming the leading None.
+                    if len(logical) == ndim + 1 and logical[0] is None:
+                        logical = logical[1:]
+                    else:
+                        return P()
+                spec = logical_to_mesh(logical, self.activation_rules)
+                if shape is not None:
+                    spec = sanitize_spec(spec, shape, mesh_shape)
+                return spec
+        return P()
+
+
+def make_plan(multi_pod: bool = False, fsdp: bool = True,
+              shard_kv_seq: bool = False,
+              extra_rules: Sequence[Rule] = ()) -> ShardingPlan:
+    return ShardingPlan(
+        activation_rules=default_activation_rules(
+            multi_pod, fsdp=fsdp, shard_kv_seq=shard_kv_seq
+        ),
+        param_rules=tuple(extra_rules) + tuple(default_param_rules()),
+        multi_pod=multi_pod,
+        fsdp=fsdp,
+    )
+
+
+def _tree_paths(tree) -> List[Tuple[str, object]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        keys = []
+        for k in path:
+            if hasattr(k, "key"):
+                keys.append(str(k.key))
+            elif hasattr(k, "idx"):
+                keys.append(str(k.idx))
+            else:
+                keys.append(str(k))
+        out.append(("/".join(keys), leaf))
+    return out
+
+
+def param_partition_specs(params_shape_tree, plan: ShardingPlan,
+                          mesh: Optional[Mesh] = None):
+    """Map a params (shape) pytree -> matching pytree of PartitionSpecs.
+
+    With ``mesh`` given, specs are sanitised for divisibility (required for
+    ``jit`` in/out shardings).
+    """
+    mesh_shape = dict(mesh.shape) if mesh is not None else None
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape_tree)
+    specs = []
+    for path, leaf in flat:
+        keys = []
+        for k in path:
+            if hasattr(k, "key"):
+                keys.append(str(k.key))
+            elif hasattr(k, "idx"):
+                keys.append(str(k.idx))
+            else:
+                keys.append(str(k))
+        p = "/".join(keys)
+        shape = tuple(leaf.shape) if hasattr(leaf, "shape") else ()
+        specs.append(plan.spec_for_path(p, len(shape), shape, mesh_shape))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def named_shardings(params_shape_tree, plan: ShardingPlan, mesh: Mesh):
+    specs = param_partition_specs(params_shape_tree, plan)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,20 @@
+"""Simulated SMT machine substrate (ThunderX2-like) for the SYNPA policies.
+
+The paper evaluates on a real Cavium ThunderX2 (28 2-way SMT cores, 4-wide
+dispatch, ARMv8.1).  No such hardware exists in this environment, so the
+substrate is a calibrated discrete-quantum simulator:
+
+* ``apps``      — 28 SPEC-CPU-like application profiles (phased behaviour).
+* ``machine``   — ground-truth co-run interference + PMU counter generation
+                  (with the event-overlap and horizontal-waste artefacts that
+                  produce the paper's LT100/GT100 cases *by construction*).
+* ``workloads`` — the paper's 35 workloads (15 be / 5 fe / 15 fb).
+* ``training``  — the §5.4 model-building pipeline (solo + all-pairs runs).
+* ``metrics``   — turnaround time, IPC geomean, CCDF.
+
+Policies (in ``repro.core``) only ever see the simulated PMU counters — never
+the ground truth — exactly as on real hardware.
+"""
+
+from repro.smt.apps import APP_PROFILES, AppProfile, Phase, profiles_by_name
+from repro.smt.machine import MachineParams, PMUSample, SMTMachine

@@ -1,0 +1,374 @@
+"""Ground-truth SMT machine model + PMU counter generation.
+
+The machine executes workloads in 100 ms quanta on N 2-way SMT cores (two
+applications per core).  Per quantum it:
+
+1. asks the active scheduling policy for a thread-to-core pairing,
+2. advances every application by the number of instructions its *true*
+   co-run CPI allows within the quantum,
+3. emits per-application PMU counters (CPU_CYCLES, STALL_FRONTEND,
+   STALL_BACKEND, INST_SPEC, INST_RETIRED) with realistic imperfections:
+   multiplicative noise, FE/BE event overlap (-> GT100 stacks) and invisible
+   horizontal waste (-> LT100 stacks).
+
+Ground-truth interference model (policies never see this).  For application
+*i* in phase ``p`` co-running with *j* in phase ``q``, the per-instruction
+cycle components (cycles per dispatched instruction) transform as
+
+    c_full' = c_full * (1 + aD  * U_j)                    dispatch-slot sharing
+    c_hw'   = c_hw   * (1 + aHW * U_j)                    partial-fill pressure
+    c_fe'   = c_fe   * (1 + aFE * F_j) + eFE * fsens_i * F_j * cpi_i
+    c_be'   = c_be   * (1 + aBE * M_j + bBE * M_j^2)
+                     + eBE * msens_i * M_j * cpi_i         LLC/DRAM contention
+
+with U_j = dispatch-slot utilisation, F_j = frontend-stall fraction and
+M_j = backend-stall fraction of the co-runner.  The crucial property (the
+paper's §4.2/§7.1 claim) is built in: *horizontal waste grows with the
+co-runner's slot utilisation and more slowly (aHW < aBE) than backend stalls
+grow with the co-runner's memory pressure* — so collapsing HW into BE (as
+SYNPA3 does) mixes two components with different growth laws.
+
+True slowdown of i next to j = sum(c') / sum(c).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.smt.apps import AppProfile, Phase
+
+Pair = Tuple[int, int]
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineParams:
+    """Calibrated machine constants (see benchmarks/calibration notes)."""
+
+    width: int = 4
+    freq_hz: float = 2.2e9
+    quantum_s: float = 0.1          # paper: 100 ms quanta
+    # Interference coefficients (ground truth).  Backend contention is
+    # strongly super-linear in the co-runner's memory pressure (LLC + DRAM
+    # bandwidth saturation), which is what makes two memory-bound co-runners
+    # catastrophic while a memory-bound + compute/frontend pair is benign.
+    a_disp: float = 0.30
+    a_hw: float = 0.45
+    a_fe: float = 1.30
+    e_fe: float = 0.25
+    a_be: float = 1.20
+    b_be: float = 7.00
+    e_be: float = 0.40
+    # PMU imperfections.
+    noise_sigma: float = 0.01       # multiplicative counter noise
+    overlap_split: float = 0.5      # share of overlap count landing on FE
+    # Methodology (paper §6.2, time-scaled 10x for simulation cost).
+    solo_reference_s: float = 6.0   # paper uses 60 s; ratio-preserving
+
+    @property
+    def quantum_cycles(self) -> float:
+        return self.freq_hz * self.quantum_s
+
+    @property
+    def solo_reference_quanta(self) -> int:
+        return int(round(self.solo_reference_s / self.quantum_s))
+
+
+@dataclasses.dataclass
+class PMUSample:
+    """Per-application, per-quantum PMU readout (paper Table 1)."""
+
+    cpu_cycles: float
+    stall_frontend: float
+    stall_backend: float
+    inst_spec: float
+    inst_retired: float
+
+    def as_tuple(self):
+        return (
+            self.cpu_cycles,
+            self.stall_frontend,
+            self.stall_backend,
+            self.inst_spec,
+            self.inst_retired,
+        )
+
+
+def _components_per_inst(phase: Phase) -> np.ndarray:
+    """Solo per-instruction cycle components (c_full, c_hw, c_fe, c_be)."""
+    cpi = 1.0 / max(phase.ipc_spec, 1e-9)
+    return np.array(
+        [phase.x_full * cpi, phase.x_hw * cpi, phase.x_fe * cpi, phase.x_be * cpi]
+    )
+
+
+def corun_components(
+    phase_i: Phase,
+    app_i: AppProfile,
+    phase_j: Optional[Phase],
+    params: MachineParams,
+) -> np.ndarray:
+    """Ground-truth per-instruction cycle components of i next to j.
+
+    ``phase_j is None`` means single-threaded execution (no co-runner).
+    """
+    c = _components_per_inst(phase_i)
+    if phase_j is None:
+        return c
+    cpi = float(c.sum())
+    u, f, m = phase_j.util, phase_j.x_fe, phase_j.x_be
+    out = np.empty(4)
+    out[0] = c[0] * (1.0 + params.a_disp * u)
+    out[1] = c[1] * (1.0 + params.a_hw * u)
+    out[2] = c[2] * (1.0 + params.a_fe * f) + params.e_fe * app_i.fetch_sens * f * cpi
+    # The super-linear term models LLC/DRAM bandwidth saturation; it only
+    # bites victims whose backend stalls are bandwidth-bound (mem_sens).
+    out[3] = (
+        c[3] * (1.0 + params.a_be * m + params.b_be * app_i.mem_sens * m * m)
+        + params.e_be * app_i.mem_sens * m * cpi
+    )
+    return out
+
+
+def true_slowdown(
+    phase_i: Phase, app_i: AppProfile, phase_j: Phase, params: MachineParams
+) -> float:
+    """Oracle slowdown of i when co-scheduled with j (>= 1)."""
+    solo = _components_per_inst(phase_i).sum()
+    smt = corun_components(phase_i, app_i, phase_j, params).sum()
+    return float(smt / solo)
+
+
+def pmu_readout(
+    comps: np.ndarray,
+    app: AppProfile,
+    phase: Phase,
+    cycles: float,
+    params: MachineParams,
+    rng: np.random.Generator,
+    noisy: bool = True,
+) -> PMUSample:
+    """Generate the five PMU counters for ``cycles`` cycles of execution.
+
+    ``comps`` is the (possibly interference-inflated) per-instruction cycle
+    component vector.  The counter model bakes in both PMU artefacts:
+
+    * horizontal waste (partial-dispatch cycles and SMT interleave waste) is
+      *invisible*: INST_SPEC under-counts it through the DI formula -> LT100;
+    * FE/BE stall conditions overlapping in a cycle tick *both* counters:
+      ``omega * min(fe, be)`` extra counts, split across the two events
+      -> GT100 for high-omega applications.
+    """
+    cpi = float(comps.sum())
+    insts = cycles / cpi
+    frac = comps / cpi  # true cycle-fraction view (x_full', x_hw', x_fe', x_be')
+    x_fe, x_be = float(frac[2]), float(frac[3])
+    overlap = app.omega * min(x_fe, x_be)
+
+    def nz(v: float) -> float:
+        if not noisy:
+            return v
+        return v * float(rng.lognormal(0.0, params.noise_sigma))
+
+    stall_fe = nz(cycles * (x_fe + params.overlap_split * overlap))
+    stall_be = nz(cycles * (x_be + (1.0 - params.overlap_split) * overlap))
+    inst_spec = nz(insts)
+    inst_ret = nz(insts * app.retire)
+    return PMUSample(
+        cpu_cycles=cycles,
+        stall_frontend=stall_fe,
+        stall_backend=stall_be,
+        inst_spec=inst_spec,
+        inst_retired=inst_ret,
+    )
+
+
+@dataclasses.dataclass
+class _AppState:
+    profile: AppProfile
+    phase_idx: int = 0
+    phase_left: float = 0.0         # quanta remaining in current phase
+    progress: float = 0.0           # retired instructions, current launch
+    target: float = 0.0             # retired-instruction target (§6.2)
+    first_finish_q: float = math.inf  # quantum index (fractional) of 1st finish
+    launches: int = 0
+    total_retired: float = 0.0
+    total_cycles: float = 0.0
+
+    def phase(self) -> Phase:
+        return self.profile.phase(self.phase_idx)
+
+
+class SMTMachine:
+    """Discrete-quantum simulator of an N-core, 2-way-SMT processor."""
+
+    def __init__(self, params: MachineParams = MachineParams(), seed: int = 0):
+        self.params = params
+        self.rng = np.random.default_rng(seed)
+        self._solo_rate_cache: Dict[str, float] = {}
+
+    # ------------------------------------------------------------------ solo
+    def run_solo(
+        self,
+        profile: AppProfile,
+        quanta: int,
+        noisy: bool = True,
+        rng: Optional[np.random.Generator] = None,
+    ) -> Tuple[List[PMUSample], List[int]]:
+        """Run an application alone; return per-quantum samples + phase ids."""
+        rng = rng or self.rng
+        st = _AppState(profile=profile)
+        st.phase_left = profile.phase(0).duration
+        samples: List[PMUSample] = []
+        phases: List[int] = []
+        for _ in range(quanta):
+            ph = st.phase()
+            comps = corun_components(ph, profile, None, self.params)
+            samples.append(
+                pmu_readout(
+                    comps, profile, ph, self.params.quantum_cycles, self.params,
+                    rng, noisy,
+                )
+            )
+            phases.append(st.phase_idx % len(profile.phases))
+            self._advance_phase(st, rng)
+        return samples, phases
+
+    def solo_retire_rate(self, profile: AppProfile) -> float:
+        """Average retired instructions per quantum in solo execution."""
+        if profile.name not in self._solo_rate_cache:
+            total, weight = 0.0, 0.0
+            for ph in profile.phases:
+                comps = _components_per_inst(ph)
+                rate = self.params.quantum_cycles / comps.sum() * profile.retire
+                total += rate * ph.duration
+                weight += ph.duration
+            self._solo_rate_cache[profile.name] = total / weight
+        return self._solo_rate_cache[profile.name]
+
+    def target_instructions(self, profile: AppProfile) -> float:
+        """§6.2: instructions committed in the solo reference period."""
+        return self.solo_retire_rate(profile) * self.params.solo_reference_quanta
+
+    # ------------------------------------------------------------ workload
+    def run_workload(
+        self,
+        profiles: Sequence[AppProfile],
+        policy,
+        seed: int = 0,
+        max_quanta: int = 5000,
+    ) -> "WorkloadResult":
+        """Run a workload under ``policy`` until every app reaches its target.
+
+        Implements the paper's §6.2 methodology: targets from the solo
+        reference run; early finishers are relaunched so the machine load is
+        constant; the run ends when the *slowest first launch* completes.
+        """
+        n = len(profiles)
+        assert n % 2 == 0, "need an even number of applications"
+        rng = np.random.default_rng(seed)
+        states = []
+        for p in profiles:
+            st = _AppState(profile=p, target=self.target_instructions(p))
+            st.phase_left = p.phase(0).duration
+            states.append(st)
+
+        policy.reset(n_apps=n, rng=np.random.default_rng(seed + 7919), machine=self)
+        self._active_states = states  # exposed only for the Oracle baseline
+        samples: List[Optional[PMUSample]] = [None] * n
+        pairs: List[Pair] = []
+        q = 0
+        while q < max_quanta and any(math.isinf(s.first_finish_q) for s in states):
+            pairs = policy.schedule(q, samples, pairs)
+            assert sorted(x for p2 in pairs for x in p2) == list(range(n))
+            new_samples: List[Optional[PMUSample]] = [None] * n
+            for (i, j) in pairs:
+                for (a, b) in ((i, j), (j, i)):
+                    st, co = states[a], states[b]
+                    comps = corun_components(
+                        st.phase(), st.profile, co.phase(), self.params
+                    )
+                    cpi = comps.sum()
+                    retired = (
+                        self.params.quantum_cycles / cpi * st.profile.retire
+                    )
+                    before = st.progress
+                    st.progress += retired
+                    st.total_retired += retired
+                    st.total_cycles += self.params.quantum_cycles
+                    if math.isinf(st.first_finish_q) and st.progress >= st.target:
+                        frac = (st.target - before) / max(retired, 1e-9)
+                        st.first_finish_q = q + min(max(frac, 0.0), 1.0)
+                    if st.progress >= st.target:
+                        # Relaunch (constant machine load, §6.2).
+                        st.progress -= st.target
+                        st.launches += 1
+                        st.phase_idx = 0
+                        st.phase_left = st.profile.phase(0).duration
+                    new_samples[a] = pmu_readout(
+                        comps, st.profile, st.phase(),
+                        self.params.quantum_cycles, self.params, rng,
+                    )
+            for st in states:
+                self._advance_phase(st, rng)
+            samples = new_samples
+            q += 1
+
+        tt = np.array(
+            [
+                min(s.first_finish_q, float(max_quanta)) * self.params.quantum_s
+                for s in states
+            ]
+        )
+        solo_tt = np.array(
+            [
+                s.target / self.solo_retire_rate(s.profile) * self.params.quantum_s
+                for s in states
+            ]
+        )
+        # Whole-run IPC (includes relaunches): a throughput metric that can
+        # move opposite to turnaround time, as the paper observes for CFS.
+        ipc = np.array(
+            [s.total_retired / max(s.total_cycles, 1.0) for s in states]
+        )
+        return WorkloadResult(
+            app_names=[s.profile.name for s in states],
+            turnaround_s=tt,
+            solo_turnaround_s=solo_tt,
+            ipc=ipc,
+            quanta=q,
+            completed=all(not math.isinf(s.first_finish_q) for s in states),
+        )
+
+    # ------------------------------------------------------------------ misc
+    def _advance_phase(self, st: _AppState, rng: np.random.Generator) -> None:
+        st.phase_left -= 1.0
+        if st.phase_left <= 0.0:
+            st.phase_idx += 1
+            dur = st.profile.phase(st.phase_idx).duration
+            st.phase_left = float(max(1, rng.poisson(dur)))
+
+
+@dataclasses.dataclass
+class WorkloadResult:
+    app_names: List[str]
+    turnaround_s: np.ndarray        # per-app turnaround time (first launch)
+    solo_turnaround_s: np.ndarray   # per-app solo reference time
+    ipc: np.ndarray                 # per-app IPC over its first launch
+    quanta: int
+    completed: bool
+
+    @property
+    def avg_turnaround_s(self) -> float:
+        return float(self.turnaround_s.mean())
+
+    @property
+    def makespan_s(self) -> float:
+        return float(self.turnaround_s.max())
+
+    @property
+    def ipc_geomean(self) -> float:
+        return float(np.exp(np.mean(np.log(np.maximum(self.ipc, 1e-12)))))

@@ -1,0 +1,183 @@
+"""Model building — the paper's §5.4 methodology, run on the simulator.
+
+1. Every *training* application (22 of 28) runs alone; per-quantum PMU samples
+   are recorded along with the phase the app was in (the paper aligns solo and
+   SMT samples via committed-instruction counts; our apps have explicit phases
+   so the alignment is exact by phase id).
+2. All pairs of training applications run together in SMT mode; per-quantum
+   samples are recorded for both threads.
+3. For each SYNPA variant's stack method, solo and SMT samples are repaired
+   into ISC stacks, a random subset of quanta is selected, and the Eq. 4
+   coefficients are fit per category by least squares (min MSE).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import isc, regression
+from repro.smt.apps import AppProfile, train_profiles
+from repro.smt.machine import MachineParams, SMTMachine, corun_components, pmu_readout
+
+
+@dataclasses.dataclass
+class ProfilingData:
+    """Raw profiling runs shared by all stack methods."""
+
+    app_names: List[str]
+    solo_counters: np.ndarray      # (A, Q_solo, 5)
+    solo_phases: np.ndarray        # (A, Q_solo) phase ids
+    pair_index: List[Tuple[int, int]]
+    pair_counters: np.ndarray      # (P, Q_pair, 2, 5)
+    pair_phases: np.ndarray        # (P, Q_pair, 2) phase ids of each thread
+
+
+def collect_profiles(
+    machine: SMTMachine,
+    profiles: Optional[Sequence[AppProfile]] = None,
+    solo_quanta: int = 60,
+    pair_quanta: int = 12,
+    seed: int = 1234,
+) -> ProfilingData:
+    """Run the solo + all-pairs profiling campaign (paper §5.4)."""
+    profiles = list(profiles) if profiles is not None else train_profiles()
+    rng = np.random.default_rng(seed)
+    a = len(profiles)
+
+    solo_counters = np.zeros((a, solo_quanta, 5), dtype=np.float64)
+    solo_phases = np.zeros((a, solo_quanta), dtype=np.int32)
+    for ai, prof in enumerate(profiles):
+        samples, phases = machine.run_solo(prof, solo_quanta, rng=rng)
+        solo_counters[ai] = np.array([s.as_tuple() for s in samples])
+        solo_phases[ai] = np.array(phases)
+
+    pair_index = list(itertools.combinations(range(a), 2))
+    p = len(pair_index)
+    pair_counters = np.zeros((p, pair_quanta, 2, 5), dtype=np.float64)
+    pair_phases = np.zeros((p, pair_quanta, 2), dtype=np.int32)
+    params = machine.params
+    for pi, (i, j) in enumerate(pair_index):
+        pi_prof, pj_prof = profiles[i], profiles[j]
+        # Start each thread at a random phase offset so pairs sample diverse
+        # phase combinations (the paper samples random execution quanta).
+        ph_i = int(rng.integers(len(pi_prof.phases)))
+        ph_j = int(rng.integers(len(pj_prof.phases)))
+        left_i = float(pi_prof.phase(ph_i).duration)
+        left_j = float(pj_prof.phase(ph_j).duration)
+        for q in range(pair_quanta):
+            phase_i, phase_j = pi_prof.phase(ph_i), pj_prof.phase(ph_j)
+            for t, (prof, phs, phco) in enumerate(
+                ((pi_prof, phase_i, phase_j), (pj_prof, phase_j, phase_i))
+            ):
+                comps = corun_components(phs, prof, phco, params)
+                s = pmu_readout(
+                    comps, prof, phs, params.quantum_cycles, params, rng
+                )
+                pair_counters[pi, q, t] = s.as_tuple()
+            pair_phases[pi, q, 0] = ph_i % len(pi_prof.phases)
+            pair_phases[pi, q, 1] = ph_j % len(pj_prof.phases)
+            left_i -= 1.0
+            left_j -= 1.0
+            if left_i <= 0:
+                ph_i += 1
+                left_i = float(max(1, rng.poisson(pi_prof.phase(ph_i).duration)))
+            if left_j <= 0:
+                ph_j += 1
+                left_j = float(max(1, rng.poisson(pj_prof.phase(ph_j).duration)))
+
+    return ProfilingData(
+        app_names=[pr.name for pr in profiles],
+        solo_counters=solo_counters,
+        solo_phases=solo_phases,
+        pair_index=pair_index,
+        pair_counters=pair_counters,
+        pair_phases=pair_phases,
+    )
+
+
+def _stacks(counters: np.ndarray, method: isc.StackMethod) -> np.ndarray:
+    """Repair a (..., 5) counter array into (..., 4) ISC stacks."""
+    flat = counters.reshape(-1, 5)
+    stacks = isc.build_stack_from_counters(
+        flat[:, 0], flat[:, 1], flat[:, 2], flat[:, 3], method
+    )
+    return np.asarray(stacks).reshape(counters.shape[:-1] + (4,))
+
+
+def fit_model(
+    data: ProfilingData,
+    method: isc.StackMethod,
+    max_samples: int = 4000,
+    seed: int = 99,
+) -> regression.CategoryModel:
+    """Fit one SYNPA variant's Eq. 4 model from the profiling campaign.
+
+    Training targets use the paper's instruction-aligned mapping: the SMT
+    category values are expressed *per ST cycle of the same instruction
+    window*, i.e. measured SMT stack fractions scaled by the measured
+    slowdown (cpi_smt / cpi_st of the matching solo phase).  The targets'
+    sum is therefore the slowdown itself.
+    """
+    rng = np.random.default_rng(seed)
+    solo_stacks = _stacks(data.solo_counters, method)   # (A, Qs, 4)
+    pair_stacks = _stacks(data.pair_counters, method)   # (P, Qp, 2, 4)
+
+    # Per-app, per-phase average ST stack + ST CPI (instruction alignment).
+    a = solo_stacks.shape[0]
+    max_phase = int(data.solo_phases.max()) + 1
+    st_by_phase = np.zeros((a, max_phase, 4))
+    cpi_by_phase = np.zeros((a, max_phase))
+    solo_cpi = data.solo_counters[:, :, 0] / np.maximum(
+        data.solo_counters[:, :, 3], 1e-9
+    )  # cycles / INST_SPEC, per solo quantum
+    for ai in range(a):
+        for ph in range(max_phase):
+            mask = data.solo_phases[ai] == ph
+            if mask.any():
+                st_by_phase[ai, ph] = solo_stacks[ai, mask].mean(axis=0)
+                cpi_by_phase[ai, ph] = solo_cpi[ai, mask].mean()
+            else:
+                st_by_phase[ai, ph] = solo_stacks[ai].mean(axis=0)
+                cpi_by_phase[ai, ph] = solo_cpi[ai].mean()
+
+    smt_cpi = data.pair_counters[:, :, :, 0] / np.maximum(
+        data.pair_counters[:, :, :, 3], 1e-9
+    )  # (P, Qp, 2)
+
+    xs_i, xs_j, ys = [], [], []
+    p, qp = pair_stacks.shape[0], pair_stacks.shape[1]
+    for pi, (i, j) in enumerate(data.pair_index):
+        for q in range(qp):
+            ph_i = min(int(data.pair_phases[pi, q, 0]), max_phase - 1)
+            ph_j = min(int(data.pair_phases[pi, q, 1]), max_phase - 1)
+            st_i, st_j = st_by_phase[i, ph_i], st_by_phase[j, ph_j]
+            slow_i = smt_cpi[pi, q, 0] / max(cpi_by_phase[i, ph_i], 1e-9)
+            slow_j = smt_cpi[pi, q, 1] / max(cpi_by_phase[j, ph_j], 1e-9)
+            xs_i.append(st_i); xs_j.append(st_j)
+            ys.append(pair_stacks[pi, q, 0] * slow_i)
+            xs_i.append(st_j); xs_j.append(st_i)
+            ys.append(pair_stacks[pi, q, 1] * slow_j)
+    xs_i = np.stack(xs_i); xs_j = np.stack(xs_j); ys = np.stack(ys)
+
+    if xs_i.shape[0] > max_samples:  # paper: a random subset of quanta
+        sel = rng.choice(xs_i.shape[0], size=max_samples, replace=False)
+        xs_i, xs_j, ys = xs_i[sel], xs_j[sel], ys[sel]
+
+    return regression.fit(xs_i, xs_j, ys, n_categories=method.n_categories)
+
+
+def build_all_models(
+    machine: SMTMachine,
+    methods: Optional[Dict[str, isc.StackMethod]] = None,
+    data: Optional[ProfilingData] = None,
+    **collect_kw,
+) -> Tuple[Dict[str, regression.CategoryModel], ProfilingData]:
+    """Fit every SYNPA variant's model off one shared profiling campaign."""
+    methods = methods or isc.STACK_METHODS
+    if data is None:
+        data = collect_profiles(machine, **collect_kw)
+    return {name: fit_model(data, m) for name, m in methods.items()}, data

@@ -1,0 +1,1 @@
+from repro.train.step import TrainStepBuilder, cross_entropy

@@ -1,0 +1,97 @@
+"""Training step: loss, backward, optimizer update, microbatch accumulation.
+
+``TrainStepBuilder`` produces a pure ``train_step(state, batch) -> (state,
+metrics)`` suitable for ``jax.jit`` with explicit in/out shardings.  Gradient
+accumulation runs as a ``lax.scan`` over microbatches (constant memory);
+remat policy comes from the model config.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import Model
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedule import linear_warmup_cosine
+
+F32 = jnp.float32
+
+
+def cross_entropy(logits, labels, z_loss: float = 1e-4):
+    """Token-mean cross entropy (+ tiny z-loss for logit drift control)."""
+    logits = logits.astype(F32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(lse - gold)
+    zl = z_loss * jnp.mean(jnp.square(lse))
+    return ce + zl, ce
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepBuilder:
+    model: Model
+    opt: AdamWConfig = AdamWConfig()
+    grad_accum: int = 1
+    aux_weight: float = 0.01       # MoE load-balance loss weight
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+    # ----------------------------------------------------------- state
+    def init_state(self, rng) -> Dict[str, Any]:
+        params = self.model.init(rng)
+        return {
+            "params": params,
+            "opt": adamw_init(params, self.opt),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def state_shapes(self) -> Dict[str, Any]:
+        """Abstract state (no allocation) — dry-run / sharding-spec input."""
+        return jax.eval_shape(self.init_state, jax.random.PRNGKey(0))
+
+    # ------------------------------------------------------------ loss
+    def loss_fn(self, params, batch) -> Tuple[jnp.ndarray, Dict]:
+        logits, aux = self.model.forward(params, batch)
+        loss, ce = cross_entropy(logits, batch["labels"])
+        total = loss + self.aux_weight * aux
+        return total, {"loss": ce, "aux": aux}
+
+    # ------------------------------------------------------------ step
+    def train_step(self, state: Dict[str, Any], batch: Dict) -> Tuple[Dict, Dict]:
+        grad_fn = jax.value_and_grad(self.loss_fn, has_aux=True)
+
+        if self.grad_accum <= 1:
+            (loss, metrics), grads = grad_fn(state["params"], batch)
+        else:
+            n = self.grad_accum
+
+            def microbatch(i, b):
+                return jax.tree.map(
+                    lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:])[i], b)
+
+            def accum_fn(carry, i):
+                g_acc, loss_acc = carry
+                (l, m), g = grad_fn(state["params"], microbatch(i, batch))
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, loss_acc + m["loss"]), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, F32), state["params"])
+            (g_sum, loss_sum), _ = jax.lax.scan(
+                accum_fn, (zeros, jnp.zeros((), F32)), jnp.arange(n))
+            grads = jax.tree.map(lambda g: g / n, g_sum)
+            metrics = {"loss": loss_sum / n, "aux": jnp.zeros((), F32)}
+
+        lr = linear_warmup_cosine(
+            state["step"], self.warmup_steps, self.total_steps, self.opt.lr)
+        params, opt_state = adamw_update(
+            state["params"], grads, state["opt"], self.opt, lr=lr,
+            rng=jax.random.fold_in(jax.random.PRNGKey(17), state["step"]))
+        new_state = {"params": params, "opt": opt_state,
+                     "step": state["step"] + 1}
+        metrics = dict(metrics, lr=lr)
+        return new_state, metrics

@@ -1,0 +1,117 @@
+"""Unit + property tests for ISC stack construction (paper §3-4)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import isc
+
+
+def _raw(di, fe, be):
+    return jnp.array([di, fe, be, 0.0], jnp.float32)
+
+
+class TestRawStack:
+    def test_from_counters(self):
+        raw = isc.raw_stack(
+            cpu_cycles=1000.0, stall_frontend=200.0, stall_backend=300.0,
+            inst_spec=1200.0,
+        )
+        np.testing.assert_allclose(
+            np.asarray(raw), [1200 / 4000, 0.2, 0.3, 0.0], rtol=1e-6
+        )
+
+    def test_batched(self):
+        raw = isc.raw_stack(
+            np.full((5, 3), 100.0), np.zeros((5, 3)), np.zeros((5, 3)),
+            np.full((5, 3), 400.0),
+        )
+        assert raw.shape == (5, 3, 4)
+        np.testing.assert_allclose(np.asarray(raw[..., 0]), 1.0, rtol=1e-6)
+
+
+class TestLT100:
+    def test_isc3_a_be_assigns_gap_to_backend(self):
+        raw = _raw(0.3, 0.2, 0.3)  # height 0.8, gap 0.2
+        out = np.asarray(isc.build_stack(raw, isc.SYNPA3_N))
+        np.testing.assert_allclose(out, [0.3, 0.2, 0.5, 0.0], atol=1e-6)
+
+    def test_isc4_exposes_horizontal_waste(self):
+        raw = _raw(0.3, 0.2, 0.3)
+        out = np.asarray(isc.build_stack(raw, isc.SYNPA4_N))
+        np.testing.assert_allclose(out, [0.3, 0.2, 0.3, 0.2], atol=1e-6)
+
+
+class TestGT100:
+    def test_isc3_n_normalises_proportionally(self):
+        raw = _raw(0.2, 0.4, 0.6)  # height 1.2
+        out = np.asarray(isc.build_stack(raw, isc.SYNPA3_N))
+        np.testing.assert_allclose(out, [0.2 / 1.2, 0.4 / 1.2, 0.6 / 1.2, 0.0],
+                                   atol=1e-6)
+
+    def test_isc3_r_fe_takes_excess_from_frontend(self):
+        raw = _raw(0.2, 0.4, 0.6)
+        out = np.asarray(isc.build_stack(raw, isc.SYNPA4_R_FE))
+        np.testing.assert_allclose(out, [0.2, 0.2, 0.6, 0.0], atol=1e-6)
+
+    def test_isc3_r_febe_weighted_removal(self):
+        raw = _raw(0.2, 0.4, 0.6)  # excess 0.2; FE share 0.4/1.0, BE 0.6/1.0
+        out = np.asarray(isc.build_stack(raw, isc.SYNPA4_R_FEBE))
+        np.testing.assert_allclose(out, [0.2, 0.4 - 0.08, 0.6 - 0.12, 0.0],
+                                   atol=1e-6)
+
+    def test_r_fe_spills_when_frontend_too_small(self):
+        raw = _raw(0.9, 0.05, 0.35)  # excess 0.3 > FE 0.05
+        out = np.asarray(isc.build_stack(raw, isc.SYNPA4_R_FE))
+        assert out.min() >= 0.0
+        np.testing.assert_allclose(out.sum(), 1.0, atol=1e-5)
+
+
+@hypothesis.given(
+    di=st.floats(0.01, 1.0),
+    fe=st.floats(0.0, 0.9),
+    be=st.floats(0.0, 0.9),
+    method=st.sampled_from(list(isc.STACK_METHODS.values())),
+)
+@hypothesis.settings(max_examples=300, deadline=None)
+def test_repaired_stack_is_distribution(di, fe, be, method):
+    """Invariant: every repair yields a non-negative stack summing to 1."""
+    out = np.asarray(isc.build_stack(_raw(di, fe, be), method))
+    assert out.min() >= -1e-6
+    np.testing.assert_allclose(out.sum(), 1.0, atol=1e-4)
+    if method.n_categories == 3:
+        assert out[isc.CAT_HW] == pytest.approx(0.0, abs=1e-6)
+
+
+@hypothesis.given(
+    di=st.floats(0.05, 0.5), fe=st.floats(0.0, 0.4), be=st.floats(0.0, 0.4)
+)
+@hypothesis.settings(max_examples=100, deadline=None)
+def test_lt100_gap_equivalence(di, fe, be):
+    """For LT100 stacks, ISC4's HW equals ISC3_A-BE's backend increment."""
+    hypothesis.assume(di + fe + be < 0.99)
+    raw = _raw(di, fe, be)
+    s3 = np.asarray(isc.build_stack(raw, isc.SYNPA3_N))
+    s4 = np.asarray(isc.build_stack(raw, isc.SYNPA4_N))
+    np.testing.assert_allclose(
+        s3[isc.CAT_BE], s4[isc.CAT_BE] + s4[isc.CAT_HW], atol=1e-5
+    )
+    np.testing.assert_allclose(s3[isc.CAT_DI], s4[isc.CAT_DI], atol=1e-6)
+
+
+def test_collapse_hw_into_be_matches_isc3():
+    raw = _raw(0.25, 0.15, 0.35)
+    s4 = isc.build_stack(raw, isc.SYNPA4_N)
+    s3 = isc.build_stack(raw, isc.SYNPA3_N)
+    np.testing.assert_allclose(
+        np.asarray(isc.collapse_hw_into_be(s4)), np.asarray(s3), atol=1e-5
+    )
+
+
+def test_method_names():
+    assert isc.SYNPA3_N.name == "ISC3_N"
+    assert isc.SYNPA4_R_FEBE.name == "ISC4_R-FEBE"
+    assert isc.SYNPA4_N.n_categories == 4
+    assert isc.SYNPA3_N.n_categories == 3

@@ -1,0 +1,81 @@
+"""Property tests for the Blossom matching engine (paper §5.3 step 3)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+
+from repro.core import matching
+
+
+def _sym_cost(rng, n, low=0.0, high=10.0, integral=False):
+    c = rng.uniform(low, high, size=(n, n))
+    c = (c + c.T) / 2
+    np.fill_diagonal(c, 0.0)
+    return np.round(c) if integral else c
+
+
+@hypothesis.given(
+    n=st.sampled_from([4, 6, 8, 10, 12]),
+    seed=st.integers(0, 2**31 - 1),
+    integral=st.booleans(),
+)
+@hypothesis.settings(max_examples=150, deadline=None)
+def test_blossom_matches_exact_dp(n, seed, integral):
+    """Blossom == exhaustive DP optimum on random symmetric costs."""
+    rng = np.random.default_rng(seed)
+    c = _sym_cost(rng, n, integral=integral)
+    p_dp = matching._dp_min_cost_pairs(c)
+    p_bl = matching.min_cost_pairs(c, method="blossom")
+    tol = 3e-5 * n * 10
+    assert abs(
+        matching.matching_cost(c, p_dp) - matching.matching_cost(c, p_bl)
+    ) <= tol
+
+
+@hypothesis.given(n=st.sampled_from([4, 6, 8]), seed=st.integers(0, 2**31 - 1))
+@hypothesis.settings(max_examples=60, deadline=None)
+def test_blossom_handles_ties_and_negatives(n, seed):
+    rng = np.random.default_rng(seed)
+    c = rng.choice([-3.0, 0.0, 0.0, 1.0, 2.0], size=(n, n))
+    c = (c + c.T) / 2
+    np.fill_diagonal(c, 0.0)
+    p_dp = matching._dp_min_cost_pairs(c)
+    p_bl = matching.min_cost_pairs(c, method="blossom")
+    assert abs(
+        matching.matching_cost(c, p_dp) - matching.matching_cost(c, p_bl)
+    ) <= 1e-4
+
+
+def test_perfect_matching_structure():
+    rng = np.random.default_rng(0)
+    for n in (2, 8, 28 * 2):
+        c = _sym_cost(rng, n)
+        pairs = matching.min_cost_pairs(c)
+        flat = sorted(x for p in pairs for x in p)
+        assert flat == list(range(n)), "every app appears exactly once"
+
+
+def test_greedy_close_to_optimal():
+    rng = np.random.default_rng(1)
+    gaps = []
+    for _ in range(20):
+        c = _sym_cost(rng, 12)
+        opt = matching.matching_cost(c, matching._dp_min_cost_pairs(c))
+        grd = matching.matching_cost(c, matching.min_cost_pairs(c, "greedy"))
+        gaps.append(grd / max(opt, 1e-9))
+    assert np.mean(gaps) < 1.25, f"greedy too far from optimal: {np.mean(gaps)}"
+
+
+def test_blossom_prefers_synergy():
+    """Two memory hogs must not share a core when alternatives exist."""
+    # apps: 0,1 = memory hogs; 2,3 = compute-bound.  hog+hog is catastrophic.
+    c = np.array(
+        [
+            [0.0, 8.0, 2.0, 2.0],
+            [8.0, 0.0, 2.0, 2.0],
+            [2.0, 2.0, 0.0, 3.0],
+            [2.0, 2.0, 3.0, 0.0],
+        ]
+    )
+    pairs = matching.min_cost_pairs(c)
+    assert (0, 1) not in pairs and (2, 3) not in pairs

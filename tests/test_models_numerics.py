@@ -1,0 +1,169 @@
+"""Model-layer numerics and property tests."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as attn_mod
+from repro.models import layers, moe as moe_mod, ssm as ssm_mod
+from repro.models.registry import build_model, get_config
+
+RNG = np.random.default_rng(7)
+
+
+class TestRoPE:
+    def test_norm_preserving(self):
+        """Rotation must preserve vector norms."""
+        x = jnp.asarray(RNG.normal(size=(2, 16, 4, 64)), jnp.float32)
+        cos, sin = layers.rope_angles(jnp.arange(16)[None], 64, 10_000.0)
+        y = layers.apply_rope(x, cos, sin)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(x), axis=-1),
+            np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-5)
+
+    def test_relative_property(self):
+        """<rope(q,m), rope(k,n)> depends only on m - n."""
+        q = jnp.asarray(RNG.normal(size=(1, 1, 1, 64)), jnp.float32)
+        k = jnp.asarray(RNG.normal(size=(1, 1, 1, 64)), jnp.float32)
+
+        def dot_at(m, n):
+            cq = layers.rope_angles(jnp.array([[m]]), 64, 10_000.0)
+            ck = layers.rope_angles(jnp.array([[n]]), 64, 10_000.0)
+            qr = layers.apply_rope(q, *cq)
+            kr = layers.apply_rope(k, *ck)
+            return float(jnp.sum(qr * kr))
+
+        assert dot_at(5, 3) == pytest.approx(dot_at(102, 100), rel=1e-4)
+        assert dot_at(0, 0) == pytest.approx(dot_at(50, 50), rel=1e-4)
+
+
+class TestAttention:
+    def test_causality(self):
+        """Future tokens must not influence past outputs."""
+        cfg = get_config("llama3.2-3b", smoke=True, dtype="float32",
+                         param_dtype="float32")
+        p = attn_mod.init_attention(jax.random.PRNGKey(0), cfg)
+        x1 = jnp.asarray(RNG.normal(size=(1, 12, cfg.d_model)), jnp.float32)
+        x2 = x1.at[:, 8:].set(RNG.normal(size=(1, 4, cfg.d_model)))
+        y1 = attn_mod.attention(p, x1, cfg)
+        y2 = attn_mod.attention(p, x2, cfg)
+        np.testing.assert_allclose(np.asarray(y1[:, :8]),
+                                   np.asarray(y2[:, :8]), atol=1e-5)
+        assert np.abs(np.asarray(y1[:, 8:] - y2[:, 8:])).max() > 1e-4
+
+    def test_sliding_window_locality(self):
+        """Tokens beyond the window must not influence the output."""
+        cfg = get_config("llama3.2-3b", smoke=True, dtype="float32",
+                         param_dtype="float32", sliding_window=4)
+        p = attn_mod.init_attention(jax.random.PRNGKey(0), cfg)
+        x1 = jnp.asarray(RNG.normal(size=(1, 16, cfg.d_model)), jnp.float32)
+        x2 = x1.at[:, 0:4].set(RNG.normal(size=(1, 4, cfg.d_model)))
+        y1 = attn_mod.attention(p, x1, cfg)
+        y2 = attn_mod.attention(p, x2, cfg)
+        # position 15 sees only positions 12..15
+        np.testing.assert_allclose(np.asarray(y1[:, 12:]),
+                                   np.asarray(y2[:, 12:]), atol=1e-5)
+
+
+class TestMoE:
+    def test_router_normalised(self):
+        cfg = get_config("qwen2-moe-a2.7b", smoke=True, dtype="float32",
+                         param_dtype="float32")
+        p = moe_mod.init_moe(jax.random.PRNGKey(0), cfg)
+        x = jnp.asarray(RNG.normal(size=(32, cfg.d_model)), jnp.float32)
+        topw, topi, probs = moe_mod._router(p, x, cfg)
+        np.testing.assert_allclose(np.asarray(topw.sum(-1)), 1.0, rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(probs.sum(-1)), 1.0, rtol=1e-5)
+        assert int(topi.max()) < cfg.n_experts
+
+    def test_capacity_drops_tokens_gracefully(self):
+        """Tiny capacity factor: output stays finite, drops hit hot experts."""
+        cfg = get_config("qwen2-moe-a2.7b", smoke=True, dtype="float32",
+                         param_dtype="float32", capacity_factor=0.25)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        batch = {"tokens": jnp.ones((2, 16), jnp.int32)}
+        logits, aux = model.forward(params, batch)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_aux_loss_uniform_routing(self):
+        """Perfectly balanced routing gives aux ~ 1 (Switch normalisation)."""
+        cfg = get_config("qwen2-moe-a2.7b", smoke=True, dtype="float32")
+        t, e = 600, cfg.n_experts
+        probs = jnp.full((t, e), 1.0 / e)
+        me = probs.mean(0)
+        density = jax.nn.one_hot(jnp.argmax(probs, -1), e).mean(0)
+        aux = e * jnp.sum(me * density)
+        assert float(aux) == pytest.approx(1.0, rel=1e-3)
+
+
+class TestSSM:
+    def test_mamba_state_is_bounded(self):
+        cfg = get_config("hymba-1.5b", smoke=True, dtype="float32",
+                         param_dtype="float32")
+        p = ssm_mod.init_mamba(jax.random.PRNGKey(0), cfg)
+        x = jnp.asarray(RNG.normal(size=(1, 64, cfg.d_model)), jnp.float32)
+        y = ssm_mod.mamba_forward(p, x, cfg)
+        assert bool(jnp.all(jnp.isfinite(y)))
+
+    def test_mamba_decode_matches_scan(self):
+        cfg = get_config("hymba-1.5b", smoke=True, dtype="float32",
+                         param_dtype="float32")
+        p = ssm_mod.init_mamba(jax.random.PRNGKey(1), cfg)
+        x = jnp.asarray(RNG.normal(size=(2, 6, cfg.d_model)), jnp.float32)
+        full = ssm_mod.mamba_forward(p, x, cfg)
+        state = jnp.zeros(ssm_mod.mamba_state_shape(cfg, 2), jnp.float32)
+        outs = []
+        for t in range(6):
+            y, state = ssm_mod.mamba_decode(p, x[:, t:t + 1], state, cfg)
+            outs.append(np.asarray(y[:, 0]))
+        np.testing.assert_allclose(np.asarray(full),
+                                   np.stack(outs, axis=1), rtol=2e-4,
+                                   atol=2e-4)
+
+    def test_rwkv_decay_in_unit_interval(self):
+        cfg = get_config("rwkv6-3b", smoke=True, dtype="float32",
+                         param_dtype="float32")
+        p = ssm_mod.init_rwkv6(jax.random.PRNGKey(0), cfg)
+        x = jnp.asarray(RNG.normal(size=(4, cfg.d_model)), jnp.float32)
+        _r, _k, _v, _g, w = ssm_mod._rwkv_time_inputs(p, x, x)
+        assert float(w.min()) > 0.0 and float(w.max()) < 1.0
+
+    @hypothesis.given(seed=st.integers(0, 1000))
+    @hypothesis.settings(max_examples=10, deadline=None)
+    def test_rwkv_state_contracts(self, seed):
+        """With zero inputs the wkv state must decay toward zero."""
+        cfg = get_config("rwkv6-3b", smoke=True, dtype="float32",
+                         param_dtype="float32")
+        p = ssm_mod.init_rwkv6(jax.random.PRNGKey(seed), cfg)
+        h = cfg.resolved_ssm_heads
+        rng = np.random.default_rng(seed)
+        wkv = jnp.asarray(rng.normal(size=(1, h, cfg.d_model // h,
+                                           cfg.d_model // h)), jnp.float32)
+        zero = jnp.zeros((1, cfg.d_model), jnp.float32)
+        _r, k, _v, _g, w = ssm_mod._rwkv_time_inputs(p, zero, zero)
+        wh = ssm_mod._rwkv_heads(w, h)
+        norm0 = float(jnp.abs(wkv).sum())
+        decayed = wh[..., :, None] * wkv  # k=v=0 at zero input? (k != 0)
+        assert float(jnp.abs(decayed).sum()) < norm0
+
+
+class TestVocabAndEmbed:
+    def test_gemma_embed_scaling(self):
+        cfg = get_config("gemma-7b", smoke=True, dtype="float32",
+                         param_dtype="float32")
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        x_scaled = layers.embed(params["embed"], jnp.array([3]), scale=True)
+        x_plain = layers.embed(params["embed"], jnp.array([3]), scale=False)
+        ratio = float(jnp.linalg.norm(x_scaled) / jnp.linalg.norm(x_plain))
+        assert ratio == pytest.approx(cfg.d_model ** 0.5, rel=1e-4)
+
+    def test_logit_softcap(self):
+        p = layers.init_unembed(jax.random.PRNGKey(0), 8, 16, jnp.float32)
+        x = jnp.asarray(RNG.normal(size=(2, 8)) * 100, jnp.float32)
+        logits = layers.unembed(p, x, softcap=30.0)
+        assert float(jnp.abs(logits).max()) <= 30.0 + 1e-3

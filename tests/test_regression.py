@@ -1,0 +1,126 @@
+"""Tests for the Eq. 4 regression model (fit / forward / inverse)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import isc, regression
+
+
+def _toy_model(n_categories=4):
+    """A hand-built plausible model (paper-Table-3-like structure)."""
+    coeffs = np.zeros((4, 4), np.float32)
+    #                alpha  beta  gamma  rho
+    coeffs[isc.CAT_DI] = [0.007, 0.91, 0.004, 0.03]
+    coeffs[isc.CAT_FE] = [0.02, 1.41, 0.0, 0.0]
+    coeffs[isc.CAT_BE] = [0.0, 0.24, 1.07, 0.5]
+    coeffs[isc.CAT_HW] = [0.03, 1.22, 0.33, 0.0]
+    if n_categories == 3:
+        coeffs[isc.CAT_HW] = 0.0
+    return regression.CategoryModel(
+        coeffs=jnp.asarray(coeffs), mse=jnp.zeros(4), n_categories=n_categories
+    )
+
+
+def _random_stacks(rng, n):
+    x = rng.dirichlet(np.ones(4) * 1.5, size=n).astype(np.float32)
+    return x
+
+
+class TestFit:
+    def test_recovers_planted_coefficients(self):
+        """fit() must recover the generating coefficients from noisy data."""
+        rng = np.random.default_rng(0)
+        model = _toy_model()
+        st_i = _random_stacks(rng, 6000)
+        st_j = _random_stacks(rng, 6000)
+        y = np.asarray(regression.forward(model, st_i, st_j))
+        y = y * rng.lognormal(0, 0.01, size=y.shape).astype(np.float32)
+        fitted = regression.fit(st_i, st_j, y, n_categories=4)
+        np.testing.assert_allclose(
+            np.asarray(fitted.coeffs), np.asarray(model.coeffs), atol=0.05
+        )
+        assert float(jnp.max(fitted.mse)) < 1e-3
+
+    def test_mse_reported_per_category(self):
+        rng = np.random.default_rng(1)
+        st_i = _random_stacks(rng, 500)
+        st_j = _random_stacks(rng, 500)
+        y = np.abs(rng.normal(0.5, 0.2, size=(500, 4))).astype(np.float32)
+        m = regression.fit(st_i, st_j, y, n_categories=3)
+        assert m.mse.shape == (4,)
+        assert float(m.mse[isc.CAT_HW]) == 0.0  # unused category
+
+
+class TestForward:
+    def test_height_is_slowdown(self):
+        model = _toy_model()
+        st_i = jnp.array([0.25, 0.25, 0.25, 0.25])
+        st_j = jnp.array([0.1, 0.1, 0.7, 0.1])
+        s = regression.predict_slowdown(model, st_i, st_j)
+        smt = regression.forward(model, st_i, st_j)
+        np.testing.assert_allclose(float(jnp.sum(smt)), float(s), rtol=1e-5)
+        assert float(s) >= 1.0
+
+    def test_corunner_backend_pressure_hurts(self):
+        """gamma_BE > 0: a memory-heavy co-runner predicts a bigger slowdown."""
+        model = _toy_model()
+        victim = jnp.array([0.2, 0.1, 0.6, 0.1])
+        mild = jnp.array([0.5, 0.3, 0.1, 0.1])
+        heavy = jnp.array([0.1, 0.1, 0.7, 0.1])
+        s_mild = float(regression.predict_slowdown(model, victim, mild))
+        s_heavy = float(regression.predict_slowdown(model, victim, heavy))
+        assert s_heavy > s_mild
+
+    def test_broadcasts_over_pairs(self):
+        model = _toy_model()
+        st = jnp.asarray(_random_stacks(np.random.default_rng(2), 6))
+        s = regression.predict_slowdown(model, st[:, None, :], st[None, :, :])
+        assert s.shape == (6, 6)
+
+
+class TestInverse:
+    def test_inverse_recovers_st_stacks(self):
+        """forward then inverse recovers the ST stacks (statistically).
+
+        Inverting Eq. 4 from stack *fractions* is mildly ill-posed: a small
+        set of (st_i, st_j) corners admit near-parallel forward images, so we
+        assert on the error distribution, not on every draw (the paper's
+        pipeline absorbs the same ambiguity in its regression residuals).
+        """
+        model = _toy_model()
+        errs = []
+        for seed in range(40):
+            rng = np.random.default_rng(seed)
+            st_i = jnp.asarray(_random_stacks(rng, 1)[0])
+            st_j = jnp.asarray(_random_stacks(rng, 1)[0])
+            smt_i = regression.forward(model, st_i, st_j)
+            smt_j = regression.forward(model, st_j, st_i)
+            # What the scheduler actually measures: stack *fractions*.
+            frac_i = smt_i / jnp.sum(smt_i)
+            frac_j = smt_j / jnp.sum(smt_j)
+            est_i, _est_j = regression.inverse(model, frac_i, frac_j)
+            errs.append(float(jnp.max(jnp.abs(est_i - st_i))))
+        errs = np.sort(np.array(errs))
+        assert errs[len(errs) // 2] < 0.02, f"median {errs[len(errs)//2]}"
+        assert errs[int(0.9 * len(errs))] < 0.10, f"p90 {errs[int(0.9*len(errs))]}"
+        assert errs[-1] < 0.30, f"worst {errs[-1]}"
+
+    def test_inverse_outputs_are_normalised(self):
+        model = _toy_model(3)
+        frac = jnp.array([[0.3, 0.4, 0.3, 0.0], [0.5, 0.2, 0.3, 0.0]])
+        x, y = regression.inverse(model, frac, frac[::-1])
+        np.testing.assert_allclose(np.asarray(x.sum(-1)), 1.0, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(y.sum(-1)), 1.0, atol=1e-4)
+
+
+def test_pair_cost_matrix_symmetric_with_big_diagonal():
+    model = _toy_model()
+    st = jnp.asarray(_random_stacks(np.random.default_rng(3), 8))
+    cost = np.asarray(regression.pair_cost_matrix(model, st))
+    np.testing.assert_allclose(cost, cost.T, rtol=1e-5)
+    assert (np.diag(cost) > 1e8).all()
+    off = cost[~np.eye(8, dtype=bool)]
+    assert (off >= 2 * regression.MIN_SLOWDOWN).all()
+    assert (off <= 2 * regression.MAX_SLOWDOWN).all()

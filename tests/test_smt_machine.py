@@ -1,0 +1,140 @@
+"""Tests for the simulated SMT machine substrate."""
+
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+
+from repro.core import isc
+from repro.core.baselines import LinuxScheduler, RandomStaticScheduler
+from repro.smt import apps as apps_mod
+from repro.smt import machine as mc
+from repro.smt import workloads
+from repro.smt.apps import APP_PROFILES, profiles_by_name
+
+
+@pytest.fixture(scope="module")
+def machine():
+    return mc.SMTMachine(mc.MachineParams(), seed=0)
+
+
+class TestProfiles:
+    def test_inventory(self):
+        assert len(APP_PROFILES) == 28
+        held_out = {a.name for a in APP_PROFILES if not a.train}
+        assert held_out == {
+            "imagick_r", "parest_r", "leela_r", "wrf_r", "cam4_r", "exchange2_r"
+        }
+        assert sum(a.in_pool for a in APP_PROFILES) == 24
+
+    def test_phase_compositions_valid(self):
+        for a in APP_PROFILES:
+            for ph in a.phases:
+                assert ph.x_full >= 0.05, a.name
+                assert 0.0 < ph.ipc_spec <= 4.0
+                assert 0.25 <= ph.fill <= 0.75
+
+
+class TestFigure2Landscape:
+    """The characterisation must reproduce the paper's Figure 2 shape."""
+
+    def test_lt100_gt100_split(self, machine):
+        heights = {}
+        for p in APP_PROFILES:
+            samples, _ = machine.run_solo(p, 15, noisy=False)
+            c = np.array([s.as_tuple() for s in samples])
+            raw = np.asarray(
+                isc.raw_stack(c[:, 0], c[:, 1], c[:, 2], c[:, 3])
+            ).mean(0)
+            heights[p.name] = float(raw[:3].sum())
+        gt = [n for n, h in heights.items() if h > 1.0]
+        lt = [n for n, h in heights.items() if h <= 1.0]
+        assert len(gt) == 7 and len(lt) == 21, (gt, lt)
+        # mcf exceeds by ~15%, the largest excess (paper §4.1.1)
+        assert heights["mcf_r"] == pytest.approx(1.15, abs=0.03)
+        assert max(heights, key=heights.get) == "mcf_r"
+        # the big-horizontal-waste trio misses 35-40% of cycles
+        for name in ("cactuBSSN_r", "lbm_r", "milc"):
+            assert 0.33 <= 1.0 - heights[name] <= 0.45, name
+
+    def test_classification_pools(self, machine):
+        groups = workloads.classify(machine)
+        counts = {g: sum(1 for v in groups.values() if v == g)
+                  for g in ("frontend", "backend", "others")}
+        assert counts["frontend"] >= 6
+        assert counts["backend"] >= 6
+        assert counts["others"] >= 3
+
+
+class TestInterference:
+    def test_solo_is_identity(self, machine):
+        p = profiles_by_name()["mcf_r"]
+        s = mc.true_slowdown(p.phase(0), p, p.phase(0), machine.params)
+        assert s > 1.0  # co-running with itself must hurt
+
+    @hypothesis.given(
+        i=st.integers(0, 27), j=st.integers(0, 27), pi=st.integers(0, 3),
+        pj=st.integers(0, 3),
+    )
+    @hypothesis.settings(max_examples=200, deadline=None)
+    def test_slowdown_bounds(self, i, j, pi, pj):
+        """Invariant: co-running never speeds an app up, never >16x."""
+        params = mc.MachineParams()
+        a, b = APP_PROFILES[i], APP_PROFILES[j]
+        s = mc.true_slowdown(a.phase(pi), a, b.phase(pj), params)
+        assert 1.0 <= s < 16.0
+
+    def test_memory_pair_worse_than_complementary(self, machine):
+        by = profiles_by_name()
+        mcf, fot, exch = by["mcf_r"], by["fotonik3d_r"], by["exchange2_r"]
+        bad = mc.true_slowdown(mcf.phase(0), mcf, fot.phase(0), machine.params)
+        good = mc.true_slowdown(mcf.phase(0), mcf, exch.phase(0), machine.params)
+        assert bad > 2.0 * good - 1.0, (bad, good)
+
+    def test_hw_grows_slower_than_be(self, machine):
+        """The paper's key premise: HW and BE have different growth laws."""
+        by = profiles_by_name()
+        lbm, fot, lib = by["lbm_r"], by["fotonik3d_r"], by["libquantum"]
+        s_hw_victim = mc.true_slowdown(lbm.phase(0), lbm, lib.phase(0), machine.params)
+        s_be_victim = mc.true_slowdown(fot.phase(0), fot, lib.phase(0), machine.params)
+        assert s_be_victim > s_hw_victim
+
+
+class TestPMU:
+    def test_counters_positive_and_consistent(self, machine):
+        for p in APP_PROFILES[:8]:
+            samples, _ = machine.run_solo(p, 5)
+            for s in samples:
+                assert s.cpu_cycles > 0
+                assert 0 <= s.inst_retired <= s.inst_spec * 1.05
+                assert s.stall_frontend >= 0 and s.stall_backend >= 0
+
+    def test_noise_is_bounded(self, machine):
+        p = profiles_by_name()["bwaves_r"]
+        noisy, _ = machine.run_solo(p, 30)
+        clean, _ = machine.run_solo(p, 30, noisy=False)
+        ns = np.array([s.inst_spec for s in noisy[:10]])
+        cs = np.array([s.inst_spec for s in clean[:10]])
+        assert np.abs(ns / cs - 1.0).max() < 0.1
+
+
+class TestWorkloadExecution:
+    def test_workload_completes_and_metrics_sane(self, machine):
+        wls = workloads.make_workloads(machine)
+        assert len(wls) == 35
+        assert sum(1 for w in wls if w.startswith("be")) == 15
+        assert sum(1 for w in wls if w.startswith("fe")) == 5
+        assert sum(1 for w in wls if w.startswith("fb")) == 15
+        profs = workloads.workload_profiles(wls["fb0"])
+        res = machine.run_workload(profs, RandomStaticScheduler(), seed=1)
+        assert res.completed
+        assert (res.turnaround_s >= res.solo_turnaround_s * 0.99).all()
+        assert res.makespan_s >= res.avg_turnaround_s
+        assert 0.0 < res.ipc_geomean < 4.0
+
+    def test_deterministic_given_seed(self, machine):
+        wls = workloads.make_workloads(machine)
+        profs = workloads.workload_profiles(wls["be0"])
+        r1 = machine.run_workload(profs, LinuxScheduler(), seed=7)
+        r2 = machine.run_workload(profs, LinuxScheduler(), seed=7)
+        np.testing.assert_allclose(r1.turnaround_s, r2.turnaround_s)

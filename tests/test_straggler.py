@@ -1,0 +1,34 @@
+"""Straggler detection/mitigation tests."""
+
+import numpy as np
+
+from repro.ft.straggler import StragglerDetector, rebalanced_shares
+
+
+def test_detects_persistent_straggler():
+    det = StragglerDetector(hosts=["h0", "h1", "h2", "h3"], patience=3)
+    flagged_at = None
+    for step in range(10):
+        times = {"h0": 1.0, "h1": 1.05, "h2": 0.95, "h3": 2.5}
+        out = det.observe(times)
+        if out and flagged_at is None:
+            flagged_at = step
+            assert out == ["h3"]
+    assert flagged_at is not None and flagged_at >= 2  # needs patience
+
+
+def test_transient_spike_not_flagged():
+    det = StragglerDetector(hosts=["h0", "h1"], patience=3)
+    for step in range(20):
+        t = 5.0 if (step == 4) else 1.0
+        out = det.observe({"h0": 1.0, "h1": t})
+        assert out == [], f"transient spike must not trigger (step {step})"
+
+
+def test_rebalanced_shares_preserve_batch():
+    hosts = ["h0", "h1", "h2", "h3"]
+    ewma = {"h0": 1.0, "h1": 1.0, "h2": 1.0, "h3": 3.0}
+    shares = rebalanced_shares(hosts, ewma, total_microbatches=16)
+    assert sum(shares.values()) == 16
+    assert shares["h3"] < shares["h0"]
+    assert min(shares.values()) >= 1

@@ -1,0 +1,100 @@
+"""End-to-end policy tests: SYNPA family + baselines on the simulator."""
+
+import numpy as np
+import pytest
+
+from repro.core import isc
+from repro.core.baselines import (
+    HySchedScheduler,
+    LinuxScheduler,
+    OracleScheduler,
+    RandomStaticScheduler,
+)
+from repro.core.synpa import SynpaScheduler
+from repro.smt import machine as mc
+from repro.smt import training, workloads
+
+
+@pytest.fixture(scope="module")
+def env():
+    machine = mc.SMTMachine(mc.MachineParams(), seed=0)
+    models, data = training.build_all_models(
+        machine, solo_quanta=30, pair_quanta=6,
+    )
+    wls = workloads.make_workloads(machine)
+    return machine, models, wls
+
+
+def test_model_mse_story(env):
+    """Paper §5.2: splitting HW out of BE collapses the Backend MSE."""
+    _, models, _ = env
+    mse3 = float(models["SYNPA3_N"].mse[isc.CAT_BE])
+    mse4 = float(models["SYNPA4_N"].mse[isc.CAT_BE])
+    assert mse4 < mse3 / 2.0, (mse3, mse4)
+
+
+def test_dispatch_beta_near_one(env):
+    """Full-dispatch-equivalent cycles are interference-invariant: beta ~ 1."""
+    _, models, _ = env
+    for m in models.values():
+        beta_di = float(m.coeffs[isc.CAT_DI, 1])
+        assert 0.8 < beta_di < 1.15, beta_di
+
+
+def test_backend_gamma_dominates(env):
+    """Paper Table 3: the co-runner drives the Backend category (gamma+rho)."""
+    _, models, _ = env
+    m = models["SYNPA4_N"]
+    gamma = float(m.coeffs[isc.CAT_BE, 2])
+    rho = float(m.coeffs[isc.CAT_BE, 3])
+    assert gamma + rho > 0.5, (gamma, rho)
+
+
+def test_schedulers_produce_valid_pairs(env):
+    machine, models, wls = env
+    profs = workloads.workload_profiles(wls["fb0"])
+    for policy in (
+        SynpaScheduler(isc.SYNPA4_R_FEBE, models["SYNPA4_R-FEBE"]),
+        HySchedScheduler(),
+        LinuxScheduler(),
+        RandomStaticScheduler(),
+        OracleScheduler(),
+    ):
+        res = machine.run_workload(profs, policy, seed=3, max_quanta=400)
+        assert res.completed, policy.name
+
+
+def test_synpa4_beats_linux_on_mixed(env):
+    """The headline claim, scaled down: SYNPA4 > Linux turnaround on Mixed."""
+    machine, models, wls = env
+    speedups = []
+    for w in ("fb0", "fb1"):
+        profs = workloads.workload_profiles(wls[w])
+        tt = {}
+        for name, factory in (
+            ("linux", lambda: LinuxScheduler()),
+            ("synpa4", lambda: SynpaScheduler(isc.SYNPA4_N, models["SYNPA4_N"])),
+        ):
+            runs = [
+                machine.run_workload(profs, factory(), seed=s).makespan_s
+                for s in (11, 22)
+            ]
+            tt[name] = np.mean(runs)
+        speedups.append(tt["linux"] / tt["synpa4"])
+    assert np.mean(speedups) > 1.10, speedups
+
+
+def test_synpa_pipeline_shapes(env):
+    """The jitted quantum pipeline returns a valid cost matrix."""
+    machine, models, _ = env
+    from repro.core.synpa import make_synpa_pipeline
+    import jax.numpy as jnp
+
+    pipe = make_synpa_pipeline(isc.SYNPA4_N, models["SYNPA4_N"])
+    counters = np.abs(np.random.default_rng(0).normal(1e8, 1e7, size=(8, 5)))
+    counters[:, 0] = 2.2e8
+    partner = np.array([1, 0, 3, 2, 5, 4, 7, 6], np.int32)
+    cost, st = pipe(jnp.asarray(counters, jnp.float32), jnp.asarray(partner))
+    assert cost.shape == (8, 8) and st.shape == (8, 4)
+    assert bool(jnp.all(jnp.isfinite(st)))
+    np.testing.assert_allclose(np.asarray(st).sum(-1), 1.0, atol=1e-3)

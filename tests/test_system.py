@@ -1,0 +1,66 @@
+"""End-to-end behaviour test for the paper's system.
+
+Compresses the full pipeline — characterise -> fit Eq. 4 models -> schedule
+with SYNPA -> compare against Linux — into one scaled-down run and asserts
+the paper's qualitative results hold.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import isc
+from repro.core.baselines import HySchedScheduler, LinuxScheduler
+from repro.core.synpa import SynpaScheduler
+from repro.smt import machine as mc
+from repro.smt import metrics, training, workloads
+
+
+@pytest.fixture(scope="module")
+def system():
+    machine = mc.SMTMachine(mc.MachineParams(), seed=0)
+    models, _ = training.build_all_models(machine, solo_quanta=30, pair_quanta=6)
+    wls = workloads.make_workloads(machine)
+    return machine, models, wls
+
+
+def test_full_pipeline_orderings(system):
+    """SYNPA4 >= SYNPA3 ~ > Hy-Sched > Linux on mixed workloads (paper §7)."""
+    machine, models, wls = system
+    tt = {"linux": [], "hy": [], "s3": [], "s4": []}
+    for w in ("fb0", "fb1", "fb2"):
+        profs = workloads.workload_profiles(wls[w])
+        for key, factory in (
+            ("linux", lambda: LinuxScheduler()),
+            ("hy", lambda: HySchedScheduler()),
+            ("s3", lambda: SynpaScheduler(isc.SYNPA3_N, models["SYNPA3_N"])),
+            ("s4", lambda: SynpaScheduler(isc.SYNPA4_R_FEBE, models["SYNPA4_R-FEBE"])),
+        ):
+            runs = [machine.run_workload(profs, factory(), seed=s).makespan_s
+                    for s in (5, 105)]
+            tt[key].append(float(np.mean(runs)))
+    sp = {k: float(np.mean(np.array(tt["linux"]) / np.array(v)))
+          for k, v in tt.items()}
+    assert sp["s4"] > sp["hy"] > 1.0, sp
+    assert sp["s4"] >= sp["s3"] - 0.02, sp
+    assert sp["s4"] > 1.15, sp
+
+
+def test_gt100_variants_statistically_tied(system):
+    """Paper §7.2: the three GT100 handlings differ only slightly."""
+    machine, models, wls = system
+    profs = workloads.workload_profiles(wls["fb1"])
+    res = {}
+    for name, method in (
+        ("SYNPA4_N", isc.SYNPA4_N),
+        ("SYNPA4_R-FE", isc.SYNPA4_R_FE),
+        ("SYNPA4_R-FEBE", isc.SYNPA4_R_FEBE),
+    ):
+        runs = [
+            machine.run_workload(
+                profs, SynpaScheduler(method, models[name]), seed=s
+            ).makespan_s
+            for s in (3, 103)
+        ]
+        res[name] = float(np.mean(runs))
+    vals = np.array(list(res.values()))
+    assert vals.max() / vals.min() < 1.12, res

@@ -1,0 +1,125 @@
+"""Training-step semantics: determinism, gradient accumulation, progress."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.synthetic import SyntheticLM
+from repro.models.registry import build_model, get_config
+from repro.optim.adamw import AdamWConfig
+from repro.train.step import TrainStepBuilder, cross_entropy
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("llama3.2-3b", smoke=True, dtype="float32",
+                     param_dtype="float32")
+    model = build_model(cfg)
+    return cfg, model
+
+
+class TestCrossEntropy:
+    def test_perfect_prediction_low_loss(self):
+        logits = jnp.full((1, 4, 8), -20.0)
+        labels = jnp.array([[1, 2, 3, 4]])
+        logits = logits.at[0, jnp.arange(4), labels[0]].set(20.0)
+        loss, ce = cross_entropy(logits, labels, z_loss=0.0)
+        assert float(ce) < 1e-3
+
+    def test_uniform_prediction_log_v(self):
+        v = 32
+        logits = jnp.zeros((2, 3, v))
+        labels = jnp.zeros((2, 3), jnp.int32)
+        _, ce = cross_entropy(logits, labels, z_loss=0.0)
+        assert float(ce) == pytest.approx(np.log(v), rel=1e-5)
+
+
+class TestTrainStep:
+    def test_deterministic(self, setup):
+        cfg, model = setup
+        builder = TrainStepBuilder(model, AdamWConfig(lr=1e-3))
+        batch = {"tokens": jnp.ones((2, 8), jnp.int32),
+                 "labels": jnp.ones((2, 8), jnp.int32)}
+        s1 = builder.init_state(jax.random.PRNGKey(0))
+        s2 = builder.init_state(jax.random.PRNGKey(0))
+        step = jax.jit(builder.train_step)
+        s1, m1 = step(s1, batch)
+        s2, m2 = step(s2, batch)
+        assert float(m1["loss"]) == float(m2["loss"])
+        for a, b in zip(jax.tree.leaves(s1["params"]),
+                        jax.tree.leaves(s2["params"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_grad_accum_matches_full_batch(self, setup):
+        """accum=2 on a 4-batch == accum=1 on the same 4-batch (same mean)."""
+        cfg, model = setup
+        rng = np.random.default_rng(0)
+        batch = {
+            "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 8)),
+                                  jnp.int32),
+            "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 8)),
+                                  jnp.int32),
+        }
+        b1 = TrainStepBuilder(model, AdamWConfig(lr=1e-3), grad_accum=1)
+        b2 = TrainStepBuilder(model, AdamWConfig(lr=1e-3), grad_accum=2)
+        s1 = b1.init_state(jax.random.PRNGKey(1))
+        s2 = b2.init_state(jax.random.PRNGKey(1))
+        s1, _ = jax.jit(b1.train_step)(s1, batch)
+        s2, _ = jax.jit(b2.train_step)(s2, batch)
+        for a, b in zip(jax.tree.leaves(s1["params"]),
+                        jax.tree.leaves(s2["params"])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-4, atol=2e-5)
+
+    def test_loss_decreases_quickly(self, setup):
+        cfg, model = setup
+        builder = TrainStepBuilder(model, AdamWConfig(lr=3e-3),
+                                   warmup_steps=5, total_steps=60)
+        data = SyntheticLM(cfg.vocab_size, seq_len=32, global_batch=4, seed=0)
+        state = builder.init_state(jax.random.PRNGKey(0))
+        step = jax.jit(builder.train_step)
+        losses = []
+        for it in range(40):
+            hb = data.global_batch_at(it)
+            state, metrics = step(
+                state, {k: jnp.asarray(v) for k, v in hb.items()})
+            losses.append(float(metrics["loss"]))
+        assert losses[-1] < losses[0] - 0.5, losses[:3] + losses[-3:]
+
+    def test_remat_equivalence(self, setup):
+        """Full remat must not change the numbers, only the memory."""
+        cfg, _ = setup
+        rng = np.random.default_rng(2)
+        batch = {
+            "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 8)),
+                                  jnp.int32),
+            "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 8)),
+                                  jnp.int32),
+        }
+        outs = {}
+        for remat in ("none", "dots", "full"):
+            model = build_model(cfg.scaled(remat=remat))
+            builder = TrainStepBuilder(model, AdamWConfig(lr=1e-3))
+            state = builder.init_state(jax.random.PRNGKey(3))
+            (loss, _), grads = jax.value_and_grad(
+                builder.loss_fn, has_aux=True)(state["params"], batch)
+            outs[remat] = (float(loss),
+                           float(jnp.sum(jnp.abs(jax.tree.leaves(grads)[0]))))
+        for remat in ("dots", "full"):
+            assert outs[remat][0] == pytest.approx(outs["none"][0], rel=1e-5)
+            assert outs[remat][1] == pytest.approx(outs["none"][1], rel=1e-4)
+
+    def test_scan_vs_unroll_equivalence(self, setup):
+        """scan_layers=False is the same program, unrolled."""
+        cfg, _ = setup
+        rng = np.random.default_rng(4)
+        batch = {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (2, 8)), jnp.int32)}
+        m_scan = build_model(cfg.scaled(scan_layers=True))
+        m_unroll = build_model(cfg.scaled(scan_layers=False))
+        params = m_scan.init(jax.random.PRNGKey(5))
+        l1, _ = m_scan.forward(params, batch)
+        l2, _ = m_unroll.forward(params, batch)
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                                   rtol=2e-5, atol=2e-5)

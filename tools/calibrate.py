@@ -1,0 +1,103 @@
+"""Calibration driver: characterise apps, fit models, race the policies.
+
+Run:  PYTHONPATH=src python tools/calibrate.py [--quick]
+"""
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import isc
+from repro.core.baselines import (
+    HySchedScheduler,
+    LinuxScheduler,
+    OracleScheduler,
+    RandomStaticScheduler,
+)
+from repro.core.synpa import SynpaScheduler
+from repro.smt import machine as mc
+from repro.smt import metrics, training, workloads
+from repro.smt.apps import APP_PROFILES, pool_profiles
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--workloads", type=str, default="")
+    args = ap.parse_args()
+
+    m = mc.SMTMachine(mc.MachineParams(), seed=0)
+
+    # --- Figure 2 sanity: stack heights ---
+    print("== Fig2: measured stack heights (raw) ==")
+    lt, gt = 0, 0
+    for p in APP_PROFILES:
+        samples, _ = m.run_solo(p, 20, noisy=False)
+        c = np.array([s.as_tuple() for s in samples])
+        raw = np.asarray(isc.raw_stack(c[:, 0], c[:, 1], c[:, 2], c[:, 3])).mean(0)
+        h = raw[:3].sum()
+        flag = "GT100" if h > 1.0 else "LT100"
+        if h > 1.0: gt += 1
+        else: lt += 1
+        print(f"  {p.name:14s} h={h:6.3f} {flag}  DI={raw[0]:.3f} FE={raw[1]:.3f} BE={raw[2]:.3f}")
+    print(f"  LT100: {lt}, GT100: {gt}  (paper: 21 / 7)")
+
+    # --- classification ---
+    groups = workloads.classify(m)
+    from collections import Counter
+    print("== groups ==", Counter(groups.values()))
+    for g in ("frontend", "backend", "others"):
+        print(f"  {g}: {[n for n,v in groups.items() if v==g]}")
+
+    # --- model fit ---
+    t0 = time.time()
+    models, data = training.build_all_models(
+        m, solo_quanta=40 if args.quick else 60,
+        pair_quanta=8 if args.quick else 12,
+    )
+    print(f"== models fit in {time.time()-t0:.1f}s ==")
+    for name, model in models.items():
+        mse = np.asarray(model.mse)[: model.n_categories]
+        print(f"  {name:14s} MSE={np.array2string(mse, precision=4)}")
+        print(f"    coeffs=\n{np.array2string(np.asarray(model.coeffs)[:model.n_categories], precision=4)}")
+
+    # --- race on workloads ---
+    wls = workloads.make_workloads(m)
+    names = args.workloads.split(",") if args.workloads else (
+        ["fb0", "fb1", "be0", "fe0"] if args.quick else list(wls)
+    )
+    policies = {
+        "linux": lambda: LinuxScheduler(),
+        "hy-sched": lambda: HySchedScheduler(),
+        "SYNPA3_N": lambda: SynpaScheduler(isc.SYNPA3_N, models["SYNPA3_N"]),
+        "SYNPA4_N": lambda: SynpaScheduler(isc.SYNPA4_N, models["SYNPA4_N"]),
+        "SYNPA4_R-FEBE": lambda: SynpaScheduler(isc.SYNPA4_R_FEBE, models["SYNPA4_R-FEBE"]),
+        "oracle": lambda: OracleScheduler(),
+    }
+    agg = {p: {"tt": [], "ipc": []} for p in policies}
+    t0 = time.time()
+    for w in names:
+        profs = workloads.workload_profiles(wls[w])
+        base = None
+        row = [w]
+        for pname, factory in policies.items():
+            st = metrics.run_repeated(m, profs, factory, repeats=args.repeats, base_seed=hash(w) % 10000)
+            if pname == "linux":
+                base = st
+            sp = metrics.speedup(base.makespan_s, st.makespan_s)
+            spi = metrics.speedup(st.ipc_geomean, base.ipc_geomean)  # inverse: ipc ratio
+            agg[pname]["tt"].append(sp)
+            agg[pname]["ipc"].append(st.ipc_geomean / base.ipc_geomean)
+            row.append(f"{pname}:TTx{sp:.3f}/IPCx{st.ipc_geomean/base.ipc_geomean:.3f}")
+        print("  ".join(row))
+    print(f"== raced in {time.time()-t0:.1f}s ==")
+    print("== averages (TT speedup vs linux | IPC ratio) ==")
+    for pname in policies:
+        tt = np.array(agg[pname]["tt"]); ipc = np.array(agg[pname]["ipc"])
+        mixed = [i for i, w in enumerate(names) if w.startswith("fb")]
+        mtt = tt[mixed].mean() if mixed else float("nan")
+        print(f"  {pname:14s} TT {tt.mean():.3f} (mixed {mtt:.3f}) | IPC {ipc.mean():.3f}")
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,167 @@
+"""Render the roofline table + perf log into EXPERIMENTS.md.
+
+Run whenever new dry-run/hillclimb records land:
+    PYTHONPATH=src python tools/finalize_experiments.py
+"""
+
+import glob
+import json
+import os
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+RESULTS = os.path.join(ROOT, "benchmarks", "results")
+EXP = os.path.join(ROOT, "EXPERIMENTS.md")
+
+
+def _bottleneck_note(r):
+    d = r["dominant"]
+    arch, shape = r["arch"], r["shape"]
+    if d == "collective":
+        return ("reduce per-layer weight gathers (drop FSDP on the hot "
+                "params / shard over pod too) or overlap via scan")
+    if d == "memory":
+        if "decode" in shape or "long" in shape:
+            return ("shard the KV-length dim over the model axis; "
+                    "fuse decode attention (Pallas decode_attention)")
+        return ("Pallas flash attention removes the S^2 score traffic; "
+                "remat policy trades the rest")
+    return "raise arithmetic intensity (larger per-chip tiles, less remat)"
+
+
+def roofline_md():
+    rows = []
+    for p in sorted(glob.glob(os.path.join(RESULTS, "dryrun",
+                                           "*__16x16__full.json"))):
+        with open(p) as f:
+            r = json.load(f)
+        if r.get("mesh") == "16x16":
+            rows.append(r)
+    if not rows:
+        return "*(sweep still running — no single-pod records yet)*"
+    mp = len(glob.glob(os.path.join(RESULTS, "dryrun",
+                                    "*__2x16x16__*.json")))
+    lines = [
+        f"**{len(rows)} single-pod cells baselined; {mp} multi-pod cells "
+        f"compiled (pod-axis coherence proven).**", "",
+        "| arch | shape | compute_s | memory_s | collective_s | dominant | "
+        "useful | roofline | GiB/dev | fits | next lever |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    rows.sort(key=lambda r: (r["arch"], order.get(r["shape"], 9)))
+    for r in rows:
+        gib = (r.get("bytes_per_device") or 0) / 2**30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"{r['dominant']} | {r['useful_flops_ratio']:.2f} | "
+            f"{100*r['roofline_fraction']:.1f}% | {gib:.1f} | "
+            f"{'y' if r.get('fits_hbm') else 'n'} | "
+            f"{_bottleneck_note(r)} |")
+    doms = {}
+    for r in rows:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    lines += ["", f"Dominant-term census: {doms}."]
+    return "\n".join(lines)
+
+
+def perf_md():
+    path = os.path.join(RESULTS, "perf_log.json")
+    if not os.path.exists(path):
+        return "*(hillclimb log not yet produced)*"
+    with open(path) as f:
+        log = json.load(f)
+    by_cell = {}
+    for e in log:
+        cell, step = e["key"].split("/", 1)
+        by_cell.setdefault(cell, []).append((step, e))
+    out = []
+    # headline: paper-faithful baseline vs best optimized variant per cell
+    out.append("**Headline (baseline -> best measured variant, same "
+               "HLO-derived yardstick):**\n")
+    out.append("| cell | baseline bound_s | best bound_s | Δ | baseline "
+               "roofline | best roofline |")
+    out.append("|---|---|---|---|---|---|")
+    for cell, steps in by_cell.items():
+        recs = [e["record"] for _s, e in steps if "record" in e]
+        full = [r for r in recs
+                if not r.get("overrides", {}).get("scan_layers", False)]
+        if not full:
+            continue
+        base = next((e["record"] for s, e in steps
+                     if s == "baseline" and "record" in e), full[0])
+        best = min(full, key=lambda r: r["bound_s"])
+        out.append(
+            f"| {cell} | {base['bound_s']:.3f} | {best['bound_s']:.3f} | "
+            f"{100*(best['bound_s']/base['bound_s']-1):+.1f}% | "
+            f"{100*base['roofline_fraction']:.1f}% | "
+            f"{100*best['roofline_fraction']:.1f}% |")
+    out.append("")
+    out.append("(scan-only probes measure state-memory effects and are "
+               "excluded from bound comparisons; decode cells' roofline "
+               "fraction is compute-referenced and intrinsically ~0 — the "
+               "memory term *is* their score.)\n")
+    for cell, steps in by_cell.items():
+        out.append(f"### {cell}")
+        base = None
+        for step, e in steps:
+            if "error" in e:
+                out.append(f"* **{step}** — {e['hypothesis']}\n"
+                           f"  - FAILED: `{e['error']}`")
+                continue
+            r = e["record"]
+            terms = (f"compute {r['compute_s']:.3f}s / memory "
+                     f"{r['memory_s']:.3f}s / collective "
+                     f"{r['collective_s']:.3f}s; dominant {r['dominant']}; "
+                     f"useful {r['useful_flops_ratio']:.2f}; "
+                     f"roofline {100*r['roofline_fraction']:.1f}%; "
+                     f"{(r.get('bytes_per_device') or 0)/2**30:.1f} GiB/dev")
+            if step == "baseline":
+                base = r
+                out.append(f"* **baseline** — {e['hypothesis']}\n  - {terms}")
+                continue
+            verdict = ""
+            if base is not None:
+                db = r["bound_s"] / max(base["bound_s"], 1e-12) - 1
+                dd = (r[f"{base['dominant']}_s"]
+                      / max(base[f"{base['dominant']}_s"], 1e-12) - 1)
+                verdict = (f"\n  - vs baseline: bound {100*db:+.1f}%, "
+                           f"baseline-dominant term {100*dd:+.1f}% "
+                           f"({'confirmed' if dd < -0.03 or db < -0.03 else 'refuted/neutral'})")
+            out.append(f"* **{step}** — {e['hypothesis']}\n  - {terms}"
+                       + verdict)
+        out.append("")
+    return "\n".join(out)
+
+
+def main():
+    with open(EXP) as f:
+        text = f.read()
+    text = text.split("<!-- ROOFLINE_TABLE -->")[0] + "<!-- ROOFLINE_TABLE -->\n\n"
+    text += roofline_md() + "\n\n"
+    # keep everything between the markers regenerated
+    text += """---
+
+## §Perf — hillclimbing (deliverable, 3 cells)
+
+Per the brief: every cell is baselined (table above); three cells are
+hillclimbed with explicit hypothesis -> change -> measure -> confirm/refute
+cycles (`tools/hillclimb.py`, log: `benchmarks/results/perf_log.json`):
+
+1. **kimi-k2-1t-a32b x train_4k** — most collective-bound (the paper-table
+   arch; per-layer FSDP expert gathers dominate).
+2. **llama3.2-3b x decode_32k** — memory-bound serving cell.
+3. **gemma-7b x train_4k** — the dense-train representative (attention S^2
+   memory, remat-recompute trade).
+
+<!-- PERF_LOG -->
+
+"""
+    text += perf_md() + "\n"
+    with open(EXP, "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()
