@@ -1,0 +1,95 @@
+"""Cluster-scale race: Linux / random-static / SYNPA4 at N in {8..1024}.
+
+The paper evaluates 8 applications on 4 SMT cores; the north-star is a
+scheduler that re-pairs *cluster-sized* populations every quantum.  This
+scenario runs the fixed-horizon throughput mode of the vectorised machine at
+N = 8, 64, 256 and 1024 apps and reports, per policy:
+
+* ground-truth mean slowdown of the chosen pairings (the quality signal),
+* machine-wide IPC geomean,
+* policy wall-time per quantum (pipeline + matcher cost at scale),
+* simulator wall-time per quantum.
+
+It also measures the vectorised machine against the per-app reference loop
+at N = 256 (same seeds, bit-identical results) to keep the speedup honest.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+from benchmarks.common import csv_row, get_env, save_json
+
+SIZES = (8, 64, 256, 1024)
+QUANTA = {8: 40, 64: 30, 256: 20, 1024: 8}
+
+
+def _policies(models):
+    from repro.core import isc
+    from repro.core.baselines import LinuxScheduler, RandomStaticScheduler
+    from repro.core.synpa import SynpaScheduler
+
+    return {
+        "linux": lambda: LinuxScheduler(),
+        "random": lambda: RandomStaticScheduler(),
+        "synpa4": lambda: SynpaScheduler(
+            isc.SYNPA4_R_FEBE, models["SYNPA4_R-FEBE"]
+        ),
+    }
+
+
+def _engine_speedup(machine, n: int = 256, quanta: int = 30) -> float:
+    """Wall-clock ratio loop/vector for one fixed workload (bit-identical)."""
+    from repro.core.baselines import RandomStaticScheduler
+    from repro.smt import workloads
+
+    profs = workloads.scaled_workload(n, seed=n)
+    t0 = time.perf_counter()
+    machine.run_workload(profs, RandomStaticScheduler(), seed=1,
+                         max_quanta=quanta, engine="loop")
+    t_loop = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    machine.run_workload(profs, RandomStaticScheduler(), seed=1,
+                         max_quanta=quanta, engine="vector")
+    t_vec = time.perf_counter() - t0
+    return t_loop / max(t_vec, 1e-9)
+
+
+def main(quick: bool = False) -> str:
+    from repro.smt import workloads
+
+    machine, models, _wls = get_env()
+    sizes = [n for n in SIZES if n <= (256 if quick else 1024)]
+    results: Dict[str, Dict] = {}
+    t_total = time.perf_counter()
+    for n in sizes:
+        profs = workloads.scaled_workload(n, seed=n)
+        quanta = QUANTA[n] if not quick else max(QUANTA[n] // 2, 4)
+        row = {}
+        for pname, factory in _policies(models).items():
+            res = machine.run_quanta(profs, factory(), n_quanta=quanta, seed=3)
+            row[pname] = {
+                "mean_true_slowdown": res.mean_true_slowdown,
+                "ipc_geomean": res.ipc_geomean,
+                "sched_ms_per_quantum": res.sched_s_per_quantum * 1e3,
+                "machine_ms_per_quantum": res.machine_s_per_quantum * 1e3,
+            }
+        results[str(n)] = row
+    speedup = _engine_speedup(machine, n=256, quanta=30)
+    results["engine_speedup_n256"] = speedup
+    save_json("cluster_scale.json", results)
+
+    # Headline: slowdown win of SYNPA4 over Linux at the largest N raced.
+    big = results[str(sizes[-1])]
+    gain = big["linux"]["mean_true_slowdown"] / big["synpa4"]["mean_true_slowdown"]
+    us = (time.perf_counter() - t_total) * 1e6
+    return csv_row(
+        "cluster_scale", us,
+        f"N={sizes[-1]} synpa4 slowdown gain {gain:.3f}x vs linux; "
+        f"vector engine {speedup:.1f}x vs loop at N=256",
+    )
+
+
+if __name__ == "__main__":
+    print(main())

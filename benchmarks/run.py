@@ -20,6 +20,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
+        cluster_scale,
         colocation,
         fig2_stacks,
         fig6_synpa3_vs_4,
@@ -38,6 +39,7 @@ def main() -> None:
         ("fig8", fig8_variants.main),
         ("fig9", fig9_hysched.main),
         ("colocation", colocation.main),
+        ("cluster_scale", cluster_scale.main),
         ("roofline", roofline_table.main),
     ]
     print("name,us_per_call,derived")

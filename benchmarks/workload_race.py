@@ -40,6 +40,7 @@ def race(
         for pname, factory in policy_factories.items():
             if pname in results[w]:
                 continue
+            t0 = time.perf_counter()
             st = metrics.run_repeated(
                 machine, profs, factory, repeats=repeats,
                 base_seed=abs(hash(w)) % 100_000)
@@ -48,6 +49,9 @@ def race(
                 "avg_tt": st.avg_turnaround_s,
                 "ipc": st.ipc_geomean,
                 "cv": st.cv,
+                # wall-clock of the whole repeated run: scheduler overhead
+                # becomes visible here as workloads scale past the paper's N=8
+                "wall_s": time.perf_counter() - t0,
             }
             save_json(cache_name, results)  # interrupt-safe incremental save
     save_json(cache_name, results)

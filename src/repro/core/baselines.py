@@ -71,7 +71,7 @@ class HySchedScheduler(Scheduler):
     name = "hy-sched"
 
     def schedule(self, quantum, samples, prev_pairs):
-        if any(s is None for s in samples):
+        if not self._have_samples(samples):
             return self._random_pairs()
         c = self._counters_array(samples)
         cycles = np.maximum(c[:, 0], 1e-9)
@@ -113,20 +113,25 @@ class OracleScheduler(Scheduler):
     name = "oracle"
 
     def schedule(self, quantum, samples, prev_pairs):
-        states = getattr(self.machine, "_active_states", None)
-        if states is None:
-            return self._random_pairs()
-        from repro.smt.machine import true_slowdown  # late import, no cycle
+        # Vectorised engine: the machine exposes the ground-truth cost matrix
+        # directly (one batched computation, scales to cluster-size N).
+        oracle = getattr(self.machine, "oracle_cost_matrix", None)
+        sym = oracle() if oracle is not None else None
+        if sym is None:
+            states = getattr(self.machine, "_active_states", None)
+            if states is None:
+                return self._random_pairs()
+            from repro.smt.machine import true_slowdown  # late import, no cycle
 
-        n = self.n_apps
-        cost = np.zeros((n, n))
-        for i in range(n):
-            for j in range(n):
-                if i != j:
-                    cost[i, j] = true_slowdown(
-                        states[i].phase(), states[i].profile, states[j].phase(),
-                        self.machine.params,
-                    )
-        sym = cost + cost.T
-        np.fill_diagonal(sym, 1e9)
+            n = self.n_apps
+            cost = np.zeros((n, n))
+            for i in range(n):
+                for j in range(n):
+                    if i != j:
+                        cost[i, j] = true_slowdown(
+                            states[i].phase(), states[i].profile,
+                            states[j].phase(), self.machine.params,
+                        )
+            sym = cost + cost.T
+            np.fill_diagonal(sym, 1e9)
         return matching.min_cost_pairs(sym)

@@ -42,6 +42,7 @@ import dataclasses
 import enum
 from typing import Tuple
 
+import jax
 import jax.numpy as jnp
 
 # Fixed category order used across the whole framework.
@@ -114,16 +115,22 @@ def raw_stack(
     stall_backend,
     inst_spec,
     width: int = DISPATCH_WIDTH,
+    dtype=None,
 ):
     """Raw (unrepaired) ISC stack from PMU counters.
 
     Returns an ``(..., 4)`` array ``(DI, FE, BE, 0)``; the sum of the first
     three columns is the measured stack height (may be <1 or >1).
+
+    ``dtype`` defaults to float64 when ``jax.config.x64`` is enabled and
+    float32 otherwise; pass it explicitly to force a precision.
     """
-    cycles = jnp.maximum(jnp.asarray(cpu_cycles, jnp.float64 if False else jnp.float32), _EPS)
-    di = jnp.asarray(inst_spec, jnp.float32) / (width * cycles)
-    fe = jnp.asarray(stall_frontend, jnp.float32) / cycles
-    be = jnp.asarray(stall_backend, jnp.float32) / cycles
+    if dtype is None:
+        dtype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+    cycles = jnp.maximum(jnp.asarray(cpu_cycles, dtype), _EPS)
+    di = jnp.asarray(inst_spec, dtype) / (width * cycles)
+    fe = jnp.asarray(stall_frontend, dtype) / cycles
+    be = jnp.asarray(stall_backend, dtype) / cycles
     hw = jnp.zeros_like(di)
     return jnp.stack([di, fe, be, hw], axis=-1)
 

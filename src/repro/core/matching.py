@@ -6,15 +6,19 @@ cores with minimum total predicted degradation.  The paper uses the Blossom
 algorithm because it "considers all the possibilities and selects the optimal
 choice with minimum overhead, even if the number of applications increases".
 
-Three engines are provided:
+Four engines are provided:
 
 * :func:`max_weight_matching` — a faithful O(V^3) primal-dual implementation
   of Edmonds' maximum-weight matching for general graphs (Galil's formulation,
   in the style of the classic ``mwmatching`` reference implementation).  Exact.
 * :func:`_dp_min_cost_pairs` — exact bitmask dynamic program, O(2^N * N).
   Used as an independent oracle in tests (property-tested against blossom).
-* :func:`_greedy_min_cost_pairs` — greedy + 2-opt local search for very large
-  N (cluster-scale co-location, thousands of jobs), near-optimal in practice.
+* :func:`_tiled_min_cost_pairs` — the cluster-scale tier: vertices are
+  bucketed into tiles of similar interference profile, each tile is solved
+  exactly by blossom, and a global vectorised 2-opt repairs the seams.
+  Near-optimal at N in the thousands with no O(V^3) blowup.
+* :func:`_greedy_min_cost_pairs` — greedy + 2-opt local search, the cheapest
+  tier for very large N.
 
 :func:`min_cost_pairs` picks the right engine and is the only entry point the
 schedulers use.  Costs may be floats; they are scaled to integers internally
@@ -23,7 +27,7 @@ so the blossom dual arithmetic is exact.
 
 from __future__ import annotations
 
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -495,8 +499,42 @@ def _dp_min_cost_pairs(cost: np.ndarray) -> Pairs:
     return sorted(pairs)
 
 
-def _greedy_min_cost_pairs(cost: np.ndarray, two_opt_rounds: int = 4) -> Pairs:
-    """Greedy matching + 2-opt pair-swap local search.  O(N^2 log N)."""
+def _two_opt(cost: np.ndarray, pairs: Pairs, max_swaps: Optional[int] = None,
+             eps: float = 1e-9) -> Pairs:
+    """Vectorised best-improvement 2-opt over pairs of pairs.
+
+    Each step evaluates every re-pairing of two cores — pair (i, j) with
+    pair (k, l) can become (i, k)/(j, l) or (i, l)/(j, k) — as four (P, P)
+    gather matrices, applies the single best improving swap and repeats.
+    Best-improvement with full re-evaluation keeps the code simple and, for
+    the tiled-blossom seeds used at cluster scale, converges in tens of
+    swaps.
+    """
+    p = len(pairs)
+    if p < 2:
+        return sorted(tuple(sorted(q)) for q in pairs)
+    max_swaps = max_swaps if max_swaps is not None else 4 * p
+    i = np.array([q[0] for q in pairs], dtype=np.int64)
+    j = np.array([q[1] for q in pairs], dtype=np.int64)
+    for _ in range(max_swaps):
+        cur = cost[i, j]                              # (P,)
+        alt1 = cost[np.ix_(i, i)] + cost[np.ix_(j, j)]  # (i,k)+(j,l)
+        alt2 = cost[np.ix_(i, j)] + cost[np.ix_(j, i)]  # (i,l)+(j,k)
+        delta = np.minimum(alt1, alt2) - (cur[:, None] + cur[None, :])
+        np.fill_diagonal(delta, 0.0)
+        a, b = np.unravel_index(int(np.argmin(delta)), delta.shape)
+        if delta[a, b] >= -eps:
+            break
+        ia, ja, ib, jb = i[a], j[a], i[b], j[b]
+        if alt1[a, b] <= alt2[a, b]:
+            i[a], j[a], i[b], j[b] = ia, ib, ja, jb   # (i,k) and (j,l)
+        else:
+            i[a], j[a], i[b], j[b] = ia, jb, ja, ib   # (i,l) and (j,k)
+    return sorted(tuple(sorted((int(x), int(y)))) for x, y in zip(i, j))
+
+
+def _greedy_min_cost_pairs(cost: np.ndarray, two_opt: bool = True) -> Pairs:
+    """Greedy matching + vectorised 2-opt local search.  O(N^2 log N)."""
     n = cost.shape[0]
     order = np.dstack(np.unravel_index(np.argsort(cost, axis=None), cost.shape))[0]
     used = np.zeros(n, dtype=bool)
@@ -507,51 +545,45 @@ def _greedy_min_cost_pairs(cost: np.ndarray, two_opt_rounds: int = 4) -> Pairs:
             pairs.append((int(i), int(j)))
             if 2 * len(pairs) == n:
                 break
-    # 2-opt: try re-pairing every pair of pairs.
-    for _ in range(two_opt_rounds):
-        improved = False
-        for a in range(len(pairs)):
-            for b in range(a + 1, len(pairs)):
-                i, j = pairs[a]
-                k, l = pairs[b]
-                cur = cost[i, j] + cost[k, l]
-                alt1 = cost[i, k] + cost[j, l]
-                alt2 = cost[i, l] + cost[j, k]
-                if alt1 < cur and alt1 <= alt2:
-                    pairs[a], pairs[b] = (i, k), (j, l)
-                    improved = True
-                elif alt2 < cur:
-                    pairs[a], pairs[b] = (i, l), (j, k)
-                    improved = True
-        if not improved:
-            break
-    return sorted(tuple(sorted(p)) for p in pairs)
+    return _two_opt(cost, pairs) if two_opt else sorted(pairs)
 
 
-def min_cost_pairs(cost: np.ndarray, method: str = "auto") -> Pairs:
-    """Minimum-total-cost perfect matching of an even set of applications.
+def _tiled_min_cost_pairs(cost: np.ndarray, tile: int = 64) -> Pairs:
+    """Scalable near-optimal matching: greedy seed -> per-tile blossom ->
+    global vectorised 2-opt.
 
-    cost: (N, N) symmetric matrix; cost[i, j] = predicted degradation if i and
-    j share a core.  Diagonal is ignored.  Returns N/2 sorted (i, j) pairs.
-
-    method: 'blossom' (exact, default for N <= 512), 'greedy' (large N),
-    'dp' (exact oracle, N <= 22), or 'auto'.
+    A greedy matching seeds the solution; its pairs are sorted by cost and
+    grouped ``tile // 2`` at a time, so each tile holds applications whose
+    greedy partners cost about the same — exactly the pairs a re-matching
+    can still improve.  The exact O(tile^3) blossom then re-solves every
+    tile (never worse than the greedy seed inside it), and a global 2-opt
+    pass repairs the cross-tile seams.  Keeps ``min_cost_pairs``
+    near-optimal at N in the thousands without the O(V^3) blowup of a
+    whole-graph blossom.
     """
-    cost = np.asarray(cost, dtype=np.float64)
     n = cost.shape[0]
-    assert cost.shape == (n, n) and n % 2 == 0, "need an even number of apps"
-    if n == 0:
-        return []
-    if n == 2:
-        return [(0, 1)]
-    if method == "auto":
-        method = "blossom" if n <= 512 else "greedy"
-    if method == "dp":
-        return _dp_min_cost_pairs(cost)
-    if method == "greedy":
-        return _greedy_min_cost_pairs(cost)
-    assert method == "blossom", method
+    assert tile % 2 == 0
+    seed = _greedy_min_cost_pairs(cost, two_opt=False)
+    seed_cost = np.array([cost[i, j] for i, j in seed])
+    order = np.argsort(seed_cost, kind="stable")
+    pairs: Pairs = []
+    per_tile = tile // 2
+    for t in range(0, len(seed), per_tile):
+        chunk = [seed[k] for k in order[t:t + per_tile]]
+        idx = np.array([v for q in chunk for v in q], dtype=np.int64)
+        if len(idx) <= 2:
+            pairs.append((int(idx[0]), int(idx[1])))
+            continue
+        sub = cost[np.ix_(idx, idx)]
+        pairs.extend(
+            (int(idx[a]), int(idx[b])) for a, b in _exact_blossom_pairs(sub)
+        )
+    return _two_opt(cost, pairs)
 
+
+def _exact_blossom_pairs(cost: np.ndarray) -> Pairs:
+    """Exact min-cost perfect matching via Edmonds (integer-scaled weights)."""
+    n = cost.shape[0]
     # Convert min-cost to max-weight with exact integer arithmetic.
     off = ~np.eye(n, dtype=bool)
     finite = np.clip(cost[off], -1e12, 1e12)
@@ -568,6 +600,46 @@ def min_cost_pairs(cost: np.ndarray, method: str = "auto") -> Pairs:
     pairs = sorted({tuple(sorted((v, m))) for v, m in enumerate(mate) if m >= 0})
     assert len(pairs) == n // 2, "blossom failed to produce a perfect matching"
     return [tuple(p) for p in pairs]
+
+
+# The pure-Python blossom is O(V^3): ~0.1 s at N=64, ~1 s at N=128 and ~8 s
+# at N=256 — past this the tiled engine (per-tile blossom + global 2-opt)
+# takes over.
+BLOSSOM_MAX_N = 128
+TILE = 64
+
+
+def min_cost_pairs(cost: np.ndarray, method: str = "auto") -> Pairs:
+    """Minimum-total-cost perfect matching of an even set of applications.
+
+    cost: (N, N) symmetric matrix; cost[i, j] = predicted degradation if i and
+    j share a core.  Diagonal is ignored.  Returns N/2 sorted (i, j) pairs.
+
+    method:
+      'blossom'  exact Edmonds (default for N <= 128);
+      'tiled'    per-tile blossom seeds + global vectorised 2-opt (default
+                 above 128; near-optimal at N in the thousands);
+      'greedy'   greedy seed + 2-opt (fastest, largest N);
+      'dp'       exact bitmask oracle (tests, N <= 22);
+      'auto'     pick by N.
+    """
+    cost = np.asarray(cost, dtype=np.float64)
+    n = cost.shape[0]
+    assert cost.shape == (n, n) and n % 2 == 0, "need an even number of apps"
+    if n == 0:
+        return []
+    if n == 2:
+        return [(0, 1)]
+    if method == "auto":
+        method = "blossom" if n <= BLOSSOM_MAX_N else "tiled"
+    if method == "dp":
+        return _dp_min_cost_pairs(cost)
+    if method == "greedy":
+        return _greedy_min_cost_pairs(cost)
+    if method == "tiled":
+        return _tiled_min_cost_pairs(cost, tile=min(TILE, n))
+    assert method == "blossom", method
+    return _exact_blossom_pairs(cost)
 
 
 def matching_cost(cost: np.ndarray, pairs: Pairs) -> float:

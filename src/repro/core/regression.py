@@ -198,18 +198,22 @@ def inverse(
     return to_simplex(z_i), to_simplex(z_j)
 
 
-def pair_cost_matrix(model: CategoryModel, st_stacks):
+def pair_cost_matrix(model: CategoryModel, st_stacks, impl: str = "xla"):
     """Dense all-pairs cost: cost[i, j] = slowdown(i|j) + slowdown(j|i).
 
     st_stacks: (N, 4) ST stacks.  Returns (N, N) symmetric; diagonal is set
     huge so an application never pairs with itself.
+
+    ``impl`` selects the backend of ``repro.kernels.pair_score``: "xla"
+    (dense reference), "pallas" (tiled TPU kernel for cluster-scale N),
+    "pallas_interpret", or "auto" (pallas on TPU past the crossover N).
     """
+    from repro.kernels.pair_score import ops as pair_score_ops
+
     st = jnp.asarray(st_stacks, jnp.float32)
-    n = st.shape[0]
-    s_ij = predict_slowdown(model, st[:, None, :], st[None, :, :])  # i next to j
-    cost = s_ij + s_ij.T
-    big = jnp.full((n,), 1e9, cost.dtype)
-    return cost.at[jnp.arange(n), jnp.arange(n)].set(big)
+    return pair_score_ops.pair_costs(
+        st, model.coeffs, n_categories=model.n_categories, impl=impl
+    )
 
 
 def profile_to_training_set(

@@ -52,8 +52,23 @@ class Scheduler:
         return [(int(perm[2 * k]), int(perm[2 * k + 1])) for k in range(self.n_apps // 2)]
 
     @staticmethod
+    def _have_samples(samples) -> bool:
+        """True once every application has a PMU readout."""
+        if samples is None:
+            return False
+        if isinstance(samples, np.ndarray):
+            return True
+        return not any(s is None for s in samples)
+
+    @staticmethod
     def _counters_array(samples) -> np.ndarray:
-        """(N, 5) array: cycles, stall_fe, stall_be, inst_spec, inst_retired."""
+        """(N, 5) array: cycles, stall_fe, stall_be, inst_spec, inst_retired.
+
+        The vectorised machine hands policies the counter matrix directly;
+        the scalar engine hands a list of :class:`PMUSample`.
+        """
+        if isinstance(samples, np.ndarray):
+            return samples.astype(np.float32)
         return np.array([s.as_tuple() for s in samples], dtype=np.float32)
 
 
@@ -65,21 +80,32 @@ def _partner_index(pairs: Sequence[Pair], n: int) -> np.ndarray:
     return partner
 
 
-def make_synpa_pipeline(method: isc.StackMethod, model: regression.CategoryModel):
+def make_synpa_pipeline(
+    method: isc.StackMethod,
+    model: regression.CategoryModel,
+    impl: str = "auto",
+):
     """One jitted function: PMU counters + current partners -> pair costs.
 
     Returns ``fn(counters (N,5) f32, partner (N,) i32) -> (cost (N,N), st (N,4))``.
+
+    ``impl`` picks the Step-2 all-pairs backend (see
+    :func:`repro.core.regression.pair_cost_matrix`); "auto" routes
+    cluster-scale N through the tiled Pallas kernel on TPU and the XLA
+    lowering elsewhere.  The choice is resolved per input shape, so one
+    pipeline instance serves any N.
     """
 
     @jax.jit
     def pipeline(counters: jnp.ndarray, partner: jnp.ndarray):
         raw = isc.raw_stack(
-            counters[:, 0], counters[:, 1], counters[:, 2], counters[:, 3]
+            counters[:, 0], counters[:, 1], counters[:, 2], counters[:, 3],
+            dtype=jnp.float32,
         )
         smt = isc.build_stack(raw, method)               # Step 0
         smt_partner = smt[partner]
         st, _ = regression.inverse(model, smt, smt_partner)  # Step 1
-        cost = regression.pair_cost_matrix(model, st)        # Step 2
+        cost = regression.pair_cost_matrix(model, st, impl=impl)  # Step 2
         return cost, st
 
     return pipeline
@@ -94,15 +120,16 @@ class SynpaScheduler(Scheduler):
         model: regression.CategoryModel,
         name: Optional[str] = None,
         matcher: str = "auto",
+        pair_impl: str = "auto",
     ):
         self.method = method
         self.model = model
         self.name = name or f"SYNPA{method.n_categories}_{method.name.split('_', 1)[1]}"
         self.matcher = matcher
-        self._pipeline = make_synpa_pipeline(method, model)
+        self._pipeline = make_synpa_pipeline(method, model, impl=pair_impl)
 
     def schedule(self, quantum, samples, prev_pairs):
-        if any(s is None for s in samples) or not prev_pairs:
+        if not self._have_samples(samples) or not prev_pairs:
             return self._random_pairs()
         counters = self._counters_array(samples)
         partner = _partner_index(prev_pairs, self.n_apps)

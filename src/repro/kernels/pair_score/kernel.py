@@ -17,6 +17,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.pair_score.ref import DIAG, MAX_SLOWDOWN, MIN_SLOWDOWN
 
@@ -59,13 +60,26 @@ def _pair_score_kernel(st_i_ref, st_j_ref, coeffs_ref, out_ref, *,
 
 
 def pair_score_pallas(st, coeffs, n_categories: int = 4,
-                      block: int = BLOCK, interpret: bool = False):
-    """st: (N, C) f32 (N padded to ``block`` by ops.py); coeffs: (C, 4)."""
+                      block: int = BLOCK, interpret: bool = False,
+                      n_valid: int = None):
+    """st: (N, C) f32 (N padded to ``block`` by ops.py); coeffs: (C, 4).
+
+    ``n_valid`` is the unpadded application count: rows/cols at or past it
+    are padding and receive the ``DIAG`` sentinel (defaults to N, i.e. no
+    padding).
+    """
     n, c = st.shape
     assert n % block == 0, "ops.py pads N to the block size"
+    n_valid = n if n_valid is None else n_valid
     grid = (n // block, n // block)
     kernel = functools.partial(
-        _pair_score_kernel, n_categories=n_categories, n_total=n, block=block)
+        _pair_score_kernel, n_categories=n_categories, n_total=n_valid,
+        block=block)
+    # Every (i, j) tile is independent: mark both grid dims parallel so
+    # Mosaic is free to reorder/overlap tiles, and bound VMEM to the two
+    # stack slices + coefficient table + output tile (with double-buffering
+    # headroom) so huge grids can't over-allocate.
+    vmem_bytes = 4 * (2 * block * c + c * 4 + block * block) * 4
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -76,6 +90,10 @@ def pair_score_pallas(st, coeffs, n_categories: int = 4,
         ],
         out_specs=pl.BlockSpec((block, block), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel"),
+            vmem_limit_bytes=max(vmem_bytes, 1 << 20),
+        ),
         interpret=interpret,
     )(st.astype(jnp.float32), st.astype(jnp.float32),
       coeffs.astype(jnp.float32))

@@ -10,17 +10,23 @@ import jax.numpy as jnp
 from repro.kernels.pair_score.kernel import BLOCK, pair_score_pallas
 from repro.kernels.pair_score.ref import DIAG, pair_cost_ref
 
+# Below this N the one-block grid launch overhead beats any fusion win; the
+# XLA lowering is also the reference the Pallas path is validated against.
+PALLAS_MIN_N = 256
+
+
+def resolve_impl(impl: str, n: int) -> str:
+    """Map ``"auto"`` to a concrete backend for an N-app cost matrix."""
+    if impl != "auto":
+        return impl
+    if jax.default_backend() == "tpu" and n >= PALLAS_MIN_N:
+        return "pallas"
+    return "xla"
+
 
 @functools.partial(jax.jit,
                    static_argnames=("n_categories", "impl", "block"))
-def pair_costs(st, coeffs, n_categories: int = 4, impl: str = "xla",
-               block: int = BLOCK):
-    """All-pairs SYNPA pair costs.
-
-    st: (N, C) ST stacks.  coeffs: (C, 4) Eq. 4 coefficients.
-    impl: "xla" (oracle path, default on CPU), "pallas" (TPU),
-    "pallas_interpret" (CPU validation of the TPU kernel body).
-    """
+def _pair_costs(st, coeffs, n_categories: int, impl: str, block: int):
     if impl == "xla":
         return pair_cost_ref(st, coeffs, n_categories)
     n = st.shape[0]
@@ -28,5 +34,18 @@ def pair_costs(st, coeffs, n_categories: int = 4, impl: str = "xla",
     stp = jnp.pad(st.astype(jnp.float32), ((0, pad), (0, 0)))
     out = pair_score_pallas(
         stp, coeffs, n_categories=n_categories, block=block,
-        interpret=(impl == "pallas_interpret"))
+        interpret=(impl == "pallas_interpret"), n_valid=n)
     return out[:n, :n]
+
+
+def pair_costs(st, coeffs, n_categories: int = 4, impl: str = "xla",
+               block: int = BLOCK):
+    """All-pairs SYNPA pair costs.
+
+    st: (N, C) ST stacks.  coeffs: (C, 4) Eq. 4 coefficients.
+    impl: "xla" (oracle path, default on CPU), "pallas" (TPU tiled grid),
+    "pallas_interpret" (CPU validation of the TPU kernel body), or "auto"
+    (pallas on TPU for N >= PALLAS_MIN_N, xla otherwise).
+    """
+    return _pair_costs(st, coeffs, n_categories,
+                       resolve_impl(impl, st.shape[0]), block)

@@ -53,18 +53,23 @@ def logical_to_mesh(logical_axes: Sequence[Optional[str]],
     spec = []
     used = set()
     for name in logical_axes:
-        axes = rules.get(name) if name is not None else None
-        # A mesh axis may appear only once in a PartitionSpec.
-        if axes is None:
+        rule = rules.get(name) if name is not None else None
+        if rule is None:
             spec.append(None)
             continue
-        if isinstance(axes, str):
-            axes = (axes,)
+        # Preserve the rule's container type: a tuple rule stays a tuple even
+        # with one element, so P(("data",), None, "model") round-trips.
+        was_tuple = not isinstance(rule, str)
+        axes = (rule,) if isinstance(rule, str) else tuple(rule)
+        # A mesh axis may appear only once in a PartitionSpec.
         axes = tuple(a for a in axes if a not in used)
         used.update(axes)
-        spec.append(axes if len(axes) != 1 else axes[0])
         if not axes:
-            spec[-1] = None
+            spec.append(None)
+        elif was_tuple:
+            spec.append(axes)
+        else:
+            spec.append(axes[0])
     return P(*spec)
 
 

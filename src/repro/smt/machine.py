@@ -202,6 +202,164 @@ class _AppState:
         return self.profile.phase(self.phase_idx)
 
 
+# ---------------------------------------------------------------------------
+# Vectorised (cluster-scale) machine internals.
+#
+# The per-app Python loop above caps the simulator at a handful of cores; the
+# batched path below runs a whole quantum — interference transform,
+# instruction advance and PMU counter emission — as a few numpy array ops
+# over all N apps.  It consumes the RNG *stream-identically* to the scalar
+# loop (numpy Generators draw the same sequence batched or one at a time), so
+# ``engine="vector"`` reproduces ``engine="loop"`` bit for bit.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class PhaseTables:
+    """Array view of a workload's profiles for batched quantum computation.
+
+    Per-phase attributes are padded to the longest phase list and always
+    indexed with ``phase_idx % n_phases[app]``, mirroring
+    ``AppProfile.phase``.
+    """
+
+    n_apps: int
+    n_phases: np.ndarray      # (A,) int
+    comps: np.ndarray         # (A, Pmax, 4) solo per-instruction cycle comps
+    util: np.ndarray          # (A, Pmax) dispatch-slot utilisation
+    x_fe: np.ndarray          # (A, Pmax) frontend-stall fraction
+    x_be: np.ndarray          # (A, Pmax) backend-stall fraction
+    duration: np.ndarray      # (A, Pmax) mean phase duration (quanta)
+    omega: np.ndarray         # (A,)
+    retire: np.ndarray        # (A,)
+    mem_sens: np.ndarray      # (A,)
+    fetch_sens: np.ndarray    # (A,)
+
+    @classmethod
+    def build(cls, profiles: Sequence[AppProfile]) -> "PhaseTables":
+        a = len(profiles)
+        pmax = max(len(p.phases) for p in profiles)
+        n_phases = np.array([len(p.phases) for p in profiles], np.int64)
+        comps = np.zeros((a, pmax, 4))
+        util = np.zeros((a, pmax))
+        x_fe = np.zeros((a, pmax))
+        x_be = np.zeros((a, pmax))
+        duration = np.zeros((a, pmax))
+        for ai, p in enumerate(profiles):
+            for pi, ph in enumerate(p.phases):
+                comps[ai, pi] = _components_per_inst(ph)
+                util[ai, pi] = ph.util
+                x_fe[ai, pi] = ph.x_fe
+                x_be[ai, pi] = ph.x_be
+                duration[ai, pi] = float(ph.duration)
+        return cls(
+            n_apps=a,
+            n_phases=n_phases,
+            comps=comps,
+            util=util,
+            x_fe=x_fe,
+            x_be=x_be,
+            duration=duration,
+            omega=np.array([p.omega for p in profiles]),
+            retire=np.array([p.retire for p in profiles]),
+            mem_sens=np.array([p.mem_sens for p in profiles]),
+            fetch_sens=np.array([p.fetch_sens for p in profiles]),
+        )
+
+
+def corun_components_batched(
+    tables: PhaseTables,
+    idx_i: np.ndarray,
+    ph_i: np.ndarray,
+    idx_j: Optional[np.ndarray],
+    ph_j: Optional[np.ndarray],
+    params: MachineParams,
+) -> np.ndarray:
+    """Batched :func:`corun_components`: (K,) index arrays -> (K, 4) comps."""
+    c = tables.comps[idx_i, ph_i]
+    if idx_j is None:
+        return c.copy()
+    cpi = c.sum(axis=-1)
+    u = tables.util[idx_j, ph_j]
+    f = tables.x_fe[idx_j, ph_j]
+    m = tables.x_be[idx_j, ph_j]
+    mem = tables.mem_sens[idx_i]
+    fetch = tables.fetch_sens[idx_i]
+    out = np.empty_like(c)
+    out[:, 0] = c[:, 0] * (1.0 + params.a_disp * u)
+    out[:, 1] = c[:, 1] * (1.0 + params.a_hw * u)
+    out[:, 2] = c[:, 2] * (1.0 + params.a_fe * f) + params.e_fe * fetch * f * cpi
+    out[:, 3] = (
+        c[:, 3] * (1.0 + params.a_be * m + params.b_be * mem * m * m)
+        + params.e_be * mem * m * cpi
+    )
+    return out
+
+
+def pmu_counters_batched(
+    comps: np.ndarray,
+    omega: np.ndarray,
+    retire: np.ndarray,
+    cycles: float,
+    params: MachineParams,
+    rng: np.random.Generator,
+    noisy: bool = True,
+    draw_order: Optional[np.ndarray] = None,
+) -> np.ndarray:
+    """Batched :func:`pmu_readout`: (K, 4) comps -> (K, 5) counter rows.
+
+    ``draw_order`` fixes which app consumes which noise draw; passing the
+    scalar loop's visit order makes the batched counters bit-identical.
+    """
+    k = comps.shape[0]
+    cpi = comps.sum(axis=-1)
+    insts = cycles / cpi
+    frac = comps / cpi[:, None]
+    x_fe, x_be = frac[:, 2], frac[:, 3]
+    overlap = omega * np.minimum(x_fe, x_be)
+    out = np.empty((k, 5))
+    out[:, 0] = cycles
+    out[:, 1] = cycles * (x_fe + params.overlap_split * overlap)
+    out[:, 2] = cycles * (x_be + (1.0 - params.overlap_split) * overlap)
+    out[:, 3] = insts
+    out[:, 4] = insts * retire
+    if noisy:
+        draws = rng.lognormal(0.0, params.noise_sigma, size=(k, 4))
+        if draw_order is not None:
+            noise = np.empty_like(draws)
+            noise[draw_order] = draws
+        else:
+            noise = draws
+        out[:, 1:5] *= noise
+    return out
+
+
+@dataclasses.dataclass
+class _VectorState:
+    """Array-of-struct counterpart of ``_AppState`` for the batched engine."""
+
+    phase_idx: np.ndarray
+    phase_left: np.ndarray
+    progress: np.ndarray
+    target: np.ndarray
+    first_finish_q: np.ndarray
+    launches: np.ndarray
+    total_retired: np.ndarray
+    total_cycles: np.ndarray
+
+    @classmethod
+    def init(cls, tables: PhaseTables, targets: np.ndarray) -> "_VectorState":
+        n = tables.n_apps
+        return cls(
+            phase_idx=np.zeros(n, np.int64),
+            phase_left=tables.duration[:, 0].copy(),
+            progress=np.zeros(n),
+            target=np.asarray(targets, np.float64),
+            first_finish_q=np.full(n, np.inf),
+            launches=np.zeros(n, np.int64),
+            total_retired=np.zeros(n),
+            total_cycles=np.zeros(n),
+        )
+
+
 class SMTMachine:
     """Discrete-quantum simulator of an N-core, 2-way-SMT processor."""
 
@@ -260,13 +418,22 @@ class SMTMachine:
         policy,
         seed: int = 0,
         max_quanta: int = 5000,
+        engine: str = "vector",
     ) -> "WorkloadResult":
         """Run a workload under ``policy`` until every app reaches its target.
 
         Implements the paper's §6.2 methodology: targets from the solo
         reference run; early finishers are relaunched so the machine load is
         constant; the run ends when the *slowest first launch* completes.
+
+        ``engine="vector"`` (default) runs each quantum as a batched array
+        computation over all N apps; ``engine="loop"`` is the original
+        per-app reference loop.  Both consume the RNG stream identically and
+        produce bit-identical results.
         """
+        if engine == "vector":
+            return self._run_workload_vector(profiles, policy, seed, max_quanta)
+        assert engine == "loop", engine
         n = len(profiles)
         assert n % 2 == 0, "need an even number of applications"
         rng = np.random.default_rng(seed)
@@ -278,6 +445,7 @@ class SMTMachine:
 
         policy.reset(n_apps=n, rng=np.random.default_rng(seed + 7919), machine=self)
         self._active_states = states  # exposed only for the Oracle baseline
+        self._vector_ctx = None
         samples: List[Optional[PMUSample]] = [None] * n
         pairs: List[Pair] = []
         q = 0
@@ -343,6 +511,228 @@ class SMTMachine:
             completed=all(not math.isinf(s.first_finish_q) for s in states),
         )
 
+    # ------------------------------------------------- vectorised workload
+    def _run_workload_vector(
+        self,
+        profiles: Sequence[AppProfile],
+        policy,
+        seed: int,
+        max_quanta: int,
+    ) -> "WorkloadResult":
+        n = len(profiles)
+        assert n % 2 == 0, "need an even number of applications"
+        rng = np.random.default_rng(seed)
+        tables = PhaseTables.build(profiles)
+        targets = np.array([self.target_instructions(p) for p in profiles])
+        st = _VectorState.init(tables, targets)
+
+        policy.reset(n_apps=n, rng=np.random.default_rng(seed + 7919), machine=self)
+        self._active_states = None
+        self._vector_ctx = (tables, st)
+        try:
+            samples: List[Optional[PMUSample]] = [None] * n
+            pairs: List[Pair] = []
+            q = 0
+            while q < max_quanta and np.isinf(st.first_finish_q).any():
+                pairs = policy.schedule(q, samples, pairs)
+                pa = np.asarray(pairs, dtype=np.int64)
+                assert pa.shape == (n // 2, 2) and np.array_equal(
+                    np.sort(pa.ravel()), np.arange(n)
+                ), "policy must return a perfect pairing"
+                # Policies receive the raw (N, 5) counter matrix; the scalar
+                # engine passes a list of PMUSample — schedulers accept both.
+                samples = self._vector_quantum(tables, st, pa, rng, q)
+                self._advance_phases_vector(tables, st, rng)
+                q += 1
+        finally:
+            self._vector_ctx = None
+
+        tt = np.minimum(st.first_finish_q, float(max_quanta)) * self.params.quantum_s
+        solo_tt = np.array(
+            [
+                t / self.solo_retire_rate(p) * self.params.quantum_s
+                for t, p in zip(targets, profiles)
+            ]
+        )
+        ipc = st.total_retired / np.maximum(st.total_cycles, 1.0)
+        return WorkloadResult(
+            app_names=[p.name for p in profiles],
+            turnaround_s=tt,
+            solo_turnaround_s=solo_tt,
+            ipc=ipc,
+            quanta=q,
+            completed=bool(np.isfinite(st.first_finish_q).all()),
+        )
+
+    def _vector_quantum(
+        self,
+        tables: PhaseTables,
+        st: _VectorState,
+        pairs: np.ndarray,
+        rng: np.random.Generator,
+        q: int,
+    ) -> np.ndarray:
+        """Advance every app by one quantum; return the (N, 5) PMU counters.
+
+        The scalar loop updates each pair's first thread before computing the
+        second thread's components, so a relaunch of the first thread resets
+        the phase its partner sees *within the same quantum*; the two-step
+        split below reproduces that ordering exactly.
+        """
+        n = tables.n_apps
+        firsts, seconds = pairs[:, 0], pairs[:, 1]
+        ph_pre = st.phase_idx % tables.n_phases
+        comps = np.empty((n, 4))
+        comps[firsts] = corun_components_batched(
+            tables, firsts, ph_pre[firsts], seconds, ph_pre[seconds], self.params
+        )
+        self._apply_progress(tables, st, firsts, comps[firsts], q)
+        ph_mid = st.phase_idx % tables.n_phases
+        comps[seconds] = corun_components_batched(
+            tables, seconds, ph_pre[seconds], firsts, ph_mid[firsts], self.params
+        )
+        self._apply_progress(tables, st, seconds, comps[seconds], q)
+        return pmu_counters_batched(
+            comps, tables.omega, tables.retire, self.params.quantum_cycles,
+            self.params, rng, noisy=True, draw_order=pairs.ravel(),
+        )
+
+    def _apply_progress(
+        self,
+        tables: PhaseTables,
+        st: _VectorState,
+        idx: np.ndarray,
+        comps: np.ndarray,
+        q: int,
+    ) -> None:
+        """Instruction advance + §6.2 finish/relaunch bookkeeping for ``idx``."""
+        cpi = comps.sum(axis=-1)
+        retired = self.params.quantum_cycles / cpi * tables.retire[idx]
+        before = st.progress[idx]
+        after = before + retired
+        st.total_retired[idx] += retired
+        st.total_cycles[idx] += self.params.quantum_cycles
+        target = st.target[idx]
+        done = after >= target
+        newly = np.isinf(st.first_finish_q[idx]) & done
+        if newly.any():
+            frac = (target[newly] - before[newly]) / np.maximum(
+                retired[newly], 1e-9
+            )
+            st.first_finish_q[idx[newly]] = q + np.clip(frac, 0.0, 1.0)
+        if done.any():
+            # Relaunch (constant machine load, §6.2).
+            ridx = idx[done]
+            after[done] -= target[done]
+            st.launches[ridx] += 1
+            st.phase_idx[ridx] = 0
+            st.phase_left[ridx] = tables.duration[ridx, 0]
+        st.progress[idx] = after
+
+    def _advance_phases_vector(
+        self, tables: PhaseTables, st: _VectorState, rng: np.random.Generator
+    ) -> None:
+        st.phase_left -= 1.0
+        (done,) = np.nonzero(st.phase_left <= 0.0)
+        for k in done:  # ascending order matches the scalar loop's rng draws
+            st.phase_idx[k] += 1
+            lam = tables.duration[k, st.phase_idx[k] % tables.n_phases[k]]
+            st.phase_left[k] = float(max(1, rng.poisson(lam)))
+
+    def oracle_cost_matrix(self) -> Optional[np.ndarray]:
+        """Ground-truth symmetric pair-cost matrix of the *running* workload.
+
+        Only available while the vectorised engine is mid-run (the Oracle
+        baseline's cheat path); returns None otherwise.
+        """
+        ctx = getattr(self, "_vector_ctx", None)
+        if ctx is None:
+            return None
+        tables, st = ctx
+        n = tables.n_apps
+        ph = st.phase_idx % tables.n_phases
+        idx = np.arange(n)
+        ii = np.repeat(idx, n)
+        jj = np.tile(idx, n)
+        comps = corun_components_batched(
+            tables, ii, ph[ii], jj, ph[jj], self.params
+        )
+        solo = tables.comps[idx, ph].sum(axis=-1)
+        slow = comps.sum(axis=-1).reshape(n, n) / solo[:, None]
+        sym = slow + slow.T
+        np.fill_diagonal(sym, 1e9)
+        return sym
+
+    # ------------------------------------------------- fixed-horizon mode
+    def run_quanta(
+        self,
+        profiles: Sequence[AppProfile],
+        policy,
+        n_quanta: int = 20,
+        seed: int = 0,
+    ) -> "ThroughputResult":
+        """Run exactly ``n_quanta`` quanta (no §6.2 targets) — throughput mode.
+
+        The cluster-scale scenario uses this to race policies at N in the
+        thousands, where running every app to its solo-reference target would
+        take hours.  Reports aggregate IPC, the mean true slowdown of the
+        chosen pairings, and scheduling/machine wall-times per quantum.
+        """
+        import time
+
+        n = len(profiles)
+        assert n % 2 == 0, "need an even number of applications"
+        rng = np.random.default_rng(seed)
+        tables = PhaseTables.build(profiles)
+        st = _VectorState.init(tables, np.full(n, np.inf))
+
+        policy.reset(n_apps=n, rng=np.random.default_rng(seed + 7919), machine=self)
+        self._active_states = None
+        self._vector_ctx = (tables, st)
+        sched_s = 0.0
+        machine_s = 0.0
+        slowdown_sum = 0.0
+        try:
+            samples: List[Optional[PMUSample]] = [None] * n
+            pairs: List[Pair] = []
+            for q in range(n_quanta):
+                t0 = time.perf_counter()
+                pairs = policy.schedule(q, samples, pairs)
+                t1 = time.perf_counter()
+                sched_s += t1 - t0
+                pa = np.asarray(pairs, dtype=np.int64)
+                assert pa.shape == (n // 2, 2) and np.array_equal(
+                    np.sort(pa.ravel()), np.arange(n)
+                ), "policy must return a perfect pairing"
+                # Ground-truth mean slowdown of the chosen pairing (the
+                # quality signal the race compares across policies).
+                ph = st.phase_idx % tables.n_phases
+                partner = np.empty(n, np.int64)
+                partner[pa[:, 0]] = pa[:, 1]
+                partner[pa[:, 1]] = pa[:, 0]
+                idx = np.arange(n)
+                smt = corun_components_batched(
+                    tables, idx, ph, partner, ph[partner], self.params
+                ).sum(axis=-1)
+                solo = tables.comps[idx, ph].sum(axis=-1)
+                slowdown_sum += float(np.mean(smt / solo))
+                samples = self._vector_quantum(tables, st, pa, rng, q)
+                self._advance_phases_vector(tables, st, rng)
+                machine_s += time.perf_counter() - t1
+        finally:
+            self._vector_ctx = None
+
+        ipc = st.total_retired / np.maximum(st.total_cycles, 1.0)
+        return ThroughputResult(
+            n_apps=n,
+            quanta=n_quanta,
+            ipc=ipc,
+            total_retired=float(st.total_retired.sum()),
+            mean_true_slowdown=slowdown_sum / max(n_quanta, 1),
+            sched_s_per_quantum=sched_s / max(n_quanta, 1),
+            machine_s_per_quantum=machine_s / max(n_quanta, 1),
+        )
+
     # ------------------------------------------------------------------ misc
     def _advance_phase(self, st: _AppState, rng: np.random.Generator) -> None:
         st.phase_left -= 1.0
@@ -350,6 +740,10 @@ class SMTMachine:
             st.phase_idx += 1
             dur = st.profile.phase(st.phase_idx).duration
             st.phase_left = float(max(1, rng.poisson(dur)))
+
+
+def _ipc_geomean(ipc: np.ndarray) -> float:
+    return float(np.exp(np.mean(np.log(np.maximum(ipc, 1e-12)))))
 
 
 @dataclasses.dataclass
@@ -371,4 +765,21 @@ class WorkloadResult:
 
     @property
     def ipc_geomean(self) -> float:
-        return float(np.exp(np.mean(np.log(np.maximum(self.ipc, 1e-12)))))
+        return _ipc_geomean(self.ipc)
+
+
+@dataclasses.dataclass
+class ThroughputResult:
+    """Fixed-horizon (``run_quanta``) metrics for cluster-scale races."""
+
+    n_apps: int
+    quanta: int
+    ipc: np.ndarray                 # per-app IPC over the horizon
+    total_retired: float            # machine-wide retired instructions
+    mean_true_slowdown: float       # ground-truth pairing quality (lower=better)
+    sched_s_per_quantum: float      # policy wall-time per quantum
+    machine_s_per_quantum: float    # simulator wall-time per quantum
+
+    @property
+    def ipc_geomean(self) -> float:
+        return _ipc_geomean(self.ipc)

@@ -21,7 +21,15 @@ import numpy as np
 
 from repro.core import isc, regression
 from repro.smt.apps import AppProfile, train_profiles
-from repro.smt.machine import MachineParams, SMTMachine, corun_components, pmu_readout
+from repro.smt.machine import (
+    MachineParams,
+    PhaseTables,
+    SMTMachine,
+    corun_components,
+    corun_components_batched,
+    pmu_counters_batched,
+    pmu_readout,
+)
 
 
 @dataclasses.dataclass
@@ -60,34 +68,41 @@ def collect_profiles(
     pair_counters = np.zeros((p, pair_quanta, 2, 5), dtype=np.float64)
     pair_phases = np.zeros((p, pair_quanta, 2), dtype=np.int32)
     params = machine.params
-    for pi, (i, j) in enumerate(pair_index):
-        pi_prof, pj_prof = profiles[i], profiles[j]
-        # Start each thread at a random phase offset so pairs sample diverse
-        # phase combinations (the paper samples random execution quanta).
-        ph_i = int(rng.integers(len(pi_prof.phases)))
-        ph_j = int(rng.integers(len(pj_prof.phases)))
-        left_i = float(pi_prof.phase(ph_i).duration)
-        left_j = float(pj_prof.phase(ph_j).duration)
-        for q in range(pair_quanta):
-            phase_i, phase_j = pi_prof.phase(ph_i), pj_prof.phase(ph_j)
-            for t, (prof, phs, phco) in enumerate(
-                ((pi_prof, phase_i, phase_j), (pj_prof, phase_j, phase_i))
-            ):
-                comps = corun_components(phs, prof, phco, params)
-                s = pmu_readout(
-                    comps, prof, phs, params.quantum_cycles, params, rng
-                )
-                pair_counters[pi, q, t] = s.as_tuple()
-            pair_phases[pi, q, 0] = ph_i % len(pi_prof.phases)
-            pair_phases[pi, q, 1] = ph_j % len(pj_prof.phases)
-            left_i -= 1.0
-            left_j -= 1.0
-            if left_i <= 0:
-                ph_i += 1
-                left_i = float(max(1, rng.poisson(pi_prof.phase(ph_i).duration)))
-            if left_j <= 0:
-                ph_j += 1
-                left_j = float(max(1, rng.poisson(pj_prof.phase(ph_j).duration)))
+
+    # All P = A*(A-1)/2 pairs advance together: each quantum is two batched
+    # corun transforms + one batched counter emission over the 2P threads,
+    # instead of the former per-pair, per-thread Python loops.
+    tables = PhaseTables.build(profiles)
+    i_arr = np.array([i for i, _ in pair_index], np.int64)
+    j_arr = np.array([j for _, j in pair_index], np.int64)
+    # Start each thread at a random phase offset so pairs sample diverse
+    # phase combinations (the paper samples random execution quanta).
+    ph_i = rng.integers(0, tables.n_phases[i_arr])
+    ph_j = rng.integers(0, tables.n_phases[j_arr])
+    left_i = tables.duration[i_arr, ph_i % tables.n_phases[i_arr]].copy()
+    left_j = tables.duration[j_arr, ph_j % tables.n_phases[j_arr]].copy()
+    for q in range(pair_quanta):
+        mi = ph_i % tables.n_phases[i_arr]
+        mj = ph_j % tables.n_phases[j_arr]
+        comps_i = corun_components_batched(tables, i_arr, mi, j_arr, mj, params)
+        comps_j = corun_components_batched(tables, j_arr, mj, i_arr, mi, params)
+        comps = np.stack([comps_i, comps_j], axis=1).reshape(2 * p, 4)
+        apps = np.stack([i_arr, j_arr], axis=1).reshape(2 * p)
+        counters = pmu_counters_batched(
+            comps, tables.omega[apps], tables.retire[apps],
+            params.quantum_cycles, params, rng,
+        )
+        pair_counters[:, q] = counters.reshape(p, 2, 5)
+        pair_phases[:, q, 0] = mi
+        pair_phases[:, q, 1] = mj
+        left_i -= 1.0
+        left_j -= 1.0
+        for ph, left, idx in ((ph_i, left_i, i_arr), (ph_j, left_j, j_arr)):
+            (done,) = np.nonzero(left <= 0.0)
+            if done.size:
+                ph[done] += 1
+                lam = tables.duration[idx[done], ph[done] % tables.n_phases[idx[done]]]
+                left[done] = np.maximum(1, rng.poisson(lam)).astype(np.float64)
 
     return ProfilingData(
         app_names=[pr.name for pr in profiles],
@@ -148,20 +163,18 @@ def fit_model(
         data.pair_counters[:, :, :, 3], 1e-9
     )  # (P, Qp, 2)
 
-    xs_i, xs_j, ys = [], [], []
-    p, qp = pair_stacks.shape[0], pair_stacks.shape[1]
-    for pi, (i, j) in enumerate(data.pair_index):
-        for q in range(qp):
-            ph_i = min(int(data.pair_phases[pi, q, 0]), max_phase - 1)
-            ph_j = min(int(data.pair_phases[pi, q, 1]), max_phase - 1)
-            st_i, st_j = st_by_phase[i, ph_i], st_by_phase[j, ph_j]
-            slow_i = smt_cpi[pi, q, 0] / max(cpi_by_phase[i, ph_i], 1e-9)
-            slow_j = smt_cpi[pi, q, 1] / max(cpi_by_phase[j, ph_j], 1e-9)
-            xs_i.append(st_i); xs_j.append(st_j)
-            ys.append(pair_stacks[pi, q, 0] * slow_i)
-            xs_i.append(st_j); xs_j.append(st_i)
-            ys.append(pair_stacks[pi, q, 1] * slow_j)
-    xs_i = np.stack(xs_i); xs_j = np.stack(xs_j); ys = np.stack(ys)
+    # Vectorised triple assembly: gather each thread's per-phase ST stack and
+    # CPI, then interleave the two directions of every (pair, quantum) sample
+    # exactly as the former per-sample loop did.
+    apps = np.array(data.pair_index, np.int64)            # (P, 2)
+    ph = np.minimum(data.pair_phases, max_phase - 1)      # (P, Qp, 2)
+    app_pq = apps[:, None, :]                             # (P, 1, 2)
+    st_pq = st_by_phase[app_pq, ph]                       # (P, Qp, 2, 4)
+    cpi_pq = cpi_by_phase[app_pq, ph]                     # (P, Qp, 2)
+    slow = smt_cpi / np.maximum(cpi_pq, 1e-9)             # (P, Qp, 2)
+    ys = (pair_stacks * slow[..., None]).reshape(-1, 4)
+    xs_i = st_pq.reshape(-1, 4)
+    xs_j = st_pq[:, :, ::-1, :].reshape(-1, 4)
 
     if xs_i.shape[0] > max_samples:  # paper: a random subset of quanta
         sel = rng.choice(xs_i.shape[0], size=max_samples, replace=False)

@@ -1,0 +1,132 @@
+"""Offline stand-in for the ``hypothesis`` property-testing library.
+
+The CI container has no network access, so when the real ``hypothesis``
+package is absent ``tests/conftest.py`` puts this package on ``sys.path``.
+It implements the small API surface the test-suite uses — ``given``,
+``settings``, ``assume`` and the strategies in :mod:`hypothesis.strategies`
+— with *seeded* pseudo-random draws, so the property tests still execute
+(rather than skip) and are fully reproducible.
+
+It is intentionally not a shrinker/fuzzer: each ``@given`` test runs
+``max_examples`` deterministic examples derived from the test's qualified
+name.  Set ``HYPOTHESIS_FALLBACK_MAX_EXAMPLES`` to cap the per-test example
+count (default cap: 50) when iterating locally.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import inspect
+import os
+import random
+
+from hypothesis import strategies  # noqa: F401  (re-export, real-API parity)
+
+__all__ = ["given", "settings", "assume", "strategies", "HealthCheck"]
+
+__version__ = "0.0-offline-fallback"
+
+_DEFAULT_MAX_EXAMPLES = 100
+_EXAMPLE_CAP = int(os.environ.get("HYPOTHESIS_FALLBACK_MAX_EXAMPLES", "50"))
+
+
+class UnsatisfiedAssumption(Exception):
+    """Raised by :func:`assume` to discard the current example."""
+
+
+class HealthCheck:
+    """Placeholder for API parity; the fallback runs no health checks."""
+
+    all = staticmethod(lambda: [])
+    too_slow = data_too_large = filter_too_much = None
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise UnsatisfiedAssumption()
+    return True
+
+
+class settings:  # noqa: N801  (matches the real hypothesis API)
+    """Decorator recording per-test execution settings.
+
+    Works in either decorator order relative to ``@given`` (the attribute is
+    attached to whatever callable it receives and ``given`` looks through).
+    """
+
+    def __init__(self, max_examples: int = _DEFAULT_MAX_EXAMPLES,
+                 deadline=None, **_ignored):
+        self.max_examples = max_examples
+        self.deadline = deadline
+
+    def __call__(self, fn):
+        fn._fallback_settings = self
+        return fn
+
+
+def _seed_for(fn) -> int:
+    name = f"{getattr(fn, '__module__', '')}.{getattr(fn, '__qualname__', fn)}"
+    return int.from_bytes(hashlib.sha256(name.encode()).digest()[:8], "big")
+
+
+def given(*args, **strategy_kwargs):
+    """Run the wrapped test over deterministic pseudo-random examples.
+
+    Only keyword strategies are supported (the whole suite uses keyword
+    form).  Discarded examples (via :func:`assume`) do not count toward the
+    example budget, but draws stay on one seeded stream so runs are
+    reproducible.
+    """
+    if args:
+        raise TypeError("the offline hypothesis fallback only supports "
+                        "keyword-argument strategies, e.g. @given(x=st.integers())")
+
+    def decorate(fn):
+        cfg = getattr(fn, "_fallback_settings", None)
+        sig = inspect.signature(fn)
+        passthrough = [p for name, p in sig.parameters.items()
+                       if name not in strategy_kwargs]
+
+        def wrapper(*wargs, **wkwargs):
+            scfg = cfg or getattr(wrapper, "_fallback_settings", None)
+            n_examples = scfg.max_examples if scfg else _DEFAULT_MAX_EXAMPLES
+            n_examples = max(1, min(n_examples, _EXAMPLE_CAP))
+            rnd = random.Random(_seed_for(fn))
+            # Fresh per-run strategy copies: boundary emission restarts every
+            # invocation, so reruns (--lf, pytest-repeat) stay reproducible.
+            strats = {k: s.fresh() for k, s in strategy_kwargs.items()}
+            ran = 0
+            attempts = 0
+            max_attempts = 50 * n_examples
+            while ran < n_examples and attempts < max_attempts:
+                attempts += 1
+                drawn = {k: s.draw(rnd) for k, s in strats.items()}
+                try:
+                    fn(*wargs, **drawn, **wkwargs)
+                except UnsatisfiedAssumption:
+                    continue
+                except BaseException as exc:
+                    raise AssertionError(
+                        f"falsifying example ({ran + 1} of {n_examples}): "
+                        f"{drawn!r}"
+                    ) from exc
+                ran += 1
+            if ran == 0:
+                # Mirror real hypothesis' over-filtering health check: a test
+                # whose assume() rejects every draw must not silently pass.
+                raise AssertionError(
+                    f"assume() rejected all {attempts} draws; the test ran "
+                    "zero examples (over-restrictive precondition?)"
+                )
+
+        # pytest must see only the non-strategy parameters (e.g. ``self``),
+        # otherwise it treats the strategy names as missing fixtures.
+        wrapper.__signature__ = sig.replace(parameters=passthrough)
+        wrapper.__name__ = getattr(fn, "__name__", "given_wrapper")
+        wrapper.__qualname__ = getattr(fn, "__qualname__", wrapper.__name__)
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.hypothesis = type("hypothesis_handle", (), {"inner_test": fn})()
+        return wrapper
+
+    return decorate

@@ -1,0 +1,198 @@
+"""Seeded-random strategies for the offline hypothesis fallback.
+
+Each strategy is a tiny object with ``draw(rnd: random.Random)``; ``given``
+calls it once per example.  Strategies are composable through ``map`` /
+``filter`` like their real counterparts, and the first two draws of a
+bounded strategy are its boundary values so edge cases are always hit.
+"""
+
+from __future__ import annotations
+
+import copy
+import math
+import random
+from typing import Sequence
+
+
+class SearchStrategy:
+    def draw(self, rnd: random.Random):
+        raise NotImplementedError
+
+    def fresh(self):
+        """Per-test-run copy; resets any draw-order state (boundaries)."""
+        return self
+
+    def map(self, f):
+        return _MappedStrategy(self, f)
+
+    def filter(self, pred):
+        return _FilteredStrategy(self, pred)
+
+
+class _MappedStrategy(SearchStrategy):
+    def __init__(self, base, f):
+        self._base, self._f = base, f
+
+    def fresh(self):
+        return _MappedStrategy(self._base.fresh(), self._f)
+
+    def draw(self, rnd):
+        return self._f(self._base.draw(rnd))
+
+
+class _FilteredStrategy(SearchStrategy):
+    def __init__(self, base, pred):
+        self._base, self._pred = base, pred
+
+    def fresh(self):
+        return _FilteredStrategy(self._base.fresh(), self._pred)
+
+    def draw(self, rnd):
+        for _ in range(1000):
+            v = self._base.draw(rnd)
+            if self._pred(v):
+                return v
+        raise ValueError("filter predicate rejected 1000 consecutive draws")
+
+
+class _Boundaried(SearchStrategy):
+    """Yields the strategy's boundary values before random interior draws."""
+
+    def __init__(self):
+        self._emitted = 0
+
+    def fresh(self):
+        c = copy.copy(self)
+        c._emitted = 0
+        return c
+
+    def _boundaries(self) -> Sequence:
+        return ()
+
+    def _interior(self, rnd: random.Random):
+        raise NotImplementedError
+
+    def draw(self, rnd):
+        bounds = self._boundaries()
+        if self._emitted < len(bounds):
+            v = bounds[self._emitted]
+            self._emitted += 1
+            return v
+        return self._interior(rnd)
+
+
+class _Floats(_Boundaried):
+    def __init__(self, min_value, max_value, allow_nan, allow_infinity):
+        super().__init__()
+        self.min_value = -1e9 if min_value is None else float(min_value)
+        self.max_value = 1e9 if max_value is None else float(max_value)
+        assert not (allow_nan or allow_infinity), \
+            "fallback floats() are always finite"
+        assert math.isfinite(self.min_value) and math.isfinite(self.max_value)
+
+    def _boundaries(self):
+        if self.min_value == self.max_value:
+            return (self.min_value,)
+        return (self.min_value, self.max_value)
+
+    def _interior(self, rnd):
+        return rnd.uniform(self.min_value, self.max_value)
+
+
+class _Integers(_Boundaried):
+    def __init__(self, min_value, max_value):
+        super().__init__()
+        self.min_value = -(2**31) if min_value is None else int(min_value)
+        self.max_value = 2**31 - 1 if max_value is None else int(max_value)
+
+    def _boundaries(self):
+        if self.min_value == self.max_value:
+            return (self.min_value,)
+        return (self.min_value, self.max_value)
+
+    def _interior(self, rnd):
+        return rnd.randint(self.min_value, self.max_value)
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+        assert self.elements, "sampled_from() needs a non-empty collection"
+
+    def draw(self, rnd):
+        return rnd.choice(self.elements)
+
+
+class _Booleans(SearchStrategy):
+    def draw(self, rnd):
+        return bool(rnd.getrandbits(1))
+
+
+class _Tuples(SearchStrategy):
+    def __init__(self, parts):
+        self.parts = parts
+
+    def draw(self, rnd):
+        return tuple(p.draw(rnd) for p in self.parts)
+
+
+class _Lists(SearchStrategy):
+    def __init__(self, elements, min_size, max_size):
+        self.elements = elements
+        self.min_size = min_size
+        self.max_size = max_size if max_size is not None else min_size + 8
+
+    def draw(self, rnd):
+        k = rnd.randint(self.min_size, self.max_size)
+        return [self.elements.draw(rnd) for _ in range(k)]
+
+
+class _Just(SearchStrategy):
+    def __init__(self, value):
+        self.value = value
+
+    def draw(self, rnd):
+        return self.value
+
+
+class _OneOf(SearchStrategy):
+    def __init__(self, options):
+        self.options = list(options)
+
+    def draw(self, rnd):
+        return rnd.choice(self.options).draw(rnd)
+
+
+def floats(min_value=None, max_value=None, allow_nan=False,
+           allow_infinity=False, **_ignored) -> SearchStrategy:
+    return _Floats(min_value, max_value, allow_nan, allow_infinity)
+
+
+def integers(min_value=None, max_value=None) -> SearchStrategy:
+    return _Integers(min_value, max_value)
+
+
+def sampled_from(elements) -> SearchStrategy:
+    return _SampledFrom(elements)
+
+
+def booleans() -> SearchStrategy:
+    return _Booleans()
+
+
+def tuples(*parts) -> SearchStrategy:
+    return _Tuples(parts)
+
+
+def lists(elements, min_size=0, max_size=None, **_ignored) -> SearchStrategy:
+    return _Lists(elements, min_size, max_size)
+
+
+def just(value) -> SearchStrategy:
+    return _Just(value)
+
+
+def one_of(*options) -> SearchStrategy:
+    if len(options) == 1 and not isinstance(options[0], SearchStrategy):
+        options = tuple(options[0])
+    return _OneOf(options)

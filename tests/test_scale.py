@@ -1,0 +1,211 @@
+"""Seeded (non-hypothesis) tests for the cluster-scale scheduling path.
+
+Covers the three tentpole pieces: the large-N matcher tiers against the
+exact DP/blossom references, the Pallas/XLA pair-score backends against the
+dense Eq. 4 reference, and the vectorised machine against the per-app loop.
+"""
+
+import dataclasses
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import isc, matching, regression
+from repro.core.baselines import (
+    HySchedScheduler,
+    LinuxScheduler,
+    OracleScheduler,
+    RandomStaticScheduler,
+)
+from repro.core.synpa import SynpaScheduler
+from repro.kernels.pair_score import ops as ps_ops
+from repro.smt import machine as mc
+from repro.smt import workloads
+
+
+def _sym_cost(rng, n, low=0.0, high=10.0):
+    c = rng.uniform(low, high, size=(n, n))
+    c = (c + c.T) / 2
+    np.fill_diagonal(c, 0.0)
+    return c
+
+
+def _toy_model(n_categories=4):
+    coeffs = np.zeros((4, 4), np.float32)
+    coeffs[isc.CAT_DI] = [0.007, 0.91, 0.004, 0.03]
+    coeffs[isc.CAT_FE] = [0.02, 1.41, 0.0, 0.0]
+    coeffs[isc.CAT_BE] = [0.0, 0.24, 1.07, 0.5]
+    coeffs[isc.CAT_HW] = [0.03, 1.22, 0.33, 0.0]
+    if n_categories == 3:
+        coeffs[isc.CAT_HW] = 0.0
+    return regression.CategoryModel(
+        coeffs=jnp.asarray(coeffs), mse=jnp.zeros(4), n_categories=n_categories
+    )
+
+
+# ------------------------------------------------------------ matcher tiers
+class TestScalableMatcher:
+    @pytest.mark.parametrize("method", ["tiled", "greedy"])
+    def test_near_optimal_vs_dp(self, method):
+        """Both scalable tiers stay close to the exact DP optimum."""
+        rng = np.random.default_rng(7)
+        gaps = []
+        for _ in range(25):
+            n = int(rng.choice([6, 8, 10, 12, 14]))
+            c = _sym_cost(rng, n)
+            opt = matching.matching_cost(c, matching._dp_min_cost_pairs(c))
+            got = matching.matching_cost(c, matching.min_cost_pairs(c, method))
+            gaps.append(got / max(opt, 1e-9))
+        assert np.mean(gaps) < 1.1, gaps
+        assert max(gaps) < 1.35, gaps
+
+    def test_tiled_single_tile_matches_blossom(self):
+        """N <= tile: the tiled engine is exactly blossom (+ a no-op 2-opt)."""
+        rng = np.random.default_rng(3)
+        for n in (8, 16, 32, 64):
+            c = _sym_cost(rng, n)
+            cb = matching.matching_cost(c, matching.min_cost_pairs(c, "blossom"))
+            ct = matching.matching_cost(c, matching.min_cost_pairs(c, "tiled"))
+            assert ct <= cb + 1e-6, (n, ct, cb)
+
+    @pytest.mark.parametrize("method", ["tiled", "greedy"])
+    def test_ties_and_negative_costs(self, method):
+        rng = np.random.default_rng(11)
+        for trial in range(10):
+            n = int(rng.choice([8, 12]))
+            c = rng.choice([-3.0, 0.0, 0.0, 1.0, 2.0], size=(n, n))
+            c = (c + c.T) / 2
+            np.fill_diagonal(c, 0.0)
+            pairs = matching.min_cost_pairs(c, method)
+            flat = sorted(x for p in pairs for x in p)
+            assert flat == list(range(n))
+            opt = matching.matching_cost(c, matching._dp_min_cost_pairs(c))
+            got = matching.matching_cost(c, pairs)
+            assert got <= opt + 3.5, (trial, got, opt)
+
+    def test_large_n_valid_and_beats_random(self):
+        rng = np.random.default_rng(5)
+        n = 512
+        c = _sym_cost(rng, n)
+        t0 = time.perf_counter()
+        pairs = matching.min_cost_pairs(c)  # auto -> tiled past 128
+        elapsed = time.perf_counter() - t0
+        flat = sorted(x for p in pairs for x in p)
+        assert flat == list(range(n))
+        perm = rng.permutation(n)
+        rand_pairs = [(int(perm[2 * k]), int(perm[2 * k + 1]))
+                      for k in range(n // 2)]
+        assert matching.matching_cost(c, pairs) < 0.5 * matching.matching_cost(
+            c, rand_pairs
+        )
+        assert elapsed < 60.0, f"tiled matcher too slow at N={n}: {elapsed:.1f}s"
+
+    def test_auto_tier_selection(self):
+        rng = np.random.default_rng(1)
+        small = _sym_cost(rng, 8)
+        assert matching.min_cost_pairs(small, "auto") == \
+            matching.min_cost_pairs(small, "blossom")
+
+
+# ------------------------------------------------- pair-score kernel paths
+class TestPairScorePaths:
+    @pytest.mark.parametrize("n", [4, 8, 56, 200])
+    @pytest.mark.parametrize("n_categories", [3, 4])
+    def test_kernel_paths_match_dense_reference(self, n, n_categories):
+        """XLA and Pallas backends == the dense Eq. 4 forward model."""
+        rng = np.random.default_rng(n * 10 + n_categories)
+        st = rng.dirichlet(np.ones(4), size=n).astype(np.float32)
+        model = _toy_model(n_categories)
+        # dense reference: broadcast predict_slowdown (the pre-kernel path)
+        s_ij = regression.predict_slowdown(
+            model, st[:, None, :], st[None, :, :]
+        )
+        dense = np.array(s_ij + s_ij.T)
+        np.fill_diagonal(dense, 1e9)
+        for impl in ("xla", "pallas_interpret"):
+            got = np.asarray(regression.pair_cost_matrix(model, st, impl=impl))
+            np.testing.assert_allclose(got, dense, rtol=3e-5, atol=3e-5)
+
+    def test_auto_impl_resolves(self):
+        assert ps_ops.resolve_impl("xla", 8) == "xla"
+        assert ps_ops.resolve_impl("pallas", 8) == "pallas"
+        # on CPU hosts auto must stay on the XLA lowering at any N
+        import jax
+
+        if jax.default_backend() != "tpu":
+            assert ps_ops.resolve_impl("auto", 4096) == "xla"
+
+
+# ------------------------------------------------- vectorised machine
+class TestVectorEngine:
+    @pytest.fixture(scope="class")
+    def machine(self):
+        return mc.SMTMachine(mc.MachineParams(), seed=0)
+
+    @pytest.fixture(scope="class")
+    def profs(self, machine):
+        wls = workloads.make_workloads(machine)
+        return workloads.workload_profiles(wls["fb0"])
+
+    @pytest.mark.parametrize(
+        "policy_cls",
+        [LinuxScheduler, RandomStaticScheduler, HySchedScheduler,
+         OracleScheduler],
+    )
+    def test_engines_bit_identical(self, machine, profs, policy_cls):
+        r_loop = machine.run_workload(profs, policy_cls(), seed=7,
+                                      engine="loop")
+        r_vec = machine.run_workload(profs, policy_cls(), seed=7,
+                                     engine="vector")
+        np.testing.assert_array_equal(r_loop.turnaround_s, r_vec.turnaround_s)
+        np.testing.assert_array_equal(r_loop.ipc, r_vec.ipc)
+        assert r_loop.quanta == r_vec.quanta
+
+    def test_engines_bit_identical_synpa(self, machine, profs):
+        policy = lambda: SynpaScheduler(isc.SYNPA4_R_FEBE, _toy_model())  # noqa: E731
+        r_loop = machine.run_workload(profs, policy(), seed=7, engine="loop",
+                                      max_quanta=60)
+        r_vec = machine.run_workload(profs, policy(), seed=7, engine="vector",
+                                     max_quanta=60)
+        np.testing.assert_array_equal(r_loop.turnaround_s, r_vec.turnaround_s)
+        np.testing.assert_array_equal(r_loop.ipc, r_vec.ipc)
+
+    def test_run_quanta_throughput_mode(self, machine):
+        profs = workloads.scaled_workload(32, seed=32)
+        res = machine.run_quanta(profs, RandomStaticScheduler(), n_quanta=10,
+                                 seed=2)
+        assert res.n_apps == 32 and res.quanta == 10
+        assert res.total_retired > 0
+        assert res.mean_true_slowdown >= 1.0
+        assert np.isfinite(res.ipc_geomean) and 0 < res.ipc_geomean < 4.0
+
+    @pytest.mark.slow
+    def test_vector_speedup_at_n256(self, machine):
+        """Tentpole claim: a quantum runs far faster than the per-app loop."""
+        profs = workloads.scaled_workload(256, seed=256)
+        t0 = time.perf_counter()
+        r1 = machine.run_workload(profs, RandomStaticScheduler(), seed=1,
+                                  max_quanta=40, engine="loop")
+        t_loop = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        r2 = machine.run_workload(profs, RandomStaticScheduler(), seed=1,
+                                  max_quanta=40, engine="vector")
+        t_vec = time.perf_counter() - t0
+        np.testing.assert_array_equal(r1.ipc, r2.ipc)
+        assert t_loop / t_vec > 4.0, (t_loop, t_vec)
+
+
+# ------------------------------------------------- cluster-scale scheduling
+@pytest.mark.slow
+def test_synpa_schedules_n1024_quantum():
+    """Acceptance: SynpaScheduler completes a full quantum at N=1024 with the
+    scalable matcher (tiled blossom + 2-opt), end to end."""
+    machine = mc.SMTMachine(mc.MachineParams(), seed=0)
+    profs = workloads.scaled_workload(1024, seed=1024)
+    policy = SynpaScheduler(isc.SYNPA4_R_FEBE, _toy_model())
+    res = machine.run_quanta(profs, policy, n_quanta=2, seed=3)
+    assert res.n_apps == 1024 and res.quanta == 2
+    assert res.mean_true_slowdown >= 1.0
+    assert res.total_retired > 0

@@ -1,0 +1,9 @@
+#!/usr/bin/env bash
+# Tier-1 verification — the exact command ROADMAP.md names, runnable
+# identically on a laptop and in CI.  Any extra args are passed to pytest,
+# e.g.  tools/run_tier1.sh -m "not slow"  for a quick pre-push loop.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"
