@@ -1,0 +1,1 @@
+"""Benchmark entry points (one scenario per module; see run.py)."""

@@ -56,29 +56,40 @@ def _engine_speedup(machine, n: int = 256, quanta: int = 30) -> float:
     return t_loop / max(t_vec, 1e-9)
 
 
-def main(quick: bool = False) -> str:
+def main(quick: bool = False, smoke: bool = False) -> str:
     from repro.smt import workloads
 
-    machine, models, _wls = get_env()
-    sizes = [n for n in SIZES if n <= (256 if quick else 1024)]
+    machine, models, _wls = get_env(fast=smoke)
+    if smoke:
+        sizes = [8, 32]
+    else:
+        sizes = [n for n in SIZES if n <= (256 if quick else 1024)]
     results: Dict[str, Dict] = {}
     t_total = time.perf_counter()
     for n in sizes:
         profs = workloads.scaled_workload(n, seed=n)
-        quanta = QUANTA[n] if not quick else max(QUANTA[n] // 2, 4)
-        row = {}
-        for pname, factory in _policies(models).items():
-            res = machine.run_quanta(profs, factory(), n_quanta=quanta, seed=3)
-            row[pname] = {
+        quanta = QUANTA.get(n, 8)
+        if quick or smoke:
+            quanta = max(quanta // 2, 4)
+        # One PhaseTables build, K policies, bit-identical machine stream.
+        multi = machine.run_quanta_multi(
+            profs, _policies(models), n_quanta=quanta, seed=3
+        )
+        results[str(n)] = {
+            pname: {
                 "mean_true_slowdown": res.mean_true_slowdown,
                 "ipc_geomean": res.ipc_geomean,
                 "sched_ms_per_quantum": res.sched_s_per_quantum * 1e3,
                 "machine_ms_per_quantum": res.machine_s_per_quantum * 1e3,
             }
-        results[str(n)] = row
-    speedup = _engine_speedup(machine, n=256, quanta=30)
-    results["engine_speedup_n256"] = speedup
-    save_json("cluster_scale.json", results)
+            for pname, res in multi.items()
+        }
+    if not smoke:
+        speedup = _engine_speedup(machine, n=256, quanta=30)
+        results["engine_speedup_n256"] = speedup
+        save_json("cluster_scale.json", results)
+    else:
+        speedup = float("nan")
 
     # Headline: slowdown win of SYNPA4 over Linux at the largest N raced.
     big = results[str(sizes[-1])]
@@ -92,4 +103,13 @@ def main(quick: bool = False) -> str:
 
 
 if __name__ == "__main__":
-    print(main())
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="cap at N=256 with halved horizons")
+    ap.add_argument("--smoke", action="store_true",
+                    help="sub-minute sanity run (small N, fast models, "
+                    "no JSON/engine-speedup refresh)")
+    args = ap.parse_args()
+    print(main(quick=args.quick, smoke=args.smoke))

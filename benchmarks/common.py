@@ -1,5 +1,12 @@
 """Shared benchmark environment: one profiling campaign + fitted models,
-cached on disk so every per-figure benchmark reuses the same §5.4 models."""
+cached on disk so every per-figure benchmark reuses the same §5.4 models.
+
+Model caches are stamped with :data:`repro.smt.training.RNG_STREAM_VERSION`:
+the fitted coefficients depend on the profiling campaign's RNG-stream
+interleaving, so a cache written under a different interleaving (e.g. the
+pre-vectorisation seed campaign) would silently skew every downstream
+figure.  :func:`get_env` refuses to load such caches and refits instead.
+"""
 
 from __future__ import annotations
 
@@ -7,7 +14,7 @@ import json
 import os
 import pickle
 import time
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
@@ -15,37 +22,88 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 os.makedirs(RESULTS_DIR, exist_ok=True)
 
 _CACHE = os.path.join(RESULTS_DIR, "synpa_models.pkl")
+_CACHE_FAST = os.path.join(RESULTS_DIR, "synpa_models_fast.pkl")
 
 
-def get_env(force: bool = False):
-    """(machine, models, workloads_dict) — cached across benchmarks."""
-    from repro.core import isc
+def _load_cache(path: str):
+    """Load a model cache; return None when missing, unstamped or stale.
+
+    A valid payload is ``{"rng_stream_version": V, "models": {...}}`` with
+    ``V`` equal to the current :data:`training.RNG_STREAM_VERSION`.  The
+    seed repo's caches were bare model dicts (no stamp) fitted on the
+    pre-vectorised RNG stream — those are refused, not migrated.
+    """
+    from repro.smt.training import RNG_STREAM_VERSION
+
+    if not os.path.exists(path):
+        return None
+    try:
+        with open(path, "rb") as f:
+            payload = pickle.load(f)
+    except Exception:
+        print(f"# refusing unreadable model cache {os.path.basename(path)}; "
+              "refitting")
+        return None
+    if not isinstance(payload, dict) or "rng_stream_version" not in payload:
+        print(f"# refusing unstamped model cache {os.path.basename(path)} "
+              "(pre-vectorisation RNG stream); refitting")
+        return None
+    if payload["rng_stream_version"] != RNG_STREAM_VERSION:
+        print(f"# refusing model cache {os.path.basename(path)}: rng stream "
+              f"v{payload['rng_stream_version']} != v{RNG_STREAM_VERSION}; "
+              "refitting")
+        return None
+
+    from repro.core import regression
+    import jax.numpy as jnp
+
+    return {
+        name: regression.CategoryModel(
+            coeffs=jnp.asarray(c), mse=jnp.asarray(m), n_categories=n)
+        for name, (c, m, n) in payload["models"].items()
+    }
+
+
+def _save_cache(path: str, models) -> None:
+    from repro.smt.training import RNG_STREAM_VERSION
+
+    payload = {
+        "rng_stream_version": RNG_STREAM_VERSION,
+        "models": {
+            name: (np.asarray(m.coeffs), np.asarray(m.mse), m.n_categories)
+            for name, m in models.items()
+        },
+    }
+    # Write-then-rename so an interrupted dump never leaves a truncated
+    # cache behind (the loader refuses unreadable files, but why make one).
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        pickle.dump(payload, f)
+    os.replace(tmp, path)
+
+
+def get_env(force: bool = False, fast: bool = False):
+    """(machine, models, workloads_dict) — cached across benchmarks.
+
+    ``fast=True`` fits on a shorter profiling campaign (own cache file) —
+    the --smoke path of the benchmark entry points, where model fidelity
+    matters less than wall time.
+    """
     from repro.smt import machine as mc
     from repro.smt import training, workloads
 
     machine = mc.SMTMachine(mc.MachineParams(), seed=0)
     wls = workloads.make_workloads(machine)
-    if not force and os.path.exists(_CACHE):
-        with open(_CACHE, "rb") as f:
-            payload = pickle.load(f)
-        from repro.core import regression
-        import jax.numpy as jnp
-
-        models = {
-            name: regression.CategoryModel(
-                coeffs=jnp.asarray(c), mse=jnp.asarray(m), n_categories=n)
-            for name, (c, m, n) in payload.items()
-        }
-        return machine, models, wls
+    cache = _CACHE_FAST if fast else _CACHE
+    if not force:
+        models = _load_cache(cache)
+        if models is not None:
+            return machine, models, wls
     t0 = time.time()
-    models, _data = training.build_all_models(
-        machine, solo_quanta=60, pair_quanta=12)
-    payload = {
-        name: (np.asarray(m.coeffs), np.asarray(m.mse), m.n_categories)
-        for name, m in models.items()
-    }
-    with open(_CACHE, "wb") as f:
-        pickle.dump(payload, f)
+    kw = dict(solo_quanta=20, pair_quanta=4) if fast else dict(
+        solo_quanta=60, pair_quanta=12)
+    models, _data = training.build_all_models(machine, **kw)
+    _save_cache(cache, models)
     print(f"# fitted SYNPA models in {time.time() - t0:.1f}s (cached)")
     return machine, models, wls
 

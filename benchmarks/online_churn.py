@@ -1,0 +1,184 @@
+"""Online churn race: the open system under low/medium/high traffic.
+
+The ``repro.online`` subsystem runs the SMT cluster as an open queueing
+system: Poisson job arrivals, FIFO admission onto 2N hardware contexts,
+§6.2 run-to-target execution, departures freeing contexts.  This race
+compares, per (cluster size, churn level):
+
+* ``random``        — random pairing, churn patched randomly;
+* ``linux``         — sticky CFS-like pairing with occasional migrations;
+* ``synpa4-cold``   — the batch SYNPA4 path per quantum (cold inverse +
+                      full re-match; N <= COLD_MAX_N only — it is the
+                      wall-clock reason the streaming path exists);
+* ``synpa4-stream`` — warm-started inverse + incremental re-matching.
+
+reporting per-job mean/p95 slowdown, turnaround, queue depth and policy
+µs/quantum.  A separate *static-population probe* races the cold and
+streaming SYNPA4 paths head-to-head on a closed workload at the largest
+sizes (``run_quanta_multi``: one PhaseTables build, bit-identical machine
+randomness per policy) — the policy-time speedup headline of the ROADMAP's
+"cut the SYNPA per-quantum cost at large N" item.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict
+
+from benchmarks.common import csv_row, get_env, save_json
+
+SIZES = (8, 64, 256)          # apps capacity (2 per core); --full adds 1024
+FULL_SIZES = (8, 64, 256, 1024)
+SMOKE_SIZES = (8, 32)
+# Offered utilisation rho (arrival rate / service capacity).  The machine
+# always co-schedules two applications per core (paper §6.2 convention, the
+# idle-context exception being an odd population), so the regimes where
+# pairing quality shows are near and past saturation: low churn still keeps
+# most contexts busy, high churn queues jobs faster than they drain.
+CHURN = {"low": 0.85, "med": 1.0, "high": 1.2}
+COLD_MAX_N = 64               # full cold SYNPA in the churn grid up to here
+TARGET_SCALE = 0.25           # shrink §6.2 targets: jobs last ~15 quanta
+QUANTA = {8: 80, 32: 60, 64: 60, 256: 30, 1024: 12}
+PROBE_QUANTA = 8
+
+
+def _policies(models, n_apps: int, smoke: bool):
+    from repro.core import isc
+    from repro.online import (
+        LinuxOnline,
+        RandomOnline,
+        StreamingAllocator,
+        cold_config,
+    )
+
+    method = isc.SYNPA4_R_FEBE
+    model = models["SYNPA4_R-FEBE"]
+    pols = {
+        "random": lambda: RandomOnline(),
+        "linux": lambda: LinuxOnline(),
+        "synpa4-stream": lambda: StreamingAllocator(method, model),
+    }
+    if n_apps <= COLD_MAX_N and not smoke:
+        pols["synpa4-cold"] = lambda: StreamingAllocator(
+            method, model, cold_config(), name="synpa4-cold"
+        )
+    return pols
+
+
+def _churn_grid(machine, models, sizes, churn_levels, smoke: bool) -> Dict:
+    """Open-system races: ClusterSim per (size, churn, policy)."""
+    from repro.online import ClusterSim, PoissonArrivals
+    from repro.smt.apps import pool_profiles
+    from repro.smt.machine import PhaseTables
+
+    pool = pool_profiles()
+    tables = PhaseTables.build(pool)   # shared across all grid cells
+    mean_service_q = (
+        machine.params.solo_reference_quanta * TARGET_SCALE * 1.3
+    )  # solo quanta x typical SMT slowdown
+    grid: Dict[str, Dict] = {}
+    for n in sizes:
+        n_cores = n // 2
+        quanta = QUANTA.get(n, 30) if not smoke else 30
+        row: Dict[str, Dict] = {}
+        for level, rho in churn_levels.items():
+            rate = rho * n / mean_service_q
+            arrivals = PoissonArrivals(rate=rate, n_pool=len(pool))
+            cell = {}
+            for pname, factory in _policies(models, n, smoke).items():
+                sim = ClusterSim(
+                    machine, pool, n_cores, factory(), arrivals,
+                    seed=11, target_scale=TARGET_SCALE, tables=tables,
+                )
+                stats = sim.run(quanta)
+                cell[pname] = stats.summary()
+            row[level] = cell
+        grid[str(n)] = row
+    return grid
+
+
+def _static_probe(machine, models, sizes, smoke: bool) -> Dict:
+    """Closed static-population probe: cold vs streaming SYNPA4 policy cost.
+
+    Uses ``run_quanta_multi`` so both policies face bit-identical machine
+    randomness off one shared PhaseTables build.
+    """
+    from repro.core import isc
+    from repro.core.synpa import SynpaScheduler
+    from repro.online import StreamingScheduler
+    from repro.smt import workloads
+
+    method = isc.SYNPA4_R_FEBE
+    model = models["SYNPA4_R-FEBE"]
+    out: Dict[str, Dict] = {}
+    for n in sizes:
+        profs = workloads.scaled_workload(n, seed=n)
+        res = machine.run_quanta_multi(
+            profs,
+            {
+                "synpa4-cold": lambda: SynpaScheduler(method, model),
+                "synpa4-stream": lambda: StreamingScheduler(method, model),
+            },
+            n_quanta=PROBE_QUANTA if not smoke else 4,
+            seed=3,
+        )
+        cold, stream = res["synpa4-cold"], res["synpa4-stream"]
+        out[str(n)] = {
+            "cold_sched_ms_per_quantum": cold.sched_s_per_quantum * 1e3,
+            "stream_sched_ms_per_quantum": stream.sched_s_per_quantum * 1e3,
+            "policy_speedup": cold.sched_s_per_quantum
+            / max(stream.sched_s_per_quantum, 1e-12),
+            "cold_mean_true_slowdown": cold.mean_true_slowdown,
+            "stream_mean_true_slowdown": stream.mean_true_slowdown,
+        }
+    return out
+
+
+def main(smoke: bool = False, full: bool = False, quick: bool = False) -> str:
+    machine, models, _wls = get_env(fast=smoke)
+    t_total = time.perf_counter()
+    if smoke:
+        sizes, churn = SMOKE_SIZES, {"med": CHURN["med"]}
+        probe_sizes = (32,)
+    elif quick:
+        sizes, churn = (8, 64), CHURN
+        probe_sizes = (64,)
+    else:
+        sizes = FULL_SIZES if full else SIZES
+        churn = CHURN
+        probe_sizes = tuple(n for n in sizes if n >= 256) or (max(sizes),)
+    grid = _churn_grid(machine, models, sizes, churn, smoke)
+    probe = _static_probe(machine, models, probe_sizes, smoke)
+    results = {"churn": grid, "static_probe": probe,
+               "target_scale": TARGET_SCALE}
+    save_json("online_churn.json", results)
+
+    big = str(max(int(k) for k in probe))
+    n_big = str(max(int(k) for k in grid))
+    level = "med" if "med" in grid[n_big] else next(iter(grid[n_big]))
+    cell = grid[n_big][level]
+    gain = (
+        cell["random"]["mean_slowdown"]
+        / max(cell["synpa4-stream"]["mean_slowdown"], 1e-12)
+    )
+    us = (time.perf_counter() - t_total) * 1e6
+    return csv_row(
+        "online_churn", us,
+        f"N={big} stream policy speedup {probe[big]['policy_speedup']:.1f}x "
+        f"vs cold (slowdown {probe[big]['stream_mean_true_slowdown']:.3f} vs "
+        f"{probe[big]['cold_mean_true_slowdown']:.3f}); "
+        f"N={n_big} {level}-churn slowdown gain {gain:.2f}x vs random",
+    )
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="sub-minute sanity run (small N, fast models)")
+    ap.add_argument("--full", action="store_true",
+                    help="include N=1024 in the churn grid")
+    ap.add_argument("--quick", action="store_true",
+                    help="cap the grid at N=64 (the benchmarks.run tier)")
+    args = ap.parse_args()
+    print(main(smoke=args.smoke, full=args.full, quick=args.quick))

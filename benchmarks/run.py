@@ -27,6 +27,7 @@ def main() -> None:
         fig7_ccdf,
         fig8_variants,
         fig9_hysched,
+        online_churn,
         roofline_table,
         table3_model,
     )
@@ -40,6 +41,7 @@ def main() -> None:
         ("fig9", fig9_hysched.main),
         ("colocation", colocation.main),
         ("cluster_scale", cluster_scale.main),
+        ("online_churn", online_churn.main),
         ("roofline", roofline_table.main),
     ]
     print("name,us_per_call,derived")

@@ -128,29 +128,13 @@ def predict_slowdown(model: CategoryModel, st_i, st_j):
     return jnp.clip(s, MIN_SLOWDOWN, MAX_SLOWDOWN)
 
 
-def inverse(
-    model: CategoryModel,
-    frac_i,
-    frac_j,
-    n_steps: int = 80,
-    lr: float = 1.5,
-):
-    """Invert Eq. 4 (paper §5.3 step 1).
+def _inverse_problem(model: CategoryModel, frac_i, frac_j, lr: float):
+    """Shared internals of the §5.3 inverse solve.
 
-    Inputs are the *measured SMT stack fractions* of the two applications
-    currently sharing a core (each sums to 1).  We search for the two ST
-    stacks (height 1) whose forward predictions are *parallel* to the
-    measured fractions, i.e. minimise
-
-        || forward(x, y) - (sum forward(x, y)) * frac_i ||^2  +  (i <-> j)
-
-    over the product of simplices, parameterising each stack with a masked
-    softmax and running Adam-style gradient steps (fully jit-able; the whole
-    solve is a ``lax.scan``).  The per-app scale that drops out is the
-    slowdown itself, so no separate fixed-point over slowdowns is needed.
+    Returns ``(to_simplex, residual, solve_from)`` closures over the measured
+    fractions; ``solve_from(z0_i, z0_j, n_steps)`` runs the heavy-ball
+    gradient scan and returns the final ``(z_i, z_j)``.
     """
-    frac_i = jnp.asarray(frac_i, jnp.float32)
-    frac_j = jnp.asarray(frac_j, jnp.float32)
     mask = (jnp.arange(isc.N_CATS) < model.n_categories).astype(frac_i.dtype)
 
     def to_simplex(z):
@@ -172,30 +156,131 @@ def inverse(
 
     grad_fn = jax.grad(loss)
 
-    def step(carry, _):
-        zs, m = carry
-        g = grad_fn(zs)
-        # Heavy-ball momentum keeps the solve cheap yet fast-converging.
-        m = tuple(0.7 * mm + gg for mm, gg in zip(m, g))
-        zs = tuple(z - lr * mm for z, mm in zip(zs, m))
-        return (zs, m), None
+    def _make_step(trace: bool):
+        def step(carry, _):
+            zs, m = carry
+            g = grad_fn(zs)
+            # Heavy-ball momentum keeps the solve cheap yet fast-converging.
+            m = tuple(0.7 * mm + gg for mm, gg in zip(m, g))
+            zs = tuple(z - lr * mm for z, mm in zip(zs, m))
+            return (zs, m), (residual(zs) if trace else None)
+        return step
 
-    def solve_from(z0_i, z0_j):
+    def solve_from(z0_i, z0_j, n_steps: int, trace: bool = False):
         init = ((z0_i, z0_j), (jnp.zeros_like(z0_i), jnp.zeros_like(z0_j)))
-        (zs, _m), _ = jax.lax.scan(step, init, None, length=n_steps)
-        return zs
+        (zs, _m), res = jax.lax.scan(
+            _make_step(trace), init, None, length=n_steps
+        )
+        return (zs, res) if trace else zs
 
-    # Two starts guard against the occasional flat basin: (a) the measured
-    # fractions themselves, (b) the uniform stack.  Keep the lower-residual.
-    za = solve_from(
-        jnp.log(jnp.clip(frac_i, 1e-4, None)),
-        jnp.log(jnp.clip(frac_j, 1e-4, None)),
+    return to_simplex, residual, solve_from
+
+
+def _log_init(stacks):
+    """Masked-softmax pre-image of a (clipped) simplex point."""
+    return jnp.log(jnp.clip(stacks, 1e-4, None))
+
+
+def inverse(
+    model: CategoryModel,
+    frac_i,
+    frac_j,
+    n_steps: int = 80,
+    lr: float = 1.5,
+    init_i=None,
+    init_j=None,
+):
+    """Invert Eq. 4 (paper §5.3 step 1).
+
+    Inputs are the *measured SMT stack fractions* of the two applications
+    currently sharing a core (each sums to 1).  We search for the two ST
+    stacks (height 1) whose forward predictions are *parallel* to the
+    measured fractions, i.e. minimise
+
+        || forward(x, y) - (sum forward(x, y)) * frac_i ||^2  +  (i <-> j)
+
+    over the product of simplices, parameterising each stack with a masked
+    softmax and running Adam-style gradient steps (fully jit-able; the whole
+    solve is a ``lax.scan``).  The per-app scale that drops out is the
+    slowdown itself, so no separate fixed-point over slowdowns is needed.
+
+    Cold start (``init_i is None``): two starts guard against the occasional
+    flat basin — (a) the measured fractions, (b) the uniform stack; the
+    lower-residual solution wins.  Warm start (``init_i``/``init_j`` given,
+    e.g. the previous quantum's converged ST stacks): the warm point replaces
+    the uniform start, and callers pass a much smaller ``n_steps`` — from a
+    near-converged init the solve needs a fraction of the cold budget (the
+    online allocator uses this every quantum for surviving applications).
+    The measured-fraction start is kept as a guard so a stale warm init
+    (e.g. after an abrupt phase change) can never make the result *worse*
+    than a short cold solve.
+    """
+    frac_i = jnp.asarray(frac_i, jnp.float32)
+    frac_j = jnp.asarray(frac_j, jnp.float32)
+    to_simplex, residual, solve_from = _inverse_problem(
+        model, frac_i, frac_j, lr
     )
-    zb = solve_from(jnp.zeros_like(frac_i), jnp.zeros_like(frac_j))
+
+    za = solve_from(_log_init(frac_i), _log_init(frac_j), n_steps)
+    if init_i is None:
+        zb = solve_from(jnp.zeros_like(frac_i), jnp.zeros_like(frac_j), n_steps)
+    else:
+        init_i = jnp.asarray(init_i, jnp.float32)
+        init_j = jnp.asarray(init_j, jnp.float32)
+        zb = solve_from(_log_init(init_i), _log_init(init_j), n_steps)
     better_b = (residual(zb) < residual(za))[..., None]
     z_i = jnp.where(better_b, zb[0], za[0])
     z_j = jnp.where(better_b, zb[1], za[1])
     return to_simplex(z_i), to_simplex(z_j)
+
+
+def inverse_residual(model: CategoryModel, frac_i, frac_j, st_i, st_j):
+    """Residual of a candidate ST-stack pair against measured fractions.
+
+    The same objective :func:`inverse` minimises, evaluated at simplex points
+    directly — used by tests and diagnostics to compare solve quality.
+    """
+    frac_i = jnp.asarray(frac_i, jnp.float32)
+    frac_j = jnp.asarray(frac_j, jnp.float32)
+    st_i = jnp.asarray(st_i, jnp.float32)
+    st_j = jnp.asarray(st_j, jnp.float32)
+    p_i = forward(model, st_i, st_j)
+    p_j = forward(model, st_j, st_i)
+    r_i = p_i - jnp.sum(p_i, -1, keepdims=True) * frac_i
+    r_j = p_j - jnp.sum(p_j, -1, keepdims=True) * frac_j
+    return jnp.sum(r_i * r_i, -1) + jnp.sum(r_j * r_j, -1)
+
+
+def inverse_trace(
+    model: CategoryModel,
+    frac_i,
+    frac_j,
+    n_steps: int = 80,
+    lr: float = 1.5,
+    init_i=None,
+    init_j=None,
+):
+    """Per-step residual trace of a single-start inverse solve.
+
+    Runs one gradient trajectory — from the measured fractions (cold) or
+    from ``init_i``/``init_j`` (warm) — and returns ``(st_i, st_j, trace)``
+    where ``trace`` has shape ``(n_steps, ...batch)``: the residual after
+    each step.  This is how the property tests assert that a warm start
+    reaches the convergence threshold in strictly fewer gradient steps than
+    a cold start on a static population.
+    """
+    frac_i = jnp.asarray(frac_i, jnp.float32)
+    frac_j = jnp.asarray(frac_j, jnp.float32)
+    to_simplex, _residual, solve_from = _inverse_problem(
+        model, frac_i, frac_j, lr
+    )
+    if init_i is None:
+        z0_i, z0_j = _log_init(frac_i), _log_init(frac_j)
+    else:
+        z0_i = _log_init(jnp.asarray(init_i, jnp.float32))
+        z0_j = _log_init(jnp.asarray(init_j, jnp.float32))
+    (z_i, z_j), trace = solve_from(z0_i, z0_j, n_steps, trace=True)
+    return to_simplex(z_i), to_simplex(z_j), trace
 
 
 def pair_cost_matrix(model: CategoryModel, st_stacks, impl: str = "xla"):

@@ -84,6 +84,7 @@ def make_synpa_pipeline(
     method: isc.StackMethod,
     model: regression.CategoryModel,
     impl: str = "auto",
+    n_steps: int = 80,
 ):
     """One jitted function: PMU counters + current partners -> pair costs.
 
@@ -93,7 +94,9 @@ def make_synpa_pipeline(
     :func:`repro.core.regression.pair_cost_matrix`); "auto" routes
     cluster-scale N through the tiled Pallas kernel on TPU and the XLA
     lowering elsewhere.  The choice is resolved per input shape, so one
-    pipeline instance serves any N.
+    pipeline instance serves any N.  ``n_steps`` is the §5.3 inverse-solve
+    budget (the online subsystem's warm-started pipelines pass a smaller
+    one; see ``repro.online``).
     """
 
     @jax.jit
@@ -104,7 +107,9 @@ def make_synpa_pipeline(
         )
         smt = isc.build_stack(raw, method)               # Step 0
         smt_partner = smt[partner]
-        st, _ = regression.inverse(model, smt, smt_partner)  # Step 1
+        st, _ = regression.inverse(
+            model, smt, smt_partner, n_steps=n_steps
+        )                                                # Step 1
         cost = regression.pair_cost_matrix(model, st, impl=impl)  # Step 2
         return cost, st
 

@@ -1,0 +1,55 @@
+"""Online arrival-driven scheduling — the open-system layer.
+
+The paper evaluates closed workloads (§6.2): a fixed population runs to an
+instruction target while SYNPA re-pairs every 100 ms quantum.  This package
+runs the same machine as an *open* system — applications arrive, queue for
+a hardware context, run to completion and depart — and makes the SYNPA
+per-quantum pipeline cheap enough to serve it: the §5.3 inverse solve is
+warm-started from the previous quantum's ST stacks and the matching is
+repaired incrementally on churn instead of re-solved from scratch.
+
+Entry points:
+
+* :class:`ClusterSim`          — the event loop (simulation + queueing).
+* :class:`StreamingAllocator`  — warm-started, incrementally re-matched SYNPA.
+* :class:`StreamingScheduler`  — closed-system adapter for head-to-head races
+                                 against the cold ``SynpaScheduler``.
+* :class:`PoissonArrivals` / :class:`TraceArrivals` / :class:`InitialBatch`
+                               — traffic models.
+"""
+
+from repro.online.arrivals import (
+    ArrivalProcess,
+    InitialBatch,
+    PoissonArrivals,
+    TraceArrivals,
+)
+from repro.online.allocator import (
+    IDLE_COST,
+    LinuxOnline,
+    OnlinePolicy,
+    RandomOnline,
+    StreamingAllocator,
+    StreamingConfig,
+    StreamingScheduler,
+    cold_config,
+    exact_config,
+)
+from repro.online.sim import ClusterSim
+
+__all__ = [
+    "ArrivalProcess",
+    "ClusterSim",
+    "IDLE_COST",
+    "InitialBatch",
+    "LinuxOnline",
+    "OnlinePolicy",
+    "PoissonArrivals",
+    "RandomOnline",
+    "StreamingAllocator",
+    "StreamingConfig",
+    "StreamingScheduler",
+    "TraceArrivals",
+    "cold_config",
+    "exact_config",
+]

@@ -1,0 +1,467 @@
+"""Online thread-to-core allocation under churn — the streaming SYNPA path.
+
+The closed-system :class:`repro.core.synpa.SynpaScheduler` re-derives
+everything from scratch every quantum: an 80-step cold inverse solve for all
+N applications and a full re-match of the whole population.  In an open
+system that is wasteful twice over: the population barely changes between
+quanta (arrivals and departures touch a handful of slots), and the previous
+quantum's solution is an excellent starting point for both the §5.3 inverse
+solve and the matching.
+
+:class:`StreamingAllocator` exploits both:
+
+* **Warm-started inverse** — surviving applications re-solve Eq. 4's
+  inverse starting from their previous quantum's converged ST stacks with a
+  fraction of the cold gradient budget (``warm_steps`` vs 2x80 steps);
+  newly arrived applications are cold-started exactly like the batch
+  scheduler.  The warm trajectory reaches the cold solve's residual level
+  in strictly fewer gradient steps (property-tested), and a measured-
+  fraction guard start bounds the damage of a stale init after an abrupt
+  phase change.
+
+* **Incremental re-matching** — on churn quanta the surviving pairs are
+  kept, the uncovered vertices (arrivals, widows, a previously idle
+  context) are matched exactly among themselves, and the incremental
+  2-opt (:func:`repro.core.matching.repair_pairs`) ripples the repair
+  outward only through rows/columns it actually improves.  On static quanta
+  the allocator re-matches like the batch scheduler — exactly (blossom) up
+  to ``BLOSSOM_MAX_N``, and by re-converging the previous pairing
+  (:func:`repro.core.matching.refine_pairs`) at cluster scale, where the
+  batch tier itself is heuristic.
+
+**Exactness.**  The §5.3 inverse landscape is a flat valley under PMU
+noise: past ~40 gradient steps the residual barely moves while the ST point
+keeps creeping (see ``docs/online.md``), so two different descent
+trajectories — warm vs cold — land on equal-quality but not bitwise-equal
+stacks, and with near-tie pair costs the discrete matching can differ.
+Bit-identical behaviour therefore has exactly one honest implementation:
+run the cold computation.  :func:`exact_config` does precisely that —
+cold inverse + full re-match on static quanta (bit-identical pairings to
+``SynpaScheduler.schedule`` by construction, integration-tested) while
+still repairing incrementally on churn, where the batch path has no
+equivalent.  The default config trades bitwise identity for speed and is
+held to the *quality* bar instead: ground-truth mean slowdown within noise
+of the cold path (benchmarked and tested).
+
+Odd populations follow the idle-context convention: a virtual idle vertex
+with edge cost :data:`IDLE_COST` (= 1.0 + 1.0, two interference-free
+slowdowns) joins the matching, and whoever pairs with it runs alone on its
+core that quantum.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import isc, matching, regression
+from repro.core.synpa import Scheduler, _partner_index
+
+Pair = Tuple[int, int]
+
+#: Cost of pairing an application with the idle context: both "directions"
+#: run interference-free (slowdown 1.0 each), mirroring cost[i, j] =
+#: slowdown(i|j) + slowdown(j|i) for real pairs.
+IDLE_COST = 2.0
+
+_BIG = 1e9
+
+
+def _pow2(n: int, lo: int = 8) -> int:
+    """Round a batch size up to a power of two (bounded jit recompiles)."""
+    return max(lo, 1 << max(n - 1, 1).bit_length())
+
+
+class OnlinePolicy:
+    """Interface the open-system simulator drives every quantum.
+
+    ``pair`` receives the *previous* quantum's PMU counters (rows of slots
+    that executed it), membership deltas since the last call, and the
+    previous pairing; it returns the co-run slot pairs for this quantum plus
+    the slot left with an idle context when the population is odd.
+    """
+
+    name = "online-base"
+
+    def reset(self, machine, rng: np.random.Generator) -> None:
+        self.machine = machine
+        self.rng = rng
+
+    def pair(
+        self,
+        q: int,
+        active: np.ndarray,
+        counters: np.ndarray,
+        ran: np.ndarray,
+        arrived: Sequence[int],
+        departed: Sequence[int],
+        prev_pairs: List[Pair],
+        prev_solo: Optional[int],
+    ) -> Tuple[List[Pair], Optional[int]]:
+        raise NotImplementedError
+
+    # helpers --------------------------------------------------------------
+    def _random_pairing(
+        self, slots: Sequence[int]
+    ) -> Tuple[List[Pair], Optional[int]]:
+        slots = list(slots)
+        perm = self.rng.permutation(len(slots))
+        shuffled = [slots[k] for k in perm]
+        solo = shuffled.pop() if len(shuffled) % 2 else None
+        pairs = [
+            (shuffled[2 * k], shuffled[2 * k + 1])
+            for k in range(len(shuffled) // 2)
+        ]
+        return pairs, solo
+
+    @staticmethod
+    def _surviving(
+        active: np.ndarray,
+        arrived: Sequence[int],
+        prev_pairs: List[Pair],
+    ) -> Tuple[List[Pair], List[int]]:
+        """Split the previous pairing into kept pairs + uncovered slots
+        (a previously-solo slot falls out naturally as uncovered)."""
+        alive = set(int(s) for s in active) - set(int(s) for s in arrived)
+        kept = [
+            (a, b) for a, b in prev_pairs if a in alive and b in alive
+        ]
+        covered = {v for p in kept for v in p}
+        uncovered = [int(s) for s in active if int(s) not in covered]
+        return kept, uncovered
+
+
+class RandomOnline(OnlinePolicy):
+    """Random-static under churn: pairs survive; churn is patched randomly."""
+
+    name = "random"
+
+    def pair(self, q, active, counters, ran, arrived, departed,
+             prev_pairs, prev_solo):
+        if not prev_pairs and prev_solo is None:
+            return self._random_pairing(active)
+        kept, uncovered = self._surviving(active, arrived, prev_pairs)
+        if not uncovered:
+            return kept, None
+        patch, solo = self._random_pairing(uncovered)
+        return kept + patch, solo
+
+
+class LinuxOnline(RandomOnline):
+    """CFS-like under churn: sticky pairing, occasional migrations,
+    random patching of arrivals/departures (interference-oblivious)."""
+
+    name = "linux"
+
+    def __init__(self, p_migrate: float = 0.03):
+        self.p_migrate = p_migrate
+
+    def pair(self, q, active, counters, ran, arrived, departed,
+             prev_pairs, prev_solo):
+        pairs, solo = super().pair(
+            q, active, counters, ran, arrived, departed, prev_pairs, prev_solo
+        )
+        if len(pairs) >= 2 and self.rng.random() < self.p_migrate:
+            pl = [list(p) for p in pairs]
+            a, b = self.rng.choice(len(pl), size=2, replace=False)
+            sa = int(self.rng.integers(2))
+            sb = int(self.rng.integers(2))
+            pl[a][sa], pl[b][sb] = pl[b][sb], pl[a][sa]
+            pairs = [tuple(p) for p in pl]
+        return pairs, solo
+
+
+@dataclasses.dataclass
+class StreamingConfig:
+    """Knobs of the streaming allocator (see module docstring)."""
+
+    warm: bool = True            # warm-start the inverse for survivors
+    warm_steps: int = 24         # gradient budget per warm start
+    cold_steps: int = 80         # §5.3 budget for cold starts (paper path)
+    incremental: bool = True     # repair the matching on churn
+    rematch: str = "auto"        # static-quantum re-match: full/refine/auto
+    matcher: str = "auto"        # engine for full re-matches
+    pair_impl: str = "auto"      # Step-2 backend (kernels.pair_score)
+
+
+def cold_config() -> StreamingConfig:
+    """The batch SYNPA path verbatim: cold inverse + full re-match every
+    quantum.  The reference arm of the online benchmarks."""
+    return StreamingConfig(warm=False, incremental=False, rematch="full")
+
+
+def exact_config() -> StreamingConfig:
+    """Bit-identical to ``SynpaScheduler.schedule`` on static populations
+    (cold inverse + full re-match), incremental repair only on churn quanta
+    — the safety configuration when bitwise reproducibility matters more
+    than policy latency."""
+    return StreamingConfig(warm=False, incremental=True, rematch="full")
+
+
+class StreamingAllocator(OnlinePolicy):
+    """SYNPA with warm-started inverse + incremental re-matching."""
+
+    def __init__(
+        self,
+        method: isc.StackMethod,
+        model: regression.CategoryModel,
+        config: Optional[StreamingConfig] = None,
+        name: Optional[str] = None,
+    ):
+        self.method = method
+        self.model = model
+        self.cfg = config or StreamingConfig()
+        mode = "stream" if (self.cfg.warm or self.cfg.incremental) else "cold"
+        self.name = name or (
+            f"SYNPA{method.n_categories}_{method.name.split('_', 1)[1]}"
+            f"-{mode}"
+        )
+        ncat = method.n_categories
+        self._uniform = np.array(
+            [1.0 / ncat if k < ncat else 0.0 for k in range(isc.N_CATS)],
+            dtype=np.float32,
+        )
+        model_ = model
+        cfg = self.cfg
+
+        def _cold(fi, fj):
+            return regression.inverse(model_, fi, fj, n_steps=cfg.cold_steps)
+
+        def _warm(fi, fj, ii, ij):
+            return regression.inverse(
+                model_, fi, fj, n_steps=cfg.warm_steps, init_i=ii, init_j=ij
+            )
+
+        def _cost(st):
+            return regression.pair_cost_matrix(
+                model_, st, impl=cfg.pair_impl
+            )
+
+        self._cold_fn = jax.jit(_cold)
+        self._warm_fn = jax.jit(_warm)
+        self._cost_fn = jax.jit(_cost)
+
+    # ------------------------------------------------------------ lifecycle
+    def reset(self, machine, rng: np.random.Generator) -> None:
+        super().reset(machine, rng)
+        self._st: Dict[int, np.ndarray] = {}    # slot -> last ST stack
+        # Slots whose _st entry is only the admission placeholder (uniform):
+        # their first counters get the full cold solve, not a warm start.
+        self._cold_pending: set = set()
+
+    # ------------------------------------------------------------ pipeline
+    def _fractions(self, counters: np.ndarray) -> np.ndarray:
+        """Step 0: repaired measured SMT stack fractions for counter rows."""
+        c = jnp.asarray(counters, jnp.float32)
+        raw = isc.raw_stack(c[:, 0], c[:, 1], c[:, 2], c[:, 3],
+                            dtype=jnp.float32)
+        return np.asarray(isc.build_stack(raw, self.method))
+
+    def _solve(
+        self,
+        frac_i: np.ndarray,
+        frac_j: np.ndarray,
+        init_i: Optional[np.ndarray] = None,
+        init_j: Optional[np.ndarray] = None,
+    ) -> np.ndarray:
+        """Step 1 on a row batch, padded to a power of two (jit reuse)."""
+        m = frac_i.shape[0]
+        if m == 0:
+            return np.zeros((0, isc.N_CATS), np.float32)
+        p = _pow2(m)
+        pad = np.tile(self._uniform, (p, 1))
+        fi, fj = pad.copy(), pad.copy()
+        fi[:m], fj[:m] = frac_i, frac_j
+        if init_i is None:
+            st_i, _ = self._cold_fn(fi, fj)
+        else:
+            ii, ij = pad.copy(), pad.copy()
+            ii[:m], ij[:m] = init_i, init_j
+            st_i, _ = self._warm_fn(fi, fj, ii, ij)
+        return np.asarray(st_i)[:m]
+
+    def _cost_matrix(self, st_rows: np.ndarray) -> np.ndarray:
+        """Step 2 on the active population, padded to a power of two."""
+        a = st_rows.shape[0]
+        p = _pow2(a)
+        pad = np.tile(self._uniform, (p, 1))
+        pad[:a] = st_rows
+        cost = np.asarray(self._cost_fn(pad), np.float64)
+        return cost[:a, :a]
+
+    # ------------------------------------------------------------- pairing
+    def pair(self, q, active, counters, ran, arrived, departed,
+             prev_pairs, prev_solo):
+        active = np.asarray(active, np.int64)
+        arrived_set = set(int(s) for s in arrived)
+        if not prev_pairs and prev_solo is None:
+            # First quantum with runnable applications: no counters yet.
+            self._st = {}
+            self._cold_pending = set()
+            return self._random_pairing(active)
+
+        # --- Steps 0-1: update ST stacks from the previous quantum's run.
+        frac: Dict[int, np.ndarray] = {}
+        ran_slots = [s for p in prev_pairs for s in p]
+        if prev_solo is not None:
+            ran_slots.append(prev_solo)
+        ran_slots = [s for s in ran_slots if ran[s]]
+        if ran_slots:
+            rows = self._fractions(counters[np.asarray(ran_slots)])
+            frac = {s: rows[k] for k, s in enumerate(ran_slots)}
+        partner: Dict[int, int] = {}
+        for a, b in prev_pairs:
+            partner[a], partner[b] = b, a
+
+        # An application that ran with an idle context measured its ST stack
+        # directly — no inverse needed.
+        if prev_solo is not None and prev_solo in frac and \
+                prev_solo not in arrived_set and prev_solo in set(
+                    int(s) for s in active):
+            self._st[prev_solo] = frac[prev_solo]
+            self._cold_pending.discard(prev_solo)
+
+        # Survivors that co-ran split into warm rows (have a *converged*
+        # cached ST) and cold rows (first counters of a newly admitted
+        # application, whose cache entry is only the uniform placeholder).
+        alive = set(int(s) for s in active) - arrived_set
+        corun = [
+            s for s in ran_slots
+            if s in partner and s in alive and partner[s] in frac
+        ]
+        warm_rows = [
+            s for s in corun
+            if self.cfg.warm and s in self._st
+            and s not in self._cold_pending
+        ]
+        cold_rows = [s for s in corun if s not in warm_rows]
+
+        def _stack_init(s: int) -> np.ndarray:
+            return self._st.get(s, frac[s])
+
+        if cold_rows:
+            st = self._solve(
+                np.stack([frac[s] for s in cold_rows]),
+                np.stack([frac[partner[s]] for s in cold_rows]),
+            )
+            for k, s in enumerate(cold_rows):
+                self._st[s] = st[k]
+                self._cold_pending.discard(s)
+        if warm_rows:
+            st = self._solve(
+                np.stack([frac[s] for s in warm_rows]),
+                np.stack([frac[partner[s]] for s in warm_rows]),
+                np.stack([_stack_init(s) for s in warm_rows]),
+                np.stack([_stack_init(partner[s]) for s in warm_rows]),
+            )
+            for k, s in enumerate(warm_rows):
+                self._st[s] = st[k]
+
+        # Drop state of departed occupants; newcomers start from a uniform
+        # placeholder until their first counters arrive next quantum (their
+        # first solve is then the full cold one).
+        for s in departed:
+            self._st.pop(int(s), None)
+            self._cold_pending.discard(int(s))
+        for s in arrived_set:
+            self._st[s] = self._uniform.copy()
+            self._cold_pending.add(s)
+        for s in active:
+            if int(s) not in self._st:
+                self._st[int(s)] = self._uniform.copy()
+                self._cold_pending.add(int(s))
+
+        # --- Steps 2-3: pair cost matrix + (incremental) matching.
+        a_count = int(active.size)
+        if a_count == 1:
+            return [], int(active[0])
+        st_rows = np.stack([self._st[int(s)] for s in active])
+        cost_act = self._cost_matrix(st_rows)
+        odd = a_count % 2 == 1
+        nv = a_count + 1 if odd else a_count
+        cost = np.full((nv, nv), _BIG)
+        cost[:a_count, :a_count] = cost_act
+        if odd:
+            cost[a_count, :a_count] = IDLE_COST
+            cost[:a_count, a_count] = IDLE_COST
+        compact = {int(s): k for k, s in enumerate(active)}
+        idle = a_count if odd else None
+
+        churn = bool(arrived_set) or bool(departed) or (
+            prev_solo is not None and not odd
+        )
+        kept_slots, _ = self._surviving(active, arrived, prev_pairs)
+        kept = [(compact[a], compact[b]) for a, b in kept_slots]
+        if prev_solo is not None and int(prev_solo) in compact and \
+                int(prev_solo) not in arrived_set and odd and not churn:
+            kept.append((compact[int(prev_solo)], idle))
+
+        if churn and self.cfg.incremental and kept:
+            covered = {v for p in kept for v in p}
+            dirty = [v for v in range(nv) if v not in covered]
+            pairs_c = matching.repair_pairs(cost, kept, dirty)
+        else:
+            mode = self.cfg.rematch
+            if mode == "auto":
+                mode = "full" if nv <= matching.BLOSSOM_MAX_N else "refine"
+            if mode == "refine" and not churn and len(kept) == nv // 2:
+                pairs_c = matching.refine_pairs(cost, kept)
+            else:
+                pairs_c = matching.min_cost_pairs(
+                    cost, method=self.cfg.matcher
+                )
+
+        # Map back to slot space; the idle partner becomes the solo slot.
+        inv = {k: int(s) for s, k in compact.items()}
+        out: List[Pair] = []
+        solo: Optional[int] = None
+        for x, y in pairs_c:
+            if idle is not None and idle in (x, y):
+                solo = inv[x if y == idle else y]
+            else:
+                out.append((inv[x], inv[y]))
+        return out, solo
+
+
+class StreamingScheduler(Scheduler):
+    """Closed-system adapter: the streaming allocator as a drop-in
+    :class:`repro.core.synpa.Scheduler`.
+
+    Lets ``SMTMachine.run_workload``/``run_quanta`` race the warm-started
+    path directly against the cold :class:`SynpaScheduler` on the *same*
+    fixed population — the exactness and policy-cost comparisons of the
+    acceptance tests.  Consumes the policy RNG exactly like SynpaScheduler
+    (one permutation before samples exist), so a run only diverges if the
+    chosen pairings do.
+    """
+
+    def __init__(
+        self,
+        method: isc.StackMethod,
+        model: regression.CategoryModel,
+        config: Optional[StreamingConfig] = None,
+        name: Optional[str] = None,
+    ):
+        self._alloc = StreamingAllocator(method, model, config=config)
+        self.name = name or self._alloc.name
+
+    def reset(self, n_apps: int, rng: np.random.Generator, machine=None) -> None:
+        super().reset(n_apps, rng, machine)
+        self._alloc.reset(machine, rng)
+
+    def schedule(self, quantum, samples, prev_pairs):
+        if not self._have_samples(samples) or not prev_pairs:
+            return self._random_pairs()
+        counters = self._counters_array(samples).astype(np.float64)
+        active = np.arange(self.n_apps, dtype=np.int64)
+        ran = np.ones(self.n_apps, bool)
+        pairs, solo = self._alloc.pair(
+            quantum, active, counters, ran, arrived=(), departed=(),
+            prev_pairs=[tuple(p) for p in prev_pairs], prev_solo=None,
+        )
+        assert solo is None, "closed populations are even"
+        return pairs

@@ -1,0 +1,206 @@
+"""Open-system cluster simulation — arrivals, queueing, departures.
+
+``ClusterSim`` runs the vectorised SMT machine as an open queueing system:
+jobs arrive (``repro.online.arrivals``), wait in a FIFO queue when all
+2N hardware contexts are busy, get admitted to a free context, run to their
+§6.2 retired-instruction target under the active policy's pairings, and
+depart — freeing the context for the next job.  Odd active populations
+leave one application alone on its core (idle-context convention).
+
+Determinism: the machine noise/phase stream, the arrival stream and the
+policy stream are three independent generators derived from ``seed``, so a
+run is a pure function of (pool, arrivals, policy, seed) and two policies
+can be raced against bit-identical traffic.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Deque, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.online.arrivals import ArrivalProcess
+from repro.smt.apps import AppProfile
+from repro.smt.machine import PhaseTables, SMTMachine, _VectorState
+from repro.smt.metrics import JobRecord, OnlineStats
+
+Pair = Tuple[int, int]
+
+
+class ClusterSim:
+    """Event loop of the open system (one instance per run configuration).
+
+    pool:      application profiles jobs are instances of;
+    n_cores:   2-way SMT cores — capacity is ``2 * n_cores`` contexts;
+    policy:    an :class:`repro.online.allocator.OnlinePolicy`;
+    arrivals:  an :class:`repro.online.arrivals.ArrivalProcess`;
+    target_scale: scales the §6.2 solo-reference instruction targets
+               (1.0 = the paper's methodology; benchmarks shrink it to keep
+               cluster-scale runs affordable).
+    """
+
+    def __init__(
+        self,
+        machine: SMTMachine,
+        pool: Sequence[AppProfile],
+        n_cores: int,
+        policy,
+        arrivals: ArrivalProcess,
+        seed: int = 0,
+        target_scale: float = 1.0,
+        tables: PhaseTables = None,
+    ):
+        assert n_cores >= 1
+        self.machine = machine
+        self.pool = list(pool)
+        self.n_cores = n_cores
+        self.capacity = 2 * n_cores
+        self.policy = policy
+        self.arrivals = arrivals
+        self.seed = seed
+        self.target_scale = target_scale
+        # ``tables`` lets callers racing many configurations over the same
+        # pool share one PhaseTables build (mirrors run_quanta's parameter).
+        self.tables = tables if tables is not None else PhaseTables.build(
+            self.pool
+        )
+        assert self.tables.n_apps == len(self.pool)
+
+    # ------------------------------------------------------------------ run
+    def run(self, n_quanta: int) -> OnlineStats:
+        machine, tables = self.machine, self.tables
+        quantum_s = machine.params.quantum_s
+        rng = np.random.default_rng(self.seed)              # machine stream
+        rng_arr = np.random.default_rng(self.seed + 4242)   # arrival stream
+        self.policy.reset(machine, np.random.default_rng(self.seed + 7919))
+
+        c = self.capacity
+        app_id = np.full(c, -1, np.int64)
+        job_at = np.full(c, -1, np.int64)
+        st = _VectorState.empty(c)
+        queue: Deque[JobRecord] = deque()
+        pool_of: List[int] = []         # job_id -> pool index
+        records: List[JobRecord] = []   # job_id -> record
+        completed: List[JobRecord] = []
+        counters = np.zeros((c, 5))
+        ran = np.zeros(c, bool)
+        prev_pairs: List[Pair] = []
+        prev_solo: Optional[int] = None
+        pending_departed: List[int] = []
+
+        queue_depth = np.zeros(n_quanta)
+        active_hist = np.zeros(n_quanta)
+        policy_s = np.zeros(n_quanta)
+        solo_quanta = np.zeros(n_quanta)
+
+        for q in range(n_quanta):
+            # 1. Arrivals enter the queue.
+            for pid in self.arrivals.draw(q, rng_arr):
+                job_id = len(records)
+                prof = self.pool[pid]
+                target = machine.target_instructions(prof) * self.target_scale
+                solo_s = target / machine.solo_retire_rate(prof) * quantum_s
+                rec = JobRecord(
+                    job_id=job_id, app_name=prof.name, arrive_q=q,
+                    admit_q=-1, finish_q=np.inf, target=target, solo_s=solo_s,
+                )
+                records.append(rec)
+                pool_of.append(int(pid))
+                queue.append(rec)
+
+            # 2. Admission: FIFO queue into free contexts (lowest slot first).
+            arrived_slots: List[int] = []
+            if queue:
+                (free,) = np.nonzero(app_id < 0)
+                for s in free:
+                    if not queue:
+                        break
+                    rec = queue.popleft()
+                    rec.admit_q = q
+                    pid = pool_of[rec.job_id]
+                    app_id[s] = pid
+                    job_at[s] = rec.job_id
+                    st.phase_idx[s] = 0
+                    st.phase_left[s] = float(
+                        self.pool[pid].phase(0).duration
+                    )
+                    st.progress[s] = 0.0
+                    st.target[s] = rec.target
+                    st.first_finish_q[s] = np.inf
+                    st.total_retired[s] = 0.0
+                    st.total_cycles[s] = 0.0
+                    arrived_slots.append(int(s))
+
+            (active,) = np.nonzero(app_id >= 0)
+            queue_depth[q] = len(queue)
+            active_hist[q] = active.size
+            if active.size == 0:
+                prev_pairs, prev_solo = [], None
+                ran[:] = False
+                pending_departed = []
+                continue
+
+            # 3. The policy pairs the active population.
+            t0 = time.perf_counter()
+            pairs, solo = self.policy.pair(
+                q, active, counters, ran, arrived_slots, pending_departed,
+                prev_pairs, prev_solo,
+            )
+            policy_s[q] = time.perf_counter() - t0
+            pending_departed = []
+            scheduled = sorted(
+                [v for p in pairs for v in p]
+                + ([solo] if solo is not None else [])
+            )
+            assert scheduled == [int(s) for s in active], (
+                f"policy must cover the active set exactly: "
+                f"{scheduled} vs {list(active)}"
+            )
+            solo_quanta[q] = 0 if solo is None else 1
+
+            # 4. One membership-masked machine quantum.
+            counters, finished = machine.open_quantum(
+                tables, app_id, st,
+                np.asarray(pairs, np.int64).reshape(-1, 2),
+                np.asarray([] if solo is None else [solo], np.int64),
+                rng, q,
+            )
+            ran[:] = False
+            ran[np.asarray(scheduled, np.int64)] = True
+
+            # 5. Departures free their contexts at quantum end.
+            for s in np.nonzero(finished)[0]:
+                rec = records[job_at[s]]
+                rec.finish_q = float(st.first_finish_q[s])
+                completed.append(rec)
+                app_id[s] = -1
+                job_at[s] = -1
+                pending_departed.append(int(s))
+            prev_pairs = [tuple(int(v) for v in p) for p in pairs]
+            prev_solo = None if solo is None else int(solo)
+            # Pairs whose members *both* departed carry no information for
+            # the next quantum; pairs with one survivor are kept so the
+            # allocator can still find the survivor's measurement partner.
+            if pending_departed:
+                gone = set(pending_departed)
+                prev_pairs = [
+                    p for p in prev_pairs
+                    if not (p[0] in gone and p[1] in gone)
+                ]
+                if prev_solo in gone:
+                    prev_solo = None
+
+        return OnlineStats(
+            policy_name=getattr(self.policy, "name", "policy"),
+            quantum_s=quantum_s,
+            quanta=n_quanta,
+            completed=completed,
+            n_arrived=len(records),
+            n_admitted=sum(1 for r in records if r.admit_q >= 0),
+            queue_depth=queue_depth,
+            active=active_hist,
+            policy_s=policy_s,
+            solo_quanta=solo_quanta,
+        )

@@ -35,7 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -359,6 +359,24 @@ class _VectorState:
             total_cycles=np.zeros(n),
         )
 
+    @classmethod
+    def empty(cls, n_slots: int) -> "_VectorState":
+        """Blank per-slot state for the open system (``repro.online``).
+
+        Slots are populated incrementally as applications are admitted; the
+        simulator owns per-slot (re)initialisation on admission/departure.
+        """
+        return cls(
+            phase_idx=np.zeros(n_slots, np.int64),
+            phase_left=np.zeros(n_slots),
+            progress=np.zeros(n_slots),
+            target=np.full(n_slots, np.inf),
+            first_finish_q=np.full(n_slots, np.inf),
+            launches=np.zeros(n_slots, np.int64),
+            total_retired=np.zeros(n_slots),
+            total_cycles=np.zeros(n_slots),
+        )
+
 
 class SMTMachine:
     """Discrete-quantum simulator of an N-core, 2-way-SMT processor."""
@@ -663,6 +681,107 @@ class SMTMachine:
         np.fill_diagonal(sym, 1e9)
         return sym
 
+    # ------------------------------------------------- open-system quantum
+    def open_quantum(
+        self,
+        tables: PhaseTables,
+        app_id: np.ndarray,
+        st: _VectorState,
+        pairs: np.ndarray,
+        solo: np.ndarray,
+        rng: np.random.Generator,
+        q: int,
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """One quantum of an *open* system (the ``repro.online`` subsystem).
+
+        Unlike the closed-system quantum, membership is masked: only the
+        slots named by ``pairs``/``solo`` execute, applications that reach
+        their retired-instruction target *depart* (no §6.2 relaunch), and an
+        odd population leaves one application on a core with an idle second
+        context (``solo``), where it runs interference-free.
+
+        tables:  :class:`PhaseTables` of the application *pool*;
+        app_id:  (C,) pool row occupying each slot (-1 = empty slot);
+        st:      per-slot :class:`_VectorState`; ``target`` holds absolute
+                 retired-instruction targets (departure, not relaunch);
+        pairs:   (K, 2) slot pairs sharing a core this quantum;
+        solo:    (S,) slots running alone this quantum.
+
+        Returns ``(counters, finished)``: the (C, 5) PMU counter matrix
+        (rows of inactive slots are zero) and a (C,) bool mask of slots whose
+        application reached its target this quantum (``first_finish_q`` is
+        set to the fractional completion quantum; the caller frees the slot).
+
+        Determinism convention: counter-noise draws and phase-advance
+        poisson draws are consumed in ascending slot order, so a run is a
+        pure function of (workload, arrivals, policy, seed).
+        """
+        n_slots = app_id.shape[0]
+        pairs = np.asarray(pairs, np.int64).reshape(-1, 2)
+        solo = np.asarray(solo, np.int64).reshape(-1)
+        active = np.sort(np.concatenate([pairs.ravel(), solo]))
+        assert active.size == np.unique(active).size, "slot scheduled twice"
+        assert active.size == 0 or (
+            active[0] >= 0 and active[-1] < n_slots
+        ), "slot index out of range"
+        assert (app_id[active] >= 0).all(), "scheduled an empty slot"
+        counters = np.zeros((n_slots, 5))
+        finished = np.zeros(n_slots, bool)
+        if active.size == 0:
+            return counters, finished
+
+        aid = app_id[active]
+        comps = np.empty((n_slots, 4))
+        if pairs.size:
+            a, b = pairs[:, 0], pairs[:, 1]
+            ph_a = st.phase_idx[a] % tables.n_phases[app_id[a]]
+            ph_b = st.phase_idx[b] % tables.n_phases[app_id[b]]
+            comps[a] = corun_components_batched(
+                tables, app_id[a], ph_a, app_id[b], ph_b, self.params
+            )
+            comps[b] = corun_components_batched(
+                tables, app_id[b], ph_b, app_id[a], ph_a, self.params
+            )
+        if solo.size:
+            ph_s = st.phase_idx[solo] % tables.n_phases[app_id[solo]]
+            comps[solo] = corun_components_batched(
+                tables, app_id[solo], ph_s, None, None, self.params
+            )
+
+        # Instruction advance + departure bookkeeping (no relaunch).
+        cpi = comps[active].sum(axis=-1)
+        retired = self.params.quantum_cycles / cpi * tables.retire[aid]
+        before = st.progress[active]
+        after = before + retired
+        st.progress[active] = after
+        st.total_retired[active] += retired
+        st.total_cycles[active] += self.params.quantum_cycles
+        done = after >= st.target[active]
+        if done.any():
+            d_slots = active[done]
+            frac = (st.target[active][done] - before[done]) / np.maximum(
+                retired[done], 1e-9
+            )
+            st.first_finish_q[d_slots] = q + np.clip(frac, 0.0, 1.0)
+            finished[d_slots] = True
+
+        counters[active] = pmu_counters_batched(
+            comps[active], tables.omega[aid], tables.retire[aid],
+            self.params.quantum_cycles, self.params, rng, noisy=True,
+        )
+
+        # Phase advance for survivors only (departed apps leave at quantum
+        # end); poisson draws happen per transitioning slot, ascending.
+        survivors = active[~done]
+        st.phase_left[survivors] -= 1.0
+        (idx,) = np.nonzero(st.phase_left[survivors] <= 0.0)
+        for k in survivors[idx]:
+            st.phase_idx[k] += 1
+            pid = app_id[k]
+            lam = tables.duration[pid, st.phase_idx[k] % tables.n_phases[pid]]
+            st.phase_left[k] = float(max(1, rng.poisson(lam)))
+        return counters, finished
+
     # ------------------------------------------------- fixed-horizon mode
     def run_quanta(
         self,
@@ -670,6 +789,7 @@ class SMTMachine:
         policy,
         n_quanta: int = 20,
         seed: int = 0,
+        tables: Optional[PhaseTables] = None,
     ) -> "ThroughputResult":
         """Run exactly ``n_quanta`` quanta (no §6.2 targets) — throughput mode.
 
@@ -677,13 +797,17 @@ class SMTMachine:
         thousands, where running every app to its solo-reference target would
         take hours.  Reports aggregate IPC, the mean true slowdown of the
         chosen pairings, and scheduling/machine wall-times per quantum.
+
+        ``tables`` lets callers share one :class:`PhaseTables` build across
+        several runs of the same workload (see :meth:`run_quanta_multi`).
         """
         import time
 
         n = len(profiles)
         assert n % 2 == 0, "need an even number of applications"
         rng = np.random.default_rng(seed)
-        tables = PhaseTables.build(profiles)
+        tables = tables if tables is not None else PhaseTables.build(profiles)
+        assert tables.n_apps == n, "tables do not match the workload"
         st = _VectorState.init(tables, np.full(n, np.inf))
 
         policy.reset(n_apps=n, rng=np.random.default_rng(seed + 7919), machine=self)
@@ -732,6 +856,31 @@ class SMTMachine:
             sched_s_per_quantum=sched_s / max(n_quanta, 1),
             machine_s_per_quantum=machine_s / max(n_quanta, 1),
         )
+
+    def run_quanta_multi(
+        self,
+        profiles: Sequence[AppProfile],
+        policies: Dict[str, "Callable[[], object]"],
+        n_quanta: int = 20,
+        seed: int = 0,
+    ) -> Dict[str, "ThroughputResult"]:
+        """Race K policies through one workload — one machine pass per policy.
+
+        The expensive workload setup (the Python-loop :meth:`PhaseTables.build`
+        over all N profiles, plus the solo-rate caches) is done once and
+        shared; every policy then runs with the machine RNG reset to the same
+        ``seed``, so all K passes face a bit-identical workload (same phase
+        transitions, same counter noise for identical pairings) and their
+        metrics differ only through the pairings each policy chose.
+        """
+        tables = PhaseTables.build(profiles)
+        return {
+            name: self.run_quanta(
+                profiles, factory(), n_quanta=n_quanta, seed=seed,
+                tables=tables,
+            )
+            for name, factory in policies.items()
+        }
 
     # ------------------------------------------------------------------ misc
     def _advance_phase(self, st: _AppState, rng: np.random.Generator) -> None:

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Dict, List, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -79,3 +79,127 @@ def speedup(baseline: float, policy: float) -> float:
 
 def geomean(xs: Sequence[float]) -> float:
     return float(np.exp(np.mean(np.log(np.maximum(np.asarray(xs), 1e-12)))))
+
+
+# ---------------------------------------------------------------------------
+# Online (open-system) metrics — the ``repro.online`` subsystem.
+#
+# In the open system applications arrive, run to an instruction target and
+# depart, so the closed-system headline (avg turnaround of a fixed workload)
+# is replaced by per-*job* records and their distributions: turnaround,
+# slowdown (turnaround / solo time, queueing included), queue depth over
+# time, and the policy's own cost per quantum.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class JobRecord:
+    """One completed (or still-running) job of the open system."""
+
+    job_id: int
+    app_name: str
+    arrive_q: int                   # quantum the job entered the system
+    admit_q: int                    # quantum it got a hardware context
+    finish_q: float                 # fractional quantum it completed (inf if not)
+    target: float                   # retired-instruction target
+    solo_s: float                   # solo execution time for the same target
+
+    def turnaround_s(self, quantum_s: float) -> float:
+        return (self.finish_q - self.arrive_q) * quantum_s
+
+    def wait_s(self, quantum_s: float) -> float:
+        return (self.admit_q - self.arrive_q) * quantum_s
+
+    def slowdown(self, quantum_s: float) -> float:
+        """Observed slowdown vs running alone the moment it arrived (>= 1
+        up to counter noise); includes time spent queued for a context."""
+        return self.turnaround_s(quantum_s) / max(self.solo_s, 1e-12)
+
+
+def slowdown_ccdf(
+    slowdowns: Sequence[float], grid: Optional[np.ndarray] = None
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Complementary CDF of per-job slowdowns (paper Fig. 7 shape).
+
+    Returns ``(grid, ccdf)`` with ``ccdf[k] = P[slowdown > grid[k]]``.
+    """
+    s = np.asarray(list(slowdowns), dtype=np.float64)
+    if grid is None:
+        hi = float(s.max()) if s.size else 2.0
+        grid = np.linspace(1.0, max(hi, 1.0 + 1e-6), 64)
+    grid = np.asarray(grid, dtype=np.float64)
+    if s.size == 0:
+        return grid, np.zeros_like(grid)
+    ccdf = (s[None, :] > grid[:, None]).mean(axis=1)
+    return grid, ccdf
+
+
+@dataclasses.dataclass
+class OnlineStats:
+    """Per-run metrics of one open-system (``ClusterSim``) execution."""
+
+    policy_name: str
+    quantum_s: float
+    quanta: int
+    completed: List[JobRecord]
+    n_arrived: int
+    n_admitted: int
+    queue_depth: np.ndarray         # (Q,) jobs waiting for a context
+    active: np.ndarray              # (Q,) jobs holding a context
+    policy_s: np.ndarray            # (Q,) policy wall-time per quantum
+    solo_quanta: np.ndarray         # (Q,) apps running with an idle context
+
+    # ------------------------------------------------------------- scalars
+    @property
+    def n_completed(self) -> int:
+        return len(self.completed)
+
+    @property
+    def slowdowns(self) -> np.ndarray:
+        return np.array(
+            [j.slowdown(self.quantum_s) for j in self.completed]
+        )
+
+    @property
+    def mean_turnaround_s(self) -> float:
+        if not self.completed:
+            return math.nan
+        return float(
+            np.mean([j.turnaround_s(self.quantum_s) for j in self.completed])
+        )
+
+    @property
+    def mean_slowdown(self) -> float:
+        s = self.slowdowns
+        return float(s.mean()) if s.size else math.nan
+
+    def slowdown_percentile(self, p: float) -> float:
+        s = self.slowdowns
+        return float(np.percentile(s, p)) if s.size else math.nan
+
+    def ccdf(self, grid: Optional[np.ndarray] = None):
+        return slowdown_ccdf(self.slowdowns, grid)
+
+    @property
+    def throughput_jobs_per_s(self) -> float:
+        return self.n_completed / max(self.quanta * self.quantum_s, 1e-12)
+
+    @property
+    def mean_queue_depth(self) -> float:
+        return float(self.queue_depth.mean()) if self.queue_depth.size else 0.0
+
+    @property
+    def policy_us_per_quantum(self) -> float:
+        return float(self.policy_s.mean() * 1e6) if self.policy_s.size else 0.0
+
+    def summary(self) -> Dict[str, float]:
+        """Flat dict for benchmark JSON output."""
+        return {
+            "n_arrived": self.n_arrived,
+            "n_completed": self.n_completed,
+            "mean_turnaround_s": self.mean_turnaround_s,
+            "mean_slowdown": self.mean_slowdown,
+            "p95_slowdown": self.slowdown_percentile(95.0),
+            "p99_slowdown": self.slowdown_percentile(99.0),
+            "throughput_jobs_per_s": self.throughput_jobs_per_s,
+            "mean_queue_depth": self.mean_queue_depth,
+            "policy_us_per_quantum": self.policy_us_per_quantum,
+        }

@@ -31,6 +31,15 @@ from repro.smt.machine import (
     pmu_readout,
 )
 
+#: Version of the profiling campaign's RNG-stream interleaving.  Fitted
+#: models depend on *which* noise draw lands on which sample, so model
+#: caches fitted under a different interleaving are silently wrong — any
+#: change to the draw order in :func:`collect_profiles` (or the machine's
+#: counter-noise convention) must bump this.  Version 2 is the vectorised
+#: campaign (batched pair profiling, one lognormal block per quantum);
+#: version 1 was the per-pair scalar loop of the seed.
+RNG_STREAM_VERSION = 2
+
 
 @dataclasses.dataclass
 class ProfilingData:

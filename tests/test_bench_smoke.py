@@ -1,0 +1,28 @@
+"""Benchmark entry points cannot rot: run the --smoke tier under pytest.
+
+Marked ``slow`` so the fast tier stays fast; the smoke script itself is
+budgeted to finish in under a minute on the dev container.
+"""
+
+import os
+import subprocess
+
+import pytest
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_SCRIPT = os.path.join(_ROOT, "tools", "run_bench_smoke.sh")
+
+
+@pytest.mark.slow
+def test_bench_smoke_script_runs():
+    res = subprocess.run(
+        ["bash", _SCRIPT],
+        cwd=_ROOT,
+        capture_output=True,
+        text=True,
+        timeout=300,
+    )
+    assert res.returncode == 0, res.stdout + "\n" + res.stderr
+    out = res.stdout
+    assert "online_churn," in out, out
+    assert "cluster_scale," in out, out

@@ -1,0 +1,518 @@
+"""Tests for the online subsystem: incremental matching, warm-started
+inverse, the open-system simulator, policy batching and cache versioning.
+
+Exactness claims and how they are held:
+
+* incremental ``_two_opt``  — *bit-identical* to the full-recompute
+  reference, property-tested on random costs/pairings and on seeded churn
+  repair sequences (guaranteed by construction: identical expressions over
+  identical inputs).
+* warm-started inverse      — reaches the cold solve's residual level in
+  strictly fewer gradient steps on static populations, with the guard
+  start bounding stale-init damage.
+* ``exact_config`` streaming — bit-identical pairings (and therefore
+  machine trajectories) to ``SynpaScheduler.schedule`` on static
+  populations, by construction; the integration test exercises the whole
+  adapter/padding plumbing.
+"""
+
+import os
+import subprocess
+import sys
+
+import hypothesis
+import hypothesis.strategies as hst
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import isc, matching, regression
+from repro.core.synpa import SynpaScheduler
+from repro.online import (
+    ClusterSim,
+    InitialBatch,
+    LinuxOnline,
+    PoissonArrivals,
+    RandomOnline,
+    StreamingAllocator,
+    StreamingConfig,
+    StreamingScheduler,
+    TraceArrivals,
+    cold_config,
+    exact_config,
+)
+from repro.smt import machine as mc
+from repro.smt import metrics, workloads
+from repro.smt.apps import pool_profiles
+
+
+def _toy_model(n_categories=4):
+    coeffs = np.zeros((4, 4), np.float32)
+    coeffs[isc.CAT_DI] = [0.007, 0.91, 0.004, 0.03]
+    coeffs[isc.CAT_FE] = [0.02, 1.41, 0.0, 0.0]
+    coeffs[isc.CAT_BE] = [0.0, 0.24, 1.07, 0.5]
+    coeffs[isc.CAT_HW] = [0.03, 1.22, 0.33, 0.0]
+    if n_categories == 3:
+        coeffs[isc.CAT_HW] = 0.0
+    return regression.CategoryModel(
+        coeffs=jnp.asarray(coeffs), mse=jnp.zeros(4),
+        n_categories=n_categories,
+    )
+
+
+def _sym_cost(rng, n, clustered=False):
+    if clustered:
+        c = rng.choice([0.0, 1.0, 2.0, 2.0, 5.0], size=(n, n))
+    else:
+        c = rng.uniform(0.0, 10.0, size=(n, n))
+    c = (c + c.T) / 2
+    np.fill_diagonal(c, 0.0)
+    return c
+
+
+def _random_pairing(rng, n):
+    perm = rng.permutation(n)
+    return [(int(perm[2 * k]), int(perm[2 * k + 1])) for k in range(n // 2)]
+
+
+# ------------------------------------------------------ incremental 2-opt
+@hypothesis.given(
+    n=hst.sampled_from([4, 8, 16, 32, 64]),
+    seed=hst.integers(0, 2**31 - 1),
+    clustered=hst.booleans(),
+)
+@hypothesis.settings(max_examples=40, deadline=None)
+def test_incremental_two_opt_bit_identical(n, seed, clustered):
+    """Incremental row/column updates == full recompute, bit for bit."""
+    rng = np.random.default_rng(seed)
+    c = _sym_cost(rng, n, clustered)
+    pairs = _random_pairing(rng, n)
+    assert matching._two_opt(c, pairs) == matching._two_opt_reference(c, pairs)
+
+
+@hypothesis.given(seed=hst.integers(0, 2**31 - 1))
+@hypothesis.settings(max_examples=15, deadline=None)
+def test_repair_sequence_valid_and_local(seed):
+    """Seeded churn sequences: repairs stay perfect matchings and never
+    underperform the incumbent pairing they started from."""
+    rng = np.random.default_rng(seed)
+    n = 24
+    c = _sym_cost(rng, n)
+    pairs = matching.min_cost_pairs(c)
+    for _ in range(6):
+        # churn: drop a random pair's coverage, re-randomise two cost rows
+        # (an arrival re-using the departed slots).
+        k = int(rng.integers(len(pairs)))
+        widow_pair = pairs[k]
+        kept = [p for x, p in enumerate(pairs) if x != k]
+        for v in widow_pair:
+            row = rng.uniform(0.0, 10.0, size=n)
+            c[v, :] = row
+            c[:, v] = row
+            c[v, v] = 0.0
+        before = matching.matching_cost(c, kept + [tuple(widow_pair)])
+        pairs = matching.repair_pairs(c, kept, list(widow_pair))
+        flat = sorted(x for p in pairs for x in p)
+        assert flat == list(range(n))
+        assert matching.matching_cost(c, pairs) <= before + 1e-9
+
+
+def test_refine_pairs_converges_to_two_opt_optimum():
+    rng = np.random.default_rng(3)
+    c = _sym_cost(rng, 32)
+    seed_pairs = _random_pairing(rng, 32)
+    refined = matching.refine_pairs(c, seed_pairs)
+    # A second refinement pass must be a no-op (2-opt local optimum).
+    assert matching.refine_pairs(c, refined) == refined
+
+
+# ------------------------------------------------------ warm-started solve
+class TestWarmInverse:
+    @pytest.fixture(scope="class")
+    def quanta_fracs(self):
+        """Measured SMT fractions of two consecutive quanta, static pop."""
+        machine = mc.SMTMachine(mc.MachineParams(), seed=0)
+        n = 16
+        profs = workloads.scaled_workload(n, seed=116)
+        tables = mc.PhaseTables.build(profs)
+        st = mc._VectorState.init(tables, np.full(n, np.inf))
+        rng = np.random.default_rng(0)
+        pairs = np.array([(2 * k, 2 * k + 1) for k in range(n // 2)], np.int64)
+        c1 = machine._vector_quantum(tables, st, pairs, rng, 0)
+        machine._advance_phases_vector(tables, st, rng)
+        c2 = machine._vector_quantum(tables, st, pairs, rng, 1)
+
+        def frac(counters):
+            c = jnp.asarray(counters, jnp.float32)
+            raw = isc.raw_stack(c[:, 0], c[:, 1], c[:, 2], c[:, 3],
+                                dtype=jnp.float32)
+            return isc.build_stack(raw, isc.SYNPA4_R_FEBE)
+
+        partner = np.arange(n) ^ 1
+        return frac(c1), frac(c2), partner
+
+    def test_warm_reaches_cold_residual_in_fewer_steps(self, quanta_fracs):
+        """The ISSUE's convergence property: strictly fewer gradient steps."""
+        model = _toy_model()
+        f1, f2, partner = quanta_fracs
+        st_prev, _ = regression.inverse(model, f1, f1[partner], n_steps=80)
+        _, _, cold_tr = regression.inverse_trace(
+            model, f2, f2[partner], n_steps=80
+        )
+        _, _, warm_tr = regression.inverse_trace(
+            model, f2, f2[partner], n_steps=80,
+            init_i=st_prev, init_j=st_prev[partner],
+        )
+        cold_tr = np.asarray(cold_tr).mean(axis=-1)   # mean residual per step
+        warm_tr = np.asarray(warm_tr).mean(axis=-1)
+        level = cold_tr[-1]
+        cold_steps = int(np.argmax(cold_tr <= level)) + 1
+        assert warm_tr.min() <= level, "warm start never reaches cold level"
+        warm_steps = int(np.argmax(warm_tr <= level)) + 1
+        assert warm_steps < cold_steps, (warm_steps, cold_steps)
+        # and it gets there within the streaming default budget
+        assert warm_steps <= StreamingConfig().warm_steps
+
+    def test_warm_guarded_against_stale_init(self, quanta_fracs):
+        """A nonsense init cannot make the warm solve much worse than a
+        cold solve with the same budget (the measured-fraction guard)."""
+        model = _toy_model()
+        _, f2, partner = quanta_fracs
+        rng = np.random.default_rng(5)
+        junk = rng.dirichlet(np.ones(4), size=f2.shape[0]).astype(np.float32)
+        si_w, sj_w = regression.inverse(
+            model, f2, f2[partner], n_steps=24, init_i=junk,
+            init_j=junk[partner],
+        )
+        si_g, sj_g, _ = regression.inverse_trace(
+            model, f2, f2[partner], n_steps=24
+        )  # the guard start alone (measured fractions)
+        res_w = np.asarray(regression.inverse_residual(
+            model, f2, f2[partner], si_w, sj_w))
+        res_g = np.asarray(regression.inverse_residual(
+            model, f2, f2[partner], si_g, sj_g))
+        # per-row best-of(guard, init) can never be worse than the guard
+        assert (res_w <= res_g + 1e-6).all()
+
+    def test_cold_path_unchanged(self, quanta_fracs):
+        """Default (no-init) inverse is the seed behaviour, bit for bit."""
+        model = _toy_model()
+        f1, _, partner = quanta_fracs
+        a1 = regression.inverse(model, f1, f1[partner])
+        a2 = regression.inverse(model, f1, f1[partner], init_i=None)
+        np.testing.assert_array_equal(np.asarray(a1[0]), np.asarray(a2[0]))
+        np.testing.assert_array_equal(np.asarray(a1[1]), np.asarray(a2[1]))
+
+
+# ------------------------------------------------------ exact streaming
+class _CapturePolicy:
+    def __init__(self, inner):
+        self.inner = inner
+        self.pairs = []
+
+    @property
+    def name(self):
+        return self.inner.name
+
+    def reset(self, *a, **k):
+        return self.inner.reset(*a, **k)
+
+    def schedule(self, *a, **k):
+        p = self.inner.schedule(*a, **k)
+        self.pairs.append(sorted(tuple(sorted(q)) for q in p))
+        return p
+
+
+class TestExactStreaming:
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_exact_mode_bit_identical_to_cold_synpa(self, seed):
+        """Static population: exact-config streaming == SynpaScheduler,
+        pairing by pairing and therefore machine-trajectory by trajectory."""
+        machine = mc.SMTMachine(mc.MachineParams(), seed=0)
+        model = _toy_model()
+        profs = workloads.scaled_workload(16, seed=100 + seed)
+        cold = _CapturePolicy(SynpaScheduler(isc.SYNPA4_R_FEBE, model))
+        ex = _CapturePolicy(
+            StreamingScheduler(isc.SYNPA4_R_FEBE, model, exact_config())
+        )
+        r1 = machine.run_quanta(profs, cold, n_quanta=20, seed=seed)
+        r2 = machine.run_quanta(profs, ex, n_quanta=20, seed=seed)
+        assert cold.pairs == ex.pairs
+        np.testing.assert_array_equal(r1.ipc, r2.ipc)
+        assert r1.total_retired == r2.total_retired
+
+    def test_default_streaming_matches_cold_quality(self):
+        """The fast path is held to the quality bar: ground-truth mean
+        slowdown within noise of the cold path on a static population."""
+        machine = mc.SMTMachine(mc.MachineParams(), seed=0)
+        model = _toy_model()
+        profs = workloads.scaled_workload(32, seed=999)
+        res = machine.run_quanta_multi(
+            profs,
+            {
+                "cold": lambda: SynpaScheduler(isc.SYNPA4_R_FEBE, model),
+                "stream": lambda: StreamingScheduler(
+                    isc.SYNPA4_R_FEBE, model),
+            },
+            n_quanta=16,
+            seed=7,
+        )
+        cold, stream = res["cold"], res["stream"]
+        assert stream.mean_true_slowdown <= cold.mean_true_slowdown * 1.03
+        assert stream.mean_true_slowdown >= 1.0
+
+
+# ------------------------------------------------------ open-system sim
+class TestClusterSim:
+    @pytest.fixture(scope="class")
+    def machine(self):
+        return mc.SMTMachine(mc.MachineParams(), seed=0)
+
+    @pytest.fixture(scope="class")
+    def pool(self):
+        return pool_profiles()
+
+    def test_end_to_end_churn(self, machine, pool):
+        sim = ClusterSim(
+            machine, pool, n_cores=4, policy=RandomOnline(),
+            arrivals=PoissonArrivals(rate=0.8, n_pool=len(pool)),
+            seed=5, target_scale=0.1,
+        )
+        stats = sim.run(120)
+        assert stats.n_arrived > 0
+        assert stats.n_completed > 0
+        assert stats.n_completed <= stats.n_arrived
+        assert stats.mean_slowdown >= 1.0
+        assert stats.solo_quanta.sum() > 0, "odd populations must occur"
+        assert (stats.active <= sim.capacity).all()
+        for rec in stats.completed:
+            assert rec.finish_q >= rec.admit_q >= rec.arrive_q
+        grid, ccdf = stats.ccdf()
+        assert ccdf[0] >= ccdf[-1]
+        assert 0.0 <= ccdf.min() and ccdf.max() <= 1.0
+
+    def test_deterministic_given_seed(self, machine, pool):
+        def go():
+            sim = ClusterSim(
+                machine, pool, n_cores=2, policy=LinuxOnline(),
+                arrivals=PoissonArrivals(rate=0.5, n_pool=len(pool)),
+                seed=9, target_scale=0.1,
+            )
+            return sim.run(60)
+
+        s1, s2 = go(), go()
+        assert s1.n_arrived == s2.n_arrived
+        assert s1.n_completed == s2.n_completed
+        np.testing.assert_array_equal(s1.queue_depth, s2.queue_depth)
+        assert [j.finish_q for j in s1.completed] == [
+            j.finish_q for j in s2.completed
+        ]
+
+    def test_queueing_when_full(self, machine, pool):
+        """More arrivals than contexts: jobs wait, then drain."""
+        events = [(0, i % len(pool)) for i in range(10)]  # 10 jobs, 4 ctx
+        sim = ClusterSim(
+            machine, pool, n_cores=2, policy=RandomOnline(),
+            arrivals=TraceArrivals(events), seed=1, target_scale=0.05,
+        )
+        stats = sim.run(100)
+        assert stats.queue_depth[0] == 6, "4 admitted, 6 queued"
+        assert stats.n_completed == 10, "everything eventually drains"
+        assert stats.queue_depth[-1] == 0
+        # waiting is visible in the records
+        assert any(j.admit_q > j.arrive_q for j in stats.completed)
+
+    def test_single_app_runs_solo_to_target(self, machine, pool):
+        sim = ClusterSim(
+            machine, pool, n_cores=2, policy=RandomOnline(),
+            arrivals=InitialBatch([0]), seed=2, target_scale=0.1,
+        )
+        stats = sim.run(40)
+        assert stats.n_completed == 1
+        job = stats.completed[0]
+        # Ran alone the whole time: no interference, so the observed
+        # slowdown stays near 1 (the residual gap is the short job's phase
+        # mix vs the duration-weighted solo rate, not co-run slowdown).
+        assert 0.7 < job.slowdown(stats.quantum_s) < 1.3
+        assert stats.solo_quanta.sum() > 0
+
+    def test_newcomers_cold_started_survivors_warm_started(self, machine, pool):
+        """First counters of an admitted app get the full cold solve; only
+        apps with a converged ST estimate take the warm path."""
+        model = _toy_model()
+
+        class Instrumented(StreamingAllocator):
+            def __init__(self, *a, **k):
+                super().__init__(*a, **k)
+                self.cold_calls, self.warm_calls = [], []
+
+            def _solve(self, frac_i, frac_j, init_i=None, init_j=None):
+                (self.warm_calls if init_i is not None
+                 else self.cold_calls).append(frac_i.shape[0])
+                return super()._solve(frac_i, frac_j, init_i, init_j)
+
+        policy = Instrumented(isc.SYNPA4_R_FEBE, model)
+        # 6 apps at q0 and a pair arriving at q10 (even population
+        # throughout, so no arrival takes the solo shortcut where the
+        # measured fractions *are* the ST stack).
+        events = [(0, i) for i in range(6)] + [(10, 6), (10, 7)]
+        sim = ClusterSim(
+            machine, pool, n_cores=4, policy=policy,
+            arrivals=TraceArrivals(events), seed=3, target_scale=0.3,
+        )
+        sim.run(16)
+        # the initial population cold-solves together once, the arrival
+        # wave cold-solves at its first counters (q11) — nothing else
+        assert policy.cold_calls == [6, 2], policy.cold_calls
+        assert len(policy.warm_calls) > 0
+
+    def test_streaming_beats_oblivious_baselines(self, machine, pool):
+        model = _toy_model()
+
+        def run(policy):
+            sim = ClusterSim(
+                machine, pool, n_cores=4, policy=policy,
+                arrivals=PoissonArrivals(rate=0.8, n_pool=len(pool)),
+                seed=5, target_scale=0.1,
+            )
+            return sim.run(100)
+
+        s_rand = run(RandomOnline())
+        s_stream = run(StreamingAllocator(isc.SYNPA4_R_FEBE, model))
+        assert s_stream.mean_slowdown < s_rand.mean_slowdown
+        assert s_stream.n_completed >= s_rand.n_completed
+
+
+# ------------------------------------------------------ policy batching
+def test_run_quanta_multi_equals_individual_runs():
+    machine = mc.SMTMachine(mc.MachineParams(), seed=0)
+    from repro.core.baselines import LinuxScheduler, RandomStaticScheduler
+
+    profs = workloads.scaled_workload(16, seed=42)
+    multi = machine.run_quanta_multi(
+        profs,
+        {
+            "linux": lambda: LinuxScheduler(),
+            "random": lambda: RandomStaticScheduler(),
+        },
+        n_quanta=12,
+        seed=4,
+    )
+    for name, factory in (
+        ("linux", LinuxScheduler), ("random", RandomStaticScheduler)
+    ):
+        single = machine.run_quanta(profs, factory(), n_quanta=12, seed=4)
+        np.testing.assert_array_equal(multi[name].ipc, single.ipc)
+        assert multi[name].total_retired == single.total_retired
+        assert multi[name].mean_true_slowdown == single.mean_true_slowdown
+
+
+# ------------------------------------------------------ cache versioning
+class TestModelCacheVersioning:
+    def _roundtrip_models(self):
+        return {"TOY": _toy_model()}
+
+    def test_missing_file_refused(self, tmp_path):
+        from benchmarks import common
+
+        assert common._load_cache(str(tmp_path / "nope.pkl")) is None
+
+    def test_unstamped_payload_refused(self, tmp_path):
+        import pickle
+
+        from benchmarks import common
+
+        path = tmp_path / "old.pkl"
+        legacy = {  # the seed repo's bare format: no version stamp
+            "SYNPA4_R-FEBE": (np.zeros((4, 4)), np.zeros(4), 4)
+        }
+        with open(path, "wb") as f:
+            pickle.dump(legacy, f)
+        assert common._load_cache(str(path)) is None
+
+    def test_stale_version_refused(self, tmp_path):
+        import pickle
+
+        from benchmarks import common
+        from repro.smt.training import RNG_STREAM_VERSION
+
+        path = tmp_path / "stale.pkl"
+        with open(path, "wb") as f:
+            pickle.dump(
+                {
+                    "rng_stream_version": RNG_STREAM_VERSION - 1,
+                    "models": {},
+                },
+                f,
+            )
+        assert common._load_cache(str(path)) is None
+
+    def test_current_version_roundtrips(self, tmp_path):
+        from benchmarks import common
+
+        path = str(tmp_path / "cur.pkl")
+        models = self._roundtrip_models()
+        common._save_cache(path, models)
+        loaded = common._load_cache(path)
+        assert loaded is not None and set(loaded) == {"TOY"}
+        np.testing.assert_array_equal(
+            np.asarray(loaded["TOY"].coeffs), np.asarray(models["TOY"].coeffs)
+        )
+        assert loaded["TOY"].n_categories == 4
+
+    def test_stale_seed_cache_deleted(self):
+        """The pre-vectorisation seed cache must not come back."""
+        stale = os.path.join(
+            os.path.dirname(__file__), "..", "benchmarks", "results",
+            "synpa_models.pkl",
+        )
+        if os.path.exists(stale):
+            from benchmarks import common
+
+            # if a cache exists it must be loadable under the current stream
+            assert common._load_cache(stale) is not None
+
+
+# ------------------------------------------------------ acceptance (slow)
+@pytest.mark.slow
+def test_cluster_sim_n256_run_to_target_end_to_end():
+    """Acceptance: a run-to-target churn workload at N=256, end to end,
+    under the streaming allocator."""
+    machine = mc.SMTMachine(mc.MachineParams(), seed=0)
+    pool = pool_profiles()
+    model = _toy_model()
+    rate = 256 / (machine.params.solo_reference_quanta * 0.1 * 1.3)
+    sim = ClusterSim(
+        machine, pool, n_cores=128,
+        policy=StreamingAllocator(isc.SYNPA4_R_FEBE, model),
+        arrivals=PoissonArrivals(rate=rate, n_pool=len(pool)),
+        seed=3, target_scale=0.1,
+    )
+    stats = sim.run(24)
+    assert stats.n_admitted > 128
+    assert stats.n_completed > 0
+    assert stats.mean_slowdown >= 1.0
+    assert stats.policy_us_per_quantum > 0
+
+
+@pytest.mark.slow
+def test_streaming_policy_speedup_n256():
+    """Acceptance: >= 2x policy-time reduction vs the cold path at N=256
+    on a static population, at no quality cost."""
+    machine = mc.SMTMachine(mc.MachineParams(), seed=0)
+    model = _toy_model()
+    profs = workloads.scaled_workload(256, seed=256)
+    res = machine.run_quanta_multi(
+        profs,
+        {
+            "cold": lambda: SynpaScheduler(isc.SYNPA4_R_FEBE, model),
+            "stream": lambda: StreamingScheduler(isc.SYNPA4_R_FEBE, model),
+        },
+        n_quanta=8,
+        seed=3,
+    )
+    cold, stream = res["cold"], res["stream"]
+    assert cold.sched_s_per_quantum / stream.sched_s_per_quantum >= 2.0, (
+        cold.sched_s_per_quantum, stream.sched_s_per_quantum
+    )
+    assert stream.mean_true_slowdown <= cold.mean_true_slowdown * 1.02

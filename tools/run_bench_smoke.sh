@@ -1,0 +1,9 @@
+#!/usr/bin/env bash
+# Sub-minute sanity run of the benchmark entry points (--smoke modes).
+# Wired into the test suite (tests/test_bench_smoke.py, marked `slow`) so
+# the benchmarks cannot rot without tier-1 noticing.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
+python benchmarks/online_churn.py --smoke
+python benchmarks/cluster_scale.py --smoke
