@@ -80,6 +80,7 @@ def main(quick: bool = False, smoke: bool = False) -> str:
                 "mean_true_slowdown": res.mean_true_slowdown,
                 "ipc_geomean": res.ipc_geomean,
                 "sched_ms_per_quantum": res.sched_s_per_quantum * 1e3,
+                "sched_ms_median": res.sched_s_per_quantum_median * 1e3,
                 "machine_ms_per_quantum": res.machine_s_per_quantum * 1e3,
             }
             for pname, res in multi.items()

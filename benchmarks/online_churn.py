@@ -7,13 +7,18 @@ compares, per (cluster size, churn level):
 
 * ``random``        — random pairing, churn patched randomly;
 * ``linux``         — sticky CFS-like pairing with occasional migrations;
-* ``synpa4-cold``   — the batch SYNPA4 path per quantum (cold inverse +
-                      full re-match; N <= COLD_MAX_N only — it is the
-                      wall-clock reason the streaming path exists);
-* ``synpa4-stream`` — warm-started inverse + incremental re-matching.
+* ``synpa4-cold``   — the batch SYNPA4 path per quantum (full re-match;
+                      N <= COLD_MAX_N unless ``--race-cold-at-full`` asks
+                      for the overnight full-size race);
+* ``synpa4-stream`` — the fused streaming path (stateless GN inverse +
+                      incremental re-matching).
 
 reporting per-job mean/p95 slowdown, turnaround, queue depth and policy
-µs/quantum.  A separate *static-population probe* races the cold and
+µs/quantum (mean *and* median — the median is the steady-state figure, the
+mean amortises one-off jit compilation over the horizon).  Slowdown CCDFs
+of every grid cell are recorded to ``results/online_churn_ccdf.json`` on
+``--full``/``--race-cold-at-full`` runs (the open-system analogue of the
+paper's Fig. 7).  A separate *static-population probe* races the cold and
 streaming SYNPA4 paths head-to-head on a closed workload at the largest
 sizes (``run_quanta_multi``: one PhaseTables build, bit-identical machine
 randomness per policy) — the policy-time speedup headline of the ROADMAP's
@@ -39,11 +44,13 @@ SMOKE_SIZES = (8, 32)
 CHURN = {"low": 0.85, "med": 1.0, "high": 1.2}
 COLD_MAX_N = 64               # full cold SYNPA in the churn grid up to here
 TARGET_SCALE = 0.25           # shrink §6.2 targets: jobs last ~15 quanta
-QUANTA = {8: 80, 32: 60, 64: 60, 256: 30, 1024: 12}
-PROBE_QUANTA = 8
+# Horizons: jobs last ~15 quanta after admission, so every size must run
+# past ~20 quanta for completions (and therefore slowdown CCDFs) to exist.
+QUANTA = {8: 80, 32: 60, 64: 60, 256: 30, 1024: 24}
+PROBE_QUANTA = 16
 
 
-def _policies(models, n_apps: int, smoke: bool):
+def _policies(models, n_apps: int, smoke: bool, cold_max_n: int = COLD_MAX_N):
     from repro.core import isc
     from repro.online import (
         LinuxOnline,
@@ -59,15 +66,20 @@ def _policies(models, n_apps: int, smoke: bool):
         "linux": lambda: LinuxOnline(),
         "synpa4-stream": lambda: StreamingAllocator(method, model),
     }
-    if n_apps <= COLD_MAX_N and not smoke:
+    if n_apps <= cold_max_n and not smoke:
         pols["synpa4-cold"] = lambda: StreamingAllocator(
             method, model, cold_config(), name="synpa4-cold"
         )
     return pols
 
 
-def _churn_grid(machine, models, sizes, churn_levels, smoke: bool) -> Dict:
-    """Open-system races: ClusterSim per (size, churn, policy)."""
+def _churn_grid(machine, models, sizes, churn_levels, smoke: bool,
+                cold_max_n: int = COLD_MAX_N, record_ccdf: bool = False):
+    """Open-system races: ClusterSim per (size, churn, policy).
+
+    Returns ``(grid, ccdfs)``; ``ccdfs`` holds per-cell slowdown CCDF
+    arrays when ``record_ccdf`` is set (else stays empty).
+    """
     from repro.online import ClusterSim, PoissonArrivals
     from repro.smt.apps import pool_profiles
     from repro.smt.machine import PhaseTables
@@ -78,31 +90,48 @@ def _churn_grid(machine, models, sizes, churn_levels, smoke: bool) -> Dict:
         machine.params.solo_reference_quanta * TARGET_SCALE * 1.3
     )  # solo quanta x typical SMT slowdown
     grid: Dict[str, Dict] = {}
+    ccdfs: Dict[str, Dict] = {}
     for n in sizes:
         n_cores = n // 2
         quanta = QUANTA.get(n, 30) if not smoke else 30
         row: Dict[str, Dict] = {}
+        row_ccdf: Dict[str, Dict] = {}
         for level, rho in churn_levels.items():
             rate = rho * n / mean_service_q
             arrivals = PoissonArrivals(rate=rate, n_pool=len(pool))
             cell = {}
-            for pname, factory in _policies(models, n, smoke).items():
+            cell_ccdf = {}
+            for pname, factory in _policies(
+                models, n, smoke, cold_max_n
+            ).items():
                 sim = ClusterSim(
                     machine, pool, n_cores, factory(), arrivals,
                     seed=11, target_scale=TARGET_SCALE, tables=tables,
                 )
                 stats = sim.run(quanta)
                 cell[pname] = stats.summary()
+                if record_ccdf:
+                    xs, ys = stats.ccdf()
+                    cell_ccdf[pname] = {
+                        "slowdown": [float(v) for v in xs],
+                        "ccdf": [float(v) for v in ys],
+                    }
             row[level] = cell
+            if record_ccdf:
+                row_ccdf[level] = cell_ccdf
         grid[str(n)] = row
-    return grid
+        if record_ccdf:
+            ccdfs[str(n)] = row_ccdf
+    return grid, ccdfs
 
 
 def _static_probe(machine, models, sizes, smoke: bool) -> Dict:
     """Closed static-population probe: cold vs streaming SYNPA4 policy cost.
 
     Uses ``run_quanta_multi`` so both policies face bit-identical machine
-    randomness off one shared PhaseTables build.
+    randomness off one shared PhaseTables build.  Reports the mean policy
+    time (amortising jit compile over the horizon) *and* the median — the
+    steady-state per-quantum cost a deployment would pay at 100 ms quanta.
     """
     from repro.core import isc
     from repro.core.synpa import SynpaScheduler
@@ -127,17 +156,26 @@ def _static_probe(machine, models, sizes, smoke: bool) -> Dict:
         out[str(n)] = {
             "cold_sched_ms_per_quantum": cold.sched_s_per_quantum * 1e3,
             "stream_sched_ms_per_quantum": stream.sched_s_per_quantum * 1e3,
+            "cold_sched_ms_median":
+                cold.sched_s_per_quantum_median * 1e3,
+            "stream_sched_ms_median":
+                stream.sched_s_per_quantum_median * 1e3,
             "policy_speedup": cold.sched_s_per_quantum
             / max(stream.sched_s_per_quantum, 1e-12),
+            "policy_speedup_median": cold.sched_s_per_quantum_median
+            / max(stream.sched_s_per_quantum_median, 1e-12),
             "cold_mean_true_slowdown": cold.mean_true_slowdown,
             "stream_mean_true_slowdown": stream.mean_true_slowdown,
         }
     return out
 
 
-def main(smoke: bool = False, full: bool = False, quick: bool = False) -> str:
+def main(smoke: bool = False, full: bool = False, quick: bool = False,
+         race_cold_at_full: bool = False) -> str:
     machine, models, _wls = get_env(fast=smoke)
     t_total = time.perf_counter()
+    cold_max_n = max(FULL_SIZES) if race_cold_at_full else COLD_MAX_N
+    full = full or race_cold_at_full
     if smoke:
         sizes, churn = SMOKE_SIZES, {"med": CHURN["med"]}
         probe_sizes = (32,)
@@ -148,14 +186,28 @@ def main(smoke: bool = False, full: bool = False, quick: bool = False) -> str:
         sizes = FULL_SIZES if full else SIZES
         churn = CHURN
         probe_sizes = tuple(n for n in sizes if n >= 256) or (max(sizes),)
-    grid = _churn_grid(machine, models, sizes, churn, smoke)
+    record_ccdf = full and not smoke
+    grid, ccdfs = _churn_grid(
+        machine, models, sizes, churn, smoke,
+        cold_max_n=cold_max_n, record_ccdf=record_ccdf,
+    )
     probe = _static_probe(machine, models, probe_sizes, smoke)
     results = {"churn": grid, "static_probe": probe,
-               "target_scale": TARGET_SCALE}
+               "target_scale": TARGET_SCALE,
+               "race_cold_at_full": race_cold_at_full}
     save_json("online_churn.json", results)
+    if record_ccdf:
+        save_json("online_churn_ccdf.json", ccdfs)
 
     big = str(max(int(k) for k in probe))
-    n_big = str(max(int(k) for k in grid))
+    # Headline slowdown gain: the largest size whose horizon produced
+    # completed jobs (per-job slowdown needs completions to exist).
+    n_big = str(max(
+        (int(k) for k, row in grid.items()
+         if all(c["n_completed"] > 0 for lv in row.values()
+                for c in lv.values())),
+        default=max(int(k) for k in grid),
+    ))
     level = "med" if "med" in grid[n_big] else next(iter(grid[n_big]))
     cell = grid[n_big][level]
     gain = (
@@ -166,7 +218,8 @@ def main(smoke: bool = False, full: bool = False, quick: bool = False) -> str:
     return csv_row(
         "online_churn", us,
         f"N={big} stream policy speedup {probe[big]['policy_speedup']:.1f}x "
-        f"vs cold (slowdown {probe[big]['stream_mean_true_slowdown']:.3f} vs "
+        f"mean / {probe[big]['policy_speedup_median']:.1f}x steady vs cold "
+        f"(slowdown {probe[big]['stream_mean_true_slowdown']:.3f} vs "
         f"{probe[big]['cold_mean_true_slowdown']:.3f}); "
         f"N={n_big} {level}-churn slowdown gain {gain:.2f}x vs random",
     )
@@ -180,5 +233,11 @@ if __name__ == "__main__":
                     help="include N=1024 in the churn grid")
     ap.add_argument("--quick", action="store_true",
                     help="cap the grid at N=64 (the benchmarks.run tier)")
+    ap.add_argument("--race-cold-at-full", action="store_true",
+                    help="race the synpa4-cold arm at every size of the "
+                    "--full grid (N=1024 included) instead of probe sizes "
+                    "only — the overnight run; implies --full and records "
+                    "the CCDF figures")
     args = ap.parse_args()
-    print(main(smoke=args.smoke, full=args.full, quick=args.quick))
+    print(main(smoke=args.smoke, full=args.full, quick=args.quick,
+               race_cold_at_full=args.race_cold_at_full))

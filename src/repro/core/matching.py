@@ -23,6 +23,14 @@ Four engines are provided:
 :func:`min_cost_pairs` picks the right engine and is the only entry point the
 schedulers use.  Costs may be floats; they are scaled to integers internally
 so the blossom dual arithmetic is exact.
+
+Cost preparation: the fused per-quantum pipeline
+(``repro.core.synpa.make_fused_step``) emits a *padded* device matrix whose
+invalid rows/columns carry the :data:`BIG` sentinel and whose idle-context
+vertex (odd populations) carries :data:`IDLE_COST` edges; :func:`compact_cost`
+gathers the compact active submatrix the engines above consume.  The
+constants live here so the device-side prep and the host-side matchers can
+never disagree about them.
 """
 
 from __future__ import annotations
@@ -34,6 +42,40 @@ import numpy as np
 Pairs = List[Tuple[int, int]]
 
 _INT_SCALE = 10**6
+
+#: Cost of pairing an application with the idle context: both "directions"
+#: run interference-free (slowdown 1.0 each), mirroring cost[i, j] =
+#: slowdown(i|j) + slowdown(j|i) for real pairs.
+IDLE_COST = 2.0
+
+#: Sentinel on self-pairings and padding entries of prepared cost matrices
+#: (matches the pair-score kernel's ``DIAG``).
+BIG = 1e9
+
+
+def compact_cost(cost: np.ndarray, rows: Sequence[int]) -> np.ndarray:
+    """Gather the matching submatrix for the given vertex rows.
+
+    ``cost`` is the padded (P, P) matrix of the fused pipeline (device or
+    host array); ``rows`` lists the active slots — plus the idle vertex
+    row, last, when the population is odd.  Returns the dense
+    (len(rows), len(rows)) matrix (native dtype) that
+    :func:`min_cost_pairs` and the repair/refine tiers operate on;
+    position ``k`` corresponds to ``rows[k]``.
+    """
+    idx = np.asarray(list(rows), dtype=np.int64)
+    # Materialise in the native dtype first (a plain buffer copy for device
+    # arrays); converting the full padded matrix to float64 through
+    # __array__ costs more than the gather itself.  The engines widen to
+    # float64 themselves where exactness requires it (min_cost_pairs), so
+    # the compact matrix keeps the native dtype — and a contiguous active
+    # set (every closed population, and open ones before churn fragments
+    # the slots) is a zero-copy slice.
+    host = np.asarray(cost)
+    n = idx.size
+    if n and idx[0] == 0 and idx[-1] == n - 1 and (np.diff(idx) == 1).all():
+        return host[:n, :n]
+    return host[np.ix_(idx, idx)]
 
 
 # ---------------------------------------------------------------------------
@@ -571,16 +613,32 @@ def _two_opt(cost: np.ndarray, pairs: Pairs, max_swaps: Optional[int] = None,
         row_mask = np.zeros(p, dtype=bool)
         row_mask[list(active_rows)] = True
 
-    def _refresh(r: int) -> None:
-        """Recompute row+column ``r`` of the candidate matrices."""
-        alt1[r, :] = cost[i[r], i] + cost[j[r], j]
-        alt1[:, r] = cost[i, i[r]] + cost[j, j[r]]
-        alt2[r, :] = cost[i[r], j] + cost[j[r], i]
-        alt2[:, r] = cost[i, j[r]] + cost[j, i[r]]
-        cur[r] = cost[i[r], j[r]]
-        delta[r, :] = np.minimum(alt1[r, :], alt2[r, :]) - (cur[r] + cur)
-        delta[:, r] = np.minimum(alt1[:, r], alt2[:, r]) - (cur + cur[r])
-        delta[r, r] = 0.0
+    def _refresh_two(r: int, s: int) -> None:
+        """Recompute rows+columns ``r`` and ``s`` of the candidate matrices.
+
+        Exactly the expressions the per-row reference refresh evaluates,
+        batched over the two touched pairs — the sequential version's
+        transient (row ``r`` built against the stale ``cur[s]``) is
+        overwritten by the column-``s`` update anyway, so updating ``cur``
+        for both pairs first yields bit-identical final matrices at half
+        the numpy-call count.
+        """
+        rs = [r, s]
+        cur[rs] = cost[i[rs], j[rs]]
+        ir, jr = i[rs][:, None], j[rs][:, None]
+        alt1[rs, :] = cost[ir, i[None, :]] + cost[jr, j[None, :]]
+        alt1[:, rs] = cost[i[:, None], i[rs][None, :]] + \
+            cost[j[:, None], j[rs][None, :]]
+        alt2[rs, :] = cost[ir, j[None, :]] + cost[jr, i[None, :]]
+        alt2[:, rs] = cost[i[:, None], j[rs][None, :]] + \
+            cost[j[:, None], i[rs][None, :]]
+        delta[rs, :] = np.minimum(alt1[rs, :], alt2[rs, :]) - (
+            cur[rs][:, None] + cur[None, :]
+        )
+        delta[:, rs] = np.minimum(alt1[:, rs], alt2[:, rs]) - (
+            cur[:, None] + cur[rs][None, :]
+        )
+        delta[r, r] = delta[s, s] = 0.0
 
     for _ in range(max_swaps):
         view = delta if row_mask is None else np.where(
@@ -594,28 +652,32 @@ def _two_opt(cost: np.ndarray, pairs: Pairs, max_swaps: Optional[int] = None,
             i[a], j[a], i[b], j[b] = ia, ib, ja, jb   # (i,k) and (j,l)
         else:
             i[a], j[a], i[b], j[b] = ia, jb, ja, ib   # (i,l) and (j,k)
-        _refresh(a)
-        _refresh(b)
+        _refresh_two(a, b)
         if row_mask is not None:
             row_mask[a] = row_mask[b] = True
     return sorted(tuple(sorted((int(x), int(y)))) for x, y in zip(i, j))
 
 
 def refine_pairs(cost: np.ndarray, pairs: Pairs,
-                 max_swaps: Optional[int] = None) -> Pairs:
+                 max_swaps: Optional[int] = None,
+                 eps: float = 1e-9) -> Pairs:
     """Re-converge an existing pairing against an updated cost matrix.
 
     The streaming allocator's warm re-matching tier: instead of re-running
     greedy + per-tile blossom from scratch every quantum, start the
-    incremental 2-opt from the previous quantum's pairing — after one
-    quantum of counter noise and phase drift that seed is a near-optimal
-    starting point and the 2-opt converges in a handful of swaps.
+    incremental 2-opt from the previous quantum's pairing.  ``eps`` is the
+    minimum improvement a swap must deliver: per-quantum counter noise
+    wiggles near-tie pair costs at the ~1e-3 level, and chasing those ties
+    costs hundreds of swaps per quantum for no real quality — the streaming
+    allocator passes its noise floor (``StreamingConfig.refine_eps``) so the
+    2-opt converges in a handful of swaps that actually matter.
     """
-    return _two_opt(cost, pairs, max_swaps=max_swaps)
+    return _two_opt(cost, pairs, max_swaps=max_swaps, eps=eps)
 
 
 def repair_pairs(cost: np.ndarray, kept_pairs: Pairs,
-                 dirty: Sequence[int]) -> Pairs:
+                 dirty: Sequence[int], eps: float = 1e-9,
+                 max_swaps: Optional[int] = None) -> Pairs:
     """Repair a matching after churn: match the ``dirty`` vertices, then run
     a local 2-opt that only considers swaps touching the repaired pairs.
 
@@ -626,6 +688,8 @@ def repair_pairs(cost: np.ndarray, kept_pairs: Pairs,
     every vertex exactly once.  The dirty set is matched exactly (blossom;
     it is small under realistic churn), appended, and the incremental 2-opt
     then ripples the repair outward only as far as it improves the matching.
+    ``eps`` bounds the minimum improvement per swap (see
+    :func:`refine_pairs`).
     """
     dirty = sorted(int(v) for v in dirty)
     assert len(dirty) % 2 == 0, "dirty vertex set must be even"
@@ -643,7 +707,8 @@ def repair_pairs(cost: np.ndarray, kept_pairs: Pairs,
         new_pairs = [(int(idx[a]), int(idx[b])) for a, b in sub_pairs]
     pairs = list(kept_pairs) + new_pairs
     active = range(len(kept_pairs), len(pairs))
-    return _two_opt(cost, pairs, active_rows=active)
+    return _two_opt(cost, pairs, active_rows=active, eps=eps,
+                    max_swaps=max_swaps)
 
 
 def _greedy_min_cost_pairs(cost: np.ndarray, two_opt: bool = True) -> Pairs:

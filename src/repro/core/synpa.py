@@ -12,11 +12,17 @@ Every quantum (100 ms), a SYNPA policy:
   Step 3. runs the Blossom algorithm on the predicted-degradation matrix and
           pins the selected pairs to cores for the next quantum.
 
-The per-quantum pipeline (stack repair -> inverse -> all-pairs forward) is a
-single jitted JAX function; Step 3 runs the exact Edmonds matching on host.
-The all-pairs forward model is also available as a Pallas TPU kernel
-(``repro.kernels.pair_score``) for cluster-scale N; at N = 8 the XLA path is
-used.
+Steps 0-2 plus the matching *cost preparation* (padding sentinels, the
+idle-context vertex for odd populations) are one fused jitted dispatch —
+:func:`make_fused_step` — shared verbatim by the batch scheduler here and
+the streaming allocator (``repro.online``): per quantum there is exactly one
+host->device transfer (the counter matrix) and one device->host transfer
+(the prepared cost matrix + updated ST stacks).  Each co-running pair is
+solved *once* (row i and row j pose the same bilinear system with the roles
+swapped), by the damped Gauss-Newton engine of ``regression.inverse``.
+Step 3 runs the exact Edmonds matching on host.  The all-pairs forward model
+is also available as a Pallas TPU kernel (``repro.kernels.pair_score``) for
+cluster-scale N; at N = 8 the XLA path is used.
 """
 
 from __future__ import annotations
@@ -80,38 +86,196 @@ def _partner_index(pairs: Sequence[Pair], n: int) -> np.ndarray:
     return partner
 
 
+def fused_pad(n: int) -> int:
+    """Padded vertex count of the fused pipeline: the smallest multiple of 8
+    with room for the idle-context vertex (row ``n``).  Capacity is fixed
+    per simulation, so the padded shape — and therefore the compiled
+    program — is stable across quanta regardless of churn."""
+    return max(8, ((n + 1 + 7) // 8) * 8)
+
+
+def make_fused_step(
+    method: isc.StackMethod,
+    model: regression.CategoryModel,
+    impl: str = "auto",
+    solver: str = "gn",
+    gn_steps: int = regression.GN_STEPS,
+    hb_steps: int = 80,
+    lr: float = 1.5,
+    warm: bool = False,
+):
+    """The fused per-quantum SYNPA dispatch (Steps 0-2 + cost preparation).
+
+    Returns ``step(counters, partner, prev_st, masks, idle)`` with, for
+    capacity ``n`` and ``P = fused_pad(n)``:
+
+    * ``counters``  (n, 5) f32 — previous-quantum PMU rows by slot;
+    * ``partner``   (n,)  i32 — co-runner slot (self for solo/no-partner);
+    * ``prev_st``   (n, 4) f32 — carried ST estimates (uniform placeholder
+      for slots without one); rows that do not solve pass through — callers
+      feed the returned ``st`` straight back next quantum, so the estimate
+      state never leaves the device;
+    * ``masks``     (4, n) bool — one packed host->device transfer, rows:
+
+      0. *solve* — slot co-ran and its estimate should refresh;
+      1. *solo*  — slot ran alone: its measured fractions *are* its ST
+         stack (paper §5.3 degenerate case), no inverse needed;
+      2. *valid* — slot hosts an active application;
+      3. *fresh* — reset the slot to the uniform placeholder (an arrival
+         whose first counters have not happened yet);
+
+    * ``idle``      bool scalar — augment the idle-context vertex (row
+      ``n``) with :data:`repro.core.matching.IDLE_COST` edges.
+
+    and returns ``(cost (P, P) f32, st (n, 4) f32)``: the prepared matching
+    matrix (sentinels on padding/invalid entries, idle edges when asked) and
+    the refreshed ST stacks.  Everything is one jit graph: ISC stack repair,
+    the §5.3 inverse — each co-running pair solved once, scattered to both
+    slots — the all-pairs Eq. 4 scoring, and the cost preparation.
+
+    ``solver`` picks the §5.3 engine: ``"gn"`` (damped Gauss-Newton with
+    in-graph heavy-ball fallback; ``hb_steps`` is the fallback budget) is
+    stateless — it starts from the measured fractions, so its result is a
+    pure function of this quantum's counters and ``warm`` is ignored.
+    ``"hb"`` is the retained gradient reference; with ``warm=True`` it
+    starts from ``prev_st`` (plus the measured-fraction guard start).
+    """
+    from repro.kernels.pair_score.ref import DIAG as _KERNEL_DIAG
+
+    # The kernel's padding sentinel and the matcher's must be the same
+    # value, or padded rows could out-compete real edges in the matching.
+    assert _KERNEL_DIAG == matching.BIG, (_KERNEL_DIAG, matching.BIG)
+
+    ncat = method.n_categories
+    uniform = jnp.asarray(
+        [1.0 / ncat if k < ncat else 0.0 for k in range(isc.N_CATS)],
+        jnp.float32,
+    )
+
+    @jax.jit
+    def step(counters, partner, prev_st, masks, idle):
+        solve_mask, solo_mask, valid_mask, fresh_mask = (
+            masks[0], masks[1], masks[2], masks[3]
+        )
+        n = counters.shape[0]
+        p = fused_pad(n)
+        idx = jnp.arange(n)
+
+        # Step 0: measured SMT stack fractions of every slot.
+        raw = isc.raw_stack(
+            counters[:, 0], counters[:, 1], counters[:, 2], counters[:, 3],
+            dtype=jnp.float32,
+        )
+        frac = isc.build_stack(raw, method)
+
+        # Step 1: one inverse solve per co-running *pair*.  Row i and row j
+        # pose the same system with the roles swapped, so only the
+        # lower-index side of each pair solves and both slots receive their
+        # estimate from that single trajectory (which also makes the two
+        # sides' estimates mutually consistent).
+        first = solve_mask & (idx < partner)
+        order = jnp.argsort(~first)          # pair-firsts to the front
+        take = order[: n // 2]
+        p_take = partner[take]
+        valid = first[take]
+        v1 = valid[:, None]
+        fi = jnp.where(v1, frac[take], uniform)
+        fj = jnp.where(v1, frac[p_take], uniform)
+        if solver == "gn":
+            si, sj = regression._gn_with_fallback(
+                model, fi, fj, gn_steps=gn_steps, hb_steps=hb_steps, lr=lr
+            )
+        else:
+            assert solver == "hb", solver
+            if warm:
+                ii = jnp.where(v1, prev_st[take], uniform)
+                ij = jnp.where(v1, prev_st[p_take], uniform)
+            else:
+                ii = ij = None
+            si, sj = regression._hb_best_of(
+                model, fi, fj, hb_steps, lr, init_i=ii, init_j=ij
+            )
+        st = prev_st
+        st = st.at[take].set(jnp.where(v1, si, st[take]))
+        st = st.at[p_take].set(jnp.where(valid[:, None], sj, st[p_take]))
+        # A slot that ran alone measured its ST stack directly.
+        st = jnp.where(solo_mask[:, None], frac, st)
+        # Arrivals reset to the uniform placeholder (their slot may carry a
+        # departed occupant's estimate until their first counters land).
+        st = jnp.where(fresh_mask[:, None], uniform[None, :], st)
+
+        # Step 2: all-pairs Eq. 4 scoring on the padded stack matrix.
+        stp = jnp.concatenate(
+            [st, jnp.tile(uniform[None, :], (p - n, 1))], axis=0
+        )
+        cost = regression.pair_cost_matrix(
+            model, stp, impl=impl, n_valid=n
+        )
+
+        # Step 3 prep: sentinel out inactive slots, wire the idle vertex.
+        validp = jnp.concatenate(
+            [valid_mask, jnp.zeros((p - n,), bool)]
+        )
+        pairv = validp[:, None] & validp[None, :]
+        cost = jnp.where(pairv, cost, matching.BIG)
+        is_idle = (jnp.arange(p) == n) & idle
+        cost = jnp.where(
+            is_idle[:, None] & validp[None, :], matching.IDLE_COST, cost
+        )
+        cost = jnp.where(
+            validp[:, None] & is_idle[None, :], matching.IDLE_COST, cost
+        )
+        return cost, st
+
+    return step
+
+
 def make_synpa_pipeline(
     method: isc.StackMethod,
     model: regression.CategoryModel,
     impl: str = "auto",
     n_steps: int = 80,
+    solver: str = "gn",
+    gn_steps: int = regression.GN_STEPS,
 ):
     """One jitted function: PMU counters + current partners -> pair costs.
 
-    Returns ``fn(counters (N,5) f32, partner (N,) i32) -> (cost (N,N), st (N,4))``.
+    Returns ``fn(counters (N,5) f32, partner (N,) i32) -> (cost (N,N), st (N,4))``
+    — the closed-population view of :func:`make_fused_step` (every slot
+    active and co-running, no idle vertex), used by the batch
+    :class:`SynpaScheduler`.
 
     ``impl`` picks the Step-2 all-pairs backend (see
     :func:`repro.core.regression.pair_cost_matrix`); "auto" routes
     cluster-scale N through the tiled Pallas kernel on TPU and the XLA
     lowering elsewhere.  The choice is resolved per input shape, so one
-    pipeline instance serves any N.  ``n_steps`` is the §5.3 inverse-solve
-    budget (the online subsystem's warm-started pipelines pass a smaller
-    one; see ``repro.online``).
+    pipeline instance serves any N.  ``n_steps`` is the heavy-ball §5.3
+    budget — the fallback budget under ``solver="gn"``, the full budget
+    under ``solver="hb"``.
     """
+    step = make_fused_step(
+        method, model, impl=impl, solver=solver, gn_steps=gn_steps,
+        hb_steps=n_steps, warm=False,
+    )
 
     @jax.jit
     def pipeline(counters: jnp.ndarray, partner: jnp.ndarray):
-        raw = isc.raw_stack(
-            counters[:, 0], counters[:, 1], counters[:, 2], counters[:, 3],
-            dtype=jnp.float32,
+        n = counters.shape[0]
+        ones = jnp.ones((n,), bool)
+        zeros = jnp.zeros((n,), bool)
+        prev = jnp.tile(
+            jnp.asarray(
+                [1.0 / method.n_categories if k < method.n_categories
+                 else 0.0 for k in range(isc.N_CATS)], jnp.float32
+            )[None, :],
+            (n, 1),
         )
-        smt = isc.build_stack(raw, method)               # Step 0
-        smt_partner = smt[partner]
-        st, _ = regression.inverse(
-            model, smt, smt_partner, n_steps=n_steps
-        )                                                # Step 1
-        cost = regression.pair_cost_matrix(model, st, impl=impl)  # Step 2
-        return cost, st
+        masks = jnp.stack([ones, zeros, ones, zeros])
+        cost, st = step(
+            counters.astype(jnp.float32), partner.astype(jnp.int32), prev,
+            masks, jnp.asarray(False),
+        )
+        return cost[:n, :n], st
 
     return pipeline
 
@@ -126,12 +290,16 @@ class SynpaScheduler(Scheduler):
         name: Optional[str] = None,
         matcher: str = "auto",
         pair_impl: str = "auto",
+        solver: str = "gn",
+        n_steps: int = 80,
     ):
         self.method = method
         self.model = model
         self.name = name or f"SYNPA{method.n_categories}_{method.name.split('_', 1)[1]}"
         self.matcher = matcher
-        self._pipeline = make_synpa_pipeline(method, model, impl=pair_impl)
+        self._pipeline = make_synpa_pipeline(
+            method, model, impl=pair_impl, n_steps=n_steps, solver=solver
+        )
 
     def schedule(self, quantum, samples, prev_pairs):
         if not self._have_samples(samples) or not prev_pairs:

@@ -25,27 +25,43 @@ def resolve_impl(impl: str, n: int) -> str:
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("n_categories", "impl", "block"))
-def _pair_costs(st, coeffs, n_categories: int, impl: str, block: int):
-    if impl == "xla":
-        return pair_cost_ref(st, coeffs, n_categories)
+                   static_argnames=("n_categories", "impl", "block",
+                                    "n_valid"))
+def _pair_costs(st, coeffs, n_categories: int, impl: str, block: int,
+                n_valid=None):
     n = st.shape[0]
+    if impl == "xla":
+        out = pair_cost_ref(st, coeffs, n_categories)
+        if n_valid is not None and n_valid < n:
+            idx = jnp.arange(n)
+            invalid = (idx[:, None] >= n_valid) | (idx[None, :] >= n_valid)
+            out = jnp.where(invalid, DIAG, out)
+        return out
     pad = (-n) % block
     stp = jnp.pad(st.astype(jnp.float32), ((0, pad), (0, 0)))
     out = pair_score_pallas(
         stp, coeffs, n_categories=n_categories, block=block,
-        interpret=(impl == "pallas_interpret"), n_valid=n)
+        interpret=(impl == "pallas_interpret"),
+        n_valid=n if n_valid is None else n_valid)
     return out[:n, :n]
 
 
 def pair_costs(st, coeffs, n_categories: int = 4, impl: str = "xla",
-               block: int = BLOCK):
+               block: int = BLOCK, n_valid=None):
     """All-pairs SYNPA pair costs.
 
     st: (N, C) ST stacks.  coeffs: (C, 4) Eq. 4 coefficients.
     impl: "xla" (oracle path, default on CPU), "pallas" (TPU tiled grid),
     "pallas_interpret" (CPU validation of the TPU kernel body), or "auto"
     (pallas on TPU for N >= PALLAS_MIN_N, xla otherwise).
+
+    ``n_valid``: when given, ``st`` is treated as padded — rows at or past
+    ``n_valid`` are padding and every cost entry touching them carries the
+    ``DIAG`` sentinel, while the result keeps the full padded (N, N) shape.
+    This is how the fused per-quantum pipeline keeps stable shapes: it pads
+    once up front and consumes the sentinel-bordered matrix directly.  Both
+    backends honour it — the Pallas kernel masks in-tile, the XLA reference
+    masks on top of the dense broadcast.
     """
     return _pair_costs(st, coeffs, n_categories,
-                       resolve_impl(impl, st.shape[0]), block)
+                       resolve_impl(impl, st.shape[0]), block, n_valid)

@@ -1,24 +1,22 @@
 """Online thread-to-core allocation under churn — the streaming SYNPA path.
 
-The closed-system :class:`repro.core.synpa.SynpaScheduler` re-derives
-everything from scratch every quantum: an 80-step cold inverse solve for all
-N applications and a full re-match of the whole population.  In an open
-system that is wasteful twice over: the population barely changes between
-quanta (arrivals and departures touch a handful of slots), and the previous
-quantum's solution is an excellent starting point for both the §5.3 inverse
-solve and the matching.
+The closed-system :class:`repro.core.synpa.SynpaScheduler` and this
+streaming allocator now share one engine: the **fused per-quantum dispatch**
+(:func:`repro.core.synpa.make_fused_step`).  Per quantum there is exactly
+one jitted device call — ISC stack repair, the §5.3 inverse (damped
+Gauss-Newton, one solve per co-running *pair*), the all-pairs Eq. 4 scoring
+and the matching cost preparation (padding sentinels + the idle-context
+vertex) — and one device->host transfer of the prepared cost matrix.  The
+padded shape is a pure function of the context capacity, so the compiled
+program is stable across churn: arrivals and departures change mask
+contents, never shapes.
 
-:class:`StreamingAllocator` exploits both:
+What remains stateful:
 
-* **Warm-started inverse** — surviving applications re-solve Eq. 4's
-  inverse starting from their previous quantum's converged ST stacks with a
-  fraction of the cold gradient budget (``warm_steps`` vs 2x80 steps);
-  newly arrived applications are cold-started exactly like the batch
-  scheduler.  The warm trajectory reaches the cold solve's residual level
-  in strictly fewer gradient steps (property-tested), and a measured-
-  fraction guard start bounds the damage of a stale init after an abrupt
-  phase change.
-
+* **ST placeholders** — a slot whose application has not produced counters
+  yet (admitted this quantum) scores with the uniform stack until its first
+  quantum completes; a slot that ran *alone* takes its measured fractions as
+  its ST stack directly (no co-runner, nothing to invert).
 * **Incremental re-matching** — on churn quanta the surviving pairs are
   kept, the uncovered vertices (arrivals, widows, a previously idle
   context) are matched exactly among themselves, and the incremental
@@ -29,24 +27,28 @@ solve and the matching.
   (:func:`repro.core.matching.refine_pairs`) at cluster scale, where the
   batch tier itself is heuristic.
 
-**Exactness.**  The §5.3 inverse landscape is a flat valley under PMU
-noise: past ~40 gradient steps the residual barely moves while the ST point
-keeps creeping (see ``docs/online.md``), so two different descent
-trajectories — warm vs cold — land on equal-quality but not bitwise-equal
-stacks, and with near-tie pair costs the discrete matching can differ.
-Bit-identical behaviour therefore has exactly one honest implementation:
-run the cold computation.  :func:`exact_config` does precisely that —
-cold inverse + full re-match on static quanta (bit-identical pairings to
-``SynpaScheduler.schedule`` by construction, integration-tested) while
-still repairing incrementally on churn, where the batch path has no
-equivalent.  The default config trades bitwise identity for speed and is
-held to the *quality* bar instead: ground-truth mean slowdown within noise
-of the cold path (benchmarked and tested).
+**Exactness.**  The Gauss-Newton inverse is *stateless*: it starts from the
+measured fractions and converges to float-noise residuals in a handful of
+LM steps, so its result is a pure function of this quantum's counters — no
+warm-start trajectory, no history dependence.  The warm/cold distinction
+that PR 2's gradient solver needed (and that capped its warm path at
+quality-equal) therefore collapses for the inverse: every configuration
+computes the *same* ST stacks, bitwise.  What still distinguishes
+:func:`exact_config` from the default is only the matcher tier: exact mode
+re-matches static quanta in full (bit-identical pairings to
+``SynpaScheduler.schedule`` on static populations — integration-tested),
+while the default re-converges the previous pairing past the blossom tier
+(``rematch="auto"``), which is quality-equal but not bitwise above
+``BLOSSOM_MAX_N``.  The retained heavy-ball engine (``solver="hb"``)
+approximates the PR 2 solver for A/B comparisons — same two-start descent
+and warm inits, but through the fused single-budget dispatch, so e.g. an
+arrival's first-counter solve gets the warm budget rather than PR 2's
+separate 80-step cold dispatch.
 
 Odd populations follow the idle-context convention: a virtual idle vertex
-with edge cost :data:`IDLE_COST` (= 1.0 + 1.0, two interference-free
-slowdowns) joins the matching, and whoever pairs with it runs alone on its
-core that quantum.
+with edge cost :data:`repro.core.matching.IDLE_COST` (= 1.0 + 1.0, two
+interference-free slowdowns) joins the matching, and whoever pairs with it
+runs alone on its core that quantum.
 """
 
 from __future__ import annotations
@@ -54,26 +56,16 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import isc, matching, regression
-from repro.core.synpa import Scheduler, _partner_index
+from repro.core.matching import IDLE_COST
+from repro.core.synpa import Scheduler, make_fused_step
 
 Pair = Tuple[int, int]
 
-#: Cost of pairing an application with the idle context: both "directions"
-#: run interference-free (slowdown 1.0 each), mirroring cost[i, j] =
-#: slowdown(i|j) + slowdown(j|i) for real pairs.
-IDLE_COST = 2.0
-
-_BIG = 1e9
-
-
-def _pow2(n: int, lo: int = 8) -> int:
-    """Round a batch size up to a power of two (bounded jit recompiles)."""
-    return max(lo, 1 << max(n - 1, 1).bit_length())
+_BIG = matching.BIG
 
 
 class OnlinePolicy:
@@ -179,31 +171,46 @@ class LinuxOnline(RandomOnline):
 class StreamingConfig:
     """Knobs of the streaming allocator (see module docstring)."""
 
-    warm: bool = True            # warm-start the inverse for survivors
-    warm_steps: int = 24         # gradient budget per warm start
-    cold_steps: int = 80         # §5.3 budget for cold starts (paper path)
+    solver: str = "gn"           # §5.3 engine: "gn" (default) or "hb"
+    gn_steps: int = regression.GN_STEPS   # LM budget per GN solve
+    warm: bool = True            # hb only: warm-start from previous ST
+    warm_steps: int = 24         # hb budget when warm
+    cold_steps: int = 80         # hb budget when cold / gn fallback budget
     incremental: bool = True     # repair the matching on churn
     rematch: str = "auto"        # static-quantum re-match: full/refine/auto
     matcher: str = "auto"        # engine for full re-matches
     pair_impl: str = "auto"      # Step-2 backend (kernels.pair_score)
+    #: Minimum cost improvement the refine/repair 2-opt tiers act on.
+    #: Counter noise wiggles near-tie pair costs at the 1e-3..1e-2 level per
+    #: quantum; swaps below this floor churn the pairing without moving
+    #: ground-truth quality (hundreds of swaps/quantum at cluster N, each
+    #: O(P)).  Full re-matches (the exact/cold paths) never use it.
+    refine_eps: float = 1e-2
+    #: Swap budget per refine/repair pass.  Bounds the matcher's latency on
+    #: a single quantum; the 2-opt applies best-improvement-first, so the
+    #: budget takes the swaps that matter and the residual (sub-noise)
+    #: drift is repaired over the following quanta.
+    refine_max_swaps: int = 24
 
 
 def cold_config() -> StreamingConfig:
-    """The batch SYNPA path verbatim: cold inverse + full re-match every
-    quantum.  The reference arm of the online benchmarks."""
+    """The batch SYNPA path verbatim: stateless inverse + full re-match
+    every quantum.  The reference arm of the online benchmarks."""
     return StreamingConfig(warm=False, incremental=False, rematch="full")
 
 
 def exact_config() -> StreamingConfig:
     """Bit-identical to ``SynpaScheduler.schedule`` on static populations
-    (cold inverse + full re-match), incremental repair only on churn quanta
-    — the safety configuration when bitwise reproducibility matters more
-    than policy latency."""
+    (same fused dispatch + full re-match), incremental repair only on churn
+    quanta — the safety configuration when bitwise reproducibility matters
+    more than policy latency.  With the (stateless) Gauss-Newton inverse
+    the only thing this switches off versus the default config is the
+    ``refine`` matcher tier above ``BLOSSOM_MAX_N``."""
     return StreamingConfig(warm=False, incremental=True, rematch="full")
 
 
 class StreamingAllocator(OnlinePolicy):
-    """SYNPA with warm-started inverse + incremental re-matching."""
+    """SYNPA through the fused dispatch + incremental re-matching."""
 
     def __init__(
         self,
@@ -214,8 +221,12 @@ class StreamingAllocator(OnlinePolicy):
     ):
         self.method = method
         self.model = model
-        self.cfg = config or StreamingConfig()
-        mode = "stream" if (self.cfg.warm or self.cfg.incremental) else "cold"
+        self.cfg = cfg = config or StreamingConfig()
+        # The auto-name reflects matcher statefulness (the inverse is
+        # stateless under the default GN solver): cold = full re-match
+        # every quantum, stream = anything that carries pairing state.
+        mode = "stream" if (cfg.incremental or cfg.rematch != "full") \
+            else "cold"
         self.name = name or (
             f"SYNPA{method.n_categories}_{method.name.split('_', 1)[1]}"
             f"-{mode}"
@@ -225,171 +236,74 @@ class StreamingAllocator(OnlinePolicy):
             [1.0 / ncat if k < ncat else 0.0 for k in range(isc.N_CATS)],
             dtype=np.float32,
         )
-        model_ = model
-        cfg = self.cfg
-
-        def _cold(fi, fj):
-            return regression.inverse(model_, fi, fj, n_steps=cfg.cold_steps)
-
-        def _warm(fi, fj, ii, ij):
-            return regression.inverse(
-                model_, fi, fj, n_steps=cfg.warm_steps, init_i=ii, init_j=ij
-            )
-
-        def _cost(st):
-            return regression.pair_cost_matrix(
-                model_, st, impl=cfg.pair_impl
-            )
-
-        self._cold_fn = jax.jit(_cold)
-        self._warm_fn = jax.jit(_warm)
-        self._cost_fn = jax.jit(_cost)
+        hb_steps = (
+            cfg.warm_steps if (cfg.solver == "hb" and cfg.warm)
+            else cfg.cold_steps
+        )
+        self._step = make_fused_step(
+            method, model, impl=cfg.pair_impl, solver=cfg.solver,
+            gn_steps=cfg.gn_steps, hb_steps=hb_steps, warm=cfg.warm,
+        )
 
     # ------------------------------------------------------------ lifecycle
     def reset(self, machine, rng: np.random.Generator) -> None:
         super().reset(machine, rng)
-        self._st: Dict[int, np.ndarray] = {}    # slot -> last ST stack
-        # Slots whose _st entry is only the admission placeholder (uniform):
-        # their first counters get the full cold solve, not a warm start.
-        self._cold_pending: set = set()
+        self._st = None    # (capacity, 4) device-resident ST estimates
 
-    # ------------------------------------------------------------ pipeline
-    def _fractions(self, counters: np.ndarray) -> np.ndarray:
-        """Step 0: repaired measured SMT stack fractions for counter rows."""
-        c = jnp.asarray(counters, jnp.float32)
-        raw = isc.raw_stack(c[:, 0], c[:, 1], c[:, 2], c[:, 3],
-                            dtype=jnp.float32)
-        return np.asarray(isc.build_stack(raw, self.method))
-
-    def _solve(
-        self,
-        frac_i: np.ndarray,
-        frac_j: np.ndarray,
-        init_i: Optional[np.ndarray] = None,
-        init_j: Optional[np.ndarray] = None,
-    ) -> np.ndarray:
-        """Step 1 on a row batch, padded to a power of two (jit reuse)."""
-        m = frac_i.shape[0]
-        if m == 0:
-            return np.zeros((0, isc.N_CATS), np.float32)
-        p = _pow2(m)
-        pad = np.tile(self._uniform, (p, 1))
-        fi, fj = pad.copy(), pad.copy()
-        fi[:m], fj[:m] = frac_i, frac_j
-        if init_i is None:
-            st_i, _ = self._cold_fn(fi, fj)
-        else:
-            ii, ij = pad.copy(), pad.copy()
-            ii[:m], ij[:m] = init_i, init_j
-            st_i, _ = self._warm_fn(fi, fj, ii, ij)
-        return np.asarray(st_i)[:m]
-
-    def _cost_matrix(self, st_rows: np.ndarray) -> np.ndarray:
-        """Step 2 on the active population, padded to a power of two."""
-        a = st_rows.shape[0]
-        p = _pow2(a)
-        pad = np.tile(self._uniform, (p, 1))
-        pad[:a] = st_rows
-        cost = np.asarray(self._cost_fn(pad), np.float64)
-        return cost[:a, :a]
+    def _ensure_state(self, capacity: int) -> None:
+        if self._st is None or self._st.shape[0] != capacity:
+            self._st = jnp.asarray(np.tile(self._uniform, (capacity, 1)))
 
     # ------------------------------------------------------------- pairing
     def pair(self, q, active, counters, ran, arrived, departed,
              prev_pairs, prev_solo):
         active = np.asarray(active, np.int64)
         arrived_set = set(int(s) for s in arrived)
+        capacity = int(counters.shape[0])
         if not prev_pairs and prev_solo is None:
             # First quantum with runnable applications: no counters yet.
-            self._st = {}
-            self._cold_pending = set()
+            self._st = None
+            self._ensure_state(capacity)
             return self._random_pairing(active)
+        self._ensure_state(capacity)
 
-        # --- Steps 0-1: update ST stacks from the previous quantum's run.
-        frac: Dict[int, np.ndarray] = {}
-        ran_slots = [s for p in prev_pairs for s in p]
-        if prev_solo is not None:
-            ran_slots.append(prev_solo)
-        ran_slots = [s for s in ran_slots if ran[s]]
-        if ran_slots:
-            rows = self._fractions(counters[np.asarray(ran_slots)])
-            frac = {s: rows[k] for k, s in enumerate(ran_slots)}
-        partner: Dict[int, int] = {}
-        for a, b in prev_pairs:
-            partner[a], partner[b] = b, a
-
-        # An application that ran with an idle context measured its ST stack
-        # directly — no inverse needed.
-        if prev_solo is not None and prev_solo in frac and \
-                prev_solo not in arrived_set and prev_solo in set(
-                    int(s) for s in active):
-            self._st[prev_solo] = frac[prev_solo]
-            self._cold_pending.discard(prev_solo)
-
-        # Survivors that co-ran split into warm rows (have a *converged*
-        # cached ST) and cold rows (first counters of a newly admitted
-        # application, whose cache entry is only the uniform placeholder).
-        alive = set(int(s) for s in active) - arrived_set
-        corun = [
-            s for s in ran_slots
-            if s in partner and s in alive and partner[s] in frac
-        ]
-        warm_rows = [
-            s for s in corun
-            if self.cfg.warm and s in self._st
-            and s not in self._cold_pending
-        ]
-        cold_rows = [s for s in corun if s not in warm_rows]
-
-        def _stack_init(s: int) -> np.ndarray:
-            return self._st.get(s, frac[s])
-
-        if cold_rows:
-            st = self._solve(
-                np.stack([frac[s] for s in cold_rows]),
-                np.stack([frac[partner[s]] for s in cold_rows]),
-            )
-            for k, s in enumerate(cold_rows):
-                self._st[s] = st[k]
-                self._cold_pending.discard(s)
-        if warm_rows:
-            st = self._solve(
-                np.stack([frac[s] for s in warm_rows]),
-                np.stack([frac[partner[s]] for s in warm_rows]),
-                np.stack([_stack_init(s) for s in warm_rows]),
-                np.stack([_stack_init(partner[s]) for s in warm_rows]),
-            )
-            for k, s in enumerate(warm_rows):
-                self._st[s] = st[k]
-
-        # Drop state of departed occupants; newcomers start from a uniform
-        # placeholder until their first counters arrive next quantum (their
-        # first solve is then the full cold one).
-        for s in departed:
-            self._st.pop(int(s), None)
-            self._cold_pending.discard(int(s))
-        for s in arrived_set:
-            self._st[s] = self._uniform.copy()
-            self._cold_pending.add(s)
-        for s in active:
-            if int(s) not in self._st:
-                self._st[int(s)] = self._uniform.copy()
-                self._cold_pending.add(int(s))
-
-        # --- Steps 2-3: pair cost matrix + (incremental) matching.
+        # --- Build the fused-dispatch masks from the previous quantum.
+        partner = np.arange(capacity, dtype=np.int32)
+        masks = np.zeros((4, capacity), bool)   # solve, solo, valid, fresh
+        if prev_pairs:
+            pp = np.asarray(prev_pairs, np.int64).reshape(-1, 2)
+            both_ran = ran[pp[:, 0]] & ran[pp[:, 1]]
+            pa, pb = pp[both_ran, 0], pp[both_ran, 1]
+            partner[pa], partner[pb] = pb, pa
+            masks[0, pa] = masks[0, pb] = True
+        if prev_solo is not None and ran[prev_solo]:
+            masks[1, prev_solo] = True
+        masks[2, active] = True
+        if arrived_set:
+            masks[3, list(arrived_set)] = True
         a_count = int(active.size)
+        odd = a_count % 2 == 1
+
+        # --- Steps 0-2 + cost prep: one device dispatch, one transfer back.
+        # The ST estimate state stays on the device: the returned ``st``
+        # feeds the next quantum's call directly.
+        cost_dev, self._st = self._step(
+            np.asarray(counters, np.float32),
+            partner,
+            self._st,
+            masks,
+            odd,
+        )
+
         if a_count == 1:
             return [], int(active[0])
-        st_rows = np.stack([self._st[int(s)] for s in active])
-        cost_act = self._cost_matrix(st_rows)
-        odd = a_count % 2 == 1
-        nv = a_count + 1 if odd else a_count
-        cost = np.full((nv, nv), _BIG)
-        cost[:a_count, :a_count] = cost_act
-        if odd:
-            cost[a_count, :a_count] = IDLE_COST
-            cost[:a_count, a_count] = IDLE_COST
+
+        # --- Step 3: (incremental) matching on the compact active set.
+        rows = [int(s) for s in active] + ([capacity] if odd else [])
+        cost = matching.compact_cost(np.asarray(cost_dev), rows)
+        nv = len(rows)
         compact = {int(s): k for k, s in enumerate(active)}
-        idle = a_count if odd else None
+        idle = nv - 1 if odd else None
 
         churn = bool(arrived_set) or bool(departed) or (
             prev_solo is not None and not odd
@@ -403,13 +317,19 @@ class StreamingAllocator(OnlinePolicy):
         if churn and self.cfg.incremental and kept:
             covered = {v for p in kept for v in p}
             dirty = [v for v in range(nv) if v not in covered]
-            pairs_c = matching.repair_pairs(cost, kept, dirty)
+            pairs_c = matching.repair_pairs(
+                cost, kept, dirty, eps=self.cfg.refine_eps,
+                max_swaps=self.cfg.refine_max_swaps,
+            )
         else:
             mode = self.cfg.rematch
             if mode == "auto":
                 mode = "full" if nv <= matching.BLOSSOM_MAX_N else "refine"
             if mode == "refine" and not churn and len(kept) == nv // 2:
-                pairs_c = matching.refine_pairs(cost, kept)
+                pairs_c = matching.refine_pairs(
+                    cost, kept, eps=self.cfg.refine_eps,
+                    max_swaps=self.cfg.refine_max_swaps,
+                )
             else:
                 pairs_c = matching.min_cost_pairs(
                     cost, method=self.cfg.matcher
@@ -431,8 +351,8 @@ class StreamingScheduler(Scheduler):
     """Closed-system adapter: the streaming allocator as a drop-in
     :class:`repro.core.synpa.Scheduler`.
 
-    Lets ``SMTMachine.run_workload``/``run_quanta`` race the warm-started
-    path directly against the cold :class:`SynpaScheduler` on the *same*
+    Lets ``SMTMachine.run_workload``/``run_quanta`` race the streaming
+    path directly against the batch :class:`SynpaScheduler` on the *same*
     fixed population — the exactness and policy-cost comparisons of the
     acceptance tests.  Consumes the policy RNG exactly like SynpaScheduler
     (one permutation before samples exist), so a run only diverges if the
@@ -456,7 +376,7 @@ class StreamingScheduler(Scheduler):
     def schedule(self, quantum, samples, prev_pairs):
         if not self._have_samples(samples) or not prev_pairs:
             return self._random_pairs()
-        counters = self._counters_array(samples).astype(np.float64)
+        counters = self._counters_array(samples)
         active = np.arange(self.n_apps, dtype=np.int64)
         ran = np.ones(self.n_apps, bool)
         pairs, solo = self._alloc.pair(

@@ -814,6 +814,7 @@ class SMTMachine:
         self._active_states = None
         self._vector_ctx = (tables, st)
         sched_s = 0.0
+        sched_each: List[float] = []
         machine_s = 0.0
         slowdown_sum = 0.0
         try:
@@ -824,6 +825,7 @@ class SMTMachine:
                 pairs = policy.schedule(q, samples, pairs)
                 t1 = time.perf_counter()
                 sched_s += t1 - t0
+                sched_each.append(t1 - t0)
                 pa = np.asarray(pairs, dtype=np.int64)
                 assert pa.shape == (n // 2, 2) and np.array_equal(
                     np.sort(pa.ravel()), np.arange(n)
@@ -854,6 +856,8 @@ class SMTMachine:
             total_retired=float(st.total_retired.sum()),
             mean_true_slowdown=slowdown_sum / max(n_quanta, 1),
             sched_s_per_quantum=sched_s / max(n_quanta, 1),
+            sched_s_per_quantum_median=float(np.median(sched_each))
+            if sched_each else 0.0,
             machine_s_per_quantum=machine_s / max(n_quanta, 1),
         )
 
@@ -926,7 +930,11 @@ class ThroughputResult:
     ipc: np.ndarray                 # per-app IPC over the horizon
     total_retired: float            # machine-wide retired instructions
     mean_true_slowdown: float       # ground-truth pairing quality (lower=better)
-    sched_s_per_quantum: float      # policy wall-time per quantum
+    sched_s_per_quantum: float      # mean policy wall-time per quantum
+    #: Median per-quantum policy wall-time — the steady-state figure: the
+    #: mean amortises one-off jit compilation over the (often short)
+    #: benchmark horizon, the median does not see it.
+    sched_s_per_quantum_median: float
     machine_s_per_quantum: float    # simulator wall-time per quantum
 
     @property

@@ -190,6 +190,13 @@ class OnlineStats:
     def policy_us_per_quantum(self) -> float:
         return float(self.policy_s.mean() * 1e6) if self.policy_s.size else 0.0
 
+    @property
+    def policy_us_per_quantum_median(self) -> float:
+        """Steady-state policy cost: the median does not see the one-off
+        jit compilation the mean amortises over the horizon."""
+        return float(np.median(self.policy_s) * 1e6) if self.policy_s.size \
+            else 0.0
+
     def summary(self) -> Dict[str, float]:
         """Flat dict for benchmark JSON output."""
         return {
@@ -202,4 +209,5 @@ class OnlineStats:
             "throughput_jobs_per_s": self.throughput_jobs_per_s,
             "mean_queue_depth": self.mean_queue_depth,
             "policy_us_per_quantum": self.policy_us_per_quantum,
+            "policy_us_per_quantum_median": self.policy_us_per_quantum_median,
         }

@@ -46,6 +46,38 @@ class TestPairScore:
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=2e-5, atol=2e-5)
 
+    @pytest.mark.parametrize("n", [129, 255, 60])
+    def test_edge_shapes_interpret_parity(self, n):
+        """N not a multiple of BLOCK (129, 255) and N < BLOCK (60): the
+        interpret-mode kernel must match the XLA reference bit-for-tolerance
+        including the internal block padding."""
+        st_ = RNG.dirichlet(np.ones(4), size=n).astype(np.float32)
+        coeffs = RNG.normal(0.3, 0.5, (4, 4)).astype(np.float32)
+        got = ps_ops.pair_costs(st_, coeffs, impl="pallas_interpret")
+        want = pair_cost_ref(st_, coeffs)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("n,n_valid", [(129, 100), (255, 255), (60, 48)])
+    def test_n_valid_masking(self, n, n_valid):
+        """The fused-pipeline padding contract: rows/cols at or past
+        ``n_valid`` carry the DIAG sentinel on both backends, the valid
+        block equals the unpadded reference, and the padded shape is kept."""
+        from repro.kernels.pair_score.ref import DIAG
+
+        st_ = RNG.dirichlet(np.ones(4), size=n).astype(np.float32)
+        coeffs = RNG.normal(0.3, 0.5, (4, 4)).astype(np.float32)
+        for impl in ("xla", "pallas_interpret"):
+            got = np.asarray(ps_ops.pair_costs(
+                st_, coeffs, impl=impl, n_valid=n_valid))
+            assert got.shape == (n, n)
+            want = np.asarray(pair_cost_ref(st_[:n_valid], coeffs))
+            np.testing.assert_allclose(
+                got[:n_valid, :n_valid], want, rtol=2e-5, atol=2e-5,
+                err_msg=impl)
+            assert (got[n_valid:, :] == DIAG).all(), impl
+            assert (got[:, n_valid:] == DIAG).all(), impl
+
     def test_matches_regression_model(self):
         """The kernel must agree with the scheduler's own cost matrix."""
         from repro.core import regression

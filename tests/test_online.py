@@ -1,5 +1,6 @@
-"""Tests for the online subsystem: incremental matching, warm-started
-inverse, the open-system simulator, policy batching and cache versioning.
+"""Tests for the online subsystem: incremental matching, the fused
+stateless inverse, the open-system simulator, policy batching and cache
+versioning.
 
 Exactness claims and how they are held:
 
@@ -7,13 +8,17 @@ Exactness claims and how they are held:
   reference, property-tested on random costs/pairings and on seeded churn
   repair sequences (guaranteed by construction: identical expressions over
   identical inputs).
-* warm-started inverse      — reaches the cold solve's residual level in
-  strictly fewer gradient steps on static populations, with the guard
-  start bounding stale-init damage.
+* Gauss-Newton inverse       — *stateless*: its result is a pure function
+  of the quantum's counters, so warm/cold configurations compute identical
+  ST stacks by construction; the retained heavy-ball engine keeps the old
+  warm-start property (fewer gradient steps from a converged init,
+  guard-bounded stale inits), tested via ``solver="hb"``.
 * ``exact_config`` streaming — bit-identical pairings (and therefore
   machine trajectories) to ``SynpaScheduler.schedule`` on static
   populations, by construction; the integration test exercises the whole
-  adapter/padding plumbing.
+  adapter/padding plumbing.  With the stateless inverse the *default*
+  config earns the same guarantee while the population stays inside the
+  blossom tier (``nv <= BLOSSOM_MAX_N``) — also integration-tested.
 """
 
 import os
@@ -126,8 +131,12 @@ def test_refine_pairs_converges_to_two_opt_optimum():
     assert matching.refine_pairs(c, refined) == refined
 
 
-# ------------------------------------------------------ warm-started solve
+# ------------------------------------------------------ heavy-ball engine
 class TestWarmInverse:
+    """Properties of the retained gradient engine (``solver="hb"``) and of
+    the measured-fraction machinery both engines share.  The production
+    Gauss-Newton engine is covered by ``tests/test_regression.py`` (solver
+    harness) and :class:`TestStatelessGN` below."""
     @pytest.fixture(scope="class")
     def quanta_fracs(self):
         """Measured SMT fractions of two consecutive quanta, static pop."""
@@ -182,7 +191,7 @@ class TestWarmInverse:
         junk = rng.dirichlet(np.ones(4), size=f2.shape[0]).astype(np.float32)
         si_w, sj_w = regression.inverse(
             model, f2, f2[partner], n_steps=24, init_i=junk,
-            init_j=junk[partner],
+            init_j=junk[partner], solver="hb",
         )
         si_g, sj_g, _ = regression.inverse_trace(
             model, f2, f2[partner], n_steps=24
@@ -195,7 +204,8 @@ class TestWarmInverse:
         assert (res_w <= res_g + 1e-6).all()
 
     def test_cold_path_unchanged(self, quanta_fracs):
-        """Default (no-init) inverse is the seed behaviour, bit for bit."""
+        """Default (no-init) inverse is deterministic: ``init_i=None`` and
+        the implicit default take the identical code path, bit for bit."""
         model = _toy_model()
         f1, _, partner = quanta_fracs
         a1 = regression.inverse(model, f1, f1[partner])
@@ -238,6 +248,26 @@ class TestExactStreaming:
         r1 = machine.run_quanta(profs, cold, n_quanta=20, seed=seed)
         r2 = machine.run_quanta(profs, ex, n_quanta=20, seed=seed)
         assert cold.pairs == ex.pairs
+        np.testing.assert_array_equal(r1.ipc, r2.ipc)
+        assert r1.total_retired == r2.total_retired
+
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_default_config_bit_identical_inside_blossom_tier(self, seed):
+        """The stateless GN inverse extends the bitwise contract to the
+        *default* config: on a static population inside the blossom tier
+        (nv <= BLOSSOM_MAX_N) the default streaming allocator re-matches in
+        full off bit-identical ST stacks, so its pairings — and the machine
+        trajectory — equal the batch scheduler's exactly."""
+        machine = mc.SMTMachine(mc.MachineParams(), seed=0)
+        model = _toy_model()
+        profs = workloads.scaled_workload(16, seed=200 + seed)
+        cold = _CapturePolicy(SynpaScheduler(isc.SYNPA4_R_FEBE, model))
+        stream = _CapturePolicy(
+            StreamingScheduler(isc.SYNPA4_R_FEBE, model)  # default config
+        )
+        r1 = machine.run_quanta(profs, cold, n_quanta=20, seed=seed)
+        r2 = machine.run_quanta(profs, stream, n_quanta=20, seed=seed)
+        assert cold.pairs == stream.pairs
         np.testing.assert_array_equal(r1.ipc, r2.ipc)
         assert r1.total_retired == r2.total_retired
 
@@ -336,20 +366,26 @@ class TestClusterSim:
         assert 0.7 < job.slowdown(stats.quantum_s) < 1.3
         assert stats.solo_quanta.sum() > 0
 
-    def test_newcomers_cold_started_survivors_warm_started(self, machine, pool):
-        """First counters of an admitted app get the full cold solve; only
-        apps with a converged ST estimate take the warm path."""
+    def test_newcomers_placeholder_until_first_counters(self, machine, pool):
+        """An admitted app scores with the uniform placeholder until its
+        first quantum completes; its first counters then join the solve like
+        everyone else's (the GN inverse is stateless, so there is no
+        cold/warm budget distinction left to observe — only the placeholder
+        lifecycle)."""
         model = _toy_model()
 
         class Instrumented(StreamingAllocator):
             def __init__(self, *a, **k):
                 super().__init__(*a, **k)
-                self.cold_calls, self.warm_calls = [], []
+                self.calls = []   # (q-index, prev_st, masks)
 
-            def _solve(self, frac_i, frac_j, init_i=None, init_j=None):
-                (self.warm_calls if init_i is not None
-                 else self.cold_calls).append(frac_i.shape[0])
-                return super()._solve(frac_i, frac_j, init_i, init_j)
+            def pair(self, q, active, counters, ran, arrived, departed,
+                     prev_pairs, prev_solo):
+                st = None if self._st is None else np.array(self._st)
+                out = super().pair(q, active, counters, ran, arrived,
+                                   departed, prev_pairs, prev_solo)
+                self.calls.append((q, st))
+                return out
 
         policy = Instrumented(isc.SYNPA4_R_FEBE, model)
         # 6 apps at q0 and a pair arriving at q10 (even population
@@ -361,10 +397,24 @@ class TestClusterSim:
             arrivals=TraceArrivals(events), seed=3, target_scale=0.3,
         )
         sim.run(16)
-        # the initial population cold-solves together once, the arrival
-        # wave cold-solves at its first counters (q11) — nothing else
-        assert policy.cold_calls == [6, 2], policy.cold_calls
-        assert len(policy.warm_calls) > 0
+        by_q = {q: st for q, st in policy.calls}
+        uniform = np.full(4, 0.25, np.float32)
+        # At the arrival quantum (q10) the newcomers' slots carry whatever
+        # the fused step left there; by q11 — before their first counters
+        # enter the solve — they must hold the uniform placeholder...
+        st11 = by_q[11]
+        arrival_slots = [6, 7]
+        for s in arrival_slots:
+            np.testing.assert_array_equal(st11[s], uniform)
+        # ...while the q0 population's estimates have converged elsewhere.
+        assert any(
+            not np.allclose(st11[s], uniform) for s in range(6)
+        )
+        # After their first counters (the q11 solve), the newcomers'
+        # estimates leave the placeholder too.
+        st12 = by_q[12]
+        for s in arrival_slots:
+            assert not np.allclose(st12[s], uniform)
 
     def test_streaming_beats_oblivious_baselines(self, machine, pool):
         model = _toy_model()

@@ -1,0 +1,98 @@
+"""Policy-time regression guard: warm-streaming SYNPA4 at N=256.
+
+Measures the steady-state (median) policy wall-time per quantum of the
+default ``StreamingScheduler`` on a closed N=256 population — the fused
+per-quantum dispatch plus the incremental matcher — and fails (exit 1)
+if it regresses more than ``MAX_REGRESSION``x over the recorded baseline
+in ``benchmarks/results/policy_time_n256.json``.
+
+Run via ``tools/run_bench_smoke.sh`` (and the slow-marked
+``tests/test_bench_smoke.py``), so a change that quietly de-fuses the hot
+path cannot land without tier-1 noticing.  ``--record`` refreshes the
+baseline instead of checking against it (use after an intentional change,
+on an otherwise quiet machine).
+
+The measurement uses the fast-campaign models (the smoke tier's cache):
+model coefficients only steer *which* local minimum the solver walks to,
+not how much work a quantum costs, and the fast cache keeps the guard
+inside the smoke-tier time budget.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+
+BASELINE = os.path.join(_ROOT, "benchmarks", "results",
+                        "policy_time_n256.json")
+N_APPS = 256
+N_QUANTA = 12          # median over the horizon absorbs the compile quantum
+MAX_REGRESSION = 2.0
+
+
+def measure() -> dict:
+    from benchmarks.common import get_env
+    from repro.core import isc
+    from repro.online import StreamingScheduler
+    from repro.smt import workloads
+
+    machine, models, _ = get_env(fast=True)
+    profs = workloads.scaled_workload(N_APPS, seed=N_APPS)
+    res = machine.run_quanta_multi(
+        profs,
+        {"synpa4-stream": lambda: StreamingScheduler(
+            isc.SYNPA4_R_FEBE, models["SYNPA4_R-FEBE"])},
+        n_quanta=N_QUANTA,
+        seed=3,
+    )["synpa4-stream"]
+    return {
+        "n": N_APPS,
+        "quanta": N_QUANTA,
+        "stream_median_us": res.sched_s_per_quantum_median * 1e6,
+        "stream_mean_us": res.sched_s_per_quantum * 1e6,
+        "recorded_unix": time.time(),
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--record", action="store_true",
+                    help="write the measurement as the new baseline")
+    args = ap.parse_args()
+
+    got = measure()
+    if args.record:
+        with open(BASELINE, "w") as f:
+            json.dump(got, f, indent=2)
+        print(f"policy_guard: recorded baseline "
+              f"{got['stream_median_us']:.0f} us/quantum (median, N={N_APPS})")
+        return 0
+
+    if not os.path.exists(BASELINE):
+        print(f"policy_guard: no baseline at {BASELINE}; "
+              "run with --record first", file=sys.stderr)
+        return 1
+    with open(BASELINE) as f:
+        base = json.load(f)
+    budget = base["stream_median_us"] * MAX_REGRESSION
+    ok = got["stream_median_us"] <= budget
+    print(
+        f"policy_guard: warm-streaming N={N_APPS} median "
+        f"{got['stream_median_us']:.0f} us/quantum vs baseline "
+        f"{base['stream_median_us']:.0f} (budget {budget:.0f}) -> "
+        f"{'OK' if ok else 'REGRESSION'}"
+    )
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,9 +1,12 @@
 #!/usr/bin/env bash
-# Sub-minute sanity run of the benchmark entry points (--smoke modes).
-# Wired into the test suite (tests/test_bench_smoke.py, marked `slow`) so
-# the benchmarks cannot rot without tier-1 noticing.
+# Sub-minute sanity run of the benchmark entry points (--smoke modes) plus
+# the N=256 policy-time regression guard.  Wired into the test suite
+# (tests/test_bench_smoke.py, marked `slow`) so the benchmarks cannot rot
+# — and the fused SYNPA hot path cannot quietly regress — without tier-1
+# noticing.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
 python benchmarks/online_churn.py --smoke
 python benchmarks/cluster_scale.py --smoke
+python tools/check_policy_budget.py
