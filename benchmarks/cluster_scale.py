@@ -12,6 +12,14 @@ N = 8, 64, 256 and 1024 apps and reports, per policy:
 
 It also measures the vectorised machine against the per-app reference loop
 at N = 256 (same seeds, bit-identical results) to keep the speedup honest.
+
+``--engine scan`` races the same policy line-up through the
+accelerator-resident engine (``repro.smt.scan_engine``): machine quantum,
+fused SYNPA step and device matcher composed into one ``lax.scan`` — one
+dispatch per race, per-quantum wall time indivisible (reported as
+``total_ms_per_quantum``).  ``--record-scan-ab`` runs the back-to-back
+scan-vs-vector A/B at N >= 256 (medians, per the 2-CPU jitter protocol)
+and records it to ``benchmarks/results/scan_engine_speedup.json``.
 """
 
 from __future__ import annotations
@@ -23,6 +31,7 @@ from benchmarks.common import csv_row, get_env, save_json
 
 SIZES = (8, 64, 256, 1024)
 QUANTA = {8: 40, 64: 30, 256: 20, 1024: 8}
+AB_ROUNDS = 5
 
 
 def _policies(models):
@@ -35,6 +44,20 @@ def _policies(models):
         "random": lambda: RandomStaticScheduler(),
         "synpa4": lambda: SynpaScheduler(
             isc.SYNPA4_R_FEBE, models["SYNPA4_R-FEBE"]
+        ),
+    }
+
+
+def _scan_policies(models):
+    from repro.core import isc
+    from repro.smt.scan_engine import ScanPolicy
+
+    return {
+        "linux": ScanPolicy(kind="linux"),
+        "random": ScanPolicy(kind="static"),
+        "synpa4": ScanPolicy(
+            kind="synpa", method=isc.SYNPA4_R_FEBE,
+            model=models["SYNPA4_R-FEBE"],
         ),
     }
 
@@ -56,7 +79,65 @@ def _engine_speedup(machine, n: int = 256, quanta: int = 30) -> float:
     return t_loop / max(t_vec, 1e-9)
 
 
-def main(quick: bool = False, smoke: bool = False) -> str:
+def record_scan_ab(machine, models, sizes=(256,), quanta: int = 20,
+                   rounds: int = AB_ROUNDS) -> Dict:
+    """Back-to-back scan-vs-vector A/B at cluster sizes; medians recorded.
+
+    Per size: the vector arm (``StreamingScheduler`` through ``run_quanta``
+    — fused dispatch + host matcher) runs ``rounds`` times and reports the
+    median of (policy median + machine mean) per quantum; the scan arm
+    compiles once and medians ``rounds`` back-to-back dispatches of the
+    whole race.  Written to ``benchmarks/results/scan_engine_speedup.json``
+    together with both arms' ground-truth quality.
+    """
+    import numpy as np
+
+    from repro.core import isc
+    from repro.online import StreamingScheduler
+    from repro.smt import workloads
+    from repro.smt.machine import PhaseTables
+    from repro.smt.scan_engine import SCAN_RNG_STREAM_VERSION, ScanPolicy
+
+    method = isc.SYNPA4_R_FEBE
+    model = models["SYNPA4_R-FEBE"]
+    out: Dict[str, Dict] = {
+        "protocol": f"back-to-back medians, {rounds} rounds per arm",
+        "scan_rng_stream_version": SCAN_RNG_STREAM_VERSION,
+    }
+    for n in sizes:
+        profs = workloads.scaled_workload(n, seed=n)
+        tables = PhaseTables.build(profs)
+        vec_times = []
+        rv = None
+        for _ in range(rounds):
+            rv = machine.run_quanta(
+                profs, StreamingScheduler(method, model),
+                n_quanta=quanta, seed=3, tables=tables,
+            )
+            vec_times.append(
+                rv.sched_s_per_quantum_median + rv.machine_s_per_quantum
+            )
+        rs = machine.run_quanta_multi(
+            profs,
+            {"synpa4": ScanPolicy(kind="synpa", method=method, model=model)},
+            n_quanta=quanta, seed=3, engine="scan", repeats=rounds,
+        )["synpa4"]
+        vec_ms = float(np.median(vec_times)) * 1e3
+        scan_ms = rs.machine_s_per_quantum * 1e3
+        out[str(n)] = {
+            "quanta": quanta,
+            "vector_ms_per_quantum_median": vec_ms,
+            "scan_ms_per_quantum_median": scan_ms,
+            "speedup": vec_ms / max(scan_ms, 1e-9),
+            "vector_mean_true_slowdown": rv.mean_true_slowdown,
+            "scan_mean_true_slowdown": rs.mean_true_slowdown,
+        }
+    save_json("scan_engine_speedup.json", out)
+    return out
+
+
+def main(quick: bool = False, smoke: bool = False, engine: str = "vector",
+         scan_ab: bool = False) -> str:
     from repro.smt import workloads
 
     machine, models, _wls = get_env(fast=smoke)
@@ -72,6 +153,25 @@ def main(quick: bool = False, smoke: bool = False) -> str:
         if quick or smoke:
             quanta = max(quanta // 2, 4)
         # One PhaseTables build, K policies, bit-identical machine stream.
+        if engine == "scan":
+            multi = machine.run_quanta_multi(
+                profs, _scan_policies(models), n_quanta=quanta, seed=3,
+                engine="scan", repeats=3,
+            )
+            results[str(n)] = {
+                pname: {
+                    "mean_true_slowdown": res.mean_true_slowdown,
+                    "ipc_geomean": res.ipc_geomean,
+                }
+                for pname, res in multi.items()
+            }
+            # One dispatch runs all K policies: the wall time is a race
+            # total, not attributable per policy (use record_scan_ab's
+            # K=1 races for engine-vs-engine per-policy comparisons).
+            results[str(n)]["race_total_ms_per_quantum"] = (
+                next(iter(multi.values())).machine_s_per_quantum * 1e3
+            )
+            continue
         multi = machine.run_quanta_multi(
             profs, _policies(models), n_quanta=quanta, seed=3
         )
@@ -85,12 +185,27 @@ def main(quick: bool = False, smoke: bool = False) -> str:
             }
             for pname, res in multi.items()
         }
-    if not smoke:
+    if not smoke and engine == "vector":
         speedup = _engine_speedup(machine, n=256, quanta=30)
         results["engine_speedup_n256"] = speedup
         save_json("cluster_scale.json", results)
+    elif not smoke:
+        save_json("cluster_scale_scan.json", results)
+        speedup = float("nan")
     else:
         speedup = float("nan")
+    if scan_ab and smoke:
+        print("# --record-scan-ab ignored under --smoke: the recorded "
+              "A/B is a full-size fitted-model measurement")
+        scan_ab = False
+    if scan_ab:
+        ab = record_scan_ab(machine, models,
+                            sizes=tuple(n for n in sizes if n >= 256)
+                            or (max(sizes),))
+        key = str(max(int(k) for k in ab if k.isdigit()))
+        print(f"# scan A/B N={key}: {ab[key]['speedup']:.2f}x "
+              f"({ab[key]['vector_ms_per_quantum_median']:.1f} -> "
+              f"{ab[key]['scan_ms_per_quantum_median']:.1f} ms/quantum)")
 
     # Headline: slowdown win of SYNPA4 over Linux at the largest N raced.
     big = results[str(sizes[-1])]
@@ -98,7 +213,8 @@ def main(quick: bool = False, smoke: bool = False) -> str:
     us = (time.perf_counter() - t_total) * 1e6
     return csv_row(
         "cluster_scale", us,
-        f"N={sizes[-1]} synpa4 slowdown gain {gain:.3f}x vs linux; "
+        f"N={sizes[-1]} synpa4 slowdown gain {gain:.3f}x vs linux "
+        f"({engine} engine); "
         f"vector engine {speedup:.1f}x vs loop at N=256",
     )
 
@@ -112,5 +228,13 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="sub-minute sanity run (small N, fast models, "
                     "no JSON/engine-speedup refresh)")
+    ap.add_argument("--engine", choices=("vector", "scan"),
+                    default="vector",
+                    help="machine engine: host loop + fused dispatch "
+                    "(vector) or the single-dispatch lax.scan race (scan)")
+    ap.add_argument("--record-scan-ab", action="store_true",
+                    help="record the back-to-back scan-vs-vector A/B "
+                    "(medians) to results/scan_engine_speedup.json")
     args = ap.parse_args()
-    print(main(quick=args.quick, smoke=args.smoke))
+    print(main(quick=args.quick, smoke=args.smoke, engine=args.engine,
+               scan_ab=args.record_scan_ab))

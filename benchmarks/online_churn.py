@@ -11,7 +11,18 @@ compares, per (cluster size, churn level):
                       N <= COLD_MAX_N unless ``--race-cold-at-full`` asks
                       for the overnight full-size race);
 * ``synpa4-stream`` — the fused streaming path (stateless GN inverse +
-                      incremental re-matching).
+                      incremental re-matching);
+* ``synpa4-stream-syn`` — the same allocator behind queue-aware admission
+                      (``ClusterSim(admission="synergy")``): dequeued jobs
+                      are placed by predicted co-runner score and the
+                      policy receives profiled ST hints for newcomers.
+                      The stream-vs-stream-syn cells are the admission A/B.
+
+``--engine scan`` swaps the streaming arm's host matcher for the device
+tier (``StreamingConfig(matcher="device")``) in the churn grid and adds a
+``synpa4-scan`` arm to the static probe — the single-dispatch
+``lax.scan`` race of ``repro.smt.scan_engine`` (its machine+policy time is
+indivisible; compare it against the probe's cold/stream *sums*).
 
 reporting per-job mean/p95 slowdown, turnaround, queue depth and policy
 µs/quantum (mean *and* median — the median is the steady-state figure, the
@@ -50,21 +61,35 @@ QUANTA = {8: 80, 32: 60, 64: 60, 256: 30, 1024: 24}
 PROBE_QUANTA = 16
 
 
-def _policies(models, n_apps: int, smoke: bool, cold_max_n: int = COLD_MAX_N):
+def _policies(models, n_apps: int, smoke: bool, cold_max_n: int = COLD_MAX_N,
+              engine: str = "vector"):
     from repro.core import isc
     from repro.online import (
         LinuxOnline,
         RandomOnline,
         StreamingAllocator,
+        StreamingConfig,
         cold_config,
     )
 
     method = isc.SYNPA4_R_FEBE
     model = models["SYNPA4_R-FEBE"]
+    stream_cfg = (
+        (lambda: StreamingConfig(matcher="device"))
+        if engine == "scan" else (lambda: None)
+    )
     pols = {
         "random": lambda: RandomOnline(),
         "linux": lambda: LinuxOnline(),
-        "synpa4-stream": lambda: StreamingAllocator(method, model),
+        "synpa4-stream": lambda: StreamingAllocator(
+            method, model, stream_cfg(), name="synpa4-stream"
+        ),
+        # The queue-aware admission A/B arm: same allocator, synergy
+        # admission (the grid loop constructs its ClusterSim with
+        # admission="synergy").
+        "synpa4-stream-syn": lambda: StreamingAllocator(
+            method, model, stream_cfg(), name="synpa4-stream-syn"
+        ),
     }
     if n_apps <= cold_max_n and not smoke:
         pols["synpa4-cold"] = lambda: StreamingAllocator(
@@ -74,18 +99,23 @@ def _policies(models, n_apps: int, smoke: bool, cold_max_n: int = COLD_MAX_N):
 
 
 def _churn_grid(machine, models, sizes, churn_levels, smoke: bool,
-                cold_max_n: int = COLD_MAX_N, record_ccdf: bool = False):
+                cold_max_n: int = COLD_MAX_N, record_ccdf: bool = False,
+                engine: str = "vector"):
     """Open-system races: ClusterSim per (size, churn, policy).
 
     Returns ``(grid, ccdfs)``; ``ccdfs`` holds per-cell slowdown CCDF
     arrays when ``record_ccdf`` is set (else stays empty).
     """
-    from repro.online import ClusterSim, PoissonArrivals
+    from repro.core import isc
+    from repro.online import ClusterSim, PoissonArrivals, SynergyAdmission
     from repro.smt.apps import pool_profiles
     from repro.smt.machine import PhaseTables
 
     pool = pool_profiles()
     tables = PhaseTables.build(pool)   # shared across all grid cells
+    synergy = SynergyAdmission(
+        machine, pool, isc.SYNPA4_R_FEBE, models["SYNPA4_R-FEBE"]
+    )
     mean_service_q = (
         machine.params.solo_reference_quanta * TARGET_SCALE * 1.3
     )  # solo quanta x typical SMT slowdown
@@ -102,11 +132,16 @@ def _churn_grid(machine, models, sizes, churn_levels, smoke: bool,
             cell = {}
             cell_ccdf = {}
             for pname, factory in _policies(
-                models, n, smoke, cold_max_n
+                models, n, smoke, cold_max_n, engine
             ).items():
+                adm = (
+                    dict(admission="synergy", synergy=synergy)
+                    if pname.endswith("-syn") else {}
+                )
                 sim = ClusterSim(
                     machine, pool, n_cores, factory(), arrivals,
                     seed=11, target_scale=TARGET_SCALE, tables=tables,
+                    **adm,
                 )
                 stats = sim.run(quanta)
                 cell[pname] = stats.summary()
@@ -125,13 +160,17 @@ def _churn_grid(machine, models, sizes, churn_levels, smoke: bool,
     return grid, ccdfs
 
 
-def _static_probe(machine, models, sizes, smoke: bool) -> Dict:
+def _static_probe(machine, models, sizes, smoke: bool,
+                  engine: str = "vector") -> Dict:
     """Closed static-population probe: cold vs streaming SYNPA4 policy cost.
 
     Uses ``run_quanta_multi`` so both policies face bit-identical machine
     randomness off one shared PhaseTables build.  Reports the mean policy
     time (amortising jit compile over the horizon) *and* the median — the
     steady-state per-quantum cost a deployment would pay at 100 ms quanta.
+    With ``engine="scan"`` a ``synpa4-scan`` arm joins: the whole race in
+    one dispatch, machine+policy time indivisible
+    (``scan_total_ms_median``; compare against cold/stream sched+machine).
     """
     from repro.core import isc
     from repro.core.synpa import SynpaScheduler
@@ -143,13 +182,14 @@ def _static_probe(machine, models, sizes, smoke: bool) -> Dict:
     out: Dict[str, Dict] = {}
     for n in sizes:
         profs = workloads.scaled_workload(n, seed=n)
+        quanta = PROBE_QUANTA if not smoke else 4
         res = machine.run_quanta_multi(
             profs,
             {
                 "synpa4-cold": lambda: SynpaScheduler(method, model),
                 "synpa4-stream": lambda: StreamingScheduler(method, model),
             },
-            n_quanta=PROBE_QUANTA if not smoke else 4,
+            n_quanta=quanta,
             seed=3,
         )
         cold, stream = res["synpa4-cold"], res["synpa4-stream"]
@@ -167,11 +207,26 @@ def _static_probe(machine, models, sizes, smoke: bool) -> Dict:
             "cold_mean_true_slowdown": cold.mean_true_slowdown,
             "stream_mean_true_slowdown": stream.mean_true_slowdown,
         }
+        if engine == "scan":
+            from repro.smt.scan_engine import ScanPolicy
+
+            scan = machine.run_quanta_multi(
+                profs,
+                {"synpa4-scan": ScanPolicy(
+                    kind="synpa", method=method, model=model)},
+                n_quanta=quanta, seed=3, engine="scan", repeats=3,
+            )["synpa4-scan"]
+            out[str(n)]["scan_total_ms_median"] = (
+                scan.machine_s_per_quantum * 1e3
+            )
+            out[str(n)]["scan_mean_true_slowdown"] = (
+                scan.mean_true_slowdown
+            )
     return out
 
 
 def main(smoke: bool = False, full: bool = False, quick: bool = False,
-         race_cold_at_full: bool = False) -> str:
+         race_cold_at_full: bool = False, engine: str = "vector") -> str:
     machine, models, _wls = get_env(fast=smoke)
     t_total = time.perf_counter()
     cold_max_n = max(FULL_SIZES) if race_cold_at_full else COLD_MAX_N
@@ -189,15 +244,26 @@ def main(smoke: bool = False, full: bool = False, quick: bool = False,
     record_ccdf = full and not smoke
     grid, ccdfs = _churn_grid(
         machine, models, sizes, churn, smoke,
-        cold_max_n=cold_max_n, record_ccdf=record_ccdf,
+        cold_max_n=cold_max_n, record_ccdf=record_ccdf, engine=engine,
     )
-    probe = _static_probe(machine, models, probe_sizes, smoke)
+    probe = _static_probe(machine, models, probe_sizes, smoke,
+                          engine=engine)
     results = {"churn": grid, "static_probe": probe,
                "target_scale": TARGET_SCALE,
-               "race_cold_at_full": race_cold_at_full}
-    save_json("online_churn.json", results)
+               "race_cold_at_full": race_cold_at_full,
+               "engine": engine}
+    if not smoke:
+        # The smoke tier is a sanity run on a sub-real grid; keep it from
+        # overwriting recorded results (mirrors cluster_scale.py).
+        save_json("online_churn.json"
+                  if engine == "vector" else "online_churn_scan.json",
+                  results)
     if record_ccdf:
-        save_json("online_churn_ccdf.json", ccdfs)
+        # Engine-gated like the grid file: a scan run must not overwrite
+        # the recorded vector-engine CCDFs (different RNG trajectories).
+        save_json("online_churn_ccdf.json"
+                  if engine == "vector" else "online_churn_ccdf_scan.json",
+                  ccdfs)
 
     big = str(max(int(k) for k in probe))
     # Headline slowdown gain: the largest size whose horizon produced
@@ -238,6 +304,11 @@ if __name__ == "__main__":
                     "--full grid (N=1024 included) instead of probe sizes "
                     "only — the overnight run; implies --full and records "
                     "the CCDF figures")
+    ap.add_argument("--engine", choices=("vector", "scan"),
+                    default="vector",
+                    help="scan: device matcher in the streaming arm + a "
+                    "single-dispatch synpa4-scan arm in the static probe")
     args = ap.parse_args()
     print(main(smoke=args.smoke, full=args.full, quick=args.quick,
-               race_cold_at_full=args.race_cold_at_full))
+               race_cold_at_full=args.race_cold_at_full,
+               engine=args.engine))

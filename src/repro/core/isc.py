@@ -235,3 +235,20 @@ def active_categories(method: StackMethod):
     if method.n_categories == 4:
         return (CAT_DI, CAT_FE, CAT_BE, CAT_HW)
     return (CAT_DI, CAT_FE, CAT_BE)
+
+
+def uniform_stack(n_categories: int):
+    """The uniform ST-stack placeholder for ``n_categories`` (3 or 4).
+
+    The (N_CATS,) float32 simplex point the schedulers use for a slot with
+    no estimate yet — 1/C on the active categories, 0 beyond.  One shared
+    definition so the fused step, the schedulers and the scan engine can
+    never drift apart on the placeholder layout.
+    """
+    import numpy as np
+
+    return np.array(
+        [1.0 / n_categories if k < n_categories else 0.0
+         for k in range(N_CATS)],
+        dtype=np.float32,
+    )

@@ -54,6 +54,8 @@ class Scheduler:
 
     # helpers ---------------------------------------------------------------
     def _random_pairs(self) -> List[Pair]:
+        """Random perfect pairing; an odd population's leftover app (the
+        last of the permutation) is left uncovered and runs solo."""
         perm = self.rng.permutation(self.n_apps)
         return [(int(perm[2 * k]), int(perm[2 * k + 1])) for k in range(self.n_apps // 2)]
 
@@ -79,7 +81,8 @@ class Scheduler:
 
 
 def _partner_index(pairs: Sequence[Pair], n: int) -> np.ndarray:
-    partner = np.zeros(n, dtype=np.int32)
+    """Partner array of a pairing; an uncovered (solo) slot partners itself."""
+    partner = np.arange(n, dtype=np.int32)
     for i, j in pairs:
         partner[i] = j
         partner[j] = i
@@ -146,11 +149,7 @@ def make_fused_step(
     # value, or padded rows could out-compete real edges in the matching.
     assert _KERNEL_DIAG == matching.BIG, (_KERNEL_DIAG, matching.BIG)
 
-    ncat = method.n_categories
-    uniform = jnp.asarray(
-        [1.0 / ncat if k < ncat else 0.0 for k in range(isc.N_CATS)],
-        jnp.float32,
-    )
+    uniform = jnp.asarray(isc.uniform_stack(method.n_categories))
 
     @jax.jit
     def step(counters, partner, prev_st, masks, idle):
@@ -264,10 +263,7 @@ def make_synpa_pipeline(
         ones = jnp.ones((n,), bool)
         zeros = jnp.zeros((n,), bool)
         prev = jnp.tile(
-            jnp.asarray(
-                [1.0 / method.n_categories if k < method.n_categories
-                 else 0.0 for k in range(isc.N_CATS)], jnp.float32
-            )[None, :],
+            jnp.asarray(isc.uniform_stack(method.n_categories))[None, :],
             (n, 1),
         )
         masks = jnp.stack([ones, zeros, ones, zeros])
@@ -281,7 +277,14 @@ def make_synpa_pipeline(
 
 
 class SynpaScheduler(Scheduler):
-    """One member of the SYNPA family, e.g. SYNPA4_R-FEBE."""
+    """One member of the SYNPA family, e.g. SYNPA4_R-FEBE.
+
+    Odd populations ride the idle-context convention: the fused step wires
+    the idle vertex (row ``n``) into the prepared cost matrix and whoever
+    the matcher pairs with it is left uncovered — it runs alone that
+    quantum.  Even populations take the identical code path with the idle
+    vertex disabled, so the closed-system behaviour is unchanged.
+    """
 
     def __init__(
         self,
@@ -297,14 +300,36 @@ class SynpaScheduler(Scheduler):
         self.model = model
         self.name = name or f"SYNPA{method.n_categories}_{method.name.split('_', 1)[1]}"
         self.matcher = matcher
-        self._pipeline = make_synpa_pipeline(
-            method, model, impl=pair_impl, n_steps=n_steps, solver=solver
+        self._uniform = isc.uniform_stack(method.n_categories)
+        self._step = make_fused_step(
+            method, model, impl=pair_impl, solver=solver, hb_steps=n_steps,
+            warm=False,
         )
 
     def schedule(self, quantum, samples, prev_pairs):
         if not self._have_samples(samples) or not prev_pairs:
             return self._random_pairs()
+        n = self.n_apps
+        odd = n % 2 == 1
         counters = self._counters_array(samples)
-        partner = _partner_index(prev_pairs, self.n_apps)
-        cost, _st = self._pipeline(jnp.asarray(counters), jnp.asarray(partner))
-        return matching.min_cost_pairs(np.asarray(cost), method=self.matcher)  # Step 3
+        partner = _partner_index(prev_pairs, n)
+        idx = np.arange(n)
+        solve = partner != idx        # co-ran last quantum
+        masks = np.stack([
+            solve,                    # refresh the estimate via the inverse
+            ~solve,                   # a solo slot measured its ST directly
+            np.ones(n, bool),         # every slot is active
+            np.zeros(n, bool),        # no arrivals in a closed population
+        ])
+        cost, _st = self._step(
+            jnp.asarray(counters), jnp.asarray(partner),
+            jnp.asarray(np.tile(self._uniform, (n, 1))),
+            jnp.asarray(masks), jnp.asarray(odd),
+        )
+        rows = list(range(n)) + ([n] if odd else [])
+        compact = matching.compact_cost(np.asarray(cost), rows)
+        pairs = matching.min_cost_pairs(compact, method=self.matcher)  # Step 3
+        if not odd:
+            return pairs
+        # Drop the idle pair: its app runs solo this quantum.
+        return [(a, b) for a, b in pairs if n not in (a, b)]

@@ -18,6 +18,7 @@ Entry points:
                                — traffic models.
 """
 
+from repro.online.admission import SynergyAdmission
 from repro.online.arrivals import (
     ArrivalProcess,
     InitialBatch,
@@ -49,6 +50,7 @@ __all__ = [
     "StreamingAllocator",
     "StreamingConfig",
     "StreamingScheduler",
+    "SynergyAdmission",
     "TraceArrivals",
     "cold_config",
     "exact_config",

@@ -1,0 +1,95 @@
+"""Queue-aware admission — the synergy placement tier of ``ClusterSim``.
+
+FIFO admission places a dequeued job on the lowest free context and tells
+the policy nothing about it: until its first counters land, a newcomer
+scores with the uniform ST placeholder, so the re-matching pairs it blind.
+A production cluster knows more — it has *historical profiles* of the job
+types it runs.  ``SynergyAdmission`` packages exactly that information:
+
+* per pool application, the measured noiseless **solo ISC stack** under the
+  policy's stack method (``repro.smt.workloads.solo_stack`` — the §5
+  profiling step a deployment performs once per job type);
+* the **Eq. 4 predicted pair-cost matrix** over those stacks — which job
+  types synergise, which interfere.
+
+At admission time it (a) *places* the dequeued job (FIFO order is kept) on
+the free context whose core-resident co-runner has the best predicted pair
+score — falling back to the expected pool cost for contexts on empty
+cores — and (b) hands the policy an **ST hint** for the newcomer's slot, so
+the very first re-matching sees an informative estimate instead of the
+uniform placeholder.
+
+A note on (a) vs (b): the simulator's policies re-pair *arbitrary* slots
+every quantum (cores are virtual for the pairing), so the slot index itself
+carries no interference information — the placement rule is recorded for
+realism and determinism, while the measurable quality lever is the hint:
+it is what lets the churn repair pair a newcomer with a genuinely
+compatible widow instead of an arbitrary one.  The A/B lives in
+``benchmarks/online_churn.py`` (``synpa4-stream-syn`` arm).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import isc, regression
+
+
+class SynergyAdmission:
+    """Profile-informed placement + ST seeding for dequeued jobs.
+
+    machine/pool: the simulator's machine and application pool;
+    method:       the stack method the *policy* uses — hints must live in
+                  the same stack space as the allocator's estimates;
+    model:        the fitted Eq. 4 model used for pair scoring;
+    quanta:       solo-profiling horizon per pool application (noiseless).
+    """
+
+    def __init__(self, machine, pool, method: isc.StackMethod, model:
+                 regression.CategoryModel, quanta: int = 40):
+        from repro.smt.workloads import solo_stack
+
+        self.method = method
+        self.stacks = np.stack([
+            np.asarray(solo_stack(machine, p, method, quanta=quanta),
+                       np.float32)
+            for p in pool
+        ])
+        cost = regression.pair_cost_matrix(
+            model, jnp.asarray(self.stacks), impl="xla"
+        )
+        self.pool_cost = np.asarray(cost, np.float64)
+        # Expected pairing cost of each job type against a uniform random
+        # co-runner — the placement score of a context on an empty core.
+        off = ~np.eye(len(pool), dtype=bool)
+        self.mean_cost = np.array([
+            self.pool_cost[k][off[k]].mean() for k in range(len(pool))
+        ])
+
+    def place(self, pid: int, free_slots: Sequence[int],
+              app_id: np.ndarray) -> int:
+        """Free slot with the best predicted co-runner for pool app ``pid``.
+
+        ``app_id`` maps slots to pool indices (-1 = empty); a free slot's
+        co-runner is the resident of the other context of its core
+        (``slot ^ 1``).  Ties break to the lowest slot, and a slot whose
+        core-mate is empty scores the expected pool cost — so compatible
+        residents attract newcomers, incompatible ones repel them onto
+        empty cores.
+        """
+        best, best_cost = None, np.inf
+        for s in sorted(int(x) for x in free_slots):
+            mate = int(app_id[s ^ 1])
+            c = self.pool_cost[pid, mate] if mate >= 0 else \
+                float(self.mean_cost[pid])
+            if c < best_cost - 1e-12:
+                best, best_cost = s, c
+        assert best is not None, "no free slot to place on"
+        return best
+
+    def hint(self, pid: int) -> np.ndarray:
+        """Profiled solo ST stack of pool app ``pid`` (the policy hint)."""
+        return self.stacks[pid]

@@ -93,7 +93,13 @@ class OnlinePolicy:
         departed: Sequence[int],
         prev_pairs: List[Pair],
         prev_solo: Optional[int],
+        hints: Optional[Dict[int, np.ndarray]] = None,
     ) -> Tuple[List[Pair], Optional[int]]:
+        """``hints`` (optional) maps an *arrived* slot to a profiled ST
+        stack estimate for its application — the queue-aware admission tier
+        (``repro.online.admission``) supplies these so a newcomer scores
+        with historical profile information instead of the uniform
+        placeholder.  Policies are free to ignore them."""
         raise NotImplementedError
 
     # helpers --------------------------------------------------------------
@@ -133,7 +139,7 @@ class RandomOnline(OnlinePolicy):
     name = "random"
 
     def pair(self, q, active, counters, ran, arrived, departed,
-             prev_pairs, prev_solo):
+             prev_pairs, prev_solo, hints=None):
         if not prev_pairs and prev_solo is None:
             return self._random_pairing(active)
         kept, uncovered = self._surviving(active, arrived, prev_pairs)
@@ -153,7 +159,7 @@ class LinuxOnline(RandomOnline):
         self.p_migrate = p_migrate
 
     def pair(self, q, active, counters, ran, arrived, departed,
-             prev_pairs, prev_solo):
+             prev_pairs, prev_solo, hints=None):
         pairs, solo = super().pair(
             q, active, counters, ran, arrived, departed, prev_pairs, prev_solo
         )
@@ -178,7 +184,15 @@ class StreamingConfig:
     cold_steps: int = 80         # hb budget when cold / gn fallback budget
     incremental: bool = True     # repair the matching on churn
     rematch: str = "auto"        # static-quantum re-match: full/refine/auto
-    matcher: str = "auto"        # engine for full re-matches
+    #: Engine for full re-matches (``matching.min_cost_pairs`` methods), or
+    #: ``"device"`` to swap the host matcher for the device tier
+    #: (:func:`repro.core.matching.device_pairs_partner`): greedy seed +
+    #: parallel 2-opt run in-graph on the padded cost matrix every quantum,
+    #: with only the (P,) partner vector transferred back.  Shapes are
+    #: stable under churn (masks change contents, never shapes), so the
+    #: compiled matcher survives arrivals/departures.  Quality: the device
+    #: tier's 2-opt gap (property-tested) instead of blossom exactness.
+    matcher: str = "auto"
     pair_impl: str = "auto"      # Step-2 backend (kernels.pair_score)
     #: Minimum cost improvement the refine/repair 2-opt tiers act on.
     #: Counter noise wiggles near-tie pair costs at the 1e-3..1e-2 level per
@@ -231,11 +245,7 @@ class StreamingAllocator(OnlinePolicy):
             f"SYNPA{method.n_categories}_{method.name.split('_', 1)[1]}"
             f"-{mode}"
         )
-        ncat = method.n_categories
-        self._uniform = np.array(
-            [1.0 / ncat if k < ncat else 0.0 for k in range(isc.N_CATS)],
-            dtype=np.float32,
-        )
+        self._uniform = isc.uniform_stack(method.n_categories)
         hb_steps = (
             cfg.warm_steps if (cfg.solver == "hb" and cfg.warm)
             else cfg.cold_steps
@@ -254,9 +264,27 @@ class StreamingAllocator(OnlinePolicy):
         if self._st is None or self._st.shape[0] != capacity:
             self._st = jnp.asarray(np.tile(self._uniform, (capacity, 1)))
 
+    def _apply_hints(self, hints, arrived_set) -> List[int]:
+        """Seed arrived slots' ST estimates from admission hints.
+
+        Returns the hinted slot list (they skip the fresh-mask reset).  One
+        tiny scatter onto the device-resident state, churn quanta only.
+        """
+        if not hints:
+            return []
+        slots = sorted(int(s) for s in hints if int(s) in arrived_set)
+        if not slots:
+            return []
+        vals = np.stack([
+            np.asarray(hints[s], np.float32).reshape(isc.N_CATS)
+            for s in slots
+        ])
+        self._st = self._st.at[jnp.asarray(slots)].set(jnp.asarray(vals))
+        return slots
+
     # ------------------------------------------------------------- pairing
     def pair(self, q, active, counters, ran, arrived, departed,
-             prev_pairs, prev_solo):
+             prev_pairs, prev_solo, hints=None):
         active = np.asarray(active, np.int64)
         arrived_set = set(int(s) for s in arrived)
         capacity = int(counters.shape[0])
@@ -264,6 +292,7 @@ class StreamingAllocator(OnlinePolicy):
             # First quantum with runnable applications: no counters yet.
             self._st = None
             self._ensure_state(capacity)
+            self._apply_hints(hints, arrived_set)
             return self._random_pairing(active)
         self._ensure_state(capacity)
 
@@ -281,6 +310,11 @@ class StreamingAllocator(OnlinePolicy):
         masks[2, active] = True
         if arrived_set:
             masks[3, list(arrived_set)] = True
+        hinted = self._apply_hints(hints, arrived_set)
+        if hinted:
+            # A hinted newcomer scores with its profiled stack, not the
+            # uniform placeholder: keep the fused step from resetting it.
+            masks[3, hinted] = False
         a_count = int(active.size)
         odd = a_count % 2 == 1
 
@@ -297,6 +331,27 @@ class StreamingAllocator(OnlinePolicy):
 
         if a_count == 1:
             return [], int(active[0])
+
+        # --- Step 3 (device tier): greedy + parallel 2-opt in-graph on the
+        # padded matrix; only the (P,) partner vector comes back.  Slots are
+        # vertices directly (no compact remap); the idle vertex is row
+        # ``capacity``.
+        if self.cfg.matcher == "device":
+            valid = np.zeros(int(cost_dev.shape[0]), bool)
+            valid[active] = True
+            if odd:
+                valid[capacity] = True
+            pairs_v = matching.device_pairs(
+                cost_dev, valid, eps=self.cfg.refine_eps
+            )
+            out: List[Pair] = []
+            solo: Optional[int] = None
+            for x, y in pairs_v:
+                if capacity in (x, y):
+                    solo = x if y == capacity else y
+                else:
+                    out.append((x, y))
+            return out, solo
 
         # --- Step 3: (incremental) matching on the compact active set.
         rows = [int(s) for s in active] + ([capacity] if odd else [])

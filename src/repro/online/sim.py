@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import time
 from collections import deque
-from typing import Deque, List, Optional, Sequence, Tuple
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -38,7 +38,14 @@ class ClusterSim:
     arrivals:  an :class:`repro.online.arrivals.ArrivalProcess`;
     target_scale: scales the §6.2 solo-reference instruction targets
                (1.0 = the paper's methodology; benchmarks shrink it to keep
-               cluster-scale runs affordable).
+               cluster-scale runs affordable);
+    admission: ``"fifo"`` (default) admits FIFO into the lowest free slot;
+               ``"synergy"`` keeps the FIFO dequeue order but places each
+               job on the free context whose core-resident co-runner has
+               the best *predicted* pair score, and passes the policy a
+               profiled ST hint for the newcomer's slot
+               (``repro.online.admission.SynergyAdmission`` — required via
+               ``synergy=`` when selected).
     """
 
     def __init__(
@@ -51,6 +58,8 @@ class ClusterSim:
         seed: int = 0,
         target_scale: float = 1.0,
         tables: PhaseTables = None,
+        admission: str = "fifo",
+        synergy=None,
     ):
         assert n_cores >= 1
         self.machine = machine
@@ -61,6 +70,12 @@ class ClusterSim:
         self.arrivals = arrivals
         self.seed = seed
         self.target_scale = target_scale
+        assert admission in ("fifo", "synergy"), admission
+        assert (admission != "synergy") or (synergy is not None), (
+            "admission='synergy' needs a SynergyAdmission instance"
+        )
+        self.admission = admission
+        self.synergy = synergy
         # ``tables`` lets callers racing many configurations over the same
         # pool share one PhaseTables build (mirrors run_quanta's parameter).
         self.tables = tables if tables is not None else PhaseTables.build(
@@ -110,16 +125,24 @@ class ClusterSim:
                 pool_of.append(int(pid))
                 queue.append(rec)
 
-            # 2. Admission: FIFO queue into free contexts (lowest slot first).
+            # 2. Admission: FIFO dequeue into free contexts.  "fifo" takes
+            # the lowest free slot; "synergy" places each job on the free
+            # context with the best predicted co-runner and records an ST
+            # hint for the policy.
             arrived_slots: List[int] = []
+            hints: Dict[int, np.ndarray] = {}
             if queue:
-                (free,) = np.nonzero(app_id < 0)
-                for s in free:
-                    if not queue:
-                        break
+                free = [int(s) for s in np.nonzero(app_id < 0)[0]]
+                while queue and free:
                     rec = queue.popleft()
-                    rec.admit_q = q
                     pid = pool_of[rec.job_id]
+                    if self.admission == "synergy":
+                        s = self.synergy.place(pid, free, app_id)
+                        hints[s] = self.synergy.hint(pid)
+                    else:
+                        s = free[0]
+                    free.remove(s)
+                    rec.admit_q = q
                     app_id[s] = pid
                     job_at[s] = rec.job_id
                     st.phase_idx[s] = 0
@@ -144,9 +167,13 @@ class ClusterSim:
 
             # 3. The policy pairs the active population.
             t0 = time.perf_counter()
+            # ``hints`` rides along only when the admission tier produced
+            # any, so hint-oblivious policies (and subclasses predating the
+            # keyword) keep their signature under FIFO admission.
+            kw = {"hints": hints} if hints else {}
             pairs, solo = self.policy.pair(
                 q, active, counters, ran, arrived_slots, pending_departed,
-                prev_pairs, prev_solo,
+                prev_pairs, prev_solo, **kw,
             )
             policy_s[q] = time.perf_counter() - t0
             pending_departed = []

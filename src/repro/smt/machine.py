@@ -589,6 +589,7 @@ class SMTMachine:
         pairs: np.ndarray,
         rng: np.random.Generator,
         q: int,
+        solo: int = -1,
     ) -> np.ndarray:
         """Advance every app by one quantum; return the (N, 5) PMU counters.
 
@@ -596,6 +597,10 @@ class SMTMachine:
         second thread's components, so a relaunch of the first thread resets
         the phase its partner sees *within the same quantum*; the two-step
         split below reproduces that ordering exactly.
+
+        ``solo`` (odd populations) names the slot running alone on its core
+        this quantum: it executes interference-free and, by convention,
+        consumes its noise draw last (after every paired app).
         """
         n = tables.n_apps
         firsts, seconds = pairs[:, 0], pairs[:, 1]
@@ -610,9 +615,17 @@ class SMTMachine:
             tables, seconds, ph_pre[seconds], firsts, ph_mid[firsts], self.params
         )
         self._apply_progress(tables, st, seconds, comps[seconds], q)
+        draw_order = pairs.ravel()
+        if solo >= 0:
+            sidx = np.array([solo], np.int64)
+            comps[sidx] = corun_components_batched(
+                tables, sidx, ph_pre[sidx], None, None, self.params
+            )
+            self._apply_progress(tables, st, sidx, comps[sidx], q)
+            draw_order = np.concatenate([draw_order, sidx])
         return pmu_counters_batched(
             comps, tables.omega, tables.retire, self.params.quantum_cycles,
-            self.params, rng, noisy=True, draw_order=pairs.ravel(),
+            self.params, rng, noisy=True, draw_order=draw_order,
         )
 
     def _apply_progress(
@@ -798,13 +811,18 @@ class SMTMachine:
         take hours.  Reports aggregate IPC, the mean true slowdown of the
         chosen pairings, and scheduling/machine wall-times per quantum.
 
+        Odd populations follow the idle-context convention of the open
+        system (``repro.online``): the policy returns ``(n - 1) // 2``
+        pairs and the uncovered application runs alone on its core —
+        interference-free, slowdown 1 — that quantum.  Closed and open
+        systems therefore accept the same workloads.
+
         ``tables`` lets callers share one :class:`PhaseTables` build across
         several runs of the same workload (see :meth:`run_quanta_multi`).
         """
         import time
 
         n = len(profiles)
-        assert n % 2 == 0, "need an even number of applications"
         rng = np.random.default_rng(seed)
         tables = tables if tables is not None else PhaseTables.build(profiles)
         assert tables.n_apps == n, "tables do not match the workload"
@@ -826,23 +844,45 @@ class SMTMachine:
                 t1 = time.perf_counter()
                 sched_s += t1 - t0
                 sched_each.append(t1 - t0)
-                pa = np.asarray(pairs, dtype=np.int64)
-                assert pa.shape == (n // 2, 2) and np.array_equal(
-                    np.sort(pa.ravel()), np.arange(n)
-                ), "policy must return a perfect pairing"
+                pa = np.asarray(pairs, dtype=np.int64).reshape(-1, 2)
+                covered = np.sort(pa.ravel())
+                assert pa.shape == (n // 2, 2) and np.unique(
+                    covered
+                ).size == covered.size and (
+                    covered >= 0
+                ).all() and (covered < n).all(), (
+                    "policy must return a perfect pairing"
+                )
+                solo = -1
+                if n % 2 == 1:
+                    (uncov,) = np.nonzero(
+                        ~np.isin(np.arange(n), covered)
+                    )
+                    assert uncov.size == 1
+                    solo = int(uncov[0])
+                else:
+                    assert covered.size == n, (
+                        "policy must cover every application"
+                    )
                 # Ground-truth mean slowdown of the chosen pairing (the
-                # quality signal the race compares across policies).
+                # quality signal the race compares across policies); the
+                # solo slot of an odd population contributes slowdown 1.
                 ph = st.phase_idx % tables.n_phases
-                partner = np.empty(n, np.int64)
+                partner = np.arange(n, dtype=np.int64)
                 partner[pa[:, 0]] = pa[:, 1]
                 partner[pa[:, 1]] = pa[:, 0]
                 idx = np.arange(n)
-                smt = corun_components_batched(
-                    tables, idx, ph, partner, ph[partner], self.params
-                ).sum(axis=-1)
-                solo = tables.comps[idx, ph].sum(axis=-1)
-                slowdown_sum += float(np.mean(smt / solo))
-                samples = self._vector_quantum(tables, st, pa, rng, q)
+                co = partner != idx
+                smt = tables.comps[idx, ph].sum(axis=-1)
+                if co.any():
+                    smt[co] = corun_components_batched(
+                        tables, idx[co], ph[co], partner[co],
+                        ph[partner[co]], self.params
+                    ).sum(axis=-1)
+                solo_cpi = tables.comps[idx, ph].sum(axis=-1)
+                slowdown_sum += float(np.mean(smt / solo_cpi))
+                samples = self._vector_quantum(tables, st, pa, rng, q,
+                                               solo=solo)
                 self._advance_phases_vector(tables, st, rng)
                 machine_s += time.perf_counter() - t1
         finally:
@@ -867,6 +907,8 @@ class SMTMachine:
         policies: Dict[str, "Callable[[], object]"],
         n_quanta: int = 20,
         seed: int = 0,
+        engine: str = "vector",
+        **scan_kwargs,
     ) -> Dict[str, "ThroughputResult"]:
         """Race K policies through one workload — one machine pass per policy.
 
@@ -876,8 +918,24 @@ class SMTMachine:
         ``seed``, so all K passes face a bit-identical workload (same phase
         transitions, same counter noise for identical pairings) and their
         metrics differ only through the pairings each policy chose.
+
+        ``engine="scan"`` runs the whole K-policy race as **one jitted
+        dispatch** (``repro.smt.scan_engine``): the machine quantum, the
+        fused SYNPA step and the device matcher compose into a single
+        ``lax.scan`` over quanta.  ``policies`` must then map names to
+        :class:`repro.smt.scan_engine.ScanPolicy` specs (not factories);
+        ``scan_kwargs`` (``repeats``, ``transfer_guard``) pass through to
+        :func:`repro.smt.scan_engine.run_quanta_scan`.
         """
         tables = PhaseTables.build(profiles)
+        if engine == "scan":
+            from repro.smt import scan_engine
+
+            return scan_engine.run_quanta_scan(
+                self, profiles, policies, n_quanta=n_quanta, seed=seed,
+                tables=tables, **scan_kwargs,
+            )
+        assert engine == "vector", engine
         return {
             name: self.run_quanta(
                 profiles, factory(), n_quanta=n_quanta, seed=seed,

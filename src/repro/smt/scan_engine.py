@@ -1,0 +1,535 @@
+"""Accelerator-resident machine engine — ``engine="scan"``.
+
+The vectorised numpy engine (`repro.smt.machine`) runs a quantum as a few
+host array ops and the fused SYNPA dispatch as one jitted device call, but
+the *loop over quanta* — and the matching step — still live on the host:
+every quantum costs a dispatch, a cost-matrix transfer and a host matcher
+pass.  This module ports the whole per-quantum cycle to JAX and composes
+
+    machine quantum  ->  fused SYNPA step  ->  device matcher
+
+into a single ``lax.scan`` over quanta, so an entire K-policy race
+(:func:`run_quanta_scan`, the scan twin of ``SMTMachine.run_quanta_multi``)
+executes as **one dispatch** with host exits only at result extraction.
+
+Parity contract (held by ``tests/test_scan_engine.py``):
+
+* **Deterministic parts are exact to float tolerance.**  Given identical
+  phase indices and pairings, the interference transform, instruction
+  advance and noiseless PMU counters equal the numpy engine's within
+  float32 round-off (the numpy engine computes in float64; the device
+  engine in float32).
+* **RNG parts are distribution-equal, not bit-equal.**  The numpy engine
+  draws counter noise and phase durations from a ``numpy.Generator``
+  stream; this engine draws them from threefry streams keyed per
+  ``(quantum, purpose)``.  The draws match in distribution (lognormal
+  noise moments, poisson phase durations) under the documented stream
+  layout below, but a scan run and a vector run of the same seed follow
+  different noise trajectories.  Aggregate metrics (IPC, mean true
+  slowdown) agree statistically.
+
+RNG stream layout (bump :data:`SCAN_RNG_STREAM_VERSION` when changing it):
+
+* machine key  = ``PRNGKey(seed)``;
+  counter noise of quantum ``q`` = ``fold_in(fold_in(key, q), 0)`` as one
+  ``(N, 4)`` standard-normal block, ``exp(sigma * z)``;
+  phase durations of quantum ``q`` = ``fold_in(fold_in(key, q), 1)`` as an
+  ``(N,)`` poisson block (only transitioning slots consume theirs).
+* policy key of the k-th raced policy = ``fold_in(PRNGKey(seed + 7919), k)``
+  (the in-graph ``linux`` migrations); the *initial pairing* of every
+  policy is drawn on host from ``numpy.default_rng(seed + 7919)`` — the
+  same convention (and therefore the same first-quantum pairing) as the
+  host schedulers' first ``_random_pairs`` call.
+
+All K policies of a race face a bit-identical workload, as in
+``run_quanta_multi``.  The scan engine's guarantee is in fact stronger:
+noise and phase draws are keyed per (slot, quantum), never per visit
+order, so a slot's draws are identical across policies even when their
+pairings differ — whereas the vector engine assigns noise draws in pair
+visit order (``draw_order``), making per-slot noise pairing-dependent
+and only promising identical counters *for identical pairings*.
+
+The engine targets the fixed-horizon throughput mode (``run_quanta``): no
+§6.2 targets or relaunches, which is exactly what the cluster-scale races
+use.  Odd populations follow the idle-context convention: a slot whose
+partner is the idle vertex runs alone, interference-free, that quantum.
+
+Timing note: the race is one dispatch, so machine and policy time cannot
+be separated; :func:`run_quanta_scan` reports the whole per-quantum wall
+time in ``ThroughputResult.machine_s_per_quantum`` (median over
+``repeats`` back-to-back dispatches after the compile call) and leaves the
+``sched_*`` fields zero.  Compare engines on the machine+policy *sum*.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import isc, matching
+from repro.core.synpa import fused_pad, make_fused_step
+from repro.smt.machine import (
+    MachineParams,
+    PhaseTables,
+    ThroughputResult,
+)
+
+#: Version of the threefry stream layout documented in the module
+#: docstring.  Statistical-parity tests and recorded benchmark results are
+#: tied to it; bump on any change to key derivation or draw shapes.
+SCAN_RNG_STREAM_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceTables:
+    """jnp (float32) mirror of :class:`repro.smt.machine.PhaseTables`."""
+
+    n_apps: int
+    n_phases: jnp.ndarray     # (A,) i32
+    comps: jnp.ndarray        # (A, Pmax, 4)
+    util: jnp.ndarray         # (A, Pmax)
+    x_fe: jnp.ndarray         # (A, Pmax)
+    x_be: jnp.ndarray         # (A, Pmax)
+    duration: jnp.ndarray     # (A, Pmax)
+    omega: jnp.ndarray        # (A,)
+    retire: jnp.ndarray       # (A,)
+    mem_sens: jnp.ndarray     # (A,)
+    fetch_sens: jnp.ndarray   # (A,)
+
+    @classmethod
+    def build(cls, tables: PhaseTables) -> "DeviceTables":
+        f = lambda a: jnp.asarray(a, jnp.float32)  # noqa: E731
+        return cls(
+            n_apps=tables.n_apps,
+            n_phases=jnp.asarray(tables.n_phases, jnp.int32),
+            comps=f(tables.comps),
+            util=f(tables.util),
+            x_fe=f(tables.x_fe),
+            x_be=f(tables.x_be),
+            duration=f(tables.duration),
+            omega=f(tables.omega),
+            retire=f(tables.retire),
+            mem_sens=f(tables.mem_sens),
+            fetch_sens=f(tables.fetch_sens),
+        )
+
+
+jax.tree_util.register_pytree_node(
+    DeviceTables,
+    lambda t: (
+        (t.n_phases, t.comps, t.util, t.x_fe, t.x_be, t.duration,
+         t.omega, t.retire, t.mem_sens, t.fetch_sens),
+        t.n_apps,
+    ),
+    lambda n_apps, leaves: DeviceTables(n_apps, *leaves),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScanPolicy:
+    """One raced policy of the scan engine.
+
+    kind:
+      ``"synpa"``   — fused SYNPA step + device matcher (needs ``method``
+                      and ``model``);
+      ``"static"``  — the initial random pairing, pinned (the scan twin of
+                      ``RandomStaticScheduler``);
+      ``"linux"``   — sticky pairing with occasional random migrations
+                      (the scan *analogue* of ``LinuxScheduler``: same move
+                      and probability, threefry instead of numpy draws).
+
+    matcher:
+      ``"refine"``  — full device re-match (sort seed + 2-opt) at the
+                      first counter quantum, then a bounded masked 2-opt
+                      from the carried pairing (the streaming allocator's
+                      quality-equal tier, in-graph);
+      ``"full"``    — fresh sort seed + 2-opt re-match every quantum (the
+                      cold tier: measurably more work per quantum).
+
+    ``refine_rounds`` bounds the parallel-swap rounds of the refine tier
+    per quantum (each round applies every mutual-best improving swap);
+    ``refine_eps`` is the per-swap improvement floor — the same noise-floor
+    role as ``StreamingConfig.refine_eps``.
+    """
+
+    kind: str = "synpa"
+    method: Optional[isc.StackMethod] = None
+    model: Optional[object] = None
+    pair_impl: str = "auto"
+    solver: str = "gn"
+    matcher: str = "refine"
+    refine_eps: float = 1e-2
+    refine_rounds: int = 8
+    p_migrate: float = 0.03
+
+
+class _MachineState(NamedTuple):
+    phase_idx: jnp.ndarray      # (N,) i32
+    phase_left: jnp.ndarray     # (N,) f32
+    total_retired: jnp.ndarray  # (N,) f32
+    total_cycles: jnp.ndarray   # (N,) f32
+
+
+def _corun_components_scan(dt: DeviceTables, ph, partner, params):
+    """In-graph :func:`repro.smt.machine.corun_components_batched`.
+
+    ``partner[i] == i`` marks a solo slot: the interference terms are
+    masked to zero, so its components are exactly the solo components.
+    """
+    n = dt.n_apps
+    idx = jnp.arange(n, dtype=jnp.int32)
+    co = (partner != idx).astype(jnp.float32)
+    c = dt.comps[idx, ph]
+    cpi = c.sum(axis=-1)
+    php = ph[partner]
+    u = dt.util[partner, php] * co
+    f = dt.x_fe[partner, php] * co
+    m = dt.x_be[partner, php] * co
+    mem = dt.mem_sens
+    fetch = dt.fetch_sens
+    out = jnp.stack(
+        [
+            c[:, 0] * (1.0 + params.a_disp * u),
+            c[:, 1] * (1.0 + params.a_hw * u),
+            c[:, 2] * (1.0 + params.a_fe * f)
+            + params.e_fe * fetch * f * cpi,
+            c[:, 3] * (1.0 + params.a_be * m + params.b_be * mem * m * m)
+            + params.e_be * mem * m * cpi,
+        ],
+        axis=-1,
+    )
+    return out
+
+
+def _pmu_counters_scan(comps, omega, retire, cycles, params, key,
+                       noisy=True):
+    """In-graph :func:`repro.smt.machine.pmu_counters_batched`.
+
+    Noise is one ``(N, 4)`` lognormal block from ``key`` —
+    distribution-equal to the numpy engine's draws (stream layout in the
+    module docstring), applied to the same four noisy columns.
+    """
+    n = comps.shape[0]
+    cpi = comps.sum(axis=-1)
+    insts = cycles / cpi
+    frac = comps / cpi[:, None]
+    x_fe, x_be = frac[:, 2], frac[:, 3]
+    overlap = omega * jnp.minimum(x_fe, x_be)
+    noisy_cols = jnp.stack(
+        [
+            cycles * (x_fe + params.overlap_split * overlap),
+            cycles * (x_be + (1.0 - params.overlap_split) * overlap),
+            insts,
+            insts * retire,
+        ],
+        axis=-1,
+    )
+    if noisy:
+        z = jax.random.normal(key, (n, 4), jnp.float32)
+        noisy_cols = noisy_cols * jnp.exp(params.noise_sigma * z)
+    return jnp.concatenate(
+        [jnp.full((n, 1), cycles, jnp.float32), noisy_cols], axis=-1
+    )
+
+
+def _make_machine_quantum(dt: DeviceTables, params: MachineParams):
+    """Closure: one in-graph quantum of the fixed-horizon machine."""
+    n = dt.n_apps
+    idx = jnp.arange(n, dtype=jnp.int32)
+    cycles = jnp.float32(params.quantum_cycles)
+
+    def quantum(state: _MachineState, partner, mkey, q):
+        ph = state.phase_idx % dt.n_phases
+        comps = _corun_components_scan(dt, ph, partner, params)
+        cpi = comps.sum(axis=-1)
+        solo_cpi = dt.comps[idx, ph].sum(axis=-1)
+        slowdown = jnp.mean(cpi / solo_cpi)
+
+        retired = cycles / cpi * dt.retire
+        counters = _pmu_counters_scan(
+            comps, dt.omega, dt.retire, cycles, params,
+            jax.random.fold_in(jax.random.fold_in(mkey, q), 0),
+        )
+
+        # Phase advance: transitioning slots draw their next duration from
+        # the per-(slot, quantum) poisson block — pairing-independent, so
+        # all raced policies see identical phase trajectories.
+        left = state.phase_left - 1.0
+        trans = left <= 0.0
+        new_idx = state.phase_idx + trans.astype(jnp.int32)
+        lam = dt.duration[idx, new_idx % dt.n_phases]
+        draws = jax.random.poisson(
+            jax.random.fold_in(jax.random.fold_in(mkey, q), 1), lam, (n,)
+        ).astype(jnp.float32)
+        new_left = jnp.where(trans, jnp.maximum(draws, 1.0), left)
+
+        new_state = _MachineState(
+            phase_idx=new_idx,
+            phase_left=new_left,
+            total_retired=state.total_retired + retired,
+            total_cycles=state.total_cycles + cycles,
+        )
+        return counters, new_state, slowdown
+
+    return quantum
+
+
+def _machine_partner_of(mpart, n):
+    """Matcher-space partner (P,) -> machine partner (N,): idle/pad -> self."""
+    idx = jnp.arange(n, dtype=jnp.int32)
+    mp = mpart[:n].astype(jnp.int32)
+    return jnp.where(mp < n, mp, idx)
+
+
+def _make_policy_step(spec: ScanPolicy, n: int, p_pad: int,
+                      valid_p: jnp.ndarray):
+    """Closure: (q, counters, mpart, st, pkey, first=False) -> (mpart', st').
+
+    ``first`` is a *static* Python flag marking the first quantum with
+    counters: the synpa refine tier then runs the full sort-seed + 2-opt re-match
+    instead of refining the carried pairing.  It is static — the race
+    hoists the first policy call out of the ``lax.scan`` — so the seed
+    compiles into exactly one execution per race instead of riding as a
+    per-quantum ``lax.cond`` branch.
+    """
+    idx = jnp.arange(n, dtype=jnp.int32)
+    odd = n % 2 == 1
+
+    if spec.kind == "static":
+        def step(q, counters, mpart, st, pkey, first=False):
+            return mpart, st
+        return step
+
+    if spec.kind == "linux":
+        p_mig = float(spec.p_migrate)
+
+        def step(q, counters, mpart, st, pkey, first=False):
+            key = jax.random.fold_in(pkey, q)
+            k1, k2, k3 = jax.random.split(key, 3)
+            x = jax.random.randint(k1, (), 0, n)
+            y = jax.random.randint(k2, (), 0, n)
+            px = mpart[x]
+            py = mpart[y]
+            distinct = (y != x) & (y != px) & (px < n) & (py < n)
+            do = (jax.random.uniform(k3) < p_mig) & distinct
+            # Swap x and y between their cores: (px, x)(py, y) ->
+            # (px, y)(py, x) — the LinuxScheduler move in partner space.
+            swapped = (
+                mpart.at[px].set(y).at[y].set(px)
+                .at[py].set(x).at[x].set(py)
+            )
+            return jnp.where(do, swapped, mpart), st
+        return step
+
+    assert spec.kind == "synpa", spec.kind
+    assert spec.method is not None and spec.model is not None, (
+        "synpa scan policy needs a stack method and a fitted model"
+    )
+    fstep = make_fused_step(
+        spec.method, spec.model, impl=spec.pair_impl, solver=spec.solver,
+    )
+    full_budget = 4 * (p_pad // 2)
+
+    def step(q, counters, mpart, st, pkey, first=False):
+        partner = _machine_partner_of(mpart, n)
+        solve = partner != idx
+        solo = ~solve
+        masks = jnp.stack(
+            [solve, solo, jnp.ones(n, bool), jnp.zeros(n, bool)]
+        )
+        cost, st = fstep(counters, partner, st, masks, jnp.asarray(odd))
+        if spec.matcher == "full" or (spec.matcher == "refine" and first):
+            mpart = matching.device_pairs_partner(
+                cost, valid_p, eps=spec.refine_eps, max_rounds=full_budget
+            )
+        else:
+            assert spec.matcher == "refine", spec.matcher
+            mpart = matching.device_two_opt_partner(
+                cost, mpart, valid_p, eps=spec.refine_eps,
+                max_rounds=spec.refine_rounds,
+            )
+        return mpart, st
+
+    return step
+
+
+def _initial_mpart(n: int, p_pad: int, rng: np.random.Generator) -> np.ndarray:
+    """Host-built initial matcher-space partner vector.
+
+    The random permutation follows the host schedulers' first
+    ``_random_pairs`` draw (``default_rng(seed + 7919)``); an odd
+    population's leftover slot pairs the idle vertex (row ``n``), and
+    padding vertices pair consecutively among themselves.
+    """
+    perm = rng.permutation(n)
+    mpart = np.arange(p_pad, dtype=np.int32)
+    for k in range(n // 2):
+        a, b = int(perm[2 * k]), int(perm[2 * k + 1])
+        mpart[a], mpart[b] = b, a
+    pads = list(range(n, p_pad))
+    if n % 2 == 1:
+        solo = int(perm[-1])
+        mpart[solo], mpart[n] = n, solo
+        pads.remove(n)
+    for k in range(0, len(pads), 2):
+        a, b = pads[k], pads[k + 1]
+        mpart[a], mpart[b] = b, a
+    return mpart
+
+
+def build_race(
+    tables: PhaseTables,
+    params: MachineParams,
+    policies: Sequence[ScanPolicy],
+    n_quanta: int,
+):
+    """Compile-ready K-policy race: one jitted function, one dispatch.
+
+    Returns ``race(dt, init_mpart (K, P), init_st (K, N, 4), mkey, pkey)``
+    -> ``(total_retired (K, N), total_cycles (K, N), slowdown_sum (K,))``.
+    The K policy bodies are unrolled inside the jit (K is small and
+    static); each runs quantum 0 with its initial pairing and then a
+    ``lax.scan`` over quanta 1..Q-1 of policy step + machine quantum.
+    """
+    n = tables.n_apps
+    p_pad = fused_pad(n)
+    valid_np = np.zeros(p_pad, bool)
+    valid_np[:n] = True
+    if n % 2 == 1:
+        valid_np[n] = True
+    valid_p = jnp.asarray(valid_np)
+    steps = [_make_policy_step(s, n, p_pad, valid_p) for s in policies]
+
+    def run_one(dt, quantum, policy_step, mpart0, st0, mkey, pkey):
+        state = _MachineState(
+            phase_idx=jnp.zeros(n, jnp.int32),
+            phase_left=dt.duration[:, 0],
+            total_retired=jnp.zeros(n, jnp.float32),
+            total_cycles=jnp.zeros(n, jnp.float32),
+        )
+        # Quantum 0: the initial random pairing, no counters yet.
+        partner0 = _machine_partner_of(mpart0, n)
+        counters, state, slow_sum = quantum(state, partner0, mkey, 0)
+        mpart, st = mpart0, st0
+        if n_quanta >= 2:
+            # Quantum 1 is hoisted out of the scan: the synpa refine tier
+            # runs its (once-per-race) full seed + 2-opt re-match here
+            # as straight-line code rather than a per-quantum cond branch.
+            mpart, st = policy_step(1, counters, mpart, st, pkey,
+                                    first=True)
+            counters, state, slow1 = quantum(
+                state, _machine_partner_of(mpart, n), mkey, 1
+            )
+            slow_sum = slow_sum + slow1
+
+        def body(carry, q):
+            state, counters, mpart, st = carry
+            mpart, st = policy_step(q, counters, mpart, st, pkey)
+            partner = _machine_partner_of(mpart, n)
+            counters, state, slow = quantum(state, partner, mkey, q)
+            return (state, counters, mpart, st), slow
+
+        (state, _c, _m, _st), slows = lax.scan(
+            body, (state, counters, mpart, st),
+            jnp.arange(2, n_quanta),
+        )
+        return (
+            state.total_retired,
+            state.total_cycles,
+            slow_sum + jnp.sum(slows),
+        )
+
+    @jax.jit
+    def race(dt: DeviceTables, init_mpart, init_st, mkey, pkey):
+        quantum = _make_machine_quantum(dt, params)
+        outs = [
+            run_one(dt, quantum, step, init_mpart[k], init_st[k], mkey,
+                    jax.random.fold_in(pkey, k))
+            for k, step in enumerate(steps)
+        ]
+        return tuple(jnp.stack([o[i] for o in outs]) for i in range(3))
+
+    return race
+
+
+def run_quanta_scan(
+    machine,
+    profiles,
+    policies: Dict[str, ScanPolicy],
+    n_quanta: int = 20,
+    seed: int = 0,
+    tables: Optional[PhaseTables] = None,
+    repeats: int = 1,
+    transfer_guard: bool = False,
+) -> Dict[str, ThroughputResult]:
+    """The scan twin of ``SMTMachine.run_quanta_multi`` — one dispatch.
+
+    ``repeats`` re-dispatches the (pure) compiled race and reports the
+    *median* per-quantum wall time; the compile call is always excluded.
+    ``transfer_guard=True`` wraps the timed dispatches in
+    ``jax.transfer_guard("disallow")``, proving the loop makes no
+    per-quantum host transfers (inputs are device-committed up front,
+    results are fetched after the guard exits).
+    """
+    params = machine.params
+    tables = tables if tables is not None else PhaseTables.build(profiles)
+    n = tables.n_apps
+    p_pad = fused_pad(n)
+    specs = list(policies.values())
+    race = build_race(tables, params, specs, n_quanta)
+
+    init_mpart = np.stack(
+        [
+            _initial_mpart(n, p_pad, np.random.default_rng(seed + 7919))
+            for _ in specs
+        ]
+    )
+    init_st = np.stack([_uniform_stacks(s, n) for s in specs])
+
+    dt = jax.device_put(DeviceTables.build(tables))
+    args = (
+        dt,
+        jax.device_put(jnp.asarray(init_mpart, jnp.int32)),
+        jax.device_put(jnp.asarray(init_st, jnp.float32)),
+        jax.device_put(jax.random.PRNGKey(seed)),
+        jax.device_put(jax.random.PRNGKey(seed + 7919)),
+    )
+
+    out = jax.block_until_ready(race(*args))  # compile + first run
+    walls = []
+    for _ in range(max(int(repeats), 1)):
+        t0 = time.perf_counter()
+        if transfer_guard:
+            with jax.transfer_guard("disallow"):
+                out = jax.block_until_ready(race(*args))
+        else:
+            out = jax.block_until_ready(race(*args))
+        walls.append(time.perf_counter() - t0)
+    per_quantum = float(np.median(walls)) / max(n_quanta, 1)
+
+    retired, cycles, slow_sum = (np.asarray(o) for o in out)
+    results: Dict[str, ThroughputResult] = {}
+    for k, name in enumerate(policies):
+        ipc = retired[k] / np.maximum(cycles[k], 1.0)
+        results[name] = ThroughputResult(
+            n_apps=n,
+            quanta=n_quanta,
+            ipc=ipc,
+            total_retired=float(retired[k].sum()),
+            mean_true_slowdown=float(slow_sum[k]) / max(n_quanta, 1),
+            sched_s_per_quantum=0.0,
+            sched_s_per_quantum_median=0.0,
+            machine_s_per_quantum=per_quantum,
+        )
+    return results
+
+
+def _uniform_stacks(spec: ScanPolicy, n: int) -> np.ndarray:
+    ncat = spec.method.n_categories if spec.method is not None else 4
+    return np.tile(isc.uniform_stack(ncat), (n, 1))

@@ -566,3 +566,150 @@ def test_streaming_policy_speedup_n256():
         cold.sched_s_per_quantum, stream.sched_s_per_quantum
     )
     assert stream.mean_true_slowdown <= cold.mean_true_slowdown * 1.02
+
+
+# ------------------------------------------------------ queue-aware admission
+class TestSynergyAdmission:
+    @pytest.fixture(scope="class")
+    def machine(self):
+        return mc.SMTMachine(mc.MachineParams(), seed=0)
+
+    @pytest.fixture(scope="class")
+    def pool(self):
+        return pool_profiles()
+
+    @pytest.fixture(scope="class")
+    def synergy(self, machine, pool):
+        from repro.online import SynergyAdmission
+
+        return SynergyAdmission(
+            machine, pool, isc.SYNPA4_R_FEBE, _toy_model(), quanta=12
+        )
+
+    def test_place_picks_predicted_best_corunner(self, synergy, pool):
+        """The dequeued job lands next to the resident with the lowest
+        predicted pair cost among free core-mates."""
+        pid = 0
+        app_id = np.full(8, -1, np.int64)
+        # Residents on cores 1 and 2 (slots 2 and 4); slots 3 and 5 free.
+        app_id[2], app_id[4] = 1, 2
+        free = [0, 1, 3, 5, 6, 7]
+        s = synergy.place(pid, free, app_id)
+        c_mate1 = synergy.pool_cost[pid, 1]
+        c_mate2 = synergy.pool_cost[pid, 2]
+        c_empty = synergy.mean_cost[pid]
+        best = min((c_mate1, 3), (c_mate2, 5), (c_empty, 0))
+        assert s == best[1], (s, c_mate1, c_mate2, c_empty)
+
+    def test_hint_is_profiled_solo_stack(self, synergy):
+        h = synergy.hint(3)
+        assert h.shape == (4,)
+        assert h.sum() == pytest.approx(1.0, abs=1e-3)
+
+    def test_hints_seed_streaming_estimates(self, machine, pool, synergy):
+        """A hinted newcomer's ST estimate is the profiled stack (not the
+        uniform placeholder) until its first counters solve."""
+        model = _toy_model()
+        policy = StreamingAllocator(isc.SYNPA4_R_FEBE, model)
+        # 6 apps at q0, two arrivals at q8 with hints.
+        events = [(0, i) for i in range(6)] + [(8, 6), (8, 7)]
+        sim = ClusterSim(
+            machine, pool, n_cores=4, policy=policy,
+            arrivals=TraceArrivals(events), seed=3, target_scale=0.3,
+            admission="synergy", synergy=synergy,
+        )
+
+        captured = {}
+        orig = policy.pair
+
+        def capture(q, *a, **k):
+            out = orig(q, *a, **k)
+            captured[q] = np.array(policy._st)
+            return out
+
+        policy.pair = capture
+        sim.run(10)
+        # Synergy placement may put the two newcomers on any free slots, so
+        # look for their *profiled* stacks among the slot estimates right
+        # after the arrival quantum's call.
+        st8 = captured[8]
+        matches = 0
+        for s in range(8):
+            for pid in (6, 7):
+                if np.allclose(st8[s], synergy.hint(pid), atol=1e-6):
+                    matches += 1
+                    break
+        assert matches >= 2, st8
+
+    def test_synergy_vs_fifo_deterministic_and_comparable(
+            self, machine, pool, synergy):
+        """Synergy admission is seed-deterministic and stays in the same
+        quality ballpark as FIFO (it wins on average at high churn; a
+        single seeded cell must at least not collapse)."""
+        model = _toy_model()
+        arr = PoissonArrivals(rate=3.0, n_pool=len(pool))
+        runs = []
+        for _ in range(2):
+            sim = ClusterSim(
+                machine, pool, n_cores=16,
+                policy=StreamingAllocator(isc.SYNPA4_R_FEBE, model),
+                arrivals=arr, seed=5, target_scale=0.1,
+                admission="synergy", synergy=synergy,
+            )
+            runs.append(sim.run(40).summary())
+        assert runs[0]["n_completed"] == runs[1]["n_completed"]
+        assert runs[0]["mean_slowdown"] == runs[1]["mean_slowdown"]
+        fifo = ClusterSim(
+            machine, pool, n_cores=16,
+            policy=StreamingAllocator(isc.SYNPA4_R_FEBE, model),
+            arrivals=arr, seed=5, target_scale=0.1,
+        ).run(40).summary()
+        assert runs[0]["mean_slowdown"] <= fifo["mean_slowdown"] * 1.05
+
+
+# ------------------------------------------------------ device matcher tier
+def test_streaming_device_matcher_end_to_end():
+    """StreamingConfig(matcher="device"): the host matcher swaps for the
+    in-graph sort seed + parallel 2-opt; churn (odd populations included)
+    keeps shapes stable and pairings valid (the sim asserts coverage), and
+    open-system quality stays within the 2-opt-gap contract of the host
+    tier."""
+    machine = mc.SMTMachine(mc.MachineParams(), seed=0)
+    pool = pool_profiles()
+    model = _toy_model()
+    arrivals = PoissonArrivals(rate=1.5, n_pool=len(pool))
+    out = {}
+    for label, cfg in (("device", StreamingConfig(matcher="device")),
+                       ("host", None)):
+        sim = ClusterSim(
+            machine, pool, n_cores=8,
+            policy=StreamingAllocator(isc.SYNPA4_R_FEBE, model, cfg),
+            arrivals=arrivals, seed=5, target_scale=0.1,
+        )
+        out[label] = sim.run(50)
+    assert out["device"].n_completed > 0
+    assert out["device"].mean_slowdown >= 1.0
+    assert out["device"].mean_slowdown <= \
+        out["host"].mean_slowdown * 1.05
+
+
+def test_streaming_device_matcher_quality_vs_host():
+    """Closed static population: the device tier's quality stays within a
+    few percent of the host tier (2-opt gap contract, end to end)."""
+    machine = mc.SMTMachine(mc.MachineParams(), seed=0)
+    model = _toy_model()
+    profs = workloads.scaled_workload(32, seed=999)
+    res = machine.run_quanta_multi(
+        profs,
+        {
+            "host": lambda: StreamingScheduler(isc.SYNPA4_R_FEBE, model),
+            "device": lambda: StreamingScheduler(
+                isc.SYNPA4_R_FEBE, model, StreamingConfig(matcher="device")
+            ),
+        },
+        n_quanta=16,
+        seed=7,
+    )
+    host, dev = res["host"], res["device"]
+    assert dev.mean_true_slowdown <= host.mean_true_slowdown * 1.05
+    assert dev.mean_true_slowdown >= 1.0

@@ -1,0 +1,306 @@
+"""Scan-engine tests: the parity contract, the transfer guard, odd
+populations, and the single-dispatch K-policy race.
+
+The contract (``repro.smt.scan_engine`` module docstring):
+
+* deterministic parts — interference transform, instruction advance,
+  noiseless PMU counters — are *exact to float tolerance* against the
+  numpy engine given identical phases and pairings (float32 vs float64);
+* RNG parts — counter noise, phase durations — are *distribution-equal*
+  under ``SCAN_RNG_STREAM_VERSION``, not bit-equal: a scan run follows a
+  different noise trajectory than a vector run of the same seed, and
+  aggregate metrics agree statistically.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import isc, regression
+from repro.core.synpa import SynpaScheduler
+from repro.core.baselines import RandomStaticScheduler
+from repro.smt import machine as mc
+from repro.smt import workloads
+from repro.smt import scan_engine as se
+from repro.smt.machine import PhaseTables
+
+
+def _toy_model(n_categories=4):
+    coeffs = np.zeros((4, 4), np.float32)
+    coeffs[isc.CAT_DI] = [0.007, 0.91, 0.004, 0.03]
+    coeffs[isc.CAT_FE] = [0.02, 1.41, 0.0, 0.0]
+    coeffs[isc.CAT_BE] = [0.0, 0.24, 1.07, 0.5]
+    coeffs[isc.CAT_HW] = [0.03, 1.22, 0.33, 0.0]
+    if n_categories == 3:
+        coeffs[isc.CAT_HW] = 0.0
+    return regression.CategoryModel(
+        coeffs=jnp.asarray(coeffs), mse=jnp.zeros(4),
+        n_categories=n_categories,
+    )
+
+
+@pytest.fixture(scope="module")
+def machine():
+    return mc.SMTMachine(mc.MachineParams(), seed=0)
+
+
+@pytest.fixture(scope="module")
+def setup64(machine):
+    profs = workloads.scaled_workload(64, seed=64)
+    tables = PhaseTables.build(profs)
+    return profs, tables, se.DeviceTables.build(tables)
+
+
+def _partner_with_solo(n, rng):
+    """Random machine-space partner array with one solo slot (odd-style)."""
+    perm = rng.permutation(n)
+    partner = np.arange(n, dtype=np.int32)
+    for k in range(n // 2):
+        a, b = int(perm[2 * k]), int(perm[2 * k + 1])
+        partner[a], partner[b] = b, a
+    return partner  # odd n leaves perm[-1] solo
+
+
+# ------------------------------------------------- deterministic parity
+class TestDeterministicParity:
+    def test_corun_components_exact(self, machine, setup64):
+        """Same phases + pairing -> same interference transform (f32 tol),
+        including the solo (partner == self) convention."""
+        _profs, tables, dt = setup64
+        n = tables.n_apps
+        rng = np.random.default_rng(1)
+        partner = _partner_with_solo(n - 1, rng)  # odd: one solo slot
+        partner = np.concatenate([partner, [n - 1]]).astype(np.int32)
+        ph = rng.integers(0, 4, n) % tables.n_phases
+        got = np.asarray(se._corun_components_scan(
+            dt, jnp.asarray(ph, jnp.int32), jnp.asarray(partner),
+            machine.params,
+        ))
+        idx = np.arange(n)
+        co = partner != idx
+        want = np.empty((n, 4))
+        want[co] = mc.corun_components_batched(
+            tables, idx[co], ph[co], partner[co], ph[partner[co]],
+            machine.params,
+        )
+        want[~co] = mc.corun_components_batched(
+            tables, idx[~co], ph[~co], None, None, machine.params,
+        )
+        np.testing.assert_allclose(got, want, rtol=2e-6, atol=1e-8)
+
+    def test_noiseless_counters_exact(self, machine, setup64):
+        _profs, tables, dt = setup64
+        n = tables.n_apps
+        rng = np.random.default_rng(2)
+        ph = rng.integers(0, 2, n) % tables.n_phases
+        idx = np.arange(n)
+        partner = _partner_with_solo(n, rng)
+        comps = mc.corun_components_batched(
+            tables, idx, ph, partner, ph[partner], machine.params
+        )
+        want = mc.pmu_counters_batched(
+            comps, tables.omega, tables.retire,
+            machine.params.quantum_cycles, machine.params,
+            np.random.default_rng(0), noisy=False,
+        )
+        got = np.asarray(se._pmu_counters_scan(
+            jnp.asarray(comps, jnp.float32), dt.omega, dt.retire,
+            jnp.float32(machine.params.quantum_cycles), machine.params,
+            jax.random.PRNGKey(0), noisy=False,
+        ))
+        np.testing.assert_allclose(got, want, rtol=3e-6)
+
+    def test_initial_pairing_matches_host_convention(self):
+        """The scan race's first-quantum pairing is the host schedulers'
+        first ``_random_pairs`` draw (default_rng(seed + 7919))."""
+        n, seed = 16, 5
+        mpart = se._initial_mpart(n, 24, np.random.default_rng(seed + 7919))
+        sched = RandomStaticScheduler()
+        sched.reset(n_apps=n, rng=np.random.default_rng(seed + 7919))
+        want = sched._random_pairs()
+        got = sorted(
+            (int(v), int(mpart[v])) for v in range(n) if v < mpart[v]
+        )
+        assert got == sorted(tuple(sorted(p)) for p in want)
+
+
+# ------------------------------------------------- RNG statistics
+class TestRNGStatistics:
+    def test_counter_noise_lognormal_moments(self, machine, setup64):
+        """Scan noise is exp(sigma * N(0,1)) per noisy column —
+        distribution-equal to the numpy engine's lognormal draws."""
+        _profs, tables, dt = setup64
+        n = tables.n_apps
+        ph = np.zeros(n, np.int64)
+        idx = np.arange(n)
+        comps = mc.corun_components_batched(
+            tables, idx, ph, idx[::-1].copy(), ph, machine.params
+        )
+        base = np.asarray(se._pmu_counters_scan(
+            jnp.asarray(comps, jnp.float32), dt.omega, dt.retire,
+            jnp.float32(machine.params.quantum_cycles), machine.params,
+            jax.random.PRNGKey(0), noisy=False,
+        ))
+        logs = []
+        for q in range(200):
+            noisy = np.asarray(se._pmu_counters_scan(
+                jnp.asarray(comps, jnp.float32), dt.omega, dt.retire,
+                jnp.float32(machine.params.quantum_cycles), machine.params,
+                jax.random.fold_in(jax.random.PRNGKey(0), q), noisy=True,
+            ))
+            logs.append(np.log(noisy[:, 1:] / base[:, 1:]))
+        logs = np.concatenate(logs).ravel()
+        sigma = machine.params.noise_sigma
+        assert abs(logs.mean()) < 3 * sigma / np.sqrt(logs.size)
+        assert abs(logs.std() - sigma) < 0.05 * sigma
+
+    def test_aggregate_metrics_statistically_equal(self, machine):
+        """Static policy, same initial pairing: scan and vector runs agree
+        on IPC and mean true slowdown within a couple of percent (different
+        noise/phase trajectories, same distributions)."""
+        profs = workloads.scaled_workload(64, seed=64)
+        rv = machine.run_quanta(
+            profs, RandomStaticScheduler(), n_quanta=40, seed=9
+        )
+        rs = machine.run_quanta_multi(
+            profs, {"static": se.ScanPolicy(kind="static")},
+            n_quanta=40, seed=9, engine="scan",
+        )["static"]
+        assert rs.mean_true_slowdown == pytest.approx(
+            rv.mean_true_slowdown, rel=0.03
+        )
+        assert rs.ipc_geomean == pytest.approx(rv.ipc_geomean, rel=0.03)
+        # Identical first-quantum pairing by construction:
+        # both draw from default_rng(seed + 7919).
+
+
+# ------------------------------------------------- odd populations
+class TestOddPopulations:
+    def test_run_quanta_odd_random_static(self, machine):
+        profs = workloads.scaled_workload(16, seed=3)[:15]
+        res = machine.run_quanta(
+            profs, RandomStaticScheduler(), n_quanta=10, seed=4
+        )
+        assert res.n_apps == 15
+        assert res.mean_true_slowdown >= 1.0
+        assert np.isfinite(res.ipc).all() and (res.ipc > 0).all()
+
+    def test_run_quanta_odd_deterministic(self, machine):
+        profs = workloads.scaled_workload(16, seed=3)[:15]
+        r1 = machine.run_quanta(profs, RandomStaticScheduler(),
+                                n_quanta=8, seed=4)
+        r2 = machine.run_quanta(profs, RandomStaticScheduler(),
+                                n_quanta=8, seed=4)
+        np.testing.assert_array_equal(r1.ipc, r2.ipc)
+        assert r1.mean_true_slowdown == r2.mean_true_slowdown
+
+    def test_run_quanta_odd_synpa_idle_vertex(self, machine):
+        """SYNPA rides the idle-context convention: every quantum covers
+        exactly n-1 apps, the leftover runs interference-free."""
+        profs = workloads.scaled_workload(16, seed=3)[:15]
+        policy = SynpaScheduler(isc.SYNPA4_R_FEBE, _toy_model())
+
+        seen = []
+        orig = policy.schedule
+
+        def capture(q, samples, prev):
+            pairs = orig(q, samples, prev)
+            seen.append(sorted(x for p in pairs for x in p))
+            return pairs
+
+        policy.schedule = capture
+        res = machine.run_quanta(profs, policy, n_quanta=8, seed=4)
+        assert res.mean_true_slowdown >= 1.0
+        for cover in seen:
+            assert len(cover) == 14 and len(set(cover)) == 14
+
+    def test_even_population_unchanged(self, machine):
+        """The odd-N path must not disturb even populations: SYNPA pairing
+        still covers everyone."""
+        profs = workloads.scaled_workload(16, seed=3)
+        res = machine.run_quanta(
+            profs, SynpaScheduler(isc.SYNPA4_R_FEBE, _toy_model()),
+            n_quanta=8, seed=4,
+        )
+        assert res.n_apps == 16 and res.mean_true_slowdown >= 1.0
+
+    def test_scan_race_odd_population(self, machine):
+        profs = workloads.scaled_workload(32, seed=31)[:31]
+        res = machine.run_quanta_multi(
+            profs,
+            {"synpa": se.ScanPolicy(kind="synpa", method=isc.SYNPA4_R_FEBE,
+                                    model=_toy_model()),
+             "static": se.ScanPolicy(kind="static")},
+            n_quanta=10, seed=2, engine="scan",
+        )
+        for r in res.values():
+            assert r.n_apps == 31
+            assert r.mean_true_slowdown >= 1.0
+            assert np.isfinite(r.ipc).all()
+
+
+# ------------------------------------------------- the one-dispatch race
+class TestScanRace:
+    def test_transfer_guard_no_per_quantum_transfers(self, machine):
+        """The compiled race makes no host transfers: inputs are committed
+        up front, the dispatch runs under transfer_guard('disallow')."""
+        profs = workloads.scaled_workload(32, seed=32)
+        res = machine.run_quanta_multi(
+            profs,
+            {"synpa": se.ScanPolicy(kind="synpa", method=isc.SYNPA4_R_FEBE,
+                                    model=_toy_model())},
+            n_quanta=10, seed=3, engine="scan", transfer_guard=True,
+        )["synpa"]
+        assert res.mean_true_slowdown >= 1.0
+
+    def test_race_beats_oblivious_and_matches_vector_quality(self, machine):
+        """K=3 race in one dispatch: SYNPA beats static/linux on quality
+        and stays within the parity contract of the vector+host path."""
+        from repro.online import StreamingScheduler
+
+        profs = workloads.scaled_workload(64, seed=64)
+        model = _toy_model()
+        res = machine.run_quanta_multi(
+            profs,
+            {"synpa": se.ScanPolicy(kind="synpa", method=isc.SYNPA4_R_FEBE,
+                                    model=model),
+             "static": se.ScanPolicy(kind="static"),
+             "linux": se.ScanPolicy(kind="linux")},
+            n_quanta=20, seed=3, engine="scan",
+        )
+        assert res["synpa"].mean_true_slowdown < \
+            res["static"].mean_true_slowdown
+        rv = machine.run_quanta(
+            profs, StreamingScheduler(isc.SYNPA4_R_FEBE, model),
+            n_quanta=20, seed=3,
+        )
+        # Quality contract: within a few percent of the vector streaming
+        # tier (same policy family, device matcher vs host matcher).
+        assert res["synpa"].mean_true_slowdown <= \
+            rv.mean_true_slowdown * 1.05
+
+    @pytest.mark.slow
+    def test_acceptance_n256_one_dispatch(self, machine):
+        """Acceptance: a K=2 race at N=256 runs inside one jitted scan
+        under the transfer guard, with SYNPA quality inside the contract."""
+        from repro.online import StreamingScheduler
+
+        profs = workloads.scaled_workload(256, seed=256)
+        model = _toy_model()
+        res = machine.run_quanta_multi(
+            profs,
+            {"synpa": se.ScanPolicy(kind="synpa", method=isc.SYNPA4_R_FEBE,
+                                    model=model),
+             "static": se.ScanPolicy(kind="static")},
+            n_quanta=16, seed=3, engine="scan", transfer_guard=True,
+            repeats=2,
+        )
+        assert res["synpa"].mean_true_slowdown < \
+            res["static"].mean_true_slowdown
+        rv = machine.run_quanta(
+            profs, StreamingScheduler(isc.SYNPA4_R_FEBE, model),
+            n_quanta=16, seed=3,
+        )
+        assert res["synpa"].mean_true_slowdown <= \
+            rv.mean_true_slowdown * 1.05

@@ -1,16 +1,19 @@
-"""Policy-time regression guard: warm-streaming SYNPA4 at N=256.
+"""Policy-time regression guard: warm-streaming + scan SYNPA4 at N=256.
 
 Measures the steady-state (median) policy wall-time per quantum of the
 default ``StreamingScheduler`` on a closed N=256 population — the fused
-per-quantum dispatch plus the incremental matcher — and fails (exit 1)
-if it regresses more than ``MAX_REGRESSION``x over the recorded baseline
-in ``benchmarks/results/policy_time_n256.json``.
+per-quantum dispatch plus the incremental matcher — *and* the per-quantum
+wall time of the single-dispatch scan engine
+(``repro.smt.scan_engine.run_quanta_scan``, machine+policy indivisible),
+and fails (exit 1) if either regresses more than ``MAX_REGRESSION``x over
+the recorded baseline in ``benchmarks/results/policy_time_n256.json``.
 
 Run via ``tools/run_bench_smoke.sh`` (and the slow-marked
 ``tests/test_bench_smoke.py``), so a change that quietly de-fuses the hot
-path cannot land without tier-1 noticing.  ``--record`` refreshes the
-baseline instead of checking against it (use after an intentional change,
-on an otherwise quiet machine).
+path — or breaks the scan loop back into per-quantum dispatches — cannot
+land without tier-1 noticing.  ``--record`` refreshes the baseline
+instead of checking against it (use after an intentional change, on an
+otherwise quiet machine).
 
 The measurement uses the fast-campaign models (the smoke tier's cache):
 model coefficients only steer *which* local minimum the solver walks to,
@@ -36,29 +39,53 @@ BASELINE = os.path.join(_ROOT, "benchmarks", "results",
                         "policy_time_n256.json")
 N_APPS = 256
 N_QUANTA = 12          # median over the horizon absorbs the compile quantum
+SCAN_REPEATS = 3       # scan: median over re-dispatches (compile excluded)
 MAX_REGRESSION = 2.0
 
 
 def measure() -> dict:
+    """Best-of-two measurement of both engines' steady per-quantum cost.
+
+    The dev container's wall-clock jitter under load spikes exceeds the
+    2x regression budget; taking the minimum over two back-to-back runs
+    de-flakes the guard (a load spike inflates a run, a real regression
+    inflates both) while the defects this guard exists for — a de-fused
+    hot path, a scan loop broken back into per-quantum dispatches — are
+    order-of-magnitude, not 2x.
+    """
     from benchmarks.common import get_env
     from repro.core import isc
     from repro.online import StreamingScheduler
     from repro.smt import workloads
+    from repro.smt.scan_engine import ScanPolicy
 
     machine, models, _ = get_env(fast=True)
+    method = isc.SYNPA4_R_FEBE
+    model = models["SYNPA4_R-FEBE"]
     profs = workloads.scaled_workload(N_APPS, seed=N_APPS)
-    res = machine.run_quanta_multi(
-        profs,
-        {"synpa4-stream": lambda: StreamingScheduler(
-            isc.SYNPA4_R_FEBE, models["SYNPA4_R-FEBE"])},
-        n_quanta=N_QUANTA,
-        seed=3,
-    )["synpa4-stream"]
+    stream_us, stream_mean_us, scan_us = np.inf, np.inf, np.inf
+    for _ in range(2):
+        res = machine.run_quanta_multi(
+            profs,
+            {"synpa4-stream": lambda: StreamingScheduler(method, model)},
+            n_quanta=N_QUANTA,
+            seed=3,
+        )["synpa4-stream"]
+        scan = machine.run_quanta_multi(
+            profs,
+            {"synpa4-scan": ScanPolicy(kind="synpa", method=method,
+                                       model=model)},
+            n_quanta=N_QUANTA, seed=3, engine="scan", repeats=SCAN_REPEATS,
+        )["synpa4-scan"]
+        stream_us = min(stream_us, res.sched_s_per_quantum_median * 1e6)
+        stream_mean_us = min(stream_mean_us, res.sched_s_per_quantum * 1e6)
+        scan_us = min(scan_us, scan.machine_s_per_quantum * 1e6)
     return {
         "n": N_APPS,
         "quanta": N_QUANTA,
-        "stream_median_us": res.sched_s_per_quantum_median * 1e6,
-        "stream_mean_us": res.sched_s_per_quantum * 1e6,
+        "stream_median_us": stream_us,
+        "stream_mean_us": stream_mean_us,
+        "scan_total_median_us": scan_us,
         "recorded_unix": time.time(),
     }
 
@@ -74,7 +101,8 @@ def main() -> int:
         with open(BASELINE, "w") as f:
             json.dump(got, f, indent=2)
         print(f"policy_guard: recorded baseline "
-              f"{got['stream_median_us']:.0f} us/quantum (median, N={N_APPS})")
+              f"{got['stream_median_us']:.0f} us/quantum (median, N={N_APPS})"
+              f", scan {got['scan_total_median_us']:.0f} us/quantum")
         return 0
 
     if not os.path.exists(BASELINE):
@@ -91,7 +119,20 @@ def main() -> int:
         f"{base['stream_median_us']:.0f} (budget {budget:.0f}) -> "
         f"{'OK' if ok else 'REGRESSION'}"
     )
-    return 0 if ok else 1
+    scan_ok = True
+    if "scan_total_median_us" in base:
+        scan_budget = base["scan_total_median_us"] * MAX_REGRESSION
+        scan_ok = got["scan_total_median_us"] <= scan_budget
+        print(
+            f"policy_guard: scan-engine N={N_APPS} median "
+            f"{got['scan_total_median_us']:.0f} us/quantum vs baseline "
+            f"{base['scan_total_median_us']:.0f} (budget "
+            f"{scan_budget:.0f}) -> {'OK' if scan_ok else 'REGRESSION'}"
+        )
+    else:
+        print("policy_guard: baseline has no scan entry; run --record "
+              "to start guarding the scan engine")
+    return 0 if (ok and scan_ok) else 1
 
 
 if __name__ == "__main__":
