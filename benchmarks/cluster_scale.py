@@ -27,7 +27,7 @@ from __future__ import annotations
 import time
 from typing import Dict
 
-from benchmarks.common import csv_row, get_env, save_json
+from benchmarks.common import csv_row, get_env, save_stamped
 
 SIZES = (8, 64, 256, 1024)
 QUANTA = {8: 40, 64: 30, 256: 20, 1024: 8}
@@ -96,13 +96,12 @@ def record_scan_ab(machine, models, sizes=(256,), quanta: int = 20,
     from repro.online import StreamingScheduler
     from repro.smt import workloads
     from repro.smt.machine import PhaseTables
-    from repro.smt.scan_engine import SCAN_RNG_STREAM_VERSION, ScanPolicy
+    from repro.smt.scan_engine import ScanPolicy
 
     method = isc.SYNPA4_R_FEBE
     model = models["SYNPA4_R-FEBE"]
     out: Dict[str, Dict] = {
         "protocol": f"back-to-back medians, {rounds} rounds per arm",
-        "scan_rng_stream_version": SCAN_RNG_STREAM_VERSION,
     }
     for n in sizes:
         profs = workloads.scaled_workload(n, seed=n)
@@ -132,7 +131,7 @@ def record_scan_ab(machine, models, sizes=(256,), quanta: int = 20,
             "vector_mean_true_slowdown": rv.mean_true_slowdown,
             "scan_mean_true_slowdown": rs.mean_true_slowdown,
         }
-    save_json("scan_engine_speedup.json", out)
+    save_stamped("scan_engine_speedup.json", out, engine="scan")
     return out
 
 
@@ -188,9 +187,9 @@ def main(quick: bool = False, smoke: bool = False, engine: str = "vector",
     if not smoke and engine == "vector":
         speedup = _engine_speedup(machine, n=256, quanta=30)
         results["engine_speedup_n256"] = speedup
-        save_json("cluster_scale.json", results)
+        save_stamped("cluster_scale.json", results, engine="vector")
     elif not smoke:
-        save_json("cluster_scale_scan.json", results)
+        save_stamped("cluster_scale_scan.json", results, engine="scan")
         speedup = float("nan")
     else:
         speedup = float("nan")

@@ -123,5 +123,62 @@ def load_json(name: str):
     return None
 
 
+# ---------------------------------------------------------------------------
+# Version stamps for recorded A/Bs.  A recorded median is only comparable
+# to a re-measurement when both ran under the same RNG stream layouts —
+# the same reason the model caches are stamped and refused above.  Every
+# result JSON a later run may compare against carries ``engine`` plus the
+# relevant stream versions, and loaders refuse mismatches.
+# ---------------------------------------------------------------------------
+def version_stamp(engine: Optional[str] = None) -> Dict:
+    """Stamp dict for a result JSON: the profiling-campaign stream version
+    always; the scan-engine threefry layout version whenever the result
+    involves the device tiers (``engine`` is recorded verbatim)."""
+    from repro.smt.training import RNG_STREAM_VERSION
+
+    stamp: Dict = {"rng_stream_version": RNG_STREAM_VERSION}
+    if engine is not None:
+        stamp["engine"] = engine
+    if engine in ("scan", "device"):
+        from repro.smt.scan_engine import SCAN_RNG_STREAM_VERSION
+
+        stamp["scan_rng_stream_version"] = SCAN_RNG_STREAM_VERSION
+    return stamp
+
+
+def save_stamped(name: str, obj: Dict, engine: Optional[str] = None) -> str:
+    """``save_json`` with the version stamp merged in (stamp keys win)."""
+    return save_json(name, {**obj, **version_stamp(engine)})
+
+
+def load_stamped(name: str) -> Optional[Dict]:
+    """Load a recorded result; refuse it when its stamps are stale.
+
+    Returns None (and says why) when the file is missing, unstamped, or
+    stamped with a different stream version than the current code — a
+    recorded A/B under another RNG layout is not comparable and must be
+    re-recorded, exactly like a stale model cache is refit.
+    """
+    from repro.smt.training import RNG_STREAM_VERSION
+
+    obj = load_json(name)
+    if obj is None:
+        return None
+    if obj.get("rng_stream_version") != RNG_STREAM_VERSION:
+        print(f"# refusing {name}: rng stream "
+              f"v{obj.get('rng_stream_version')} != v{RNG_STREAM_VERSION}; "
+              "re-record it")
+        return None
+    if "scan_rng_stream_version" in obj:
+        from repro.smt.scan_engine import SCAN_RNG_STREAM_VERSION
+
+        if obj["scan_rng_stream_version"] != SCAN_RNG_STREAM_VERSION:
+            print(f"# refusing {name}: scan stream "
+                  f"v{obj['scan_rng_stream_version']} != "
+                  f"v{SCAN_RNG_STREAM_VERSION}; re-record it")
+            return None
+    return obj
+
+
 def csv_row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.1f},{derived}"

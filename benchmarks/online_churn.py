@@ -19,10 +19,17 @@ compares, per (cluster size, churn level):
                       The stream-vs-stream-syn cells are the admission A/B.
 
 ``--engine scan`` swaps the streaming arm's host matcher for the device
-tier (``StreamingConfig(matcher="device")``) in the churn grid and adds a
+tier (``StreamingConfig(matcher="device")``) in the churn grid, adds a
+``synpa4-device`` arm — the whole open system as **one dispatch**
+(``ClusterSim(engine="scan")``, ``repro.online.device_sim``) — and adds a
 ``synpa4-scan`` arm to the static probe — the single-dispatch
 ``lax.scan`` race of ``repro.smt.scan_engine`` (its machine+policy time is
 indivisible; compare it against the probe's cold/stream *sums*).
+
+``--record-device-ab`` records the back-to-back host-vs-device open-system
+A/B (medians over rounds, per the 2-CPU jitter protocol) to
+``results/device_sim_speedup.json``: total wall per quantum of the whole
+loop — policy + machine + bookkeeping — at rho = 1.0, N in {256, 1024}.
 
 reporting per-job mean/p95 slowdown, turnaround, queue depth and policy
 µs/quantum (mean *and* median — the median is the steady-state figure, the
@@ -42,7 +49,7 @@ import argparse
 import time
 from typing import Dict
 
-from benchmarks.common import csv_row, get_env, save_json
+from benchmarks.common import csv_row, get_env, save_stamped
 
 SIZES = (8, 64, 256)          # apps capacity (2 per core); --full adds 1024
 FULL_SIZES = (8, 64, 256, 1024)
@@ -55,10 +62,21 @@ SMOKE_SIZES = (8, 32)
 CHURN = {"low": 0.85, "med": 1.0, "high": 1.2}
 COLD_MAX_N = 64               # full cold SYNPA in the churn grid up to here
 TARGET_SCALE = 0.25           # shrink §6.2 targets: jobs last ~15 quanta
+MEAN_SERVICE_SLOWDOWN = 1.3   # typical SMT slowdown of the service time
 # Horizons: jobs last ~15 quanta after admission, so every size must run
 # past ~20 quanta for completions (and therefore slowdown CCDFs) to exist.
 QUANTA = {8: 80, 32: 60, 64: 60, 256: 30, 1024: 24}
 PROBE_QUANTA = 16
+
+
+def mean_service_quanta(machine) -> float:
+    """Expected quanta a job occupies a context: solo quanta under the
+    scaled §6.2 target times the typical SMT slowdown.  The rho -> arrival
+    rate mapping of every churn cell — shared with the policy budget guard
+    (``tools/check_policy_budget.py``) so both always measure the same
+    cell."""
+    return (machine.params.solo_reference_quanta * TARGET_SCALE
+            * MEAN_SERVICE_SLOWDOWN)
 
 
 def _policies(models, n_apps: int, smoke: bool, cold_max_n: int = COLD_MAX_N,
@@ -116,9 +134,15 @@ def _churn_grid(machine, models, sizes, churn_levels, smoke: bool,
     synergy = SynergyAdmission(
         machine, pool, isc.SYNPA4_R_FEBE, models["SYNPA4_R-FEBE"]
     )
-    mean_service_q = (
-        machine.params.solo_reference_quanta * TARGET_SCALE * 1.3
-    )  # solo quanta x typical SMT slowdown
+    device_spec = None
+    if engine == "scan":
+        from repro.smt.scan_engine import ScanPolicy
+
+        device_spec = ScanPolicy(
+            kind="synpa", method=isc.SYNPA4_R_FEBE,
+            model=models["SYNPA4_R-FEBE"], name="synpa4-device",
+        )
+    mean_service_q = mean_service_quanta(machine)
     grid: Dict[str, Dict] = {}
     ccdfs: Dict[str, Dict] = {}
     for n in sizes:
@@ -148,6 +172,21 @@ def _churn_grid(machine, models, sizes, churn_levels, smoke: bool,
                 if record_ccdf:
                     xs, ys = stats.ccdf()
                     cell_ccdf[pname] = {
+                        "slowdown": [float(v) for v in xs],
+                        "ccdf": [float(v) for v in ys],
+                    }
+            if device_spec is not None:
+                # The whole open system as one device dispatch.
+                sim = ClusterSim(
+                    machine, pool, n_cores, device_spec, arrivals,
+                    seed=11, target_scale=TARGET_SCALE, tables=tables,
+                    engine="scan",
+                )
+                stats = sim.run(quanta)
+                cell["synpa4-device"] = stats.summary()
+                if record_ccdf:
+                    xs, ys = stats.ccdf()
+                    cell_ccdf["synpa4-device"] = {
                         "slowdown": [float(v) for v in xs],
                         "ccdf": [float(v) for v in ys],
                     }
@@ -225,8 +264,91 @@ def _static_probe(machine, models, sizes, smoke: bool,
     return out
 
 
+def record_device_ab(machine, models, sizes=(256, 1024), rho: float = 1.0,
+                     rounds: int = 5) -> Dict:
+    """Back-to-back host-vs-device open-system A/B; medians recorded.
+
+    Per size: both arms run the identical rho-churn cell (same seed, same
+    pre-sampled traffic) and both are timed the same way — whole-run wall
+    per quantum over ``rounds`` back-to-back runs, everything the tier
+    needs per run inside the timer.  For the host arm (the PR 4 path:
+    ``ClusterSim`` event loop + ``StreamingAllocator``, fused dispatch +
+    host matcher) that is arrival sampling, the Python loop and the stats
+    build; for the device arm it is the arrival pre-sample, host->device
+    commits, exactly one dispatch of the compiled race (``warmup=False``)
+    and the job-log fetch + ``JobRecord`` rebuild.  One policy/compiled
+    race serves all rounds of an arm, so the median sheds the
+    jit-compile round of each.  Total per-quantum wall — policy +
+    machine + bookkeeping, the only figure comparable across the tiers —
+    lands in ``results/device_sim_speedup.json`` with both arms' per-job
+    quality.
+    """
+    import numpy as np
+
+    from repro.core import isc
+    from repro.online import ClusterSim, PoissonArrivals, StreamingAllocator
+    from repro.online.device_sim import run_device_sim
+    from repro.smt.apps import pool_profiles
+    from repro.smt.machine import PhaseTables
+    from repro.smt.scan_engine import ScanPolicy
+
+    method = isc.SYNPA4_R_FEBE
+    model = models["SYNPA4_R-FEBE"]
+    pool = pool_profiles()
+    tables = PhaseTables.build(pool)
+    mean_service_q = mean_service_quanta(machine)
+    out: Dict[str, Dict] = {
+        "protocol": f"back-to-back whole-run medians, {rounds} rounds "
+                    "per arm",
+        "rho": rho,
+    }
+    host_policy = StreamingAllocator(method, model, name="synpa4-stream")
+    device_spec = ScanPolicy(kind="synpa", method=method, model=model,
+                             name="synpa4-device")
+    for n in sizes:
+        quanta = QUANTA.get(n, 30)
+        arrivals = PoissonArrivals(rate=rho * n / mean_service_q,
+                                   n_pool=len(pool))
+        host_walls = []
+        hs = None
+        for _ in range(rounds):
+            sim = ClusterSim(
+                machine, pool, n // 2, host_policy, arrivals,
+                seed=11, target_scale=TARGET_SCALE, tables=tables,
+            )
+            t0 = time.perf_counter()
+            hs = sim.run(quanta)
+            host_walls.append((time.perf_counter() - t0) / quanta)
+        dev = ClusterSim(
+            machine, pool, n // 2, device_spec, arrivals,
+            seed=11, target_scale=TARGET_SCALE, tables=tables,
+            engine="scan",
+        )
+        dev_walls = []
+        ds = None
+        for _ in range(rounds):
+            t0 = time.perf_counter()
+            ds = run_device_sim(dev, quanta, warmup=False)
+            dev_walls.append((time.perf_counter() - t0) / quanta)
+        host_ms = float(np.median(host_walls)) * 1e3
+        dev_ms = float(np.median(dev_walls)) * 1e3
+        out[str(n)] = {
+            "quanta": quanta,
+            "host_ms_per_quantum_median": host_ms,
+            "device_ms_per_quantum_median": dev_ms,
+            "speedup": host_ms / max(dev_ms, 1e-9),
+            "host_mean_slowdown": hs.mean_slowdown,
+            "device_mean_slowdown": ds.mean_slowdown,
+            "host_n_completed": hs.n_completed,
+            "device_n_completed": ds.n_completed,
+        }
+    save_stamped("device_sim_speedup.json", out, engine="device")
+    return out
+
+
 def main(smoke: bool = False, full: bool = False, quick: bool = False,
-         race_cold_at_full: bool = False, engine: str = "vector") -> str:
+         race_cold_at_full: bool = False, engine: str = "vector",
+         device_ab: bool = False) -> str:
     machine, models, _wls = get_env(fast=smoke)
     t_total = time.perf_counter()
     cold_max_n = max(FULL_SIZES) if race_cold_at_full else COLD_MAX_N
@@ -250,20 +372,31 @@ def main(smoke: bool = False, full: bool = False, quick: bool = False,
                           engine=engine)
     results = {"churn": grid, "static_probe": probe,
                "target_scale": TARGET_SCALE,
-               "race_cold_at_full": race_cold_at_full,
-               "engine": engine}
+               "race_cold_at_full": race_cold_at_full}
     if not smoke:
         # The smoke tier is a sanity run on a sub-real grid; keep it from
-        # overwriting recorded results (mirrors cluster_scale.py).
-        save_json("online_churn.json"
-                  if engine == "vector" else "online_churn_scan.json",
-                  results)
+        # overwriting recorded results (mirrors cluster_scale.py).  Saved
+        # results carry the engine + RNG stream version stamps so a later
+        # comparison can refuse them on mismatch (benchmarks.common).
+        save_stamped("online_churn.json"
+                     if engine == "vector" else "online_churn_scan.json",
+                     results, engine=engine)
     if record_ccdf:
         # Engine-gated like the grid file: a scan run must not overwrite
         # the recorded vector-engine CCDFs (different RNG trajectories).
-        save_json("online_churn_ccdf.json"
-                  if engine == "vector" else "online_churn_ccdf_scan.json",
-                  ccdfs)
+        save_stamped("online_churn_ccdf.json"
+                     if engine == "vector" else "online_churn_ccdf_scan.json",
+                     ccdfs, engine=engine)
+    if device_ab and smoke:
+        print("# --record-device-ab ignored under --smoke: the recorded "
+              "A/B is a full-size fitted-model measurement")
+        device_ab = False
+    if device_ab:
+        ab = record_device_ab(machine, models)
+        for n in (k for k in ab if k.isdigit()):
+            print(f"# device A/B N={n}: {ab[n]['speedup']:.2f}x "
+                  f"({ab[n]['host_ms_per_quantum_median']:.1f} -> "
+                  f"{ab[n]['device_ms_per_quantum_median']:.1f} ms/quantum)")
 
     big = str(max(int(k) for k in probe))
     # Headline slowdown gain: the largest size whose horizon produced
@@ -306,9 +439,14 @@ if __name__ == "__main__":
                     "the CCDF figures")
     ap.add_argument("--engine", choices=("vector", "scan"),
                     default="vector",
-                    help="scan: device matcher in the streaming arm + a "
-                    "single-dispatch synpa4-scan arm in the static probe")
+                    help="scan: device matcher in the streaming arm, a "
+                    "one-dispatch synpa4-device arm in the churn grid and "
+                    "a single-dispatch synpa4-scan arm in the static probe")
+    ap.add_argument("--record-device-ab", action="store_true",
+                    help="record the back-to-back host-vs-device "
+                    "open-system A/B (medians) to "
+                    "results/device_sim_speedup.json")
     args = ap.parse_args()
     print(main(smoke=args.smoke, full=args.full, quick=args.quick,
                race_cold_at_full=args.race_cold_at_full,
-               engine=args.engine))
+               engine=args.engine, device_ab=args.record_device_ab))

@@ -984,6 +984,64 @@ def device_pairs_partner(cost, valid, eps=1e-9,
                                   max_rounds=max_rounds)
 
 
+def device_repair_partner(cost, partner, valid, eps=1e-9,
+                          max_rounds: Optional[int] = None):
+    """Masked churn repair of a carried partner vector, in-graph.
+
+    The device twin of :func:`repair_pairs` for *partial occupancy*: the
+    validity mask of the open system changes every quantum (arrivals fill
+    slots, departures empty them, the idle vertex toggles with the active
+    population's parity), so the carried matching must be repaired — not
+    rebuilt — under a mask whose contents shift while its shape stays put.
+
+    ``partner`` is the previous quantum's (P,) involution; ``valid`` marks
+    the vertices to be matched now (active slots + the idle vertex when the
+    population is odd; popcount must be even).  Pairs whose two endpoints
+    are both still valid are *kept*; the uncovered valid vertices — the
+    dirty set: arrivals, widows, a toggled idle vertex — are ranked by
+    interference degree (mean pairable cost among themselves, the
+    :func:`device_seed_partner` metric) and paired complementarily,
+    heaviest with lightest.  Invalid vertices pair among themselves by
+    index.  A bounded masked 2-opt (:func:`device_two_opt_partner`) then
+    ripples the repair outward through the kept pairs.
+
+    Everything is a pure function of (cost, partner, valid): no host
+    branches, so the churn repair can ride inside a ``lax.scan`` body with
+    churn-stable shapes.  Same local-optimality class as the host repair
+    tier, never bit-identical to it (acceptance order differs).
+    """
+    p = partner.shape[0]
+    idx = jnp.arange(p, dtype=jnp.int32)
+    pt = partner.astype(jnp.int32)
+    keep = valid & valid[pt] & (pt != idx)
+    dirty = valid & ~keep
+    invalid = ~valid
+    pairable = dirty[:, None] & dirty[None, :] & (idx[:, None] != idx[None, :])
+    deg = jnp.where(pairable, cost.astype(jnp.float32), 0.0).sum(
+        axis=1
+    ) / jnp.maximum(pairable.sum(axis=1), 1)
+    # Three-band sort key: dirty vertices first (by degree), then invalid
+    # (by index), then kept (by index; they retain their partner below).
+    # Degrees are bounded by BIG, so the bands cannot interleave.
+    fidx = idx.astype(jnp.float32)
+    key = jnp.where(
+        dirty, jnp.minimum(deg, BIG),
+        jnp.where(invalid, 2.0 * BIG + fidx, 4.0 * BIG + fidx),
+    )
+    order = jnp.argsort(key).astype(jnp.int32)
+    nd = jnp.sum(dirty)
+    ninv = jnp.sum(invalid)
+    pos = jnp.arange(p, dtype=jnp.int32)
+    mate_pos = jnp.where(
+        pos < nd, nd - 1 - pos,
+        jnp.where(pos < nd + ninv, nd + ((pos - nd) ^ 1), pos),
+    )
+    repaired = jnp.zeros(p, jnp.int32).at[order].set(order[mate_pos])
+    repaired = jnp.where(keep, pt, repaired)
+    return device_two_opt_partner(cost, repaired, valid, eps=eps,
+                                  max_rounds=max_rounds)
+
+
 @functools.partial(jax.jit, static_argnames=("eps", "max_rounds"))
 def _device_pairs_jit(cost, valid, eps, max_rounds):
     return device_pairs_partner(cost, valid, eps=eps, max_rounds=max_rounds)

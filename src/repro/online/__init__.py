@@ -10,12 +10,17 @@ repaired incrementally on churn instead of re-solved from scratch.
 
 Entry points:
 
-* :class:`ClusterSim`          — the event loop (simulation + queueing).
+* :class:`ClusterSim`          — the event loop (simulation + queueing);
+                                 ``engine="scan"`` runs the whole horizon
+                                 as one device dispatch
+                                 (``repro.online.device_sim``).
 * :class:`StreamingAllocator`  — warm-started, incrementally re-matched SYNPA.
 * :class:`StreamingScheduler`  — closed-system adapter for head-to-head races
                                  against the cold ``SynpaScheduler``.
 * :class:`PoissonArrivals` / :class:`TraceArrivals` / :class:`InitialBatch`
-                               — traffic models.
+                               — traffic models (:func:`presample`
+                                 materialises any of them for the device
+                                 tier, bit-identically to the host stream).
 """
 
 from repro.online.admission import SynergyAdmission
@@ -24,9 +29,11 @@ from repro.online.arrivals import (
     InitialBatch,
     PoissonArrivals,
     TraceArrivals,
+    presample,
 )
 from repro.online.allocator import (
     IDLE_COST,
+    AdjacentOnline,
     LinuxOnline,
     OnlinePolicy,
     RandomOnline,
@@ -39,6 +46,7 @@ from repro.online.allocator import (
 from repro.online.sim import ClusterSim
 
 __all__ = [
+    "AdjacentOnline",
     "ArrivalProcess",
     "ClusterSim",
     "IDLE_COST",
@@ -54,4 +62,5 @@ __all__ = [
     "TraceArrivals",
     "cold_config",
     "exact_config",
+    "presample",
 ]

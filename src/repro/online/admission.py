@@ -79,16 +79,29 @@ class SynergyAdmission:
         core-mate is empty scores the expected pool cost — so compatible
         residents attract newcomers, incompatible ones repel them onto
         empty cores.
+
+        Vectorised (one gather + argmin over the free set): placing k jobs
+        on an N-slot cluster is O(k * N) array work instead of the former
+        O(k * N) *Python* loop — the piece of the host admission walk that
+        showed at N >= 4096 under high churn.  The device engine runs the
+        same rule in-graph (``repro.online.device_sim``).
+
+        Tie semantics: argmin keeps the lowest slot among *exactly* equal
+        costs — the common case, since clone pool apps predict identical
+        pair costs — same as the pre-vectorised loop; costs that differ
+        by less than the old loop's 1e-12 hysteresis (but are not equal)
+        now resolve to the true minimum instead of the earlier slot.
+        Runs stay seed-deterministic either way.
         """
-        best, best_cost = None, np.inf
-        for s in sorted(int(x) for x in free_slots):
-            mate = int(app_id[s ^ 1])
-            c = self.pool_cost[pid, mate] if mate >= 0 else \
-                float(self.mean_cost[pid])
-            if c < best_cost - 1e-12:
-                best, best_cost = s, c
-        assert best is not None, "no free slot to place on"
-        return best
+        free = np.sort(np.asarray(list(free_slots), dtype=np.int64))
+        assert free.size, "no free slot to place on"
+        mate = app_id[free ^ 1]
+        cost = np.where(
+            mate >= 0,
+            self.pool_cost[pid, np.maximum(mate, 0)],
+            self.mean_cost[pid],
+        )
+        return int(free[int(np.argmin(cost))])
 
     def hint(self, pid: int) -> np.ndarray:
         """Profiled solo ST stack of pool app ``pid`` (the policy hint)."""

@@ -149,6 +149,24 @@ class RandomOnline(OnlinePolicy):
         return kept + patch, solo
 
 
+class AdjacentOnline(OnlinePolicy):
+    """Deterministic slot-ordered pairing: active slots pair in ascending
+    adjacent order every quantum; an odd population leaves the highest
+    active slot solo.  Interference-oblivious and *RNG-free* — the parity
+    anchor of the device-resident engine (``repro.online.device_sim``
+    implements the identical rule in-graph), where a shared arrival stream
+    plus this policy pins the whole open-system trajectory."""
+
+    name = "adjacent"
+
+    def pair(self, q, active, counters, ran, arrived, departed,
+             prev_pairs, prev_solo, hints=None):
+        a = [int(s) for s in active]
+        solo = a.pop() if len(a) % 2 else None
+        pairs = [(a[2 * k], a[2 * k + 1]) for k in range(len(a) // 2)]
+        return pairs, solo
+
+
 class LinuxOnline(RandomOnline):
     """CFS-like under churn: sticky pairing, occasional migrations,
     random patching of arrivals/departures (interference-oblivious)."""

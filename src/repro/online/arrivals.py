@@ -75,6 +75,28 @@ class TraceArrivals(ArrivalProcess):
         return list(self._by_q.get(q, []))
 
 
+def presample(
+    process: ArrivalProcess, n_quanta: int, rng: np.random.Generator
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Materialise an arrival process into flat ``(arrive_q, pool_idx)`` arrays.
+
+    Draws quantum by quantum from ``rng`` — exactly the order the host
+    ``ClusterSim`` event loop consumes its arrival stream — so a device-
+    resident run (``repro.online.device_sim``) pre-sampling with the same
+    generator faces *bit-identical traffic* to the host run.  ``arrive_q``
+    is non-decreasing by construction: arrivals are data, not compute, so
+    the device engine ships them once with the initial carry instead of
+    drawing in-graph.
+    """
+    qs: List[int] = []
+    pids: List[int] = []
+    for q in range(n_quanta):
+        for pid in process.draw(q, rng):
+            qs.append(q)
+            pids.append(int(pid))
+    return np.asarray(qs, np.int64), np.asarray(pids, np.int64)
+
+
 @dataclasses.dataclass
 class InitialBatch(ArrivalProcess):
     """A fixed population arriving at quantum 0 and nothing afterwards.

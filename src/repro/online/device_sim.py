@@ -1,0 +1,522 @@
+"""Device-resident open-system engine — ``ClusterSim(engine="scan")``.
+
+PR 4 made the *closed* system one dispatch per race (``engine="scan"``),
+but every open-system quantum still round-tripped to Python for queueing,
+admission and departures.  This module ports the whole open-system cycle
+
+    arrivals -> admission -> scheduling -> machine quantum -> departures
+
+to JAX and runs it as a **single ``lax.scan`` dispatch** over the horizon:
+the host exits only at stats extraction (transfer-guard-tested).  All
+shapes are churn-stable — arrivals and departures change mask contents and
+head/tail indices, never shapes — so one compiled program serves the whole
+run regardless of traffic.
+
+Design, stage by stage:
+
+* **Arrivals are data, not compute.**  The arrival process is pre-sampled
+  on host from ``numpy.default_rng(seed + 4242)`` — the host
+  ``ClusterSim`` stream, drawn in the identical order
+  (:func:`repro.online.arrivals.presample`) — into flat, arrival-sorted
+  ``(arrive_q, pool, target)`` job arrays shipped once with the initial
+  carry.  A device run therefore faces *bit-identical traffic* to the
+  host run of the same seed.
+* **The FIFO queue is a pair of indices.**  Jobs are admitted in arrival
+  order, so the waiting queue is always the contiguous window
+  ``[head, tail)`` of the sorted job array: ``tail`` (jobs arrived so
+  far) is one masked count per quantum, ``head`` (jobs admitted so far)
+  advances by the admitted count.  Queue depth is ``tail - head``; no
+  ring buffer, no per-job state machine.
+* **Admission is a masked scatter.**  ``"fifo"`` places the k-th dequeued
+  job on the k-th lowest free context (rank = cumsum of the free mask) —
+  the host rule, vectorised.  ``"synergy"`` runs the
+  :class:`repro.online.admission.SynergyAdmission` rule in-graph: a
+  bounded ``fori_loop`` places each dequeued job on the free context
+  whose core-resident co-runner has the best Eq. 4 pool-cost score
+  (empty cores score the expected pool cost), and seeds the newcomer's
+  device-resident ST estimate with its profiled solo stack (the hint
+  path), so the very first re-matching already sees an informative
+  estimate.
+* **Scheduling reuses the fused SYNPA step** (``synpa.make_fused_step``,
+  the same jitted graph the host allocator dispatches) with
+  membership-masked solve/solo/valid/fresh rows, and a new in-graph
+  churn-repair matcher (:func:`repro.core.matching.device_repair_partner`)
+  that keeps surviving pairs, pairs the dirty vertices (arrivals, widows,
+  a toggled idle vertex) complementarily by interference degree, and
+  ripples a bounded masked 2-opt outward — the streaming allocator's
+  repair tier under partial occupancy, as pure array code.  Odd active
+  populations wire the idle vertex (row ``capacity``) exactly like the
+  host tier.
+* **The machine quantum is the scan engine's**, generalised to the
+  slot -> application indirection (``aid`` in
+  ``scan_engine._corun_components_scan``): only active contexts advance,
+  departures are detected in-graph (``progress >= target`` -> fractional
+  ``finish_q`` scatter, context freed at quantum end, no §6.2 relaunch).
+* **Job bookkeeping is a log, not objects.**  ``admit_q``/``finish_q``
+  live as flat per-job arrays in the carry, scattered in-graph and
+  fetched once; :meth:`repro.smt.metrics.OnlineStats.from_device_logs`
+  rebuilds the host-shaped ``JobRecord`` list from them.
+
+Parity contract vs the host ``ClusterSim`` (held by
+``tests/test_device_sim.py``):
+
+* **Deterministic parts are exact to f32.**  The arrival stream is
+  bit-identical by construction; FIFO admission picks identical slots;
+  progress/departure arithmetic equals the host's within float32
+  round-off.  With a deterministic pairing policy
+  (``ScanPolicy(kind="adjacent")`` vs the host
+  :class:`repro.online.allocator.AdjacentOnline`) and single-phase
+  applications (no poisson phase draws in play), the *entire trajectory*
+  — admission quanta, queue depths, fractional finish quanta — matches
+  the host run to f32.
+* **RNG parts are distribution-equal, not bit-equal.**  Counter noise and
+  phase durations come from the threefry streams of
+  ``repro.smt.scan_engine`` (``SCAN_RNG_STREAM_VERSION`` v2: the same
+  per-(context, quantum) keying as the closed engine, over the
+  ``C = 2 * n_cores`` hardware contexts), so multi-phase trajectories and
+  counter-driven (synpa) pairings agree statistically, not bitwise.  The
+  device synpa tier's first pairing is its deterministic repair of the
+  identity carry (under synergy admission, hint-informed), not the host's
+  ``default_rng(seed + 7919)`` random pairing.
+
+Timing note: policy, machine and bookkeeping are indivisible inside the
+one dispatch; ``OnlineStats.policy_s`` reports the whole per-quantum wall
+time (median over ``repeats`` back-to-back re-dispatches, compile
+excluded) spread uniformly over the horizon.  Compare against the host
+tier's policy + machine + loop *sum*.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from collections import OrderedDict
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import isc, matching
+from repro.core.synpa import fused_pad, make_fused_step
+from repro.online.arrivals import presample
+from repro.smt.metrics import OnlineStats
+from repro.smt.scan_engine import (
+    DeviceTables,
+    ScanPolicy,
+    _corun_components_scan,
+    _machine_partner_of,
+    _pmu_counters_scan,
+)
+
+#: Kinds of :class:`repro.smt.scan_engine.ScanPolicy` the open-system
+#: engine supports: the fused SYNPA tier and the deterministic slot-ordered
+#: baseline (the parity anchor; host twin ``AdjacentOnline``).
+DEVICE_SIM_KINDS = ("synpa", "adjacent")
+
+
+class _OpenCarry(NamedTuple):
+    """Scan carry of the open system: context membership + queue indices +
+    per-job logs.  Shapes depend only on (capacity, padded job count)."""
+
+    app_id: jnp.ndarray       # (C,) i32  pool row per context (-1 = empty)
+    job_at: jnp.ndarray       # (C,) i32  job id per context (-1)
+    phase_idx: jnp.ndarray    # (C,) i32
+    phase_left: jnp.ndarray   # (C,) f32
+    progress: jnp.ndarray     # (C,) f32  retired instructions, current job
+    target: jnp.ndarray       # (C,) f32  departure target (inf when empty)
+    head: jnp.ndarray         # ()   i32  jobs admitted so far (queue head)
+    counters: jnp.ndarray     # (C, 5) f32 previous quantum's PMU rows
+    ran: jnp.ndarray          # (C,) bool context executed last quantum
+    partner_prev: jnp.ndarray  # (C,) i32 machine partner last quantum
+    mpart: jnp.ndarray        # (P,) i32  matcher partner carry
+    st: jnp.ndarray           # (C, 4) f32 device-resident ST estimates
+    admit_q: jnp.ndarray      # (J,) i32  admission quantum per job (-1)
+    finish_q: jnp.ndarray     # (J,) f32  fractional finish quantum (inf)
+
+
+def _build_race(spec: ScanPolicy, params, capacity: int, n_quanta: int,
+                j_pad: int, admission: str):
+    """Compile-ready open-system run: one jitted function, one dispatch.
+
+    Returns ``race(dt, job_pool, job_arrive, job_target, syn_cost,
+    syn_mean, syn_stacks, mkey)`` -> ``(admit_q (J,), finish_q (J,),
+    queue_depth (Q,), n_active (Q,), n_solo (Q,))``.  All shape-bearing
+    configuration (capacity, horizon, padded job count, admission rule,
+    policy spec) is static; tables, job data and keys are traced, so one
+    compiled race serves every run of the same configuration.
+    """
+    c = capacity
+    p = fused_pad(c)
+    idx = jnp.arange(c, dtype=jnp.int32)
+    cycles = jnp.float32(params.quantum_cycles)
+    use_hints = admission == "synergy" and spec.kind == "synpa"
+    if spec.kind == "synpa":
+        assert spec.method is not None and spec.model is not None, (
+            "synpa device sim needs a stack method and a fitted model"
+        )
+        fstep = make_fused_step(
+            spec.method, spec.model, impl=spec.pair_impl, solver=spec.solver,
+        )
+        ncat = spec.method.n_categories
+    else:
+        fstep = None
+        ncat = 4
+    uniform = jnp.asarray(isc.uniform_stack(ncat))
+    full_budget = 4 * (p // 2)
+
+    # ------------------------------------------------------------ admission
+    def admit_fifo(app_id, job_at, head, tail, job_pool):
+        """k-th dequeued job -> k-th lowest free context (the host rule)."""
+        free = app_id < 0
+        n_admit = jnp.minimum(tail - head, jnp.sum(free))
+        frank = jnp.cumsum(free.astype(jnp.int32)) - 1
+        take = free & (frank < n_admit)
+        jidx = jnp.where(take, head + frank, j_pad)
+        pid = job_pool[jnp.clip(jidx, 0, j_pad - 1)]
+        return (
+            jnp.where(take, pid, app_id),
+            jnp.where(take, jidx, job_at),
+            take,
+            head + n_admit,
+        )
+
+    def admit_synergy(app_id, job_at, head, tail, job_pool, syn_cost,
+                      syn_mean):
+        """FIFO dequeue order, predicted-best placement — the
+        ``SynergyAdmission.place`` rule as a bounded in-graph loop (each
+        dequeued job sees the residents the previous one placed)."""
+        n_admit = jnp.minimum(tail - head, jnp.sum(app_id < 0))
+
+        def body(k, state):
+            app_id, job_at = state
+            do = k < n_admit
+            j = head + k
+            pid = job_pool[jnp.clip(j, 0, j_pad - 1)]
+            mate = app_id[idx ^ 1]
+            mcost = jnp.where(
+                mate >= 0, syn_cost[pid, jnp.maximum(mate, 0)], syn_mean[pid]
+            )
+            cost_s = jnp.where(app_id < 0, mcost, jnp.inf)
+            s = jnp.argmin(cost_s).astype(jnp.int32)  # ties -> lowest slot
+            return (
+                jnp.where(do, app_id.at[s].set(pid), app_id),
+                jnp.where(do, job_at.at[s].set(j), job_at),
+            )
+
+        app_id2, job_at2 = lax.fori_loop(0, c, body, (app_id, job_at))
+        return app_id2, job_at2, job_at2 != job_at, head + n_admit
+
+    # ------------------------------------------------------------ policies
+    def adjacent_partner(active, n_active):
+        """Slot-ordered pairing of the active set; odd leaves the highest
+        active rank solo (the ``AdjacentOnline`` rule, in-graph)."""
+        arank = jnp.cumsum(active.astype(jnp.int32)) - 1
+        slot_of_rank = jnp.zeros(c, jnp.int32).at[
+            jnp.where(active, arank, c)
+        ].set(idx, mode="drop")
+        mate = arank ^ 1
+        return jnp.where(
+            active & (mate < n_active),
+            slot_of_rank[jnp.clip(mate, 0, c - 1)],
+            idx,
+        )
+
+    # ------------------------------------------------ open machine quantum
+    def open_quantum(dt, aid, active, phase_idx, phase_left, progress,
+                     target, partner, mkey, q):
+        """Membership-masked quantum: the in-graph
+        :meth:`repro.smt.machine.SMTMachine.open_quantum` (departures, no
+        relaunch).  Draws are per (context, quantum) — stream layout v2."""
+        aid_safe = jnp.maximum(aid, 0)
+        nph = dt.n_phases[aid_safe]
+        ph = phase_idx % nph
+        partner_m = jnp.where(active & active[partner], partner, idx)
+        comps = _corun_components_scan(dt, ph, partner_m, params,
+                                       aid=aid_safe)
+        cpi = comps.sum(axis=-1)
+        retired = jnp.where(active, cycles / cpi * dt.retire[aid_safe], 0.0)
+        after = progress + retired
+        done = active & (after >= target)
+        frac = jnp.clip(
+            (target - progress) / jnp.maximum(retired, 1e-9), 0.0, 1.0
+        )
+        counters = _pmu_counters_scan(
+            comps, dt.omega[aid_safe], dt.retire[aid_safe], cycles, params,
+            jax.random.fold_in(jax.random.fold_in(mkey, q), 0),
+        )
+        counters = jnp.where(active[:, None], counters, 0.0)
+        # Phase advance for survivors only (departed jobs leave at quantum
+        # end); draws are keyed per (context, quantum), occupancy-blind.
+        surv = active & ~done
+        left = phase_left - 1.0
+        trans = surv & (left <= 0.0)
+        nidx = phase_idx + trans.astype(jnp.int32)
+        lam = dt.duration[aid_safe, nidx % nph]
+        draws = jax.random.poisson(
+            jax.random.fold_in(jax.random.fold_in(mkey, q), 1), lam, (c,)
+        ).astype(jnp.float32)
+        new_left = jnp.where(
+            trans, jnp.maximum(draws, 1.0), jnp.where(surv, left, phase_left)
+        )
+        new_idx = jnp.where(trans, nidx, phase_idx)
+        return counters, after, done, frac, new_idx, new_left
+
+    # ----------------------------------------------------------- scan body
+    def body(dt, job_pool, job_arrive, job_target, syn_cost, syn_mean,
+             syn_stacks, mkey, carry: _OpenCarry, q):
+        # 1. Arrivals: the queue tail is a masked count over the sorted
+        # job array — no state to update.
+        tail = jnp.sum(job_arrive <= q).astype(jnp.int32)
+
+        # 2. Admission into free contexts (FIFO dequeue order either way).
+        if admission == "synergy":
+            app_id, job_at, took, head = admit_synergy(
+                carry.app_id, carry.job_at, carry.head, tail, job_pool,
+                syn_cost, syn_mean,
+            )
+        else:
+            app_id, job_at, took, head = admit_fifo(
+                carry.app_id, carry.job_at, carry.head, tail, job_pool,
+            )
+        jidx = jnp.where(took, job_at, j_pad)
+        target = jnp.where(
+            took, job_target[jnp.clip(jidx, 0, j_pad - 1)], carry.target
+        )
+        phase_idx = jnp.where(took, 0, carry.phase_idx)
+        phase_left = jnp.where(
+            took, dt.duration[jnp.maximum(app_id, 0), 0], carry.phase_left
+        )
+        progress = jnp.where(took, 0.0, carry.progress)
+        admit_q = carry.admit_q.at[jidx].set(q, mode="drop")
+        st = carry.st
+        if use_hints:
+            # ST-hint seeding: a newcomer's estimate is its profiled solo
+            # stack, not the uniform placeholder (fresh-mask skipped below).
+            st = jnp.where(
+                took[:, None], syn_stacks[jnp.maximum(app_id, 0)], st
+            )
+
+        active = app_id >= 0
+        n_active = jnp.sum(active).astype(jnp.int32)
+        odd = (n_active % 2) == 1
+        queue_depth = tail - head
+
+        # 3. Policy: pair the active population off the *previous*
+        # quantum's counters (the host event-loop order).
+        if spec.kind == "adjacent":
+            partner = adjacent_partner(active, n_active)
+            mpart = carry.mpart
+        else:
+            solve = carry.ran & (carry.partner_prev != idx)
+            solo_m = carry.ran & (carry.partner_prev == idx)
+            fresh = jnp.zeros(c, bool) if use_hints else took
+            masks = jnp.stack([solve, solo_m, active, fresh])
+            cost, st = fstep(carry.counters, carry.partner_prev, st, masks,
+                             odd)
+            valid_p = jnp.zeros(p, bool).at[:c].set(active).at[c].set(odd)
+            if spec.matcher == "full":
+                mpart = matching.device_pairs_partner(
+                    cost, valid_p, eps=spec.refine_eps,
+                    max_rounds=full_budget,
+                )
+            else:
+                mpart = matching.device_repair_partner(
+                    cost, carry.mpart, valid_p, eps=spec.refine_eps,
+                    max_rounds=spec.refine_rounds,
+                )
+            partner = jnp.where(active, _machine_partner_of(mpart, c), idx)
+
+        # 4. One membership-masked machine quantum + 5. departures.
+        counters, after, done, frac, phase_idx, phase_left = open_quantum(
+            dt, app_id, active, phase_idx, phase_left, progress, target,
+            partner, mkey, q,
+        )
+        finish_q = carry.finish_q.at[jnp.where(done, job_at, j_pad)].set(
+            q.astype(jnp.float32) + frac, mode="drop"
+        )
+        n_solo = jnp.sum(active & (partner == idx)).astype(jnp.int32)
+        new = _OpenCarry(
+            app_id=jnp.where(done, -1, app_id),
+            job_at=jnp.where(done, -1, job_at),
+            phase_idx=phase_idx,
+            phase_left=phase_left,
+            progress=after,
+            target=jnp.where(done, jnp.inf, target),
+            head=head,
+            counters=counters,
+            ran=active,
+            partner_prev=partner,
+            mpart=mpart,
+            st=st,
+            admit_q=admit_q,
+            finish_q=finish_q,
+        )
+        return new, (queue_depth, n_active, n_solo)
+
+    @jax.jit
+    def race(dt: DeviceTables, job_pool, job_arrive, job_target, syn_cost,
+             syn_mean, syn_stacks, mkey):
+        carry0 = _OpenCarry(
+            app_id=jnp.full(c, -1, jnp.int32),
+            job_at=jnp.full(c, -1, jnp.int32),
+            phase_idx=jnp.zeros(c, jnp.int32),
+            phase_left=jnp.zeros(c, jnp.float32),
+            progress=jnp.zeros(c, jnp.float32),
+            target=jnp.full(c, jnp.inf, jnp.float32),
+            head=jnp.int32(0),
+            counters=jnp.zeros((c, 5), jnp.float32),
+            ran=jnp.zeros(c, bool),
+            partner_prev=idx,
+            mpart=jnp.arange(p, dtype=jnp.int32),
+            st=jnp.tile(uniform[None, :], (c, 1)),
+            admit_q=jnp.full(j_pad, -1, jnp.int32),
+            finish_q=jnp.full(j_pad, jnp.inf, jnp.float32),
+        )
+        fn = functools.partial(body, dt, job_pool, job_arrive, job_target,
+                               syn_cost, syn_mean, syn_stacks, mkey)
+        final, ys = lax.scan(
+            fn, carry0, jnp.arange(n_quanta, dtype=jnp.int32)
+        )
+        queue_depth, n_active, n_solo = ys
+        return final.admit_q, final.finish_q, queue_depth, n_active, n_solo
+
+    return race
+
+
+# Compiled races keyed by their static configuration.  The policy's
+# method/model enter the key by identity (they are arrays, unhashable by
+# value) and are held in the cache value so an id() can never be recycled
+# onto a live entry; everything else is keyed by value, so fresh
+# equal-config ScanPolicy instances sharing a model reuse the compiled
+# race.  LRU-bounded: a long-lived process sweeping many configurations
+# cannot pin compiled executables forever.
+_RACE_CACHE: "OrderedDict[Tuple, Tuple]" = OrderedDict()
+_RACE_CACHE_MAX = 16
+
+
+def _race_key(spec: ScanPolicy, capacity: int, n_quanta: int, j_pad: int,
+              admission: str) -> Tuple:
+    return (
+        spec.kind, id(spec.method), id(spec.model), spec.pair_impl,
+        spec.solver, spec.matcher, spec.refine_eps, spec.refine_rounds,
+        spec.first_match, capacity, n_quanta, j_pad, admission,
+    )
+
+
+def run_device_sim(sim, n_quanta: int, repeats: int = 1,
+                   transfer_guard: bool = False,
+                   warmup: bool = True) -> OnlineStats:
+    """Run a :class:`repro.online.sim.ClusterSim` configuration on device.
+
+    One ``lax.scan`` dispatch executes the whole run; ``repeats``
+    re-dispatches the (pure) compiled race and reports the *median*
+    per-quantum wall time in ``OnlineStats.policy_s`` (compile always
+    excluded by a warm-up dispatch).  ``transfer_guard=True`` wraps the
+    timed dispatches in ``jax.transfer_guard("disallow")``, proving the
+    loop makes no per-quantum host transfers — inputs are
+    device-committed up front, job logs are fetched after the guard
+    exits.  ``warmup=False`` skips the extra warm-up dispatch so the run
+    executes the race exactly once — the whole-run A/B timing mode
+    (``benchmarks/online_churn.py``), where the caller medians wall times
+    over back-to-back runs and sheds the compile round itself; the
+    reported ``policy_s`` then includes compile on the first run of a
+    configuration.
+    """
+    machine = sim.machine
+    spec: ScanPolicy = sim.policy
+    assert spec.kind in DEVICE_SIM_KINDS, spec.kind
+    params = machine.params
+    c = sim.capacity
+    pool = sim.pool
+    tables = sim.tables
+
+    # Pre-sample the arrival stream (bit-identical to the host run).
+    rng_arr = np.random.default_rng(sim.seed + 4242)
+    arrive_q, pids = presample(sim.arrivals, n_quanta, rng_arr)
+    j = int(pids.size)
+    # Jobs pad to the next power of two so re-runs of the same cell — and
+    # nearby traffic levels — reuse the compiled race.
+    j_pad = max(8, 1 << (j - 1).bit_length()) if j else 8
+    pool_target = np.array(
+        [machine.target_instructions(pr) for pr in pool]
+    ) * sim.target_scale
+    pool_rate = np.array([machine.solo_retire_rate(pr) for pr in pool])
+    job_pool = np.zeros(j_pad, np.int32)
+    job_arrive = np.full(j_pad, n_quanta, np.int32)  # padding never arrives
+    job_target = np.full(j_pad, np.inf, np.float32)
+    if j:
+        job_pool[:j] = pids
+        job_arrive[:j] = arrive_q
+        job_target[:j] = pool_target[pids]
+    n_apps = tables.n_apps
+    if sim.admission == "synergy":
+        syn_cost = np.asarray(sim.synergy.pool_cost, np.float32)
+        syn_mean = np.asarray(sim.synergy.mean_cost, np.float32)
+        syn_stacks = np.asarray(sim.synergy.stacks, np.float32)
+    else:
+        syn_cost = np.zeros((n_apps, n_apps), np.float32)
+        syn_mean = np.zeros(n_apps, np.float32)
+        syn_stacks = np.zeros((n_apps, isc.N_CATS), np.float32)
+
+    key = _race_key(spec, c, n_quanta, j_pad, sim.admission)
+    ent = _RACE_CACHE.get(key)
+    if ent is None:
+        ent = (spec.method, spec.model, _build_race(
+            spec, params, c, n_quanta, j_pad, sim.admission
+        ))
+        _RACE_CACHE[key] = ent
+        while len(_RACE_CACHE) > _RACE_CACHE_MAX:
+            _RACE_CACHE.popitem(last=False)
+    else:
+        _RACE_CACHE.move_to_end(key)
+    race = ent[2]
+
+    dt = jax.device_put(DeviceTables.build(tables))
+    args = (
+        dt,
+        jax.device_put(jnp.asarray(job_pool)),
+        jax.device_put(jnp.asarray(job_arrive)),
+        jax.device_put(jnp.asarray(job_target)),
+        jax.device_put(jnp.asarray(syn_cost)),
+        jax.device_put(jnp.asarray(syn_mean)),
+        jax.device_put(jnp.asarray(syn_stacks)),
+        jax.device_put(jax.random.PRNGKey(sim.seed)),
+    )
+    out = None
+    if warmup:
+        out = jax.block_until_ready(race(*args))  # compile + first run
+    walls = []
+    for _ in range(max(int(repeats), 1)):
+        t0 = time.perf_counter()
+        if transfer_guard:
+            with jax.transfer_guard("disallow"):
+                out = jax.block_until_ready(race(*args))
+        else:
+            out = jax.block_until_ready(race(*args))
+        walls.append(time.perf_counter() - t0)
+    per_quantum = float(np.median(walls)) / max(n_quanta, 1)
+
+    admit, finish, queue_depth, n_active, n_solo = (
+        np.asarray(o) for o in out
+    )
+    solo_s = (
+        job_target[:j] / pool_rate[pids] * params.quantum_s
+        if j else np.zeros(0)
+    )
+    return OnlineStats.from_device_logs(
+        policy_name=spec.name or f"scan-{spec.kind}",
+        quantum_s=params.quantum_s,
+        quanta=n_quanta,
+        app_names=[pool[int(pid)].name for pid in pids],
+        arrive_q=arrive_q,
+        admit_q=admit[:j],
+        finish_q=finish[:j],
+        targets=job_target[:j],
+        solo_s=solo_s,
+        queue_depth=queue_depth,
+        active=n_active,
+        policy_s=np.full(n_quanta, per_quantum),
+        solo_quanta=n_solo,
+    )

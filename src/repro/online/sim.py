@@ -46,6 +46,13 @@ class ClusterSim:
                profiled ST hint for the newcomer's slot
                (``repro.online.admission.SynergyAdmission`` — required via
                ``synergy=`` when selected).
+    engine:    ``"host"`` (default) runs the Python event loop below —
+               the parity oracle every other tier is held to;
+               ``"scan"`` runs the whole horizon as one ``lax.scan``
+               dispatch on device (``repro.online.device_sim``): ``policy``
+               must then be a :class:`repro.smt.scan_engine.ScanPolicy`
+               of a supported kind, and ``run`` accepts ``repeats`` /
+               ``transfer_guard``.
     """
 
     def __init__(
@@ -60,6 +67,7 @@ class ClusterSim:
         tables: PhaseTables = None,
         admission: str = "fifo",
         synergy=None,
+        engine: str = "host",
     ):
         assert n_cores >= 1
         self.machine = machine
@@ -76,15 +84,48 @@ class ClusterSim:
         )
         self.admission = admission
         self.synergy = synergy
+        assert engine in ("host", "scan"), engine
+        self.engine = engine
+        if engine == "scan":
+            from repro.online.device_sim import DEVICE_SIM_KINDS
+            from repro.smt.scan_engine import ScanPolicy
+
+            assert isinstance(policy, ScanPolicy) and \
+                policy.kind in DEVICE_SIM_KINDS, (
+                    "engine='scan' needs a ScanPolicy of kind "
+                    f"{DEVICE_SIM_KINDS}, got {policy!r}"
+                )
         # ``tables`` lets callers racing many configurations over the same
         # pool share one PhaseTables build (mirrors run_quanta's parameter).
         self.tables = tables if tables is not None else PhaseTables.build(
             self.pool
         )
         assert self.tables.n_apps == len(self.pool)
+        # Per-pool-application §6.2 targets and solo times, precomputed so
+        # the arrival/admission bookkeeping below is array work per batch
+        # of jobs, not Python work per job.
+        self._pool_target = np.array(
+            [machine.target_instructions(p) for p in self.pool]
+        ) * target_scale
+        self._pool_solo_s = self._pool_target / np.array(
+            [machine.solo_retire_rate(p) for p in self.pool]
+        ) * machine.params.quantum_s
+        self._pool_dur0 = np.array(
+            [float(p.phase(0).duration) for p in self.pool]
+        )
 
     # ------------------------------------------------------------------ run
-    def run(self, n_quanta: int) -> OnlineStats:
+    def run(self, n_quanta: int, repeats: int = 1,
+            transfer_guard: bool = False) -> OnlineStats:
+        if self.engine == "scan":
+            from repro.online.device_sim import run_device_sim
+
+            return run_device_sim(self, n_quanta, repeats=repeats,
+                                  transfer_guard=transfer_guard)
+        assert repeats == 1 and not transfer_guard, (
+            "repeats/transfer_guard are scan-engine knobs; the host event "
+            "loop is impure (one pass per call) and always transfers"
+        )
         machine, tables = self.machine, self.tables
         quantum_s = machine.params.quantum_s
         rng = np.random.default_rng(self.seed)              # machine stream
@@ -111,50 +152,67 @@ class ClusterSim:
         solo_quanta = np.zeros(n_quanta)
 
         for q in range(n_quanta):
-            # 1. Arrivals enter the queue.
+            # 1. Arrivals enter the queue (per-pool targets precomputed in
+            # __init__ — the record build is O(1) per job).
             for pid in self.arrivals.draw(q, rng_arr):
                 job_id = len(records)
-                prof = self.pool[pid]
-                target = machine.target_instructions(prof) * self.target_scale
-                solo_s = target / machine.solo_retire_rate(prof) * quantum_s
+                pid = int(pid)
                 rec = JobRecord(
-                    job_id=job_id, app_name=prof.name, arrive_q=q,
-                    admit_q=-1, finish_q=np.inf, target=target, solo_s=solo_s,
+                    job_id=job_id, app_name=self.pool[pid].name, arrive_q=q,
+                    admit_q=-1, finish_q=np.inf,
+                    target=float(self._pool_target[pid]),
+                    solo_s=float(self._pool_solo_s[pid]),
                 )
                 records.append(rec)
-                pool_of.append(int(pid))
+                pool_of.append(pid)
                 queue.append(rec)
 
             # 2. Admission: FIFO dequeue into free contexts.  "fifo" takes
-            # the lowest free slot; "synergy" places each job on the free
-            # context with the best predicted co-runner and records an ST
-            # hint for the policy.
+            # the k lowest free slots in one batch; "synergy" places each
+            # job on the free context with the best predicted co-runner
+            # (sequential by construction — each placement sees the
+            # previous one's resident — but the per-job placement itself
+            # is one vectorised argmin) and records an ST hint for the
+            # policy.  Slot-state initialisation is one fancy-indexed
+            # write per field, so the bookkeeping stays array work per
+            # admission batch — the host tier remains a usable parity
+            # oracle past N=4096 under high churn.
             arrived_slots: List[int] = []
             hints: Dict[int, np.ndarray] = {}
             if queue:
-                free = [int(s) for s in np.nonzero(app_id < 0)[0]]
-                while queue and free:
-                    rec = queue.popleft()
-                    pid = pool_of[rec.job_id]
-                    if self.admission == "synergy":
-                        s = self.synergy.place(pid, free, app_id)
+                (free,) = np.nonzero(app_id < 0)
+                k = min(len(queue), int(free.size))
+                recs = [queue.popleft() for _ in range(k)]
+                pids = np.array(
+                    [pool_of[r.job_id] for r in recs], np.int64
+                ).reshape(-1)
+                if self.admission == "synergy":
+                    free_mask = np.zeros(self.capacity, bool)
+                    free_mask[free] = True
+                    slots = np.empty(k, np.int64)
+                    for i in range(k):
+                        pid = int(pids[i])
+                        (fs,) = np.nonzero(free_mask)
+                        s = self.synergy.place(pid, fs, app_id)
+                        free_mask[s] = False
+                        app_id[s] = pid
+                        slots[i] = s
                         hints[s] = self.synergy.hint(pid)
-                    else:
-                        s = free[0]
-                    free.remove(s)
-                    rec.admit_q = q
-                    app_id[s] = pid
-                    job_at[s] = rec.job_id
-                    st.phase_idx[s] = 0
-                    st.phase_left[s] = float(
-                        self.pool[pid].phase(0).duration
-                    )
-                    st.progress[s] = 0.0
-                    st.target[s] = rec.target
-                    st.first_finish_q[s] = np.inf
-                    st.total_retired[s] = 0.0
-                    st.total_cycles[s] = 0.0
-                    arrived_slots.append(int(s))
+                else:
+                    slots = free[:k]
+                    app_id[slots] = pids
+                if k:
+                    job_at[slots] = [r.job_id for r in recs]
+                    st.phase_idx[slots] = 0
+                    st.phase_left[slots] = self._pool_dur0[pids]
+                    st.progress[slots] = 0.0
+                    st.target[slots] = self._pool_target[pids]
+                    st.first_finish_q[slots] = np.inf
+                    st.total_retired[slots] = 0.0
+                    st.total_cycles[slots] = 0.0
+                    for rec in recs:
+                        rec.admit_q = q
+                    arrived_slots = [int(s) for s in slots]
 
             (active,) = np.nonzero(app_id >= 0)
             queue_depth[q] = len(queue)
@@ -197,14 +255,17 @@ class ClusterSim:
             ran[:] = False
             ran[np.asarray(scheduled, np.int64)] = True
 
-            # 5. Departures free their contexts at quantum end.
-            for s in np.nonzero(finished)[0]:
+            # 5. Departures free their contexts at quantum end.  Record
+            # updates stay per departed job; the slot frees are batched.
+            (departed,) = np.nonzero(finished)
+            for s in departed:
                 rec = records[job_at[s]]
                 rec.finish_q = float(st.first_finish_q[s])
                 completed.append(rec)
-                app_id[s] = -1
-                job_at[s] = -1
-                pending_departed.append(int(s))
+            if departed.size:
+                app_id[departed] = -1
+                job_at[departed] = -1
+                pending_departed.extend(int(s) for s in departed)
             prev_pairs = [tuple(int(v) for v in p) for p in pairs]
             prev_solo = None if solo is None else int(solo)
             # Pairs whose members *both* departed carry no information for

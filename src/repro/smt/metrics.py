@@ -197,6 +197,65 @@ class OnlineStats:
         return float(np.median(self.policy_s) * 1e6) if self.policy_s.size \
             else 0.0
 
+    # ------------------------------------------------------- device logs
+    @classmethod
+    def from_device_logs(
+        cls,
+        policy_name: str,
+        quantum_s: float,
+        quanta: int,
+        app_names: Sequence[str],
+        arrive_q: np.ndarray,
+        admit_q: np.ndarray,
+        finish_q: np.ndarray,
+        targets: np.ndarray,
+        solo_s: np.ndarray,
+        queue_depth: np.ndarray,
+        active: np.ndarray,
+        policy_s: np.ndarray,
+        solo_quanta: np.ndarray,
+    ) -> "OnlineStats":
+        """Reconstruct the per-run stats from a device run's flat job logs.
+
+        The device-resident engine (``repro.online.device_sim``) tracks
+        jobs as parallel arrays in the scan carry — ``admit_q`` (-1 = never
+        admitted) and ``finish_q`` (inf = still running) are scattered
+        in-graph and fetched once at the end of the run; this constructor
+        rebuilds the host-shaped :class:`JobRecord` list from them.  The
+        completed list is ordered by (finish quantum, job id): the host
+        event loop appends departures quantum by quantum in slot order, so
+        aggregate metrics agree, though intra-quantum record order may
+        differ when several jobs depart together.
+        """
+        records = [
+            JobRecord(
+                job_id=j,
+                app_name=str(app_names[j]),
+                arrive_q=int(arrive_q[j]),
+                admit_q=int(admit_q[j]),
+                finish_q=float(finish_q[j]),
+                target=float(targets[j]),
+                solo_s=float(solo_s[j]),
+            )
+            for j in range(len(arrive_q))
+        ]
+        completed = sorted(
+            (r for r in records if math.isfinite(r.finish_q)),
+            key=lambda r: (r.finish_q, r.job_id),
+        )
+        return cls(
+            policy_name=policy_name,
+            quantum_s=quantum_s,
+            quanta=quanta,
+            completed=completed,
+            n_arrived=len(records),
+            n_admitted=int(sum(1 for r in records if r.admit_q >= 0)),
+            queue_depth=np.asarray(queue_depth, np.float64),
+            active=np.asarray(active, np.float64),
+            policy_s=np.asarray(policy_s, np.float64),
+            solo_quanta=np.asarray(solo_quanta, np.float64),
+        )
+
     def summary(self) -> Dict[str, float]:
         """Flat dict for benchmark JSON output."""
         return {

@@ -40,6 +40,15 @@ RNG stream layout (bump :data:`SCAN_RNG_STREAM_VERSION` when changing it):
   policy is drawn on host from ``numpy.default_rng(seed + 7919)`` — the
   same convention (and therefore the same first-quantum pairing) as the
   host schedulers' first ``_random_pairs`` call.
+* **v2 (open system)**: the device-resident open-system engine
+  (``repro.online.device_sim``) draws the identical per-quantum blocks
+  over the ``C = 2 * n_cores`` hardware *contexts* instead of N apps —
+  noise ``(C, 4)``, phase poisson ``(C,)`` — keyed per (context, quantum)
+  regardless of occupancy, so a context's draws are membership- and
+  pairing-independent.  Closed-race draws are bit-identical to v1; v2 is
+  a pure extension of the layout.  Arrivals are *pre-sampled on host*
+  from ``numpy.default_rng(seed + 4242)`` — the host ``ClusterSim``
+  stream, bit for bit — and shipped as data with the initial carry.
 
 All K policies of a race face a bit-identical workload, as in
 ``run_quanta_multi``.  The scan engine's guarantee is in fact stronger:
@@ -83,7 +92,10 @@ from repro.smt.machine import (
 #: Version of the threefry stream layout documented in the module
 #: docstring.  Statistical-parity tests and recorded benchmark results are
 #: tied to it; bump on any change to key derivation or draw shapes.
-SCAN_RNG_STREAM_VERSION = 1
+#: v2 extends v1 with the open-system (device sim) layout — closed-race
+#: draws are bit-identical to v1, so v1-recorded closed-race A/Bs remain
+#: valid under v2.
+SCAN_RNG_STREAM_VERSION = 2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -156,6 +168,25 @@ class ScanPolicy:
     per quantum (each round applies every mutual-best improving swap);
     ``refine_eps`` is the per-swap improvement floor — the same noise-floor
     role as ``StreamingConfig.refine_eps``.
+
+    ``first_match`` picks the refine tier's *once-per-race* full re-match
+    seed at the first counter quantum: ``"seed"`` re-ranks from scratch
+    (sort seed + full 2-opt, the PR 4 path), ``"carry"`` starts the full
+    2-opt budget from the carried pairing instead.  Measured back to back
+    (``docs/scaling.md`` §2c), ``"carry"`` is *slower* from a race start
+    — the once-per-race cost is the 2-opt's convergence, not the seed
+    construction, and the random initial carry converges slower than the
+    complementary sort seed (0.95x at N = 256, 0.81x at N = 1024) — so
+    ``"auto"`` resolves to ``"seed"`` at every size.  ``"carry"`` stays
+    selectable for callers whose carry is *informative* (a re-entered
+    race); the open-system engine (``repro.online.device_sim``) realises
+    exactly that benefit structurally: its repair tier re-seeds from the
+    previous quantum's partner vector every quantum and never pays a
+    sort-seed re-match at all.
+
+    ``name`` labels the policy in open-system stats
+    (``repro.online.device_sim``); the closed race keys results by the
+    ``policies`` dict instead.
     """
 
     kind: str = "synpa"
@@ -167,6 +198,8 @@ class ScanPolicy:
     refine_eps: float = 1e-2
     refine_rounds: int = 8
     p_migrate: float = 0.03
+    first_match: str = "auto"
+    name: Optional[str] = None
 
 
 class _MachineState(NamedTuple):
@@ -176,23 +209,31 @@ class _MachineState(NamedTuple):
     total_cycles: jnp.ndarray   # (N,) f32
 
 
-def _corun_components_scan(dt: DeviceTables, ph, partner, params):
+def _corun_components_scan(dt: DeviceTables, ph, partner, params, aid=None):
     """In-graph :func:`repro.smt.machine.corun_components_batched`.
 
     ``partner[i] == i`` marks a solo slot: the interference terms are
     masked to zero, so its components are exactly the solo components.
+
+    ``aid`` (optional) maps slots to pool rows of ``dt`` — the open
+    system's slot -> application indirection (``repro.online.device_sim``).
+    The closed engine's slots *are* pool rows (``aid = arange``, the
+    default), so its path is unchanged.
     """
-    n = dt.n_apps
+    n = ph.shape[0]
     idx = jnp.arange(n, dtype=jnp.int32)
+    if aid is None:
+        aid = idx
     co = (partner != idx).astype(jnp.float32)
-    c = dt.comps[idx, ph]
+    c = dt.comps[aid, ph]
     cpi = c.sum(axis=-1)
     php = ph[partner]
-    u = dt.util[partner, php] * co
-    f = dt.x_fe[partner, php] * co
-    m = dt.x_be[partner, php] * co
-    mem = dt.mem_sens
-    fetch = dt.fetch_sens
+    aidp = aid[partner]
+    u = dt.util[aidp, php] * co
+    f = dt.x_fe[aidp, php] * co
+    m = dt.x_be[aidp, php] * co
+    mem = dt.mem_sens[aid]
+    fetch = dt.fetch_sens[aid]
     out = jnp.stack(
         [
             c[:, 0] * (1.0 + params.a_disp * u),
@@ -335,6 +376,12 @@ def _make_policy_step(spec: ScanPolicy, n: int, p_pad: int,
         spec.method, spec.model, impl=spec.pair_impl, solver=spec.solver,
     )
     full_budget = 4 * (p_pad // 2)
+    first_mode = spec.first_match
+    if first_mode == "auto":
+        # Measured: the carry (random at race start) converges slower
+        # than the sort seed at every size — see the ScanPolicy docstring.
+        first_mode = "seed"
+    assert first_mode in ("seed", "carry"), spec.first_match
 
     def step(q, counters, mpart, st, pkey, first=False):
         partner = _machine_partner_of(mpart, n)
@@ -344,7 +391,14 @@ def _make_policy_step(spec: ScanPolicy, n: int, p_pad: int,
             [solve, solo, jnp.ones(n, bool), jnp.zeros(n, bool)]
         )
         cost, st = fstep(counters, partner, st, masks, jnp.asarray(odd))
-        if spec.matcher == "full" or (spec.matcher == "refine" and first):
+        if spec.matcher == "refine" and first and first_mode == "carry":
+            # Once-per-race full re-match, seeded by the carried pairing:
+            # the full 2-opt budget without the sort-seed construction.
+            mpart = matching.device_two_opt_partner(
+                cost, mpart, valid_p, eps=spec.refine_eps,
+                max_rounds=full_budget,
+            )
+        elif spec.matcher == "full" or (spec.matcher == "refine" and first):
             mpart = matching.device_pairs_partner(
                 cost, valid_p, eps=spec.refine_eps, max_rounds=full_budget
             )

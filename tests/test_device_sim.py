@@ -1,0 +1,483 @@
+"""Device-resident open-system engine tests (``repro.online.device_sim``).
+
+The parity contract (module docstring of ``device_sim``):
+
+* deterministic parts — arrival stream, FIFO admission, progress and
+  departure arithmetic — are *exact to f32* against the host
+  ``ClusterSim``; with a deterministic pairing policy (``adjacent``) and
+  single-phase applications the whole trajectory matches;
+* RNG parts — counter noise, phase durations — are distribution-equal
+  under ``SCAN_RNG_STREAM_VERSION`` v2 (lognormal moments checked here),
+  so multi-phase/synpa runs agree statistically, not bitwise;
+* zero per-quantum host transfers (``jax.transfer_guard`` test);
+* the queue can never under- or overflow: head <= tail, depth >= 0,
+  active <= capacity, conservation of jobs (property-style cases below).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import isc, matching, regression
+from repro.online import (
+    AdjacentOnline,
+    ClusterSim,
+    PoissonArrivals,
+    StreamingAllocator,
+    SynergyAdmission,
+    TraceArrivals,
+)
+from repro.smt import machine as mc
+from repro.smt.apps import pool_profiles
+from repro.smt.scan_engine import ScanPolicy
+
+
+def _toy_model(n_categories=4):
+    coeffs = np.zeros((4, 4), np.float32)
+    coeffs[isc.CAT_DI] = [0.007, 0.91, 0.004, 0.03]
+    coeffs[isc.CAT_FE] = [0.02, 1.41, 0.0, 0.0]
+    coeffs[isc.CAT_BE] = [0.0, 0.24, 1.07, 0.5]
+    coeffs[isc.CAT_HW] = [0.03, 1.22, 0.33, 0.0]
+    if n_categories == 3:
+        coeffs[isc.CAT_HW] = 0.0
+    return regression.CategoryModel(
+        coeffs=jnp.asarray(coeffs), mse=jnp.zeros(4),
+        n_categories=n_categories,
+    )
+
+
+@pytest.fixture(scope="module")
+def machine():
+    return mc.SMTMachine(mc.MachineParams(), seed=0)
+
+
+@pytest.fixture(scope="module")
+def pool():
+    return pool_profiles()
+
+
+@pytest.fixture(scope="module")
+def pool1(pool):
+    """Single-phase pool: no poisson phase draws can influence the
+    trajectory, so a deterministic policy pins it bit-for-bit."""
+    return [dataclasses.replace(p, phases=(p.phases[0],)) for p in pool]
+
+
+def _pair_of_sims(machine, pool, n_cores, arrivals_factory, seed,
+                  target_scale, host_policy, scan_policy, **kw):
+    host = ClusterSim(machine, pool, n_cores, host_policy,
+                      arrivals_factory(), seed=seed,
+                      target_scale=target_scale, **kw)
+    dev = ClusterSim(machine, pool, n_cores, scan_policy,
+                     arrivals_factory(), seed=seed,
+                     target_scale=target_scale, engine="scan", **kw)
+    return host, dev
+
+
+# ------------------------------------------------- deterministic parity
+class TestDeterministicParity:
+    def test_full_trajectory_host_vs_device(self, machine, pool1):
+        """Single-phase pool + adjacent pairing + FIFO admission: the
+        device run reproduces the host trajectory — admissions, queue
+        depths, solo quanta, completions and fractional finish quanta —
+        to f32."""
+        host, dev = _pair_of_sims(
+            machine, pool1, 8,
+            lambda: PoissonArrivals(rate=1.2, n_pool=len(pool1)),
+            seed=5, target_scale=0.1,
+            host_policy=AdjacentOnline(),
+            scan_policy=ScanPolicy(kind="adjacent"),
+        )
+        hs, ds = host.run(60), dev.run(60)
+        assert (hs.n_arrived, hs.n_admitted, hs.n_completed) == \
+            (ds.n_arrived, ds.n_admitted, ds.n_completed)
+        assert ds.n_completed > 0
+        np.testing.assert_array_equal(hs.queue_depth, ds.queue_depth)
+        np.testing.assert_array_equal(hs.active, ds.active)
+        np.testing.assert_array_equal(hs.solo_quanta, ds.solo_quanta)
+        ha = {r.job_id: r.admit_q for r in hs.completed}
+        da = {r.job_id: r.admit_q for r in ds.completed}
+        assert ha == da
+        hf = dict((r.job_id, r.finish_q) for r in hs.completed)
+        df = dict((r.job_id, r.finish_q) for r in ds.completed)
+        assert hf.keys() == df.keys()
+        for j in hf:
+            assert hf[j] == pytest.approx(df[j], rel=1e-4, abs=1e-4)
+
+    def test_arrival_stream_bit_identical(self, machine, pool):
+        """Multi-phase pool: phase draws diverge the runs, but the
+        pre-sampled arrival stream keeps arrivals (ids, quanta, targets)
+        bit-identical to the host's."""
+        host, dev = _pair_of_sims(
+            machine, pool, 4,
+            lambda: PoissonArrivals(rate=1.0, n_pool=len(pool)),
+            seed=9, target_scale=0.1,
+            host_policy=AdjacentOnline(),
+            scan_policy=ScanPolicy(kind="adjacent"),
+        )
+        hs, ds = host.run(50), dev.run(50)
+        assert hs.n_arrived == ds.n_arrived
+        # Departure behaviour stays statistically equal: same job count
+        # lands within a small tolerance of the host's completions.
+        assert abs(hs.n_completed - ds.n_completed) <= \
+            max(3, int(0.15 * hs.n_completed))
+
+    def test_device_run_deterministic(self, machine, pool):
+        spec = ScanPolicy(kind="synpa", method=isc.SYNPA4_R_FEBE,
+                          model=_toy_model())
+        sim = ClusterSim(
+            machine, pool, 4, spec,
+            PoissonArrivals(rate=1.0, n_pool=len(pool)),
+            seed=7, target_scale=0.1, engine="scan",
+        )
+        s1, s2 = sim.run(40), sim.run(40)
+        assert s1.n_completed == s2.n_completed
+        assert s1.mean_slowdown == s2.mean_slowdown
+        np.testing.assert_array_equal(s1.queue_depth, s2.queue_depth)
+
+
+# ------------------------------------------------- RNG statistics
+class TestRNGStatistics:
+    def test_counter_noise_lognormal_moments(self, machine, pool):
+        """Open-quantum counter noise is exp(sigma * N(0,1)) per noisy
+        column over the C contexts — distribution-equal to the host
+        engine's lognormal draws (stream layout v2)."""
+        from repro.smt.scan_engine import (
+            DeviceTables, _corun_components_scan, _pmu_counters_scan,
+        )
+        from repro.smt.machine import PhaseTables
+
+        tables = PhaseTables.build(pool)
+        dt = DeviceTables.build(tables)
+        c = 16
+        aid = jnp.asarray(np.arange(c) % tables.n_apps, jnp.int32)
+        ph = jnp.zeros(c, jnp.int32)
+        partner = jnp.asarray(np.arange(c) ^ 1, jnp.int32)
+        comps = _corun_components_scan(dt, ph, partner, machine.params,
+                                       aid=aid)
+        base = np.asarray(_pmu_counters_scan(
+            comps, dt.omega[aid], dt.retire[aid],
+            jnp.float32(machine.params.quantum_cycles), machine.params,
+            jax.random.PRNGKey(0), noisy=False,
+        ))
+        logs = []
+        for q in range(300):
+            noisy = np.asarray(_pmu_counters_scan(
+                comps, dt.omega[aid], dt.retire[aid],
+                jnp.float32(machine.params.quantum_cycles), machine.params,
+                jax.random.fold_in(jax.random.PRNGKey(0), q), noisy=True,
+            ))
+            logs.append(np.log(noisy[:, 1:] / base[:, 1:]))
+        logs = np.concatenate(logs).ravel()
+        sigma = machine.params.noise_sigma
+        assert abs(logs.mean()) < 3 * sigma / np.sqrt(logs.size)
+        assert abs(logs.std() - sigma) < 0.05 * sigma
+
+
+# ------------------------------------------------- transfer guard
+def test_transfer_guard_no_per_quantum_transfers(machine, pool):
+    """The compiled open-system run makes no host transfers: job arrays
+    and tables are committed up front, the dispatch runs under
+    transfer_guard('disallow'), logs come back after the guard exits."""
+    spec = ScanPolicy(kind="synpa", method=isc.SYNPA4_R_FEBE,
+                      model=_toy_model())
+    sim = ClusterSim(
+        machine, pool, 4, spec,
+        PoissonArrivals(rate=1.2, n_pool=len(pool)),
+        seed=3, target_scale=0.1, engine="scan",
+    )
+    stats = sim.run(30, transfer_guard=True)
+    assert stats.n_completed > 0
+    assert stats.mean_slowdown >= 1.0
+
+
+# ------------------------------------------------- queue properties
+class TestQueueProperties:
+    def test_overflow_burst_queues_then_drains(self, machine, pool):
+        """3x capacity arrives at q0: the overflow waits (depth = 2C),
+        admissions never exceed capacity, and everything drains."""
+        c = 8
+        events = [(0, i % len(pool)) for i in range(3 * c)]
+        sim = ClusterSim(
+            machine, pool, c // 2, ScanPolicy(kind="adjacent"),
+            TraceArrivals(events), seed=1, target_scale=0.05,
+            engine="scan",
+        )
+        stats = sim.run(120)
+        assert stats.queue_depth[0] == 2 * c
+        assert (stats.active <= c).all()
+        assert (stats.queue_depth >= 0).all()
+        assert stats.n_completed == 3 * c
+        assert stats.queue_depth[-1] == 0
+        assert any(r.admit_q > r.arrive_q for r in stats.completed)
+
+    def test_underflow_empty_system_runs(self, machine, pool):
+        """Zero arrivals: the masked loop runs the whole horizon on an
+        empty system without NaNs or spurious activity."""
+        sim = ClusterSim(
+            machine, pool, 2, ScanPolicy(kind="adjacent"),
+            TraceArrivals([]), seed=1, target_scale=0.1, engine="scan",
+        )
+        stats = sim.run(20)
+        assert stats.n_arrived == 0 and stats.n_completed == 0
+        assert (stats.queue_depth == 0).all()
+        assert (stats.active == 0).all()
+
+    def test_system_empties_and_refills(self, machine, pool):
+        """The system drains mid-run, then a second wave arrives — the
+        masked admission must come back up from an all-empty state."""
+        events = [(0, 0), (0, 1), (40, 2), (40, 3)]
+        sim = ClusterSim(
+            machine, pool, 2, ScanPolicy(kind="adjacent"),
+            TraceArrivals(events), seed=2, target_scale=0.05,
+            engine="scan",
+        )
+        stats = sim.run(90)
+        assert stats.n_completed == 4
+        assert (stats.active[38:40] == 0).all()
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_conservation_invariants(self, machine, pool, seed):
+        """admitted <= arrived, completed <= admitted, queue depth equals
+        arrived-not-admitted at every quantum's end."""
+        sim = ClusterSim(
+            machine, pool, 4, ScanPolicy(kind="adjacent"),
+            PoissonArrivals(rate=2.0, n_pool=len(pool)),
+            seed=seed, target_scale=0.1, engine="scan",
+        )
+        stats = sim.run(40)
+        assert stats.n_admitted <= stats.n_arrived
+        assert stats.n_completed <= stats.n_admitted
+        assert (stats.queue_depth >= 0).all()
+        assert (stats.active <= sim.capacity).all()
+
+
+# ------------------------------------------------- odd occupancy
+class TestOddOccupancy:
+    def test_odd_population_runs_solo(self, machine, pool):
+        """An odd active population leaves exactly one app solo per
+        quantum (idle-context convention), on both policies."""
+        events = [(0, i) for i in range(5)]
+        for spec in (
+            ScanPolicy(kind="adjacent"),
+            ScanPolicy(kind="synpa", method=isc.SYNPA4_R_FEBE,
+                       model=_toy_model()),
+        ):
+            sim = ClusterSim(
+                machine, pool, 4, spec, TraceArrivals(events),
+                seed=3, target_scale=0.2, engine="scan",
+            )
+            stats = sim.run(20)
+            assert stats.solo_quanta.max() == 1
+            assert stats.solo_quanta[0] == 1  # 5 actives -> one solo
+            assert stats.mean_slowdown >= 1.0
+
+    def test_churny_odd_even_toggling(self, machine, pool):
+        """Odd/even active counts toggling under churn keep the matcher
+        valid (the idle vertex joins and leaves the mask)."""
+        spec = ScanPolicy(kind="synpa", method=isc.SYNPA4_R_FEBE,
+                          model=_toy_model())
+        sim = ClusterSim(
+            machine, pool, 4, spec,
+            PoissonArrivals(rate=1.5, n_pool=len(pool)),
+            seed=11, target_scale=0.08, engine="scan",
+        )
+        stats = sim.run(60)
+        assert stats.solo_quanta.sum() > 0, "odd populations must occur"
+        assert (stats.solo_quanta <= 1).all()
+        assert stats.n_completed > 0
+
+
+# ------------------------------------------------- synpa quality + hints
+class TestSynpaDeviceQuality:
+    def test_device_synpa_tracks_host_streaming(self, machine, pool):
+        """Same traffic: the device synpa tier's per-job mean slowdown is
+        within a few percent of the host streaming allocator's (different
+        noise trajectories, same policy family)."""
+        model = _toy_model()
+        arr = lambda: PoissonArrivals(rate=1.5, n_pool=len(pool))  # noqa
+        host, dev = _pair_of_sims(
+            machine, pool, 8, arr, seed=5, target_scale=0.1,
+            host_policy=StreamingAllocator(isc.SYNPA4_R_FEBE, model),
+            scan_policy=ScanPolicy(kind="synpa", method=isc.SYNPA4_R_FEBE,
+                                   model=model),
+        )
+        hs, ds = host.run(50), dev.run(50)
+        assert ds.mean_slowdown <= hs.mean_slowdown * 1.05
+        assert ds.n_completed >= int(0.9 * hs.n_completed)
+
+    def test_device_synpa_beats_adjacent(self, machine, pool):
+        """The counter-driven tier must beat the interference-oblivious
+        deterministic baseline on the same traffic."""
+        arr = lambda: PoissonArrivals(rate=1.2, n_pool=len(pool))  # noqa
+        runs = {}
+        for name, spec in (
+            ("adjacent", ScanPolicy(kind="adjacent")),
+            ("synpa", ScanPolicy(kind="synpa", method=isc.SYNPA4_R_FEBE,
+                                 model=_toy_model())),
+        ):
+            sim = ClusterSim(machine, pool, 8, spec, arr(), seed=5,
+                             target_scale=0.1, engine="scan")
+            runs[name] = sim.run(60)
+        assert runs["synpa"].mean_slowdown < runs["adjacent"].mean_slowdown
+
+    def test_synergy_hints_on_device(self, machine, pool):
+        """Synergy admission on device: deterministic, and quality stays
+        in the FIFO ballpark (the hints A/B direction is benchmarked, not
+        asserted — a single seed is noise)."""
+        model = _toy_model()
+        syn = SynergyAdmission(machine, pool, isc.SYNPA4_R_FEBE, model,
+                               quanta=12)
+        spec = ScanPolicy(kind="synpa", method=isc.SYNPA4_R_FEBE,
+                          model=model)
+        arr = lambda: PoissonArrivals(rate=3.0, n_pool=len(pool))  # noqa
+        sims = [
+            ClusterSim(machine, pool, 16, spec, arr(), seed=5,
+                       target_scale=0.1, admission="synergy", synergy=syn,
+                       engine="scan")
+            for _ in range(2)
+        ]
+        s1, s2 = sims[0].run(40), sims[1].run(40)
+        assert s1.n_completed == s2.n_completed
+        assert s1.mean_slowdown == s2.mean_slowdown
+        fifo = ClusterSim(machine, pool, 16, spec, arr(), seed=5,
+                          target_scale=0.1, engine="scan").run(40)
+        assert s1.mean_slowdown <= fifo.mean_slowdown * 1.05
+
+
+# ------------------------------------------------- device repair matcher
+class TestDeviceRepairPartner:
+    def _sym_cost(self, rng, p):
+        c = rng.uniform(0.0, 10.0, size=(p, p))
+        c = (c + c.T) / 2
+        np.fill_diagonal(c, matching.BIG)
+        return c.astype(np.float32)
+
+    def _rand_involution(self, rng, p):
+        perm = rng.permutation(p)
+        part = np.empty(p, np.int32)
+        for k in range(p // 2):
+            a, b = perm[2 * k], perm[2 * k + 1]
+            part[a], part[b] = b, a
+        return part
+
+    def _match_cost(self, cost, partner, valid):
+        return sum(
+            float(cost[v, partner[v]])
+            for v in range(len(partner)) if valid[v] and v < partner[v]
+        )
+
+    @pytest.mark.parametrize("seed", range(6))
+    def test_repair_is_valid_matching(self, seed):
+        """Any (carried involution, new validity) pair repairs to a
+        perfect fixed-point-free matching that never mixes valid and
+        invalid vertices."""
+        rng = np.random.default_rng(seed)
+        p = 24
+        cost = self._sym_cost(rng, p)
+        prev = self._rand_involution(rng, p)
+        valid = rng.random(p) < 0.6
+        if valid.sum() % 2:  # contract: even popcount
+            valid[np.nonzero(valid)[0][0]] = False
+        out = np.asarray(matching.device_repair_partner(
+            jnp.asarray(cost), jnp.asarray(prev), jnp.asarray(valid),
+        ))
+        assert (out[out] == np.arange(p)).all(), "must stay an involution"
+        assert (out != np.arange(p)).all(), "no fixed points"
+        assert (valid[out] == valid).all(), "valid pairs valid only"
+
+    @pytest.mark.parametrize("seed", range(4))
+    def test_repair_not_worse_than_kept_start(self, seed):
+        """The 2-opt polish can only improve on the keep + complementary
+        repair start (monotonicity of the masked 2-opt)."""
+        rng = np.random.default_rng(100 + seed)
+        p = 16
+        cost = self._sym_cost(rng, p)
+        prev = self._rand_involution(rng, p)
+        valid = np.ones(p, bool)
+        full = np.asarray(matching.device_repair_partner(
+            jnp.asarray(cost), jnp.asarray(prev), jnp.asarray(valid),
+        ))
+        start = np.asarray(matching.device_repair_partner(
+            jnp.asarray(cost), jnp.asarray(prev), jnp.asarray(valid),
+            max_rounds=0,
+        ))
+        assert self._match_cost(cost, full, valid) <= \
+            self._match_cost(cost, start, valid) + 1e-4
+
+    def test_repair_keeps_surviving_pairs_when_optimal(self):
+        """A strictly-best kept pair under churn survives the repair."""
+        p = 8
+        cost = np.full((p, p), 5.0, np.float32)
+        np.fill_diagonal(cost, matching.BIG)
+        cost[0, 1] = cost[1, 0] = 0.1        # the golden pair
+        prev = np.array([1, 0, 3, 2, 5, 4, 7, 6], np.int32)
+        valid = np.array([1, 1, 1, 1, 0, 0, 1, 1], bool)  # 4,5 departed
+        out = np.asarray(matching.device_repair_partner(
+            jnp.asarray(cost), jnp.asarray(prev), jnp.asarray(valid),
+        ))
+        assert out[0] == 1 and out[1] == 0
+        assert valid[out[6]] and valid[out[7]]
+
+    def test_repair_close_to_full_rematch_quality(self):
+        """Repair quality stays within the 2-opt-gap ballpark of a full
+        device re-match on random costs."""
+        rng = np.random.default_rng(7)
+        p = 32
+        cost = self._sym_cost(rng, p)
+        prev = self._rand_involution(rng, p)
+        valid = np.ones(p, bool)
+        rep = np.asarray(matching.device_repair_partner(
+            jnp.asarray(cost), jnp.asarray(prev), jnp.asarray(valid),
+        ))
+        full = np.asarray(matching.device_pairs_partner(
+            jnp.asarray(cost), jnp.asarray(valid),
+        ))
+        assert self._match_cost(cost, rep, valid) <= \
+            self._match_cost(cost, full, valid) * 1.6 + 1e-6
+
+
+# ------------------------------------------------- acceptance (slow)
+@pytest.mark.slow
+def test_acceptance_n256_churn_cell_one_dispatch(machine, pool):
+    """Acceptance: the rho=1.0, N=256 churn cell runs as one dispatch
+    under the transfer guard, and the deterministic-trajectory contract
+    holds at the same size (single-phase pool, adjacent policy)."""
+    # The churn cell itself, one dispatch, no per-quantum transfers.
+    spec = ScanPolicy(kind="synpa", method=isc.SYNPA4_R_FEBE,
+                      model=_toy_model())
+    rate = 256 / (machine.params.solo_reference_quanta * 0.25 * 1.3)
+    sim = ClusterSim(
+        machine, pool, 128, spec,
+        PoissonArrivals(rate=rate, n_pool=len(pool)),
+        seed=11, target_scale=0.25, engine="scan",
+    )
+    stats = sim.run(30, transfer_guard=True)
+    assert stats.n_admitted > 128
+    assert stats.n_completed > 0
+    assert stats.mean_slowdown >= 1.0
+
+    # Deterministic-trajectory parity at N=256.
+    pool1 = [dataclasses.replace(p, phases=(p.phases[0],)) for p in pool]
+    host = ClusterSim(
+        machine, pool1, 128, AdjacentOnline(),
+        PoissonArrivals(rate=rate, n_pool=len(pool1)),
+        seed=11, target_scale=0.25,
+    )
+    dev = ClusterSim(
+        machine, pool1, 128, ScanPolicy(kind="adjacent"),
+        PoissonArrivals(rate=rate, n_pool=len(pool1)),
+        seed=11, target_scale=0.25, engine="scan",
+    )
+    hs, ds = host.run(30), dev.run(30)
+    assert (hs.n_arrived, hs.n_admitted, hs.n_completed) == \
+        (ds.n_arrived, ds.n_admitted, ds.n_completed)
+    np.testing.assert_array_equal(hs.queue_depth, ds.queue_depth)
+    hf = dict((r.job_id, r.finish_q) for r in hs.completed)
+    df = dict((r.job_id, r.finish_q) for r in ds.completed)
+    assert hf.keys() == df.keys()
+    for j in hf:
+        assert hf[j] == pytest.approx(df[j], rel=1e-4, abs=1e-3)

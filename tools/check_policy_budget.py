@@ -2,11 +2,17 @@
 
 Measures the steady-state (median) policy wall-time per quantum of the
 default ``StreamingScheduler`` on a closed N=256 population — the fused
-per-quantum dispatch plus the incremental matcher — *and* the per-quantum
+per-quantum dispatch plus the incremental matcher — the per-quantum
 wall time of the single-dispatch scan engine
 (``repro.smt.scan_engine.run_quanta_scan``, machine+policy indivisible),
-and fails (exit 1) if either regresses more than ``MAX_REGRESSION``x over
-the recorded baseline in ``benchmarks/results/policy_time_n256.json``.
+*and* the per-quantum wall time of the device-resident open system
+(``ClusterSim(engine="scan")`` on a rho=1.0 churn cell, one dispatch per
+run), and fails (exit 1) if any regresses more than ``MAX_REGRESSION``x
+over the recorded baseline in
+``benchmarks/results/policy_time_n256.json``.  The baseline carries the
+RNG stream version stamps (``benchmarks.common.version_stamp``); a
+baseline recorded under different stream layouts is refused and must be
+re-recorded.
 
 Run via ``tools/run_bench_smoke.sh`` (and the slow-marked
 ``tests/test_bench_smoke.py``), so a change that quietly de-fuses the hot
@@ -53,17 +59,32 @@ def measure() -> dict:
     hot path, a scan loop broken back into per-quantum dispatches — are
     order-of-magnitude, not 2x.
     """
-    from benchmarks.common import get_env
+    from benchmarks.common import get_env, version_stamp
+    from benchmarks.online_churn import TARGET_SCALE, mean_service_quanta
     from repro.core import isc
-    from repro.online import StreamingScheduler
+    from repro.online import ClusterSim, PoissonArrivals, StreamingScheduler
     from repro.smt import workloads
+    from repro.smt.apps import pool_profiles
     from repro.smt.scan_engine import ScanPolicy
 
     machine, models, _ = get_env(fast=True)
     method = isc.SYNPA4_R_FEBE
     model = models["SYNPA4_R-FEBE"]
     profs = workloads.scaled_workload(N_APPS, seed=N_APPS)
-    stream_us, stream_mean_us, scan_us = np.inf, np.inf, np.inf
+    pool = pool_profiles()
+    device_spec = ScanPolicy(kind="synpa", method=method, model=model)
+    # The device-sim steady-state cell: rho=1.0 traffic at N=256 capacity
+    # under the benchmark grid's own mean-service mapping, so the guard
+    # always measures the published cell.  One sim (and one PhaseTables
+    # build) serves both guard iterations; the compiled race is cached.
+    rate = N_APPS / mean_service_quanta(machine)
+    dev_sim = ClusterSim(
+        machine, pool, N_APPS // 2, device_spec,
+        PoissonArrivals(rate=rate, n_pool=len(pool)),
+        seed=11, target_scale=TARGET_SCALE, engine="scan",
+    )
+    stream_us, stream_mean_us = np.inf, np.inf
+    scan_us, device_us = np.inf, np.inf
     for _ in range(2):
         res = machine.run_quanta_multi(
             profs,
@@ -77,16 +98,20 @@ def measure() -> dict:
                                        model=model)},
             n_quanta=N_QUANTA, seed=3, engine="scan", repeats=SCAN_REPEATS,
         )["synpa4-scan"]
+        dev = dev_sim.run(N_QUANTA, repeats=SCAN_REPEATS)
         stream_us = min(stream_us, res.sched_s_per_quantum_median * 1e6)
         stream_mean_us = min(stream_mean_us, res.sched_s_per_quantum * 1e6)
         scan_us = min(scan_us, scan.machine_s_per_quantum * 1e6)
+        device_us = min(device_us, float(np.median(dev.policy_s)) * 1e6)
     return {
         "n": N_APPS,
         "quanta": N_QUANTA,
         "stream_median_us": stream_us,
         "stream_mean_us": stream_mean_us,
         "scan_total_median_us": scan_us,
+        "device_sim_median_us": device_us,
         "recorded_unix": time.time(),
+        **version_stamp(engine="scan"),
     }
 
 
@@ -102,15 +127,22 @@ def main() -> int:
             json.dump(got, f, indent=2)
         print(f"policy_guard: recorded baseline "
               f"{got['stream_median_us']:.0f} us/quantum (median, N={N_APPS})"
-              f", scan {got['scan_total_median_us']:.0f} us/quantum")
+              f", scan {got['scan_total_median_us']:.0f} us/quantum, "
+              f"device sim {got['device_sim_median_us']:.0f} us/quantum")
         return 0
 
     if not os.path.exists(BASELINE):
         print(f"policy_guard: no baseline at {BASELINE}; "
               "run with --record first", file=sys.stderr)
         return 1
-    with open(BASELINE) as f:
-        base = json.load(f)
+    from benchmarks.common import load_stamped
+
+    base = load_stamped(os.path.basename(BASELINE))
+    if base is None:
+        print("policy_guard: baseline stamped with stale RNG stream "
+              "versions; run --record on the current code first",
+              file=sys.stderr)
+        return 1
     budget = base["stream_median_us"] * MAX_REGRESSION
     ok = got["stream_median_us"] <= budget
     print(
@@ -119,20 +151,23 @@ def main() -> int:
         f"{base['stream_median_us']:.0f} (budget {budget:.0f}) -> "
         f"{'OK' if ok else 'REGRESSION'}"
     )
-    scan_ok = True
-    if "scan_total_median_us" in base:
-        scan_budget = base["scan_total_median_us"] * MAX_REGRESSION
-        scan_ok = got["scan_total_median_us"] <= scan_budget
+    def _guard(key: str, label: str) -> bool:
+        if key not in base:
+            print(f"policy_guard: baseline has no {label} entry; run "
+                  "--record to start guarding it")
+            return True
+        b = base[key] * MAX_REGRESSION
+        good = got[key] <= b
         print(
-            f"policy_guard: scan-engine N={N_APPS} median "
-            f"{got['scan_total_median_us']:.0f} us/quantum vs baseline "
-            f"{base['scan_total_median_us']:.0f} (budget "
-            f"{scan_budget:.0f}) -> {'OK' if scan_ok else 'REGRESSION'}"
+            f"policy_guard: {label} N={N_APPS} median "
+            f"{got[key]:.0f} us/quantum vs baseline {base[key]:.0f} "
+            f"(budget {b:.0f}) -> {'OK' if good else 'REGRESSION'}"
         )
-    else:
-        print("policy_guard: baseline has no scan entry; run --record "
-              "to start guarding the scan engine")
-    return 0 if (ok and scan_ok) else 1
+        return good
+
+    scan_ok = _guard("scan_total_median_us", "scan-engine")
+    device_ok = _guard("device_sim_median_us", "device-sim")
+    return 0 if (ok and scan_ok and device_ok) else 1
 
 
 if __name__ == "__main__":

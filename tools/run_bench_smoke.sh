@@ -8,6 +8,7 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
 python benchmarks/online_churn.py --smoke
+python benchmarks/online_churn.py --smoke --engine scan
 python benchmarks/cluster_scale.py --smoke
 python benchmarks/cluster_scale.py --smoke --engine scan
 python tools/check_policy_budget.py
