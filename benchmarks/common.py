@@ -126,24 +126,15 @@ def load_json(name: str):
 # ---------------------------------------------------------------------------
 # Version stamps for recorded A/Bs.  A recorded median is only comparable
 # to a re-measurement when both ran under the same RNG stream layouts —
-# the same reason the model caches are stamped and refused above.  Every
-# result JSON a later run may compare against carries ``engine`` plus the
-# relevant stream versions, and loaders refuse mismatches.
+# the same reason the model caches are stamped and refused above.  The
+# stamp logic itself lives in ``repro.obs.metrics`` (the run-export
+# layer); these wrappers keep the historic benchmark API.
 # ---------------------------------------------------------------------------
 def version_stamp(engine: Optional[str] = None) -> Dict:
-    """Stamp dict for a result JSON: the profiling-campaign stream version
-    always; the scan-engine threefry layout version whenever the result
-    involves the device tiers (``engine`` is recorded verbatim)."""
-    from repro.smt.training import RNG_STREAM_VERSION
+    """Stamp dict for a result JSON (``repro.obs.metrics.version_stamp``)."""
+    from repro.obs.metrics import version_stamp as _stamp
 
-    stamp: Dict = {"rng_stream_version": RNG_STREAM_VERSION}
-    if engine is not None:
-        stamp["engine"] = engine
-    if engine in ("scan", "device"):
-        from repro.smt.scan_engine import SCAN_RNG_STREAM_VERSION
-
-        stamp["scan_rng_stream_version"] = SCAN_RNG_STREAM_VERSION
-    return stamp
+    return _stamp(engine)
 
 
 def save_stamped(name: str, obj: Dict, engine: Optional[str] = None) -> str:
@@ -157,26 +148,16 @@ def load_stamped(name: str) -> Optional[Dict]:
     Returns None (and says why) when the file is missing, unstamped, or
     stamped with a different stream version than the current code — a
     recorded A/B under another RNG layout is not comparable and must be
-    re-recorded, exactly like a stale model cache is refit.
+    re-recorded, exactly like a stale model cache is refit.  The checks
+    are ``repro.obs.metrics.check_stamp``.
     """
-    from repro.smt.training import RNG_STREAM_VERSION
+    from repro.obs.metrics import check_stamp
 
     obj = load_json(name)
     if obj is None:
         return None
-    if obj.get("rng_stream_version") != RNG_STREAM_VERSION:
-        print(f"# refusing {name}: rng stream "
-              f"v{obj.get('rng_stream_version')} != v{RNG_STREAM_VERSION}; "
-              "re-record it")
+    if not check_stamp(obj, label=name):
         return None
-    if "scan_rng_stream_version" in obj:
-        from repro.smt.scan_engine import SCAN_RNG_STREAM_VERSION
-
-        if obj["scan_rng_stream_version"] != SCAN_RNG_STREAM_VERSION:
-            print(f"# refusing {name}: scan stream "
-                  f"v{obj['scan_rng_stream_version']} != "
-                  f"v{SCAN_RNG_STREAM_VERSION}; re-record it")
-            return None
     return obj
 
 

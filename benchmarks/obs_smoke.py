@@ -1,0 +1,124 @@
+"""Observability smoke run: telemetry-on runs of both scan engines,
+exported as one ``repro.obs`` run report.
+
+Drives the whole ``repro.obs`` stack end to end on a small grid:
+
+* the open system (``ClusterSim(engine="scan")``) with the device
+  telemetry ring enabled — per-quantum queue/active/slowdown/GN
+  counters recorded in-graph, one dispatch, zero extra transfers;
+* the closed scan race (``run_quanta_multi(engine="scan")``) with its
+  ring enabled;
+* host span tracing (``repro.obs.trace``) around both, captured into
+  the export's ``spans`` block.
+
+The export (``results/obs_smoke.json``) carries the metrics, the
+timelines, both telemetry rings and the spans — render or diff it with
+``tools/obs_report.py``.  ``--record`` writes the baseline copy
+(``results/obs_smoke_baseline.json``) the smoke tier diffs against:
+non-timing metrics are deterministic given the RNG stream stamps, so
+any drift there is a real behaviour change, while wall-time metrics
+get the usual 2x jitter budget.
+
+Run via ``tools/run_bench_smoke.sh`` (slow-marked tier-1).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+
+from benchmarks.common import RESULTS_DIR, get_env  # noqa: E402
+
+N_APPS = 32          # closed-race population
+N_CORES = 8          # open-system capacity: 16 contexts
+N_QUANTA = 40
+EXPORT = os.path.join(RESULTS_DIR, "obs_smoke.json")
+BASELINE = os.path.join(RESULTS_DIR, "obs_smoke_baseline.json")
+
+
+def run_export():
+    """One telemetry-on pass of both engines -> a run export dict."""
+    from repro.core import isc
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import trace as obs_trace
+    from repro.online import ClusterSim, PoissonArrivals
+    from repro.smt import workloads
+    from repro.smt.apps import pool_profiles
+    from repro.smt.scan_engine import ScanPolicy
+
+    machine, models, _ = get_env(fast=True)
+    method = isc.SYNPA4_R_FEBE
+    model = models["SYNPA4_R-FEBE"]
+    pool = pool_profiles()
+    spec = ScanPolicy(kind="synpa", method=method, model=model)
+
+    obs_trace.clear()
+    obs_trace.enable()
+    try:
+        with obs_trace.span("obs_smoke.open"):
+            sim = ClusterSim(
+                machine, pool, N_CORES, spec,
+                PoissonArrivals(rate=1.5, n_pool=len(pool)),
+                seed=13, target_scale=0.1, engine="scan",
+            )
+            stats = sim.run(N_QUANTA, telemetry=True)
+        with obs_trace.span("obs_smoke.closed"):
+            profs = workloads.scaled_workload(N_APPS, seed=N_APPS)
+            res = machine.run_quanta_multi(
+                profs, {"synpa4-scan": spec}, n_quanta=N_QUANTA, seed=3,
+                engine="scan", telemetry=True,
+            )["synpa4-scan"]
+    finally:
+        obs_trace.disable()
+
+    metrics = {
+        **obs_metrics.stats_metrics(stats, prefix="open_"),
+        **{f"open_{k}": v for k, v in stats.telemetry.summary().items()},
+        **obs_metrics.throughput_metrics(res, prefix="closed_"),
+        **{f"closed_{k}": v for k, v in res.telemetry.summary().items()},
+    }
+    timelines = {f"open_{k}": v for k, v in stats.timelines().items()
+                 if not k.startswith("tlm_")}
+    return obs_metrics.export_run(
+        name="obs_smoke",
+        engine="scan",
+        metrics=metrics,
+        timelines=timelines,
+        telemetry={"open": stats.telemetry, "closed": res.telemetry},
+        spans=obs_trace.events(),
+        meta={"n_apps": N_APPS, "n_cores": N_CORES, "quanta": N_QUANTA},
+    )
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="accepted for smoke-runner symmetry (this "
+                         "benchmark is already smoke-sized)")
+    ap.add_argument("--record", action="store_true",
+                    help="also write the baseline the smoke tier diffs "
+                         "against")
+    args = ap.parse_args()
+
+    from repro.obs import metrics as obs_metrics
+
+    run = run_export()
+    obs_metrics.save_run(EXPORT, run)
+    print(f"# wrote {EXPORT}")
+    if args.record:
+        obs_metrics.save_run(BASELINE, run)
+        print(f"# wrote {BASELINE}")
+    n_tlm = len(run.get("telemetry", {}))
+    print(f"obs_smoke: {len(run['metrics'])} metrics, "
+          f"{len(run.get('timelines', {}))} timelines, "
+          f"{n_tlm} telemetry rings, {len(run.get('spans', []))} spans")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

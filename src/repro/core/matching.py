@@ -914,7 +914,8 @@ def _partner_to_pair_arrays(partner, valid):
 
 
 def device_two_opt_partner(cost, partner, valid, eps=1e-9,
-                           max_rounds: Optional[int] = None):
+                           max_rounds: Optional[int] = None,
+                           with_rounds: bool = False):
     """Vectorised masked 2-opt by parallel mutual-best rounds, in-graph.
 
     The device twin of :func:`_two_opt` with the same move set — re-pair
@@ -934,6 +935,12 @@ def device_two_opt_partner(cost, partner, valid, eps=1e-9,
     Same local-optimality class as the host 2-opt — the quality contract
     (within the 2-opt gap of blossom) is property-tested on the tier — but
     *not* bit-identical to it: acceptance order differs.
+
+    ``with_rounds=True`` (static) additionally returns the int32 round
+    counter of the while loop — the telemetry ring's ``two_opt_rounds``.
+    The count includes the final unproductive round that proved local
+    optimality (when the round budget did not cut the loop short first);
+    the partner vector is bit-identical either way.
     """
     q = partner.shape[0] // 2
     if max_rounds is None:
@@ -969,23 +976,30 @@ def device_two_opt_partner(cost, partner, valid, eps=1e-9,
         _i, _j, k, improved = state
         return improved & (k < max_rounds)
 
-    i, j, _k, _imp = lax.while_loop(
+    i, j, k, _imp = lax.while_loop(
         cond, body, (i0, j0, jnp.int32(0), jnp.bool_(True))
     )
     idx = jnp.arange(partner.shape[0], dtype=jnp.int32)
-    return idx.at[i].set(j).at[j].set(i)
+    out = idx.at[i].set(j).at[j].set(i)
+    if with_rounds:
+        return out, k
+    return out
 
 
 def device_pairs_partner(cost, valid, eps=1e-9,
-                         max_rounds: Optional[int] = None):
-    """Sort seed + masked 2-opt, in-graph.  Returns the partner vector."""
+                         max_rounds: Optional[int] = None,
+                         with_rounds: bool = False):
+    """Sort seed + masked 2-opt, in-graph.  Returns the partner vector
+    (plus the 2-opt round counter under ``with_rounds=True``)."""
     seed = device_seed_partner(cost, valid)
     return device_two_opt_partner(cost, seed, valid, eps=eps,
-                                  max_rounds=max_rounds)
+                                  max_rounds=max_rounds,
+                                  with_rounds=with_rounds)
 
 
 def device_repair_partner(cost, partner, valid, eps=1e-9,
-                          max_rounds: Optional[int] = None):
+                          max_rounds: Optional[int] = None,
+                          with_diag: bool = False):
     """Masked churn repair of a carried partner vector, in-graph.
 
     The device twin of :func:`repair_pairs` for *partial occupancy*: the
@@ -1009,6 +1023,11 @@ def device_repair_partner(cost, partner, valid, eps=1e-9,
     branches, so the churn repair can ride inside a ``lax.scan`` body with
     churn-stable shapes.  Same local-optimality class as the host repair
     tier, never bit-identical to it (acceptance order differs).
+
+    ``with_diag=True`` (static) returns ``(partner, rounds, n_dirty)``:
+    the 2-opt round counter plus the int32 dirty-vertex count the repair
+    re-paired this call — the telemetry ring's churn-repair counters.
+    The partner vector is bit-identical either way.
     """
     p = partner.shape[0]
     idx = jnp.arange(p, dtype=jnp.int32)
@@ -1038,6 +1057,12 @@ def device_repair_partner(cost, partner, valid, eps=1e-9,
     )
     repaired = jnp.zeros(p, jnp.int32).at[order].set(order[mate_pos])
     repaired = jnp.where(keep, pt, repaired)
+    if with_diag:
+        out, rounds = device_two_opt_partner(
+            cost, repaired, valid, eps=eps, max_rounds=max_rounds,
+            with_rounds=True,
+        )
+        return out, rounds, nd.astype(jnp.int32)
     return device_two_opt_partner(cost, repaired, valid, eps=eps,
                                   max_rounds=max_rounds)
 

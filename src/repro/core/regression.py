@@ -55,7 +55,7 @@ property of the landscape).
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence, Tuple
+from typing import NamedTuple, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -218,6 +218,23 @@ _GN_GOOD_ENOUGH = 1e-4
 #: at which point the trial steps are scaled-down gradient steps and two
 #: rejections in a row mean a genuine local plateau.
 _GN_LAM_STALL = 1e3
+
+
+class InverseDiag(NamedTuple):
+    """Per-row diagnostics of the §5.3 inverse solve (``return_diag=True``).
+
+    iters:    (...,) int32 — LM steps taken while the row was still live
+              (not yet converged/plateaued); ``gn_steps`` on a row that ran
+              out of budget, the full ``n_steps`` under ``solver="hb"``.
+    residual: (...,) float32 — final inverse residual of the returned
+              solution (the fallback's when the fallback won the row).
+    fallback: (...,) bool — the heavy-ball fallback's solution beat GN's
+              on this row (always False when the fallback never ran).
+    """
+
+    iters: jnp.ndarray
+    residual: jnp.ndarray
+    fallback: jnp.ndarray
 
 
 def _chol_solve_small(A, b, n: int):
@@ -383,7 +400,7 @@ def _gn_solve_scan(model: CategoryModel, frac_i, frac_j, z0_i, z0_j,
 
 
 def _gn_solve(model: CategoryModel, frac_i, frac_j, z0_i, z0_j,
-              n_steps: int):
+              n_steps: int, diag: bool = False):
     """Early-exit GN solve: iterate until every row is done or the budget
     runs out.
 
@@ -404,6 +421,12 @@ def _gn_solve(model: CategoryModel, frac_i, frac_j, z0_i, z0_j,
     Returns ``(st_i, st_j, res, not_converged)``; ``not_converged`` marks
     rows that exhausted the budget while still descending — the rows the
     caller hands to the heavy-ball fallback.
+
+    ``diag=True`` (a static flag) additionally returns a per-row ``iters``
+    int32 array — the number of LM steps each row took while still live.
+    The counter rides the loop carry as a pure extra output: it never
+    feeds the step math, so the default path's graph (and its float32
+    trajectory) is exactly the ``diag=False`` code below.
     """
     to_simplex, init_carry, step = _make_lm_step(model, frac_i, frac_j)
 
@@ -415,12 +438,7 @@ def _gn_solve(model: CategoryModel, frac_i, frac_j, z0_i, z0_j,
     def done_of(res, stall):
         return (res < _GN_GOOD_ENOUGH) | (stall >= 2)
 
-    def cond(carry):
-        k, _z_i, _z_j, _rv, res, _lam, stall, _ever = carry
-        return (k < n_steps) & ~jnp.all(done_of(res, stall))
-
-    def body(carry):
-        k, z_i, z_j, rv, res, lam, stall, ever = carry
+    def advance(z_i, z_j, rv, res, lam, stall, ever):
         z_i, z_j, rv, res_n, lam = step(z_i, z_j, rv, res, lam)
         small = (res - res_n) <= _GN_PLATEAU_RTOL * (res_n + 1e-12)
         accepted = res_n < res
@@ -435,7 +453,37 @@ def _gn_solve(model: CategoryModel, frac_i, frac_j, z0_i, z0_j,
         stall = jnp.where(
             stalled, stall + 1, jnp.where(accepted, 0, stall)
         )
-        return k + 1, z_i, z_j, rv, res_n, lam, stall, ever | accepted
+        return z_i, z_j, rv, res_n, lam, stall, ever | accepted
+
+    if diag:
+        def cond_d(carry):
+            k, _its, _z_i, _z_j, _rv, res, _lam, stall, _ever = carry
+            return (k < n_steps) & ~jnp.all(done_of(res, stall))
+
+        def body_d(carry):
+            k, its, z_i, z_j, rv, res, lam, stall, ever = carry
+            live = ~done_of(res, stall)
+            its = its + live.astype(jnp.int32)
+            out = advance(z_i, z_j, rv, res, lam, stall, ever)
+            return (k + 1, its) + out
+
+        its0 = jnp.zeros(res0.shape, jnp.int32)
+        (_k, iters, z_i, z_j, _rv, res, _lam, stall,
+         _ever) = jax.lax.while_loop(
+            cond_d, body_d,
+            (k0, its0, z0_i, z0_j, rv0, res0, lam0, stall0, ever0),
+        )
+        not_converged = ~done_of(res, stall)
+        return to_simplex(z_i), to_simplex(z_j), res, not_converged, iters
+
+    def cond(carry):
+        k, _z_i, _z_j, _rv, res, _lam, stall, _ever = carry
+        return (k < n_steps) & ~jnp.all(done_of(res, stall))
+
+    def body(carry):
+        k = carry[0]
+        out = advance(*carry[1:])
+        return (k + 1,) + out
 
     _k, z_i, z_j, _rv, res, _lam, stall, _ever = jax.lax.while_loop(
         cond, body, (k0, z0_i, z0_j, rv0, res0, lam0, stall0, ever0)
@@ -480,6 +528,7 @@ def inverse(
     init_j=None,
     solver: str = "gn",
     gn_steps: int = GN_STEPS,
+    return_diag: bool = False,
 ):
     """Invert Eq. 4 (paper §5.3 step 1).
 
@@ -508,16 +557,33 @@ def inverse(
     trajectories of ``n_steps`` each from (a) the measured fractions and
     (b) the uniform stack (or the warm ``init``), per-row best.  Kept as the
     reference/fallback engine and for A/B benchmarks.
+
+    ``return_diag=True`` (static) returns ``(st_i, st_j, diag)`` with a
+    per-row :class:`InverseDiag` — LM iteration counts, final residuals
+    and the fallback mask.  The stacks are bit-identical to the default
+    call (diagnostics are pure extra outputs), and ``return_diag=False``
+    compiles today's exact graph.  Under ``solver="hb"`` the fixed-length
+    gradient scan has no early exit: ``iters`` is the full ``n_steps``
+    and ``fallback`` is all-False.
     """
     frac_i = jnp.asarray(frac_i, jnp.float32)
     frac_j = jnp.asarray(frac_j, jnp.float32)
     if solver == "hb":
-        return _hb_best_of(model, frac_i, frac_j, n_steps, lr,
-                           init_i=init_i, init_j=init_j)
+        st_i, st_j = _hb_best_of(model, frac_i, frac_j, n_steps, lr,
+                                 init_i=init_i, init_j=init_j)
+        if not return_diag:
+            return st_i, st_j
+        res = inverse_residual(model, frac_i, frac_j, st_i, st_j)
+        return st_i, st_j, InverseDiag(
+            iters=jnp.full(res.shape, n_steps, jnp.int32),
+            residual=res,
+            fallback=jnp.zeros(res.shape, bool),
+        )
     assert solver == "gn", solver
     return _gn_with_fallback(model, frac_i, frac_j, gn_steps=gn_steps,
                              hb_steps=n_steps, lr=lr,
-                             init_i=init_i, init_j=init_j)
+                             init_i=init_i, init_j=init_j,
+                             return_diag=return_diag)
 
 
 def _hb_best_of(model: CategoryModel, frac_i, frac_j, n_steps: int,
@@ -545,12 +611,18 @@ def _hb_best_of(model: CategoryModel, frac_i, frac_j, n_steps: int,
 
 def _gn_with_fallback(model: CategoryModel, frac_i, frac_j,
                       gn_steps: int = GN_STEPS, hb_steps: int = 80,
-                      lr: float = 1.5, init_i=None, init_j=None):
+                      lr: float = 1.5, init_i=None, init_j=None,
+                      return_diag: bool = False):
     """GN solve + in-graph heavy-ball fallback for non-converged rows.
 
     The building block behind :func:`inverse` and the fused per-quantum
     pipeline (``repro.core.synpa.make_fused_step``).  All inputs must
     already be float32 jnp arrays.
+
+    ``return_diag=True`` (static) returns ``(st_i, st_j, diag)`` with a
+    per-row :class:`InverseDiag`.  The diagnostics are pure extra outputs
+    of the same solve — the returned stacks are bit-identical either way,
+    and the default path compiles the exact ``return_diag=False`` graph.
     """
     assert gn_steps >= 3, "plateau detection needs at least 3 LM steps"
     if init_i is None:
@@ -558,10 +630,39 @@ def _gn_with_fallback(model: CategoryModel, frac_i, frac_j,
     else:
         z0_i = _log_init(jnp.asarray(init_i, jnp.float32))
         z0_j = _log_init(jnp.asarray(init_j, jnp.float32))
-    st_i, st_j, res, not_converged = _gn_solve(
-        model, frac_i, frac_j, z0_i, z0_j, gn_steps
-    )
+    if return_diag:
+        st_i, st_j, res, not_converged, iters = _gn_solve(
+            model, frac_i, frac_j, z0_i, z0_j, gn_steps, diag=True
+        )
+    else:
+        st_i, st_j, res, not_converged = _gn_solve(
+            model, frac_i, frac_j, z0_i, z0_j, gn_steps
+        )
     need_fb = jnp.any(not_converged | ~jnp.isfinite(res))
+
+    if return_diag:
+        def _with_fallback_d(_):
+            hb_i, hb_j = _hb_best_of(model, frac_i, frac_j, hb_steps, lr,
+                                     init_i=init_i, init_j=init_j)
+            res_hb = inverse_residual(model, frac_i, frac_j, hb_i, hb_j)
+            better = res_hb < res
+            bx = better[..., None]
+            return (
+                jnp.where(bx, hb_i, st_i),
+                jnp.where(bx, hb_j, st_j),
+                jnp.where(better, res_hb, res),
+                better,
+            )
+
+        def _keep_gn_d(_):
+            return st_i, st_j, res, jnp.zeros(res.shape, bool)
+
+        out_i, out_j, out_res, fb = jax.lax.cond(
+            need_fb, _with_fallback_d, _keep_gn_d, None
+        )
+        return out_i, out_j, InverseDiag(
+            iters=iters, residual=out_res, fallback=fb
+        )
 
     def _with_fallback(_):
         hb_i, hb_j = _hb_best_of(model, frac_i, frac_j, hb_steps, lr,

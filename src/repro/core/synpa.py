@@ -106,6 +106,7 @@ def make_fused_step(
     hb_steps: int = 80,
     lr: float = 1.5,
     warm: bool = False,
+    with_diag: bool = False,
 ):
     """The fused per-quantum SYNPA dispatch (Steps 0-2 + cost preparation).
 
@@ -142,6 +143,14 @@ def make_fused_step(
     pure function of this quantum's counters and ``warm`` is ignored.
     ``"hb"`` is the retained gradient reference; with ``warm=True`` it
     starts from ``prev_st`` (plus the measured-fraction guard start).
+
+    ``with_diag=True`` (static) returns ``(cost, st, diag)``: a (4,) f32
+    solver-diagnostics vector reduced over this quantum's valid pair
+    solves, in :data:`repro.obs.telemetry.FUSED_DIAG_FIELDS` order —
+    [gn_iters_mean, gn_iters_max, gn_residual_max, gn_fallbacks].  The
+    diagnostics are pure extra outputs of the same solve: ``cost`` and
+    ``st`` stay bit-identical, and the default call compiles today's
+    exact graph.
     """
     from repro.kernels.pair_score.ref import DIAG as _KERNEL_DIAG
 
@@ -180,10 +189,18 @@ def make_fused_step(
         v1 = valid[:, None]
         fi = jnp.where(v1, frac[take], uniform)
         fj = jnp.where(v1, frac[p_take], uniform)
+        idiag = None
         if solver == "gn":
-            si, sj = regression._gn_with_fallback(
-                model, fi, fj, gn_steps=gn_steps, hb_steps=hb_steps, lr=lr
-            )
+            if with_diag:
+                si, sj, idiag = regression._gn_with_fallback(
+                    model, fi, fj, gn_steps=gn_steps, hb_steps=hb_steps,
+                    lr=lr, return_diag=True,
+                )
+            else:
+                si, sj = regression._gn_with_fallback(
+                    model, fi, fj, gn_steps=gn_steps, hb_steps=hb_steps,
+                    lr=lr
+                )
         else:
             assert solver == "hb", solver
             if warm:
@@ -194,6 +211,14 @@ def make_fused_step(
             si, sj = regression._hb_best_of(
                 model, fi, fj, hb_steps, lr, init_i=ii, init_j=ij
             )
+            if with_diag:
+                idiag = regression.InverseDiag(
+                    iters=jnp.full(valid.shape, hb_steps, jnp.int32),
+                    residual=regression.inverse_residual(
+                        model, fi, fj, si, sj
+                    ),
+                    fallback=jnp.zeros(valid.shape, bool),
+                )
         st = prev_st
         st = st.at[take].set(jnp.where(v1, si, st[take]))
         st = st.at[p_take].set(jnp.where(valid[:, None], sj, st[p_take]))
@@ -224,6 +249,19 @@ def make_fused_step(
         cost = jnp.where(
             validp[:, None] & is_idle[None, :], matching.IDLE_COST, cost
         )
+        if with_diag:
+            # Reduce the per-row solver diagnostics over this quantum's
+            # valid pair solves (masked rows solved placeholder systems).
+            nv = jnp.maximum(jnp.sum(valid.astype(jnp.float32)), 1.0)
+            itf = jnp.where(valid, idiag.iters.astype(jnp.float32), 0.0)
+            diag = jnp.stack([
+                jnp.sum(itf) / nv,
+                jnp.max(itf),
+                jnp.max(jnp.where(valid, idiag.residual, 0.0)),
+                jnp.sum(jnp.where(valid, idiag.fallback, False).astype(
+                    jnp.float32)),
+            ])
+            return cost, st, diag
         return cost, st
 
     return step

@@ -1,0 +1,173 @@
+"""The metrics registry + run-report layer of ``repro.obs``.
+
+Before this module, every benchmark and guard rolled its own JSON shape:
+``OnlineStats.summary()`` dicts, ``ThroughputResult`` fields cherry-picked
+per script, the policy-budget guard's private flat file.  A *run export*
+unifies them:
+
+    {
+      "obs_schema_version": 1,
+      "name": "...",                      # what was run
+      "rng_stream_version": ...,          # stamps (version_stamp below)
+      "scan_rng_stream_version": ...,     #   (device runs only)
+      "engine": "...",
+      "recorded_unix": ...,
+      "metrics":   {flat name -> float},  # the comparable numbers
+      "timelines": {name -> [per-quantum floats]},
+      "telemetry": {arm -> TelemetryLog.to_dict()},
+      "spans":     [chrome trace events],
+      "meta":      {free-form context},
+    }
+
+``tools/obs_report.py`` renders a report from one export and diffs two
+with noise-aware thresholds; ``tools/check_policy_budget.py`` records and
+reads its baseline in this format.  Loading refuses exports whose schema
+or RNG stream stamps do not match the current code — the same
+refuse-don't-migrate convention as the model caches.
+
+:func:`version_stamp` is the canonical home of the stamp logic;
+``benchmarks.common`` delegates here for backward compatibility.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+#: Version of the run-export schema above.  Bump on layout changes;
+#: loaders refuse mismatches instead of migrating.
+OBS_SCHEMA_VERSION = 1
+
+
+def version_stamp(engine: Optional[str] = None) -> Dict:
+    """Stamp dict for a recorded result: the profiling-campaign stream
+    version always; the scan-engine threefry layout version whenever the
+    result involves the device tiers (``engine`` is recorded verbatim).
+
+    A recorded median is only comparable to a re-measurement when both
+    ran under the same RNG stream layouts — the same reason the model
+    caches are stamped and refused on mismatch.
+    """
+    from repro.smt.training import RNG_STREAM_VERSION
+
+    stamp: Dict = {"rng_stream_version": RNG_STREAM_VERSION}
+    if engine is not None:
+        stamp["engine"] = engine
+    if engine in ("scan", "device"):
+        from repro.smt.scan_engine import SCAN_RNG_STREAM_VERSION
+
+        stamp["scan_rng_stream_version"] = SCAN_RNG_STREAM_VERSION
+    return stamp
+
+
+def check_stamp(obj: Dict, label: str = "run") -> bool:
+    """True when ``obj``'s stamps match the current code; says why not."""
+    from repro.smt.training import RNG_STREAM_VERSION
+
+    if obj.get("obs_schema_version") not in (None, OBS_SCHEMA_VERSION):
+        print(f"# refusing {label}: obs schema "
+              f"v{obj.get('obs_schema_version')} != v{OBS_SCHEMA_VERSION}; "
+              "re-record it")
+        return False
+    if obj.get("rng_stream_version") != RNG_STREAM_VERSION:
+        print(f"# refusing {label}: rng stream "
+              f"v{obj.get('rng_stream_version')} != v{RNG_STREAM_VERSION}; "
+              "re-record it")
+        return False
+    if "scan_rng_stream_version" in obj:
+        from repro.smt.scan_engine import SCAN_RNG_STREAM_VERSION
+
+        if obj["scan_rng_stream_version"] != SCAN_RNG_STREAM_VERSION:
+            print(f"# refusing {label}: scan stream "
+                  f"v{obj['scan_rng_stream_version']} != "
+                  f"v{SCAN_RNG_STREAM_VERSION}; re-record it")
+            return False
+    return True
+
+
+def export_run(
+    name: str,
+    metrics: Dict[str, float],
+    engine: Optional[str] = None,
+    timelines: Optional[Dict] = None,
+    telemetry: Optional[Dict] = None,
+    spans: Optional[List[Dict]] = None,
+    meta: Optional[Dict] = None,
+) -> Dict:
+    """Build a run export (the schema in the module docstring).
+
+    ``telemetry`` maps arm names to :class:`repro.obs.telemetry.TelemetryLog`
+    instances (or already-serialised dicts); ``timelines`` maps names to
+    per-quantum sequences.  Everything is coerced to JSON-native types so
+    the export round-trips losslessly.
+    """
+    run: Dict = {
+        "obs_schema_version": OBS_SCHEMA_VERSION,
+        "name": name,
+        "recorded_unix": time.time(),
+        **version_stamp(engine),
+        "metrics": {k: float(v) for k, v in metrics.items()},
+    }
+    if timelines:
+        run["timelines"] = {
+            k: [float(x) for x in v] for k, v in timelines.items()
+        }
+    if telemetry:
+        run["telemetry"] = {
+            k: (v.to_dict() if hasattr(v, "to_dict") else v)
+            for k, v in telemetry.items()
+        }
+    if spans:
+        run["spans"] = list(spans)
+    if meta:
+        run["meta"] = dict(meta)
+    return run
+
+
+def save_run(path: str, run: Dict) -> str:
+    """Write a run export; write-then-rename so interrupts never leave a
+    truncated file behind."""
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(run, f, indent=2)
+    os.replace(tmp, path)
+    return path
+
+
+def load_run(path: str) -> Optional[Dict]:
+    """Load a run export; None when missing, unreadable or stale-stamped."""
+    if not os.path.exists(path):
+        return None
+    try:
+        with open(path) as f:
+            obj = json.load(f)
+    except Exception:
+        print(f"# refusing unreadable run export {os.path.basename(path)}")
+        return None
+    if not isinstance(obj, dict) or "metrics" not in obj:
+        print(f"# refusing {os.path.basename(path)}: not a run export "
+              "(no 'metrics' block); re-record it")
+        return None
+    if not check_stamp(obj, label=os.path.basename(path)):
+        return None
+    return obj
+
+
+def stats_metrics(stats, prefix: str = "") -> Dict[str, float]:
+    """Flatten an ``OnlineStats`` summary into export metric rows."""
+    return {f"{prefix}{k}": float(v) for k, v in stats.summary().items()}
+
+
+def throughput_metrics(res, prefix: str = "") -> Dict[str, float]:
+    """Flatten a ``ThroughputResult`` into export metric rows."""
+    return {
+        f"{prefix}mean_true_slowdown": float(res.mean_true_slowdown),
+        f"{prefix}ipc_geomean": float(res.ipc_geomean),
+        f"{prefix}total_retired": float(res.total_retired),
+        f"{prefix}sched_us_per_quantum": res.sched_s_per_quantum * 1e6,
+        f"{prefix}sched_us_per_quantum_median":
+            res.sched_s_per_quantum_median * 1e6,
+        f"{prefix}machine_us_per_quantum": res.machine_s_per_quantum * 1e6,
+    }

@@ -1,0 +1,110 @@
+"""Device telemetry rings — the in-graph counter layer of ``repro.obs``.
+
+Both scan engines (``repro.smt.scan_engine`` closed race,
+``repro.online.device_sim`` open system) optionally record one fixed-shape
+float32 vector per quantum *inside* the ``lax.scan`` body, stacked as scan
+``ys`` into a ``(Q, F)`` ring and fetched once after the run, alongside the
+results.  Telemetry therefore costs zero extra dispatches and zero extra
+host transfers during the run (the transfer-guard tests hold with the ring
+enabled), and — because the counters are pure extra *outputs* that never
+feed back into the carry — a telemetry-off run compiles today's exact
+graph and stays bit-identical.
+
+The field catalogues below are the schema: the engines build their vectors
+in this exact order, and :class:`TelemetryLog` names the columns back on
+host.  Counters that do not apply to a quantum (e.g. policy fields on
+quantum 0, GN fields under a non-SYNPA policy) are recorded as zero.
+
+See ``docs/observability.md`` for the per-counter catalogue.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Sequence
+
+import numpy as np
+
+#: Per-pair-solve diagnostics vector of the fused SYNPA step
+#: (``repro.core.synpa.make_fused_step(..., with_diag=True)``), reduced
+#: over the quantum's valid solves.
+FUSED_DIAG_FIELDS = (
+    "gn_iters_mean",      # mean LM steps over the quantum's pair solves
+    "gn_iters_max",       # worst row's LM step count
+    "gn_residual_max",    # worst row's final inverse residual
+    "gn_fallbacks",       # rows the heavy-ball fallback won
+)
+
+#: Closed-race ring (``repro.smt.scan_engine``), one vector per quantum.
+CLOSED_FIELDS = (
+    "real_slowdown_mean",  # ground-truth mean slowdown of the pairing
+    "real_slowdown_max",   # worst slot's ground-truth slowdown
+    "pred_cost_mean",      # mean predicted pair slowdown (cost/2) matched
+    "two_opt_rounds",      # device-matcher parallel swap rounds
+) + FUSED_DIAG_FIELDS
+
+#: Open-system ring (``repro.online.device_sim``), one vector per quantum.
+OPEN_FIELDS = (
+    "queue_head",          # jobs admitted so far (queue head index)
+    "queue_tail",          # jobs arrived so far (queue tail index)
+    "queue_depth",         # tail - head: jobs waiting for a context
+    "admissions",          # jobs admitted this quantum
+    "departures",          # jobs departed this quantum
+    "active",              # contexts holding a job
+    "solo",                # active contexts running alone
+    "real_slowdown_mean",  # mean ground-truth slowdown of active contexts
+    "real_slowdown_max",   # worst active context's ground-truth slowdown
+    "pred_cost_mean",      # mean predicted pair slowdown of the matching
+    "repair_dirty",        # churn-repair dirty vertices re-paired
+    "two_opt_rounds",      # device-matcher parallel swap rounds
+) + FUSED_DIAG_FIELDS
+
+
+class TelemetryLog:
+    """Host-side view of a fetched ``(Q, F)`` telemetry ring.
+
+    ``fields`` names the columns (one of the catalogues above); ``data``
+    is the fetched ring as float64.  The log is a plain container — the
+    engines build it *after* their transfer-guard region exits.
+    """
+
+    def __init__(self, fields: Sequence[str], data, policy: str = ""):
+        self.fields = tuple(fields)
+        self.data = np.asarray(data, np.float64)
+        self.policy = policy
+        assert self.data.ndim == 2 and self.data.shape[1] == len(
+            self.fields
+        ), (self.data.shape, len(self.fields))
+
+    @property
+    def quanta(self) -> int:
+        return self.data.shape[0]
+
+    def timeline(self, name: str) -> np.ndarray:
+        """The (Q,) per-quantum series of one counter."""
+        return self.data[:, self.fields.index(name)]
+
+    def summary(self) -> Dict[str, float]:
+        """Flat per-counter mean/max dict — the run-report metrics rows."""
+        out: Dict[str, float] = {}
+        for k, name in enumerate(self.fields):
+            col = self.data[:, k]
+            out[f"tlm_{name}_mean"] = float(col.mean()) if col.size else 0.0
+            out[f"tlm_{name}_max"] = float(col.max()) if col.size else 0.0
+        return out
+
+    def to_dict(self) -> Dict:
+        """JSON-ready payload (the ``telemetry`` block of a run export)."""
+        return {
+            "policy": self.policy,
+            "fields": list(self.fields),
+            "data": [[float(v) for v in row] for row in self.data],
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "TelemetryLog":
+        return cls(d["fields"], np.asarray(d["data"], np.float64),
+                   policy=d.get("policy", ""))
+
+    def __repr__(self) -> str:
+        return (f"TelemetryLog(policy={self.policy!r}, "
+                f"quanta={self.quanta}, fields={len(self.fields)})")

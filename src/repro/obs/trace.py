@@ -1,0 +1,154 @@
+"""Host span tracing — Chrome/Perfetto trace events for the run pipeline.
+
+The device engines are one dispatch per run, so the host-side story of a
+run is a handful of coarse phases: presample -> commit -> compile ->
+dispatch -> fetch -> stats (and, on the host engines, the per-quantum
+event-loop phases).  :func:`span` wraps each phase as a context manager;
+when tracing is enabled the spans are recorded as Chrome trace-event
+``"X"`` (complete) events — microsecond timestamps, pid/tid — which
+``save`` writes as a JSON file loadable in ``chrome://tracing`` or
+https://ui.perfetto.dev.  When ``jax.profiler`` is importable each span
+also wraps a ``TraceAnnotation``, so the spans line up with XLA's own
+rows inside a ``jax.profiler.trace`` capture.
+
+Tracing is off by default and a disabled :func:`span` is a no-op context
+manager (one truthiness check), so the engines keep their spans in place
+permanently — including inside the host event loop — without a
+measurable cost.  The recorder is process-global and append-only between
+:func:`enable`/:func:`disable`; :func:`events` returns the raw list,
+:func:`to_chrome_trace` the JSON-ready document.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import json
+import os
+import threading
+import time
+from typing import Dict, List, Optional
+
+_enabled = False
+_events: List[Dict] = []
+_t0 = 0.0
+_lock = threading.Lock()
+_annotation_cls = None
+_annotation_missing = False
+
+
+def _annotation(name: str):
+    """``jax.profiler.TraceAnnotation`` when available, else a null ctx."""
+    global _annotation_cls, _annotation_missing
+    if _annotation_missing:
+        return contextlib.nullcontext()
+    if _annotation_cls is None:
+        try:
+            from jax.profiler import TraceAnnotation
+            _annotation_cls = TraceAnnotation
+        except Exception:
+            _annotation_missing = True
+            return contextlib.nullcontext()
+    return _annotation_cls(name)
+
+
+def enable(clear: bool = True) -> None:
+    """Start recording spans (optionally clearing previous events)."""
+    global _enabled, _t0
+    with _lock:
+        if clear:
+            _events.clear()
+        _t0 = time.perf_counter()
+        _enabled = True
+
+
+def disable() -> None:
+    global _enabled
+    _enabled = False
+
+
+def enabled() -> bool:
+    return _enabled
+
+
+def clear() -> None:
+    with _lock:
+        _events.clear()
+
+
+@contextlib.contextmanager
+def span(name: str, **args):
+    """One traced phase.  ``args`` become the event's ``args`` payload.
+
+    Disabled tracing short-circuits before any clock read; enabled spans
+    record a complete ("X") event and nest naturally by wall time —
+    Perfetto reconstructs the flame from overlapping [ts, ts+dur) ranges
+    on one tid.
+    """
+    if not _enabled:
+        yield
+        return
+    t_start = time.perf_counter()
+    with _annotation(name):
+        try:
+            yield
+        finally:
+            t_end = time.perf_counter()
+            ev = {
+                "name": name,
+                "ph": "X",
+                "ts": (t_start - _t0) * 1e6,
+                "dur": (t_end - t_start) * 1e6,
+                "pid": os.getpid(),
+                "tid": threading.get_ident(),
+            }
+            if args:
+                ev["args"] = {k: _jsonable(v) for k, v in args.items()}
+            with _lock:
+                _events.append(ev)
+
+
+def _jsonable(v):
+    if isinstance(v, (str, int, float, bool)) or v is None:
+        return v
+    return repr(v)
+
+
+def events() -> List[Dict]:
+    """The recorded events (shared list snapshot)."""
+    with _lock:
+        return list(_events)
+
+
+def to_chrome_trace() -> Dict:
+    """Chrome trace-event document: ``{"traceEvents": [...], ...}``."""
+    return {
+        "traceEvents": events(),
+        "displayTimeUnit": "ms",
+        "metadata": {"recorder": "repro.obs.trace"},
+    }
+
+
+def save(path: str) -> str:
+    """Write the trace JSON (open in chrome://tracing or Perfetto)."""
+    with open(path, "w") as f:
+        json.dump(to_chrome_trace(), f)
+    return path
+
+
+def breakdown(evs: Optional[List[Dict]] = None) -> Dict[str, Dict]:
+    """Aggregate events by span name: count, total/mean duration (us).
+
+    The span table of the run report (``tools/obs_report.py``); also a
+    convenient assertion surface for tests.
+    """
+    evs = events() if evs is None else evs
+    out: Dict[str, Dict] = {}
+    for ev in evs:
+        row = out.setdefault(
+            ev["name"], {"count": 0, "total_us": 0.0}
+        )
+        row["count"] += 1
+        row["total_us"] += float(ev.get("dur", 0.0))
+    for row in out.values():
+        row["mean_us"] = row["total_us"] / max(row["count"], 1)
+    return out

@@ -100,6 +100,8 @@ from jax import lax
 
 from repro.core import isc, matching
 from repro.core.synpa import fused_pad, make_fused_step
+from repro.obs import trace as obs_trace
+from repro.obs.telemetry import OPEN_FIELDS, TelemetryLog
 from repro.online.arrivals import presample
 from repro.smt.metrics import OnlineStats
 from repro.smt.scan_engine import (
@@ -137,7 +139,7 @@ class _OpenCarry(NamedTuple):
 
 
 def _build_race(spec: ScanPolicy, params, capacity: int, n_quanta: int,
-                j_pad: int, admission: str):
+                j_pad: int, admission: str, telemetry: bool = False):
     """Compile-ready open-system run: one jitted function, one dispatch.
 
     Returns ``race(dt, job_pool, job_arrive, job_target, syn_cost,
@@ -146,6 +148,17 @@ def _build_race(spec: ScanPolicy, params, capacity: int, n_quanta: int,
     configuration (capacity, horizon, padded job count, admission rule,
     policy spec) is static; tables, job data and keys are traced, so one
     compiled race serves every run of the same configuration.
+
+    ``telemetry`` (static) appends a per-quantum ring output,
+    ``(n_quanta, len(OPEN_FIELDS))``: queue indices, admission/departure
+    counts, realized-slowdown stats (a barrier-isolated shadow of the
+    quantum's interference transform — see
+    ``scan_engine._slow_stats`` for why it is recomputed rather than
+    read off the original intermediates), predicted pair cost,
+    churn-repair dirty count, 2-opt rounds and GN solver diagnostics.
+    Telemetry rides the scan ``ys`` only — never the carry — and the off
+    path traces today's graph unchanged, so trajectories are
+    bit-identical either way.
     """
     c = capacity
     p = fused_pad(c)
@@ -158,6 +171,7 @@ def _build_race(spec: ScanPolicy, params, capacity: int, n_quanta: int,
         )
         fstep = make_fused_step(
             spec.method, spec.model, impl=spec.pair_impl, solver=spec.solver,
+            with_diag=telemetry,
         )
         ncat = spec.method.n_categories
     else:
@@ -263,6 +277,27 @@ def _build_race(spec: ScanPolicy, params, capacity: int, n_quanta: int,
         new_idx = jnp.where(trans, nidx, phase_idx)
         return counters, after, done, frac, new_idx, new_left
 
+    # ------------------------------------------------- telemetry shadow
+    def open_slow_stats(dt, aid, active, phase_idx, partner):
+        """``[mean, max]`` realized slowdown over the active contexts —
+        the open-system twin of ``scan_engine._slow_stats``, recomputed
+        behind an integer ``optimization_barrier`` so the quantum's own
+        float subgraph keeps its exact consumer set (f32 reductions are
+        not associative; an extra consumer changes XLA's fusion choices
+        and would cost the telemetry-on run its bit-identity)."""
+        aid_b, act_b, ph_b, pt_b = lax.optimization_barrier(
+            (aid, active, phase_idx, partner)
+        )
+        aid_safe = jnp.maximum(aid_b, 0)
+        ph = ph_b % dt.n_phases[aid_safe]
+        partner_m = jnp.where(act_b & act_b[pt_b], pt_b, idx)
+        comps = _corun_components_scan(dt, ph, partner_m, params,
+                                       aid=aid_safe)
+        solo_cpi = dt.comps[aid_safe, ph].sum(axis=-1)
+        ratio = jnp.where(act_b, comps.sum(axis=-1) / solo_cpi, 0.0)
+        na = jnp.maximum(jnp.sum(act_b.astype(jnp.float32)), 1.0)
+        return jnp.sum(ratio) / na, jnp.max(ratio)
+
     # ----------------------------------------------------------- scan body
     def body(dt, job_pool, job_arrive, job_target, syn_cost, syn_mean,
              syn_stacks, mkey, carry: _OpenCarry, q):
@@ -305,30 +340,70 @@ def _build_race(spec: ScanPolicy, params, capacity: int, n_quanta: int,
 
         # 3. Policy: pair the active population off the *previous*
         # quantum's counters (the host event-loop order).
+        pol_diag = None
         if spec.kind == "adjacent":
             partner = adjacent_partner(active, n_active)
             mpart = carry.mpart
+            if telemetry:
+                # No predictor/matcher in play: policy fields are zero.
+                pol_diag = jnp.zeros(7, jnp.float32)
         else:
             solve = carry.ran & (carry.partner_prev != idx)
             solo_m = carry.ran & (carry.partner_prev == idx)
             fresh = jnp.zeros(c, bool) if use_hints else took
             masks = jnp.stack([solve, solo_m, active, fresh])
-            cost, st = fstep(carry.counters, carry.partner_prev, st, masks,
-                             odd)
+            if telemetry:
+                cost, st, fdiag = fstep(carry.counters, carry.partner_prev,
+                                        st, masks, odd)
+            else:
+                cost, st = fstep(carry.counters, carry.partner_prev, st,
+                                 masks, odd)
             valid_p = jnp.zeros(p, bool).at[:c].set(active).at[c].set(odd)
             if spec.matcher == "full":
-                mpart = matching.device_pairs_partner(
+                matched = matching.device_pairs_partner(
                     cost, valid_p, eps=spec.refine_eps,
-                    max_rounds=full_budget,
+                    max_rounds=full_budget, with_rounds=telemetry,
                 )
+                if telemetry:
+                    mpart, rounds = matched
+                    # A full re-match rebuilds every pair: the whole
+                    # valid population counts as dirty.
+                    dirty = jnp.sum(valid_p.astype(jnp.float32))
+                else:
+                    mpart = matched
             else:
-                mpart = matching.device_repair_partner(
+                matched = matching.device_repair_partner(
                     cost, carry.mpart, valid_p, eps=spec.refine_eps,
-                    max_rounds=spec.refine_rounds,
+                    max_rounds=spec.refine_rounds, with_diag=telemetry,
                 )
+                if telemetry:
+                    mpart, rounds, nd = matched
+                    dirty = nd.astype(jnp.float32)
+                else:
+                    mpart = matched
+            if telemetry:
+                n_valid = jnp.maximum(
+                    jnp.sum(valid_p.astype(jnp.float32)), 1.0
+                )
+                # Mean predicted cost per committed pair (each pair's
+                # entry appears twice over n_valid/2 pairs; factors of 2
+                # cancel).
+                pred = jnp.sum(jnp.where(
+                    valid_p, cost[jnp.arange(p), mpart], 0.0
+                )) / n_valid
+                pol_diag = jnp.concatenate([
+                    jnp.stack([pred, dirty, rounds.astype(jnp.float32)]),
+                    fdiag,
+                ])
             partner = jnp.where(active, _machine_partner_of(mpart, c), idx)
 
         # 4. One membership-masked machine quantum + 5. departures.
+        if telemetry:
+            # Shadow slowdown stats use the pre-quantum phases/pairing —
+            # exactly what the quantum below is about to run.
+            slow_mean, slow_max = open_slow_stats(
+                dt, app_id, active, phase_idx, partner
+            )
         counters, after, done, frac, phase_idx, phase_left = open_quantum(
             dt, app_id, active, phase_idx, phase_left, progress, target,
             partner, mkey, q,
@@ -353,6 +428,25 @@ def _build_race(spec: ScanPolicy, params, capacity: int, n_quanta: int,
             admit_q=admit_q,
             finish_q=finish_q,
         )
+        if telemetry:
+            f32 = lambda v: v.astype(jnp.float32)  # noqa: E731
+            # ``done`` is derived from a float comparison, and *any*
+            # in-graph consumer of it (a sum, even a barrier) hands the
+            # quantum's float subgraph a different fusion and costs the
+            # run its bit-identity — so the departures column is left
+            # zero here and filled host-side from the fetched finish
+            # log (``run_device_sim``), where it is exactly
+            # ``bincount(floor(finish_q))``.
+            tvec = jnp.concatenate([
+                jnp.stack([
+                    f32(head), f32(tail), f32(queue_depth),
+                    f32(jnp.sum(took)), jnp.float32(0.0),
+                    f32(n_active), f32(n_solo),
+                    slow_mean, slow_max,
+                ]),
+                pol_diag,
+            ])
+            return new, (queue_depth, n_active, n_solo, tvec)
         return new, (queue_depth, n_active, n_solo)
 
     @jax.jit
@@ -379,6 +473,10 @@ def _build_race(spec: ScanPolicy, params, capacity: int, n_quanta: int,
         final, ys = lax.scan(
             fn, carry0, jnp.arange(n_quanta, dtype=jnp.int32)
         )
+        if telemetry:
+            queue_depth, n_active, n_solo, tlm = ys
+            return (final.admit_q, final.finish_q, queue_depth, n_active,
+                    n_solo, tlm)
         queue_depth, n_active, n_solo = ys
         return final.admit_q, final.finish_q, queue_depth, n_active, n_solo
 
@@ -397,17 +495,18 @@ _RACE_CACHE_MAX = 16
 
 
 def _race_key(spec: ScanPolicy, capacity: int, n_quanta: int, j_pad: int,
-              admission: str) -> Tuple:
+              admission: str, telemetry: bool = False) -> Tuple:
     return (
         spec.kind, id(spec.method), id(spec.model), spec.pair_impl,
         spec.solver, spec.matcher, spec.refine_eps, spec.refine_rounds,
-        spec.first_match, capacity, n_quanta, j_pad, admission,
+        spec.first_match, capacity, n_quanta, j_pad, admission, telemetry,
     )
 
 
 def run_device_sim(sim, n_quanta: int, repeats: int = 1,
                    transfer_guard: bool = False,
-                   warmup: bool = True) -> OnlineStats:
+                   warmup: bool = True,
+                   telemetry: bool = False) -> OnlineStats:
     """Run a :class:`repro.online.sim.ClusterSim` configuration on device.
 
     One ``lax.scan`` dispatch executes the whole run; ``repeats``
@@ -423,6 +522,12 @@ def run_device_sim(sim, n_quanta: int, repeats: int = 1,
     over back-to-back runs and sheds the compile round itself; the
     reported ``policy_s`` then includes compile on the first run of a
     configuration.
+
+    ``telemetry=True`` records the per-quantum device ring
+    (``repro.obs.telemetry.OPEN_FIELDS``) inside the same dispatch and
+    attaches it to the returned stats as ``OnlineStats.telemetry`` — the
+    trajectory stays bit-identical to a telemetry-off run and the
+    one-dispatch transfer-guard contract is unchanged.
     """
     machine = sim.machine
     spec: ScanPolicy = sim.policy
@@ -433,8 +538,9 @@ def run_device_sim(sim, n_quanta: int, repeats: int = 1,
     tables = sim.tables
 
     # Pre-sample the arrival stream (bit-identical to the host run).
-    rng_arr = np.random.default_rng(sim.seed + 4242)
-    arrive_q, pids = presample(sim.arrivals, n_quanta, rng_arr)
+    with obs_trace.span("device_sim.presample", quanta=n_quanta):
+        rng_arr = np.random.default_rng(sim.seed + 4242)
+        arrive_q, pids = presample(sim.arrivals, n_quanta, rng_arr)
     j = int(pids.size)
     # Jobs pad to the next power of two so re-runs of the same cell — and
     # nearby traffic levels — reuse the compiled race.
@@ -460,12 +566,15 @@ def run_device_sim(sim, n_quanta: int, repeats: int = 1,
         syn_mean = np.zeros(n_apps, np.float32)
         syn_stacks = np.zeros((n_apps, isc.N_CATS), np.float32)
 
-    key = _race_key(spec, c, n_quanta, j_pad, sim.admission)
+    key = _race_key(spec, c, n_quanta, j_pad, sim.admission, telemetry)
     ent = _RACE_CACHE.get(key)
     if ent is None:
-        ent = (spec.method, spec.model, _build_race(
-            spec, params, c, n_quanta, j_pad, sim.admission
-        ))
+        with obs_trace.span("device_sim.compile_build", capacity=c,
+                            quanta=n_quanta, telemetry=telemetry):
+            ent = (spec.method, spec.model, _build_race(
+                spec, params, c, n_quanta, j_pad, sim.admission,
+                telemetry=telemetry,
+            ))
         _RACE_CACHE[key] = ent
         while len(_RACE_CACHE) > _RACE_CACHE_MAX:
             _RACE_CACHE.popitem(last=False)
@@ -473,50 +582,67 @@ def run_device_sim(sim, n_quanta: int, repeats: int = 1,
         _RACE_CACHE.move_to_end(key)
     race = ent[2]
 
-    dt = jax.device_put(DeviceTables.build(tables))
-    args = (
-        dt,
-        jax.device_put(jnp.asarray(job_pool)),
-        jax.device_put(jnp.asarray(job_arrive)),
-        jax.device_put(jnp.asarray(job_target)),
-        jax.device_put(jnp.asarray(syn_cost)),
-        jax.device_put(jnp.asarray(syn_mean)),
-        jax.device_put(jnp.asarray(syn_stacks)),
-        jax.device_put(jax.random.PRNGKey(sim.seed)),
-    )
+    with obs_trace.span("device_sim.commit"):
+        dt = jax.device_put(DeviceTables.build(tables))
+        args = (
+            dt,
+            jax.device_put(jnp.asarray(job_pool)),
+            jax.device_put(jnp.asarray(job_arrive)),
+            jax.device_put(jnp.asarray(job_target)),
+            jax.device_put(jnp.asarray(syn_cost)),
+            jax.device_put(jnp.asarray(syn_mean)),
+            jax.device_put(jnp.asarray(syn_stacks)),
+            jax.device_put(jax.random.PRNGKey(sim.seed)),
+        )
     out = None
     if warmup:
-        out = jax.block_until_ready(race(*args))  # compile + first run
+        with obs_trace.span("device_sim.compile"):
+            out = jax.block_until_ready(race(*args))  # compile + first run
     walls = []
     for _ in range(max(int(repeats), 1)):
         t0 = time.perf_counter()
-        if transfer_guard:
-            with jax.transfer_guard("disallow"):
+        with obs_trace.span("device_sim.dispatch"):
+            if transfer_guard:
+                with jax.transfer_guard("disallow"):
+                    out = jax.block_until_ready(race(*args))
+            else:
                 out = jax.block_until_ready(race(*args))
-        else:
-            out = jax.block_until_ready(race(*args))
         walls.append(time.perf_counter() - t0)
     per_quantum = float(np.median(walls)) / max(n_quanta, 1)
 
-    admit, finish, queue_depth, n_active, n_solo = (
-        np.asarray(o) for o in out
-    )
+    with obs_trace.span("device_sim.fetch"):
+        fetched = tuple(np.asarray(o) for o in out)
+    if telemetry:
+        admit, finish, queue_depth, n_active, n_solo, tlm = fetched
+    else:
+        admit, finish, queue_depth, n_active, n_solo = fetched
     solo_s = (
         job_target[:j] / pool_rate[pids] * params.quantum_s
         if j else np.zeros(0)
     )
-    return OnlineStats.from_device_logs(
-        policy_name=spec.name or f"scan-{spec.kind}",
-        quantum_s=params.quantum_s,
-        quanta=n_quanta,
-        app_names=[pool[int(pid)].name for pid in pids],
-        arrive_q=arrive_q,
-        admit_q=admit[:j],
-        finish_q=finish[:j],
-        targets=job_target[:j],
-        solo_s=solo_s,
-        queue_depth=queue_depth,
-        active=n_active,
-        policy_s=np.full(n_quanta, per_quantum),
-        solo_quanta=n_solo,
-    )
+    name = spec.name or f"scan-{spec.kind}"
+    with obs_trace.span("device_sim.stats"):
+        stats = OnlineStats.from_device_logs(
+            policy_name=name,
+            quantum_s=params.quantum_s,
+            quanta=n_quanta,
+            app_names=[pool[int(pid)].name for pid in pids],
+            arrive_q=arrive_q,
+            admit_q=admit[:j],
+            finish_q=finish[:j],
+            targets=job_target[:j],
+            solo_s=solo_s,
+            queue_depth=queue_depth,
+            active=n_active,
+            policy_s=np.full(n_quanta, per_quantum),
+            solo_quanta=n_solo,
+        )
+    if telemetry:
+        # The in-graph ring leaves the departures column zero (counting
+        # ``done`` in-graph would perturb the quantum's float fusion and
+        # break telemetry-off bit-identity); fill it here from the
+        # reconstructed traffic timeline so the ring is complete.
+        tlm = np.array(tlm)
+        tlm[:, OPEN_FIELDS.index("departures")] = stats.departures
+        stats.telemetry = TelemetryLog(OPEN_FIELDS, tlm, policy=name)
+    return stats

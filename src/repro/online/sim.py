@@ -21,6 +21,7 @@ from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs import trace as obs_trace
 from repro.online.arrivals import ArrivalProcess
 from repro.smt.apps import AppProfile
 from repro.smt.machine import PhaseTables, SMTMachine, _VectorState
@@ -116,15 +117,18 @@ class ClusterSim:
 
     # ------------------------------------------------------------------ run
     def run(self, n_quanta: int, repeats: int = 1,
-            transfer_guard: bool = False) -> OnlineStats:
+            transfer_guard: bool = False,
+            telemetry: bool = False) -> OnlineStats:
         if self.engine == "scan":
             from repro.online.device_sim import run_device_sim
 
             return run_device_sim(self, n_quanta, repeats=repeats,
-                                  transfer_guard=transfer_guard)
-        assert repeats == 1 and not transfer_guard, (
-            "repeats/transfer_guard are scan-engine knobs; the host event "
-            "loop is impure (one pass per call) and always transfers"
+                                  transfer_guard=transfer_guard,
+                                  telemetry=telemetry)
+        assert repeats == 1 and not transfer_guard and not telemetry, (
+            "repeats/transfer_guard/telemetry are scan-engine knobs; the "
+            "host event loop is impure (one pass per call), always "
+            "transfers, and records its timelines directly"
         )
         machine, tables = self.machine, self.tables
         quantum_s = machine.params.quantum_s
@@ -150,11 +154,18 @@ class ClusterSim:
         active_hist = np.zeros(n_quanta)
         policy_s = np.zeros(n_quanta)
         solo_quanta = np.zeros(n_quanta)
+        # Per-quantum traffic timelines — the host side of the unified
+        # timeline API (:meth:`OnlineStats.timelines`); the device engine
+        # reconstructs the same three series from its flat job logs.
+        arrivals_t = np.zeros(n_quanta)
+        admissions_t = np.zeros(n_quanta)
+        departures_t = np.zeros(n_quanta)
 
         for q in range(n_quanta):
             # 1. Arrivals enter the queue (per-pool targets precomputed in
             # __init__ — the record build is O(1) per job).
             for pid in self.arrivals.draw(q, rng_arr):
+                arrivals_t[q] += 1
                 job_id = len(records)
                 pid = int(pid)
                 rec = JobRecord(
@@ -213,6 +224,7 @@ class ClusterSim:
                     for rec in recs:
                         rec.admit_q = q
                     arrived_slots = [int(s) for s in slots]
+                admissions_t[q] = k
 
             (active,) = np.nonzero(app_id >= 0)
             queue_depth[q] = len(queue)
@@ -229,10 +241,11 @@ class ClusterSim:
             # any, so hint-oblivious policies (and subclasses predating the
             # keyword) keep their signature under FIFO admission.
             kw = {"hints": hints} if hints else {}
-            pairs, solo = self.policy.pair(
-                q, active, counters, ran, arrived_slots, pending_departed,
-                prev_pairs, prev_solo, **kw,
-            )
+            with obs_trace.span("sim.policy", q=q, n_active=int(active.size)):
+                pairs, solo = self.policy.pair(
+                    q, active, counters, ran, arrived_slots,
+                    pending_departed, prev_pairs, prev_solo, **kw,
+                )
             policy_s[q] = time.perf_counter() - t0
             pending_departed = []
             scheduled = sorted(
@@ -246,18 +259,20 @@ class ClusterSim:
             solo_quanta[q] = 0 if solo is None else 1
 
             # 4. One membership-masked machine quantum.
-            counters, finished = machine.open_quantum(
-                tables, app_id, st,
-                np.asarray(pairs, np.int64).reshape(-1, 2),
-                np.asarray([] if solo is None else [solo], np.int64),
-                rng, q,
-            )
+            with obs_trace.span("sim.quantum", q=q):
+                counters, finished = machine.open_quantum(
+                    tables, app_id, st,
+                    np.asarray(pairs, np.int64).reshape(-1, 2),
+                    np.asarray([] if solo is None else [solo], np.int64),
+                    rng, q,
+                )
             ran[:] = False
             ran[np.asarray(scheduled, np.int64)] = True
 
             # 5. Departures free their contexts at quantum end.  Record
             # updates stay per departed job; the slot frees are batched.
             (departed,) = np.nonzero(finished)
+            departures_t[q] = departed.size
             for s in departed:
                 rec = records[job_at[s]]
                 rec.finish_q = float(st.first_finish_q[s])
@@ -291,4 +306,7 @@ class ClusterSim:
             active=active_hist,
             policy_s=policy_s,
             solo_quanta=solo_quanta,
+            arrivals=arrivals_t,
+            admissions=admissions_t,
+            departures=departures_t,
         )

@@ -39,6 +39,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs import trace as obs_trace
 from repro.smt.apps import AppProfile, Phase
 
 Pair = Tuple[int, int]
@@ -840,7 +841,8 @@ class SMTMachine:
             pairs: List[Pair] = []
             for q in range(n_quanta):
                 t0 = time.perf_counter()
-                pairs = policy.schedule(q, samples, pairs)
+                with obs_trace.span("machine.schedule", q=q):
+                    pairs = policy.schedule(q, samples, pairs)
                 t1 = time.perf_counter()
                 sched_s += t1 - t0
                 sched_each.append(t1 - t0)
@@ -881,9 +883,10 @@ class SMTMachine:
                     ).sum(axis=-1)
                 solo_cpi = tables.comps[idx, ph].sum(axis=-1)
                 slowdown_sum += float(np.mean(smt / solo_cpi))
-                samples = self._vector_quantum(tables, st, pa, rng, q,
-                                               solo=solo)
-                self._advance_phases_vector(tables, st, rng)
+                with obs_trace.span("machine.quantum", q=q):
+                    samples = self._vector_quantum(tables, st, pa, rng, q,
+                                                   solo=solo)
+                    self._advance_phases_vector(tables, st, rng)
                 machine_s += time.perf_counter() - t1
         finally:
             self._vector_ctx = None
@@ -994,6 +997,11 @@ class ThroughputResult:
     #: benchmark horizon, the median does not see it.
     sched_s_per_quantum_median: float
     machine_s_per_quantum: float    # simulator wall-time per quantum
+    #: Per-quantum device telemetry ring (``repro.obs.telemetry
+    #: .TelemetryLog``) when the run was launched with ``telemetry=True``;
+    #: None otherwise.  A default keeps every existing construction site
+    #: valid.
+    telemetry: Optional[object] = None
 
     @property
     def ipc_geomean(self) -> float:

@@ -146,6 +146,16 @@ class OnlineStats:
     active: np.ndarray              # (Q,) jobs holding a context
     policy_s: np.ndarray            # (Q,) policy wall-time per quantum
     solo_quanta: np.ndarray         # (Q,) apps running with an idle context
+    #: Per-quantum traffic timelines.  Host runs count these in the event
+    #: loop; device runs reconstruct them from the flat job logs
+    #: (:meth:`from_device_logs`), so both engines expose the same
+    #: timeline API.  None on legacy construction sites.
+    arrivals: Optional[np.ndarray] = None     # (Q,) jobs arrived
+    admissions: Optional[np.ndarray] = None   # (Q,) jobs admitted
+    departures: Optional[np.ndarray] = None   # (Q,) jobs departed
+    #: Device telemetry ring (``repro.obs.telemetry.TelemetryLog``) when
+    #: the run was launched with ``telemetry=True``; None otherwise.
+    telemetry: Optional[object] = None
 
     # ------------------------------------------------------------- scalars
     @property
@@ -197,6 +207,29 @@ class OnlineStats:
         return float(np.median(self.policy_s) * 1e6) if self.policy_s.size \
             else 0.0
 
+    def timelines(self) -> Dict[str, np.ndarray]:
+        """Named per-quantum series of the run — the unified timeline API
+        (``repro.obs`` reports plot these; both engines populate them).
+
+        Always contains ``queue_depth``/``active``/``solo_quanta``; the
+        traffic counters appear when the run recorded them, and every
+        device-telemetry field appears under a ``tlm_`` prefix when the
+        run was launched with ``telemetry=True``.
+        """
+        out: Dict[str, np.ndarray] = {
+            "queue_depth": np.asarray(self.queue_depth),
+            "active": np.asarray(self.active),
+            "solo_quanta": np.asarray(self.solo_quanta),
+        }
+        for name in ("arrivals", "admissions", "departures"):
+            v = getattr(self, name)
+            if v is not None:
+                out[name] = np.asarray(v)
+        if self.telemetry is not None:
+            for f in self.telemetry.fields:
+                out[f"tlm_{f}"] = self.telemetry.timeline(f)
+        return out
+
     # ------------------------------------------------------- device logs
     @classmethod
     def from_device_logs(
@@ -243,6 +276,23 @@ class OnlineStats:
             (r for r in records if math.isfinite(r.finish_q)),
             key=lambda r: (r.finish_q, r.job_id),
         )
+        # Traffic timelines, reconstructed from the flat logs (previously
+        # dropped here): one bincount per series.  A departure at
+        # fractional quantum f frees its context at the end of quantum
+        # floor(f) — the same convention the in-graph scatter uses.
+        arrive = np.asarray(arrive_q, np.int64)
+        admit = np.asarray(admit_q, np.int64)
+        finish = np.asarray(finish_q, np.float64)
+        arrivals = np.bincount(
+            np.clip(arrive[arrive >= 0], 0, quanta - 1), minlength=quanta
+        ).astype(np.float64) if quanta else np.zeros(0)
+        admissions = np.bincount(
+            np.clip(admit[admit >= 0], 0, quanta - 1), minlength=quanta
+        ).astype(np.float64) if quanta else np.zeros(0)
+        fin = np.floor(finish[np.isfinite(finish)]).astype(np.int64)
+        departures = np.bincount(
+            np.clip(fin, 0, quanta - 1), minlength=quanta
+        ).astype(np.float64) if quanta else np.zeros(0)
         return cls(
             policy_name=policy_name,
             quantum_s=quantum_s,
@@ -254,6 +304,9 @@ class OnlineStats:
             active=np.asarray(active, np.float64),
             policy_s=np.asarray(policy_s, np.float64),
             solo_quanta=np.asarray(solo_quanta, np.float64),
+            arrivals=arrivals,
+            admissions=admissions,
+            departures=departures,
         )
 
     def summary(self) -> Dict[str, float]:

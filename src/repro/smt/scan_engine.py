@@ -83,6 +83,8 @@ from jax import lax
 
 from repro.core import isc, matching
 from repro.core.synpa import fused_pad, make_fused_step
+from repro.obs import trace as obs_trace
+from repro.obs.telemetry import CLOSED_FIELDS, TelemetryLog
 from repro.smt.machine import (
     MachineParams,
     PhaseTables,
@@ -321,6 +323,39 @@ def _make_machine_quantum(dt: DeviceTables, params: MachineParams):
     return quantum
 
 
+def _slow_stats(dt: DeviceTables, params: MachineParams, phase_idx,
+                partner, aid=None):
+    """Telemetry shadow of the quantum's true-slowdown computation:
+    ``[mean, max]`` of the per-slot slowdown ratio, ``(2,)`` f32.
+
+    Recomputed from scratch behind an ``optimization_barrier`` on the
+    *integer* inputs (phase indices + pairing) rather than read off the
+    quantum's own intermediates: giving the quantum's ``ratio`` (or
+    anything upstream of it) an extra consumer changes which fusions XLA
+    picks for the original reductions, and f32 reductions are not
+    associative — the telemetry-on run would drift from the telemetry-off
+    run by an ulp per quantum.  The barrier blocks CSE from merging the
+    shadow with the real subgraph (their inputs differ formally), and
+    barriering integer arrays cannot perturb float codegen, so the
+    trajectory stays bit-identical.  Cost: one extra interference
+    transform per quantum — a few N x 4 flops, noise next to the fused
+    policy step.
+    """
+    n = phase_idx.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    if aid is None:
+        ph_b, pb = lax.optimization_barrier((phase_idx, partner))
+        aid_b = idx
+    else:
+        ph_b, pb, aid_b = lax.optimization_barrier((phase_idx, partner, aid))
+    ph = ph_b % dt.n_phases
+    comps = _corun_components_scan(dt, ph, pb, params, aid=aid_b)
+    cpi = comps.sum(axis=-1)
+    solo_cpi = dt.comps[aid_b, ph].sum(axis=-1)
+    ratio = cpi / solo_cpi
+    return jnp.stack([jnp.mean(ratio), jnp.max(ratio)])
+
+
 def _machine_partner_of(mpart, n):
     """Matcher-space partner (P,) -> machine partner (N,): idle/pad -> self."""
     idx = jnp.arange(n, dtype=jnp.int32)
@@ -329,7 +364,7 @@ def _machine_partner_of(mpart, n):
 
 
 def _make_policy_step(spec: ScanPolicy, n: int, p_pad: int,
-                      valid_p: jnp.ndarray):
+                      valid_p: jnp.ndarray, telemetry: bool = False):
     """Closure: (q, counters, mpart, st, pkey, first=False) -> (mpart', st').
 
     ``first`` is a *static* Python flag marking the first quantum with
@@ -338,12 +373,21 @@ def _make_policy_step(spec: ScanPolicy, n: int, p_pad: int,
     hoists the first policy call out of the ``lax.scan`` — so the seed
     compiles into exactly one execution per race instead of riding as a
     per-quantum ``lax.cond`` branch.
+
+    ``telemetry`` (static) makes the step return a third output: the
+    policy half of the per-quantum ring — ``CLOSED_FIELDS[2:]`` as a
+    ``(6,)`` f32 vector (predicted pair cost, 2-opt rounds, GN solver
+    diagnostics).  The kinds without a solver/matcher report zeros.  The
+    off path builds today's graph exactly.
     """
     idx = jnp.arange(n, dtype=jnp.int32)
     odd = n % 2 == 1
+    pol_zeros = jnp.zeros(6, jnp.float32)
 
     if spec.kind == "static":
         def step(q, counters, mpart, st, pkey, first=False):
+            if telemetry:
+                return mpart, st, pol_zeros
             return mpart, st
         return step
 
@@ -365,7 +409,10 @@ def _make_policy_step(spec: ScanPolicy, n: int, p_pad: int,
                 mpart.at[px].set(y).at[y].set(px)
                 .at[py].set(x).at[x].set(py)
             )
-            return jnp.where(do, swapped, mpart), st
+            out = jnp.where(do, swapped, mpart)
+            if telemetry:
+                return out, st, pol_zeros
+            return out, st
         return step
 
     assert spec.kind == "synpa", spec.kind
@@ -374,6 +421,7 @@ def _make_policy_step(spec: ScanPolicy, n: int, p_pad: int,
     )
     fstep = make_fused_step(
         spec.method, spec.model, impl=spec.pair_impl, solver=spec.solver,
+        with_diag=telemetry,
     )
     full_budget = 4 * (p_pad // 2)
     first_mode = spec.first_match
@@ -382,6 +430,8 @@ def _make_policy_step(spec: ScanPolicy, n: int, p_pad: int,
         # than the sort seed at every size — see the ScanPolicy docstring.
         first_mode = "seed"
     assert first_mode in ("seed", "carry"), spec.first_match
+    p_idx = jnp.arange(p_pad, dtype=jnp.int32)
+    n_valid = jnp.maximum(jnp.sum(valid_p.astype(jnp.float32)), 1.0)
 
     def step(q, counters, mpart, st, pkey, first=False):
         partner = _machine_partner_of(mpart, n)
@@ -390,25 +440,42 @@ def _make_policy_step(spec: ScanPolicy, n: int, p_pad: int,
         masks = jnp.stack(
             [solve, solo, jnp.ones(n, bool), jnp.zeros(n, bool)]
         )
-        cost, st = fstep(counters, partner, st, masks, jnp.asarray(odd))
+        if telemetry:
+            cost, st, fdiag = fstep(counters, partner, st, masks,
+                                    jnp.asarray(odd))
+        else:
+            cost, st = fstep(counters, partner, st, masks, jnp.asarray(odd))
         if spec.matcher == "refine" and first and first_mode == "carry":
             # Once-per-race full re-match, seeded by the carried pairing:
             # the full 2-opt budget without the sort-seed construction.
-            mpart = matching.device_two_opt_partner(
+            matched = matching.device_two_opt_partner(
                 cost, mpart, valid_p, eps=spec.refine_eps,
-                max_rounds=full_budget,
+                max_rounds=full_budget, with_rounds=telemetry,
             )
         elif spec.matcher == "full" or (spec.matcher == "refine" and first):
-            mpart = matching.device_pairs_partner(
-                cost, valid_p, eps=spec.refine_eps, max_rounds=full_budget
+            matched = matching.device_pairs_partner(
+                cost, valid_p, eps=spec.refine_eps, max_rounds=full_budget,
+                with_rounds=telemetry,
             )
         else:
             assert spec.matcher == "refine", spec.matcher
-            mpart = matching.device_two_opt_partner(
+            matched = matching.device_two_opt_partner(
                 cost, mpart, valid_p, eps=spec.refine_eps,
-                max_rounds=spec.refine_rounds,
+                max_rounds=spec.refine_rounds, with_rounds=telemetry,
             )
-        return mpart, st
+        if telemetry:
+            mpart, rounds = matched
+            # Mean predicted cost per committed pair: each pair's entry
+            # appears twice (i->j and j->i) over n_valid/2 pairs, so the
+            # two factors of 2 cancel.
+            pred = jnp.sum(
+                jnp.where(valid_p, cost[p_idx, mpart], 0.0)
+            ) / n_valid
+            pol = jnp.concatenate(
+                [jnp.stack([pred, rounds.astype(jnp.float32)]), fdiag]
+            )
+            return mpart, st, pol
+        return matched, st
 
     return step
 
@@ -442,6 +509,7 @@ def build_race(
     params: MachineParams,
     policies: Sequence[ScanPolicy],
     n_quanta: int,
+    telemetry: bool = False,
 ):
     """Compile-ready K-policy race: one jitted function, one dispatch.
 
@@ -450,6 +518,14 @@ def build_race(
     The K policy bodies are unrolled inside the jit (K is small and
     static); each runs quantum 0 with its initial pairing and then a
     ``lax.scan`` over quanta 1..Q-1 of policy step + machine quantum.
+
+    ``telemetry`` (static) appends a fourth output: the per-quantum
+    telemetry ring, ``(K, n_quanta, len(CLOSED_FIELDS))`` — machine and
+    policy counters recorded in-graph every quantum, stacked as scan
+    ``ys`` (the hoisted quanta 0/1 contribute inline-built rows) and
+    fetched with the rest of the results in the same single dispatch.
+    Telemetry never feeds the carry, and the off path traces today's
+    graph unchanged, so trajectories are bit-identical either way.
     """
     n = tables.n_apps
     p_pad = fused_pad(n)
@@ -458,7 +534,8 @@ def build_race(
     if n % 2 == 1:
         valid_np[n] = True
     valid_p = jnp.asarray(valid_np)
-    steps = [_make_policy_step(s, n, p_pad, valid_p) for s in policies]
+    steps = [_make_policy_step(s, n, p_pad, valid_p, telemetry=telemetry)
+             for s in policies]
 
     def run_one(dt, quantum, policy_step, mpart0, st0, mkey, pkey):
         state = _MachineState(
@@ -469,35 +546,72 @@ def build_race(
         )
         # Quantum 0: the initial random pairing, no counters yet.
         partner0 = _machine_partner_of(mpart0, n)
+        if telemetry:
+            # No policy ran at quantum 0: policy fields are zero.
+            tvecs = [jnp.concatenate(
+                [_slow_stats(dt, params, state.phase_idx, partner0),
+                 jnp.zeros(6, jnp.float32)]
+            )]
         counters, state, slow_sum = quantum(state, partner0, mkey, 0)
         mpart, st = mpart0, st0
         if n_quanta >= 2:
             # Quantum 1 is hoisted out of the scan: the synpa refine tier
             # runs its (once-per-race) full seed + 2-opt re-match here
             # as straight-line code rather than a per-quantum cond branch.
-            mpart, st = policy_step(1, counters, mpart, st, pkey,
-                                    first=True)
-            counters, state, slow1 = quantum(
-                state, _machine_partner_of(mpart, n), mkey, 1
-            )
+            if telemetry:
+                mpart, st, pol1 = policy_step(1, counters, mpart, st, pkey,
+                                              first=True)
+                partner = _machine_partner_of(mpart, n)
+                tvecs.append(jnp.concatenate(
+                    [_slow_stats(dt, params, state.phase_idx, partner),
+                     pol1]
+                ))
+                counters, state, slow1 = quantum(state, partner, mkey, 1)
+            else:
+                mpart, st = policy_step(1, counters, mpart, st, pkey,
+                                        first=True)
+                counters, state, slow1 = quantum(
+                    state, _machine_partner_of(mpart, n), mkey, 1
+                )
             slow_sum = slow_sum + slow1
 
         def body(carry, q):
             state, counters, mpart, st = carry
+            if telemetry:
+                mpart, st, pol = policy_step(q, counters, mpart, st, pkey)
+                partner = _machine_partner_of(mpart, n)
+                tvec = jnp.concatenate(
+                    [_slow_stats(dt, params, state.phase_idx, partner),
+                     pol]
+                )
+                counters, state, slow = quantum(state, partner, mkey, q)
+                return (state, counters, mpart, st), (slow, tvec)
             mpart, st = policy_step(q, counters, mpart, st, pkey)
             partner = _machine_partner_of(mpart, n)
             counters, state, slow = quantum(state, partner, mkey, q)
             return (state, counters, mpart, st), slow
 
-        (state, _c, _m, _st), slows = lax.scan(
+        (state, _c, _m, _st), ys = lax.scan(
             body, (state, counters, mpart, st),
             jnp.arange(2, n_quanta),
         )
+        if telemetry:
+            slows, tscan = ys
+            tlm = jnp.concatenate([jnp.stack(tvecs), tscan], axis=0)
+            return (
+                state.total_retired,
+                state.total_cycles,
+                slow_sum + jnp.sum(slows),
+                tlm,
+            )
+        slows = ys
         return (
             state.total_retired,
             state.total_cycles,
             slow_sum + jnp.sum(slows),
         )
+
+    n_out = 4 if telemetry else 3
 
     @jax.jit
     def race(dt: DeviceTables, init_mpart, init_st, mkey, pkey):
@@ -507,7 +621,7 @@ def build_race(
                     jax.random.fold_in(pkey, k))
             for k, step in enumerate(steps)
         ]
-        return tuple(jnp.stack([o[i] for o in outs]) for i in range(3))
+        return tuple(jnp.stack([o[i] for o in outs]) for i in range(n_out))
 
     return race
 
@@ -521,6 +635,7 @@ def run_quanta_scan(
     tables: Optional[PhaseTables] = None,
     repeats: int = 1,
     transfer_guard: bool = False,
+    telemetry: bool = False,
 ) -> Dict[str, ThroughputResult]:
     """The scan twin of ``SMTMachine.run_quanta_multi`` — one dispatch.
 
@@ -530,13 +645,23 @@ def run_quanta_scan(
     ``jax.transfer_guard("disallow")``, proving the loop makes no
     per-quantum host transfers (inputs are device-committed up front,
     results are fetched after the guard exits).
+
+    ``telemetry=True`` records the per-quantum device ring
+    (``repro.obs.telemetry.CLOSED_FIELDS``) inside the same dispatch and
+    attaches it to each result as a ``TelemetryLog`` — trajectories stay
+    bit-identical to a telemetry-off run and the one-dispatch
+    transfer-guard contract is unchanged (the ring travels with the
+    existing result fetch).
     """
     params = machine.params
     tables = tables if tables is not None else PhaseTables.build(profiles)
     n = tables.n_apps
     p_pad = fused_pad(n)
     specs = list(policies.values())
-    race = build_race(tables, params, specs, n_quanta)
+    with obs_trace.span("scan.compile_build", n=n, quanta=n_quanta,
+                        telemetry=telemetry):
+        race = build_race(tables, params, specs, n_quanta,
+                          telemetry=telemetry)
 
     init_mpart = np.stack(
         [
@@ -546,41 +671,54 @@ def run_quanta_scan(
     )
     init_st = np.stack([_uniform_stacks(s, n) for s in specs])
 
-    dt = jax.device_put(DeviceTables.build(tables))
-    args = (
-        dt,
-        jax.device_put(jnp.asarray(init_mpart, jnp.int32)),
-        jax.device_put(jnp.asarray(init_st, jnp.float32)),
-        jax.device_put(jax.random.PRNGKey(seed)),
-        jax.device_put(jax.random.PRNGKey(seed + 7919)),
-    )
+    with obs_trace.span("scan.commit"):
+        dt = jax.device_put(DeviceTables.build(tables))
+        args = (
+            dt,
+            jax.device_put(jnp.asarray(init_mpart, jnp.int32)),
+            jax.device_put(jnp.asarray(init_st, jnp.float32)),
+            jax.device_put(jax.random.PRNGKey(seed)),
+            jax.device_put(jax.random.PRNGKey(seed + 7919)),
+        )
 
-    out = jax.block_until_ready(race(*args))  # compile + first run
+    with obs_trace.span("scan.compile"):
+        out = jax.block_until_ready(race(*args))  # compile + first run
     walls = []
     for _ in range(max(int(repeats), 1)):
         t0 = time.perf_counter()
-        if transfer_guard:
-            with jax.transfer_guard("disallow"):
+        with obs_trace.span("scan.dispatch"):
+            if transfer_guard:
+                with jax.transfer_guard("disallow"):
+                    out = jax.block_until_ready(race(*args))
+            else:
                 out = jax.block_until_ready(race(*args))
-        else:
-            out = jax.block_until_ready(race(*args))
         walls.append(time.perf_counter() - t0)
     per_quantum = float(np.median(walls)) / max(n_quanta, 1)
 
-    retired, cycles, slow_sum = (np.asarray(o) for o in out)
+    with obs_trace.span("scan.fetch"):
+        fetched = tuple(np.asarray(o) for o in out)
+    if telemetry:
+        retired, cycles, slow_sum, tlm = fetched
+    else:
+        retired, cycles, slow_sum = fetched
     results: Dict[str, ThroughputResult] = {}
-    for k, name in enumerate(policies):
-        ipc = retired[k] / np.maximum(cycles[k], 1.0)
-        results[name] = ThroughputResult(
-            n_apps=n,
-            quanta=n_quanta,
-            ipc=ipc,
-            total_retired=float(retired[k].sum()),
-            mean_true_slowdown=float(slow_sum[k]) / max(n_quanta, 1),
-            sched_s_per_quantum=0.0,
-            sched_s_per_quantum_median=0.0,
-            machine_s_per_quantum=per_quantum,
-        )
+    with obs_trace.span("scan.stats"):
+        for k, name in enumerate(policies):
+            ipc = retired[k] / np.maximum(cycles[k], 1.0)
+            results[name] = ThroughputResult(
+                n_apps=n,
+                quanta=n_quanta,
+                ipc=ipc,
+                total_retired=float(retired[k].sum()),
+                mean_true_slowdown=float(slow_sum[k]) / max(n_quanta, 1),
+                sched_s_per_quantum=0.0,
+                sched_s_per_quantum_median=0.0,
+                machine_s_per_quantum=per_quantum,
+                telemetry=(
+                    TelemetryLog(CLOSED_FIELDS, tlm[k], policy=name)
+                    if telemetry else None
+                ),
+            )
     return results
 
 

@@ -1,0 +1,442 @@
+"""``repro.obs`` tests — telemetry rings, span tracing, run exports.
+
+The load-bearing contract (ISSUE 7): telemetry is a pure *observer*.
+
+* **Bit-identity** — with ``telemetry=False`` both scan engines compile
+  today's exact graph; with ``telemetry=True`` the trajectories (IPC,
+  retired, slowdown aggregates, job logs) stay bit-identical at f32,
+  because the ring rides the scan ``ys`` only and every float-derived
+  counter is recomputed from scratch behind an integer
+  ``optimization_barrier`` (see ``scan_engine._slow_stats``) instead of
+  adding consumers to the quantum's own float subgraph — f32 reductions
+  are not associative, so an extra consumer changes XLA's fusion picks
+  and drifts the run by ulps.
+* **One dispatch** — the whole-run transfer-guard contract holds with
+  the ring enabled.
+* **Bounded cost** — the recorded telemetry overhead at N=256 stays
+  within ``TELEMETRY_BUDGET_X`` (1.10x) of the plain scan race.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import isc, matching, regression
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.telemetry import CLOSED_FIELDS, OPEN_FIELDS, TelemetryLog
+from repro.online import AdjacentOnline, ClusterSim, PoissonArrivals
+from repro.smt import machine as mc
+from repro.smt import workloads
+from repro.smt.apps import pool_profiles
+from repro.smt.scan_engine import ScanPolicy
+
+
+def _toy_model(n_categories=4):
+    coeffs = np.zeros((4, 4), np.float32)
+    coeffs[isc.CAT_DI] = [0.007, 0.91, 0.004, 0.03]
+    coeffs[isc.CAT_FE] = [0.02, 1.41, 0.0, 0.0]
+    coeffs[isc.CAT_BE] = [0.0, 0.24, 1.07, 0.5]
+    coeffs[isc.CAT_HW] = [0.03, 1.22, 0.33, 0.0]
+    if n_categories == 3:
+        coeffs[isc.CAT_HW] = 0.0
+    return regression.CategoryModel(
+        coeffs=jnp.asarray(coeffs), mse=jnp.zeros(4),
+        n_categories=n_categories,
+    )
+
+
+@pytest.fixture(scope="module")
+def machine():
+    return mc.SMTMachine(mc.MachineParams(), seed=0)
+
+
+@pytest.fixture(scope="module")
+def pool():
+    return pool_profiles()
+
+
+@pytest.fixture(autouse=True)
+def _trace_off():
+    """Spans must never leak across tests."""
+    yield
+    obs_trace.disable()
+    obs_trace.clear()
+
+
+# ----------------------------------------------------------- span tracing
+class TestTrace:
+    def test_disabled_is_a_noop(self):
+        obs_trace.clear()
+        with obs_trace.span("nothing", q=1):
+            pass
+        assert obs_trace.events() == []
+
+    def test_spans_record_chrome_events(self, tmp_path):
+        obs_trace.clear()
+        obs_trace.enable()
+        with obs_trace.span("outer", n=4):
+            with obs_trace.span("inner"):
+                pass
+        obs_trace.disable()
+        ev = obs_trace.events()
+        assert [e["name"] for e in ev] == ["inner", "outer"]
+        for e in ev:
+            assert e["ph"] == "X"
+            assert e["ts"] >= 0 and e["dur"] >= 0
+        assert ev[1]["args"] == {"n": 4}
+        # chrome trace container round-trips through json
+        path = tmp_path / "trace.json"
+        obs_trace.save(str(path))
+        payload = json.loads(path.read_text())
+        assert [e["name"] for e in payload["traceEvents"]] == \
+            ["inner", "outer"]
+
+    def test_breakdown_groups_by_name(self):
+        obs_trace.clear()
+        obs_trace.enable()
+        for _ in range(3):
+            with obs_trace.span("step"):
+                pass
+        obs_trace.disable()
+        rows = obs_trace.breakdown()
+        assert set(rows) == {"step"}
+        assert rows["step"]["count"] == 3
+        assert rows["step"]["total_us"] >= 0
+
+
+# ------------------------------------------------------- telemetry ring API
+class TestTelemetryLog:
+    def test_roundtrip_and_views(self):
+        data = np.arange(12, dtype=np.float64).reshape(3, 4)
+        log = TelemetryLog(("a", "b", "c", "d"), data, policy="p")
+        assert log.quanta == 3
+        np.testing.assert_array_equal(log.timeline("b"), [1.0, 5.0, 9.0])
+        s = log.summary()
+        assert s["tlm_b_mean"] == 5.0 and s["tlm_d_max"] == 11.0
+        clone = TelemetryLog.from_dict(log.to_dict())
+        assert clone.fields == log.fields and clone.policy == "p"
+        np.testing.assert_array_equal(clone.data, log.data)
+
+    def test_field_catalogues_are_schemas(self):
+        # the engines build vectors in exactly this order; a reorder is a
+        # schema change and must bump OBS_SCHEMA_VERSION
+        assert CLOSED_FIELDS.index("real_slowdown_mean") == 0
+        assert len(CLOSED_FIELDS) == 8
+        assert len(OPEN_FIELDS) == 16
+        assert set(CLOSED_FIELDS) < set(OPEN_FIELDS)
+
+
+# -------------------------------------------------------- metrics registry
+class TestMetricsExport:
+    def test_export_roundtrip(self, tmp_path):
+        run = obs_metrics.export_run(
+            "unit", {"m": 1.5}, engine="scan",
+            timelines={"t": [1, 2, 3]},
+            telemetry={"arm": TelemetryLog(("x",), np.ones((2, 1)))},
+            spans=[{"name": "s", "ph": "X", "ts": 0, "dur": 1}],
+            meta={"k": "v"},
+        )
+        assert run["obs_schema_version"] == obs_metrics.OBS_SCHEMA_VERSION
+        assert "rng_stream_version" in run
+        assert run["scan_rng_stream_version"] is not None
+        path = str(tmp_path / "run.json")
+        obs_metrics.save_run(path, run)
+        back = obs_metrics.load_run(path)
+        assert back["metrics"] == {"m": 1.5}
+        assert back["timelines"]["t"] == [1.0, 2.0, 3.0]
+        assert TelemetryLog.from_dict(back["telemetry"]["arm"]).quanta == 2
+
+    def test_stale_stamps_refused(self, tmp_path):
+        run = obs_metrics.export_run("unit", {"m": 1.0}, engine="scan")
+        for key in ("obs_schema_version", "rng_stream_version",
+                    "scan_rng_stream_version"):
+            bad = dict(run)
+            bad[key] = -1
+            path = str(tmp_path / f"bad_{key}.json")
+            obs_metrics.save_run(path, bad)
+            assert obs_metrics.load_run(path) is None, key
+
+    def test_not_an_export_refused(self, tmp_path):
+        path = str(tmp_path / "legacy.json")
+        with open(path, "w") as f:
+            json.dump({"stream_median_us": 1.0}, f)
+        assert obs_metrics.load_run(path) is None
+        assert obs_metrics.load_run(str(tmp_path / "missing.json")) is None
+
+    def test_benchmarks_common_delegates_stamp(self):
+        from benchmarks.common import version_stamp as bench_stamp
+
+        assert bench_stamp("scan") == obs_metrics.version_stamp("scan")
+        assert bench_stamp() == obs_metrics.version_stamp()
+
+
+# ------------------------------------------- closed engine: ring + identity
+def _closed_results(machine, profs, telemetry, n_quanta=8):
+    model = _toy_model()
+    policies = {
+        "synpa": ScanPolicy(kind="synpa", method=isc.SYNPA4_R_FEBE,
+                            model=model),
+        "static": ScanPolicy(kind="static"),
+    }
+    return machine.run_quanta_multi(
+        profs, policies, n_quanta=n_quanta, seed=3, engine="scan",
+        telemetry=telemetry,
+    )
+
+
+def _assert_closed_identical(off, on):
+    for name in off:
+        a, b = off[name], on[name]
+        np.testing.assert_array_equal(a.ipc, b.ipc, err_msg=name)
+        assert a.total_retired == b.total_retired, name
+        assert a.mean_true_slowdown == b.mean_true_slowdown, name
+
+
+class TestClosedTelemetry:
+    def test_bit_identity_and_ring_shape_odd_n(self, machine):
+        profs = workloads.scaled_workload(18, seed=18)[:-1]  # N=17, odd
+        off = _closed_results(machine, profs, telemetry=False)
+        on = _closed_results(machine, profs, telemetry=True)
+        _assert_closed_identical(off, on)
+        for name, res in on.items():
+            log = res.telemetry
+            assert log is not None and log.data.shape == (
+                8, len(CLOSED_FIELDS)), name
+            # ground-truth slowdown of a real pairing is >= 1 per slot
+            assert (log.timeline("real_slowdown_mean")[1:] >= 1.0).all()
+        for name, res in off.items():
+            assert res.telemetry is None, name
+        # policy fields are zero where no policy ran (quantum 0) and for
+        # the matcher-free static baseline
+        syn = on["synpa"].telemetry
+        assert syn.timeline("pred_cost_mean")[0] == 0.0
+        assert syn.timeline("pred_cost_mean")[1:].min() > 0.0
+        assert on["static"].telemetry.timeline("pred_cost_mean").max() == 0.0
+        assert syn.timeline("gn_iters_max").max() >= 1.0
+
+    @pytest.mark.slow
+    def test_bit_identity_n256(self, machine):
+        profs = workloads.scaled_workload(256, seed=256)
+        policies = {"synpa": ScanPolicy(kind="synpa",
+                                        method=isc.SYNPA4_R_FEBE,
+                                        model=_toy_model())}
+        off = machine.run_quanta_multi(profs, policies, n_quanta=6, seed=3,
+                                       engine="scan", telemetry=False)
+        on = machine.run_quanta_multi(profs, policies, n_quanta=6, seed=3,
+                                      engine="scan", telemetry=True)
+        _assert_closed_identical(off, on)
+        assert on["synpa"].telemetry.data.shape == (6, len(CLOSED_FIELDS))
+
+
+# --------------------------------------------- open engine: ring + identity
+def _open_stats(machine, pool, spec, telemetry, n_quanta=40, **kw):
+    sim = ClusterSim(
+        machine, pool, 8, spec,
+        PoissonArrivals(rate=1.2, n_pool=len(pool)),
+        seed=7, target_scale=0.1, engine="scan", **kw,
+    )
+    return sim.run(n_quanta, telemetry=telemetry)
+
+
+def _assert_open_identical(off, on):
+    np.testing.assert_array_equal(off.queue_depth, on.queue_depth)
+    np.testing.assert_array_equal(off.active, on.active)
+    np.testing.assert_array_equal(off.solo_quanta, on.solo_quanta)
+    for name in ("arrivals", "admissions", "departures"):
+        np.testing.assert_array_equal(getattr(off, name), getattr(on, name))
+    assert {r.job_id: (r.admit_q, r.finish_q) for r in off.completed} == \
+        {r.job_id: (r.admit_q, r.finish_q) for r in on.completed}
+
+
+class TestOpenTelemetry:
+    @pytest.mark.parametrize("kind", ["synpa", "adjacent"])
+    def test_bit_identity_and_ring_shape(self, machine, pool, kind):
+        spec = ScanPolicy(kind=kind, method=isc.SYNPA4_R_FEBE,
+                          model=_toy_model()) if kind == "synpa" else \
+            ScanPolicy(kind="adjacent")
+        off = _open_stats(machine, pool, spec, telemetry=False)
+        on = _open_stats(machine, pool, spec, telemetry=True)
+        _assert_open_identical(off, on)
+        assert off.telemetry is None
+        log = on.telemetry
+        assert log is not None and log.data.shape == (40, len(OPEN_FIELDS))
+        # the ring's own traffic columns agree with the reconstructed
+        # timelines (departures is filled host-side from the finish log)
+        tl = on.timelines()
+        np.testing.assert_array_equal(tl["tlm_queue_depth"],
+                                      tl["queue_depth"])
+        np.testing.assert_array_equal(tl["tlm_admissions"],
+                                      tl["admissions"])
+        np.testing.assert_array_equal(tl["tlm_departures"],
+                                      tl["departures"])
+        np.testing.assert_array_equal(tl["tlm_active"], tl["active"])
+
+    def test_queue_conservation(self, machine, pool):
+        spec = ScanPolicy(kind="synpa", method=isc.SYNPA4_R_FEBE,
+                          model=_toy_model())
+        on = _open_stats(machine, pool, spec, telemetry=True)
+        tl = on.timelines()
+        np.testing.assert_array_equal(
+            tl["queue_depth"],
+            np.cumsum(tl["arrivals"]) - np.cumsum(tl["admissions"]),
+        )
+
+    def test_transfer_guard_holds_with_telemetry(self, machine, pool):
+        spec = ScanPolicy(kind="synpa", method=isc.SYNPA4_R_FEBE,
+                          model=_toy_model())
+        sim = ClusterSim(
+            machine, pool, 8, spec,
+            PoissonArrivals(rate=1.2, n_pool=len(pool)),
+            seed=7, target_scale=0.1, engine="scan",
+        )
+        stats = sim.run(30, transfer_guard=True, telemetry=True)
+        assert stats.telemetry is not None
+        assert stats.telemetry.data.shape == (30, len(OPEN_FIELDS))
+
+    @pytest.mark.slow
+    def test_bit_identity_n256(self, machine, pool):
+        spec = ScanPolicy(kind="synpa", method=isc.SYNPA4_R_FEBE,
+                          model=_toy_model())
+        rate = 256 / 40.0
+
+        def run(telemetry):
+            sim = ClusterSim(
+                machine, pool, 128, spec,
+                PoissonArrivals(rate=rate, n_pool=len(pool)),
+                seed=11, target_scale=0.05, engine="scan",
+            )
+            return sim.run(10, telemetry=telemetry)
+
+        off, on = run(False), run(True)
+        _assert_open_identical(off, on)
+        assert on.telemetry.data.shape == (10, len(OPEN_FIELDS))
+
+
+# ------------------------------------------------ host engine: timelines
+class TestHostTimelines:
+    def test_host_records_traffic_and_spans(self, machine, pool):
+        sim = ClusterSim(
+            machine, pool, 8, AdjacentOnline(),
+            PoissonArrivals(rate=1.2, n_pool=len(pool)),
+            seed=5, target_scale=0.1,
+        )
+        obs_trace.clear()
+        obs_trace.enable()
+        stats = sim.run(30)
+        obs_trace.disable()
+        tl = stats.timelines()
+        for k in ("arrivals", "admissions", "departures", "queue_depth",
+                  "active", "solo_quanta"):
+            assert k in tl and tl[k].shape == (30,)
+        np.testing.assert_array_equal(
+            tl["queue_depth"],
+            np.cumsum(tl["arrivals"]) - np.cumsum(tl["admissions"]),
+        )
+        names = {e["name"] for e in obs_trace.events()}
+        assert {"sim.policy", "sim.quantum"} <= names
+
+    def test_host_rejects_telemetry_kwarg(self, machine, pool):
+        sim = ClusterSim(
+            machine, pool, 4, AdjacentOnline(),
+            PoissonArrivals(rate=1.0, n_pool=len(pool)),
+            seed=3, target_scale=0.1,
+        )
+        with pytest.raises(AssertionError):
+            sim.run(5, telemetry=True)
+
+
+# --------------------------------------------- matcher diagnostics parity
+class TestMatcherDiagParity:
+    def _cost(self, p=8, seed=0):
+        rng = np.random.default_rng(seed)
+        c = rng.uniform(1.0, 3.0, (p, p)).astype(np.float32)
+        c = (c + c.T) / 2
+        np.fill_diagonal(c, 0.0)
+        return jnp.asarray(c)
+
+    def test_pairs_partner_rounds_flag(self):
+        cost = self._cost()
+        valid = jnp.ones(8, bool)
+        plain = matching.device_pairs_partner(cost, valid)
+        out, rounds = matching.device_pairs_partner(cost, valid,
+                                                    with_rounds=True)
+        np.testing.assert_array_equal(np.asarray(plain), np.asarray(out))
+        assert int(rounds) >= 0
+
+    def test_repair_partner_diag_flag(self):
+        cost = self._cost(seed=1)
+        valid = jnp.ones(8, bool)
+        prev = jnp.asarray([1, 0, 3, 2, 5, 4, 7, 6], jnp.int32)
+        plain = matching.device_repair_partner(cost, prev, valid)
+        out, rounds, dirty = matching.device_repair_partner(
+            cost, prev, valid, with_diag=True)
+        np.testing.assert_array_equal(np.asarray(plain), np.asarray(out))
+        assert int(rounds) >= 0 and int(dirty) >= 0
+
+
+# ---------------------------------------------------- recorded overhead
+class TestRecordedOverheadBudget:
+    def test_recorded_telemetry_overhead_within_budget(self):
+        """The committed N=256 baseline must honour the 1.10x contract.
+
+        ``--record`` refuses to write a breaching baseline (best-of-two +
+        retry de-flake, same style as the rest of the guard), so this is
+        a check on the artefact actually in the repo, not a live timing
+        (the live guard runs in ``tools/check_policy_budget.py``).
+        """
+        from tools.check_policy_budget import BASELINE, TELEMETRY_BUDGET_X
+
+        run = obs_metrics.load_run(BASELINE)
+        assert run is not None, (
+            "policy_time_n256.json missing or stale-stamped; re-record "
+            "with tools/check_policy_budget.py --record"
+        )
+        assert "telemetry_overhead_x" in run["metrics"]
+        assert run["metrics"]["telemetry_overhead_x"] <= TELEMETRY_BUDGET_X
+        assert run["metrics"]["scan_telemetry_median_us"] > 0
+
+
+# ------------------------------------------------------- report tooling
+class TestObsReport:
+    def test_render_and_diff(self, tmp_path):
+        from tools.obs_report import main as report_main
+
+        run = obs_metrics.export_run(
+            "unit", {"speed_us": 100.0, "count": 5.0}, engine="scan",
+            timelines={"depth": [0, 1, 2, 1]},
+            telemetry={"arm": TelemetryLog(
+                ("real_slowdown_mean",), np.ones((4, 1)) * 1.5)},
+            spans=[{"name": "s", "ph": "X", "ts": 0, "dur": 1000,
+                    "pid": 1, "tid": 1}],
+        )
+        a = str(tmp_path / "a.json")
+        obs_metrics.save_run(a, run)
+        assert report_main([a]) == 0
+
+        # timing regression breaches the ratio budget; counters the rel one
+        worse = obs_metrics.export_run(
+            "unit", {"speed_us": 300.0, "count": 5.0}, engine="scan")
+        b = str(tmp_path / "b.json")
+        obs_metrics.save_run(b, worse)
+        assert report_main(["--diff", a, b]) == 1
+        assert report_main(["--diff", a, b, "--time-budget", "4.0"]) == 0
+        drift = obs_metrics.export_run(
+            "unit", {"speed_us": 100.0, "count": 6.0}, engine="scan")
+        c = str(tmp_path / "c.json")
+        obs_metrics.save_run(c, drift)
+        assert report_main(["--diff", a, c]) == 1
+        assert report_main(["--diff", a, a]) == 0
+
+    def test_stale_export_refused(self, tmp_path):
+        from tools.obs_report import main as report_main
+
+        run = obs_metrics.export_run("unit", {"m": 1.0}, engine="scan")
+        run["rng_stream_version"] = -1
+        path = str(tmp_path / "stale.json")
+        obs_metrics.save_run(path, run)
+        assert report_main([path]) == 1

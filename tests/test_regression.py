@@ -226,6 +226,58 @@ class TestGaussNewtonInverse:
         np.testing.assert_allclose(np.asarray(x.sum(-1)), 1.0, atol=1e-4)
 
 
+class TestInverseDiag:
+    """``inverse(..., return_diag=True)``: diagnostics are pure extra
+    outputs — the stacks must stay bit-identical to the default call."""
+
+    def _fractions(self, rng, model, n, noise=0.02):
+        st_i = _random_stacks(rng, n)
+        st_j = _random_stacks(rng, n)
+        p_i = np.asarray(regression.forward(model, st_i, st_j))
+        p_j = np.asarray(regression.forward(model, st_j, st_i))
+        p_i = p_i * rng.lognormal(0, noise, size=p_i.shape)
+        p_j = p_j * rng.lognormal(0, noise, size=p_j.shape)
+        f_i = p_i / p_i.sum(-1, keepdims=True)
+        f_j = p_j / p_j.sum(-1, keepdims=True)
+        return jnp.asarray(f_i, jnp.float32), jnp.asarray(f_j, jnp.float32)
+
+    def test_gn_diag_bit_identical_with_shapes(self):
+        model = _toy_model()
+        f_i, f_j = self._fractions(np.random.default_rng(17), model, 32)
+        base_i, base_j = regression.inverse(model, f_i, f_j)
+        d_i, d_j, diag = regression.inverse(model, f_i, f_j,
+                                            return_diag=True)
+        np.testing.assert_array_equal(np.asarray(base_i), np.asarray(d_i))
+        np.testing.assert_array_equal(np.asarray(base_j), np.asarray(d_j))
+        assert isinstance(diag, regression.InverseDiag)
+        assert diag.iters.shape == (32,) and diag.iters.dtype == jnp.int32
+        assert bool((diag.iters >= 1).all())
+        assert bool((diag.iters <= regression.GN_STEPS).all())
+        assert diag.residual.shape == (32,)
+        assert bool(jnp.isfinite(diag.residual).all())
+        # the reported residual is the residual of the returned stacks
+        np.testing.assert_allclose(
+            np.asarray(diag.residual),
+            np.asarray(regression.inverse_residual(model, f_i, f_j,
+                                                   d_i, d_j)),
+            rtol=1e-6, atol=1e-9,
+        )
+        assert diag.fallback.shape == (32,) and diag.fallback.dtype == bool
+
+    def test_hb_diag_bit_identical_fixed_iters(self):
+        model = _toy_model()
+        f_i, f_j = self._fractions(np.random.default_rng(23), model, 8)
+        base_i, base_j = regression.inverse(model, f_i, f_j, n_steps=40,
+                                            solver="hb")
+        d_i, d_j, diag = regression.inverse(model, f_i, f_j, n_steps=40,
+                                            solver="hb", return_diag=True)
+        np.testing.assert_array_equal(np.asarray(base_i), np.asarray(d_i))
+        np.testing.assert_array_equal(np.asarray(base_j), np.asarray(d_j))
+        # fixed-length gradient scan: no early exit, no fallback
+        np.testing.assert_array_equal(np.asarray(diag.iters), 40)
+        assert not bool(diag.fallback.any())
+
+
 def test_pair_cost_matrix_symmetric_with_big_diagonal():
     model = _toy_model()
     st = jnp.asarray(_random_stacks(np.random.default_rng(3), 8))

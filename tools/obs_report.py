@@ -1,0 +1,203 @@
+"""Render and diff ``repro.obs`` run exports.
+
+Report mode renders one stamped run export (the
+:mod:`repro.obs.metrics` schema) as a terminal report: the stamp
+header, the metrics table, unicode sparklines for every recorded
+timeline and telemetry counter, and a span-name wall-time breakdown
+when the export carries trace events.
+
+Diff mode (``--diff A B``) compares two exports metric by metric with
+noise-aware thresholds: wall-time metrics (``*_us``/``*_ms``/``*_s``
+suffixes, and ``*_x`` overhead ratios) are jittery on a shared dev
+box, so they get a ratio budget (default 2.0x, ``--time-budget``);
+everything else — counters, slowdowns, IPC — is deterministic given
+the stamps, so it gets a tight relative tolerance (default 5%,
+``--rel``).  Exits 1 when any metric breaches its threshold, so the
+smoke tier can pin a benchmark run against its recorded baseline.
+
+Both modes refuse exports whose schema or RNG stream stamps do not
+match the current code (``repro.obs.metrics.load_run``) — a report
+over a stale recording would compare incomparable numbers.
+
+Examples::
+
+    python tools/obs_report.py benchmarks/results/obs_smoke_baseline.json
+    python tools/obs_report.py --diff base.json new.json --time-budget 2.0
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+
+_SPARK = "▁▂▃▄▅▆▇█"
+
+
+def sparkline(values, width: int = 48) -> str:
+    """Downsample a series to ``width`` buckets of unicode bars."""
+    v = np.asarray(values, np.float64)
+    v = v[np.isfinite(v)]
+    if v.size == 0:
+        return "(empty)"
+    if v.size > width:
+        edges = np.linspace(0, v.size, width + 1).astype(int)
+        v = np.array([v[a:b].mean() for a, b in zip(edges[:-1], edges[1:])])
+    lo, hi = float(v.min()), float(v.max())
+    if hi <= lo:
+        return _SPARK[0] * v.size
+    idx = ((v - lo) / (hi - lo) * (len(_SPARK) - 1)).round().astype(int)
+    return "".join(_SPARK[i] for i in idx)
+
+
+def _is_timing(key: str) -> bool:
+    """Wall-time (or wall-time-ratio) metrics get the jitter budget."""
+    return key.endswith(("_us", "_ms", "_s", "_x")) or "_us_" in key
+
+
+def span_breakdown(spans: List[Dict]) -> List[Tuple[str, float, int]]:
+    """``(name, total_ms, count)`` rows from chrome trace events."""
+    acc: Dict[str, List[float]] = {}
+    for ev in spans:
+        if ev.get("ph") != "X":
+            continue
+        acc.setdefault(ev["name"], []).append(float(ev.get("dur", 0.0)))
+    rows = [(name, sum(ds) / 1e3, len(ds)) for name, ds in acc.items()]
+    return sorted(rows, key=lambda r: -r[1])
+
+
+def render(run: Dict) -> str:
+    out: List[str] = []
+    stamp = time.strftime(
+        "%Y-%m-%d %H:%M:%S", time.localtime(run.get("recorded_unix", 0))
+    )
+    out.append(f"run: {run.get('name', '?')}")
+    out.append(
+        f"  schema v{run.get('obs_schema_version')}  "
+        f"rng v{run.get('rng_stream_version')}"
+        + (f"  scan v{run['scan_rng_stream_version']}"
+           if "scan_rng_stream_version" in run else "")
+        + (f"  engine={run['engine']}" if "engine" in run else "")
+        + f"  recorded {stamp}"
+    )
+    out.append("")
+    out.append("metrics:")
+    width = max((len(k) for k in run["metrics"]), default=0)
+    for k, v in run["metrics"].items():
+        out.append(f"  {k:<{width}}  {v:>14.6g}")
+    for arm, tl in (run.get("timelines") or {}).items():
+        out.append("")
+        out.append(f"timeline {arm} ({len(tl)} quanta, "
+                   f"min {min(tl):.3g} max {max(tl):.3g}):")
+        out.append(f"  {sparkline(tl)}")
+    for arm, payload in (run.get("telemetry") or {}).items():
+        from repro.obs.telemetry import TelemetryLog
+
+        log = TelemetryLog.from_dict(payload)
+        out.append("")
+        out.append(f"telemetry[{arm}] policy={log.policy!r} "
+                   f"({log.quanta} quanta x {len(log.fields)} counters):")
+        fw = max(len(f) for f in log.fields)
+        for f in log.fields:
+            col = log.timeline(f)
+            out.append(
+                f"  {f:<{fw}}  {sparkline(col, width=32)}  "
+                f"mean {col.mean():>10.4g}  max {col.max():>10.4g}"
+            )
+    spans = run.get("spans") or []
+    if spans:
+        rows = span_breakdown(spans)
+        out.append("")
+        out.append(f"spans ({len(spans)} events):")
+        nw = max(len(r[0]) for r in rows)
+        for name, total_ms, count in rows:
+            out.append(f"  {name:<{nw}}  {total_ms:>10.2f} ms  "
+                       f"x{count}")
+    return "\n".join(out)
+
+
+def diff(base: Dict, new: Dict, time_budget: float, rel: float) -> int:
+    """Print a metric-by-metric comparison; count of breaches returned."""
+    bm, nm = base["metrics"], new["metrics"]
+    keys = sorted(set(bm) | set(nm))
+    width = max((len(k) for k in keys), default=0)
+    breaches = 0
+    print(f"diff: {base.get('name', '?')} (base) vs "
+          f"{new.get('name', '?')} (new)")
+    for k in keys:
+        if k not in bm or k not in nm:
+            side = "base" if k in bm else "new"
+            print(f"  {k:<{width}}  only in {side}")
+            continue
+        b, n = float(bm[k]), float(nm[k])
+        if _is_timing(k):
+            # Wall times: noise-aware ratio budget, one-sided (faster
+            # is never a breach).
+            ratio = n / b if b else float("inf")
+            ok = (n <= b * time_budget) or (n == b)
+            verdict = "OK" if ok else f"SLOWER than {time_budget:.2f}x"
+            print(f"  {k:<{width}}  {b:>12.5g} -> {n:>12.5g}  "
+                  f"({ratio:>6.2f}x)  {verdict}")
+        else:
+            denom = max(abs(b), 1e-12)
+            delta = abs(n - b) / denom
+            ok = delta <= rel
+            verdict = "OK" if ok else f"DRIFT > {rel:.0%}"
+            print(f"  {k:<{width}}  {b:>12.5g} -> {n:>12.5g}  "
+                  f"({delta:>6.2%})  {verdict}")
+        breaches += 0 if ok else 1
+    return breaches
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("paths", nargs="+",
+                    help="one export to render, or two with --diff")
+    ap.add_argument("--diff", action="store_true",
+                    help="compare two exports (base new) instead of "
+                         "rendering one")
+    ap.add_argument("--time-budget", type=float, default=2.0,
+                    help="allowed slowdown ratio for wall-time metrics")
+    ap.add_argument("--rel", type=float, default=0.05,
+                    help="relative tolerance for non-timing metrics")
+    args = ap.parse_args(argv)
+
+    from repro.obs import metrics as obs_metrics
+
+    runs = []
+    for path in args.paths:
+        run = obs_metrics.load_run(path)
+        if run is None:
+            print(f"obs_report: no usable run export at {path} (missing, "
+                  "unreadable or stale-stamped)", file=sys.stderr)
+            return 1
+        runs.append(run)
+
+    if args.diff:
+        if len(runs) != 2:
+            print("obs_report: --diff needs exactly two exports",
+                  file=sys.stderr)
+            return 1
+        breaches = diff(runs[0], runs[1], args.time_budget, args.rel)
+        if breaches:
+            print(f"obs_report: {breaches} metric(s) breached their "
+                  "thresholds", file=sys.stderr)
+            return 1
+        print("obs_report: all metrics within thresholds")
+        return 0
+
+    for run in runs:
+        print(render(run))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,4 +11,14 @@ python benchmarks/online_churn.py --smoke
 python benchmarks/online_churn.py --smoke --engine scan
 python benchmarks/cluster_scale.py --smoke
 python benchmarks/cluster_scale.py --smoke --engine scan
+# Telemetry arm: run both engines with the device ring + span tracing on,
+# render the run report, and diff it against the recorded baseline.  The
+# deterministic metrics get the tight 5% tolerance; wall-time metrics get
+# 4x here (single-shot run on a jittery box — check_policy_budget below
+# guards timing properly, best-of-two).
+python benchmarks/obs_smoke.py --smoke
+python tools/obs_report.py benchmarks/results/obs_smoke.json > /dev/null
+python tools/obs_report.py --diff \
+    benchmarks/results/obs_smoke_baseline.json \
+    benchmarks/results/obs_smoke.json --time-budget 4.0
 python tools/check_policy_budget.py
