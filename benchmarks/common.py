@@ -130,16 +130,20 @@ def load_json(name: str):
 # stamp logic itself lives in ``repro.obs.metrics`` (the run-export
 # layer); these wrappers keep the historic benchmark API.
 # ---------------------------------------------------------------------------
-def version_stamp(engine: Optional[str] = None) -> Dict:
+def version_stamp(engine: Optional[str] = None,
+                  faults: bool = False) -> Dict:
     """Stamp dict for a result JSON (``repro.obs.metrics.version_stamp``)."""
     from repro.obs.metrics import version_stamp as _stamp
 
-    return _stamp(engine)
+    return _stamp(engine, faults=faults)
 
 
-def save_stamped(name: str, obj: Dict, engine: Optional[str] = None) -> str:
-    """``save_json`` with the version stamp merged in (stamp keys win)."""
-    return save_json(name, {**obj, **version_stamp(engine)})
+def save_stamped(name: str, obj: Dict, engine: Optional[str] = None,
+                 faults: bool = False) -> str:
+    """``save_json`` with the version stamp merged in (stamp keys win).
+    ``faults=True`` adds the fault-schedule stream stamp — results of
+    fault-injected runs are tied to ``FAULT_RNG_STREAM_VERSION`` too."""
+    return save_json(name, {**obj, **version_stamp(engine, faults=faults)})
 
 
 def load_stamped(name: str) -> Optional[Dict]:

@@ -264,6 +264,97 @@ def _static_probe(machine, models, sizes, smoke: bool,
     return out
 
 
+def _fault_profiles(n_cores: int, quanta: int) -> Dict[str, object]:
+    """The fault-profile grid, scaled to the cell: a crash wave taking an
+    eighth of the cores down mid-run (staggered recoveries), geometric
+    MTTF/MTTR churn, a straggler band at half speed, and the kitchen-sink
+    combination.  ``None`` is the faults-off control arm every slowdown
+    is normalised against."""
+    from repro.online import FaultProfile
+
+    k = max(1, n_cores // 8)
+    down_q, up_q = quanta // 4, (3 * quanta) // 4
+    crash = tuple((down_q + i % 3, i) for i in range(k))
+    heal = tuple((up_q + i % 3, i) for i in range(k))
+    band = tuple(
+        (c, quanta // 3, (2 * quanta) // 3, 0.5)
+        for c in range(n_cores - max(1, n_cores // 8), n_cores)
+    )
+    return {
+        "none": None,
+        "crash-wave": FaultProfile(fail=crash, recover=heal),
+        "mttf-churn": FaultProfile(mttf_quanta=3.0 * quanta,
+                                   mttr_quanta=quanta / 6.0),
+        "stragglers": FaultProfile(straggle=band),
+        "combined": FaultProfile(fail=crash, recover=heal, straggle=band,
+                                 mttf_quanta=6.0 * quanta,
+                                 mttr_quanta=quanta / 6.0),
+    }
+
+
+def fault_grid(machine, models, sizes, smoke: bool,
+               engine: str = "vector") -> Dict:
+    """Graceful-degradation sweep: the rho=1.0 churn cell per size, re-run
+    under each fault profile (both engines share the schedule bit-for-bit,
+    so either engine measures the same faults).  Per cell: the stats
+    summary, the slowdown CCDF, the retry CCDF and the degradation ratio
+    (mean slowdown vs the faults-off control arm of the same cell)."""
+    from repro.core import isc
+    from repro.online import ClusterSim, PoissonArrivals, StreamingAllocator
+    from repro.smt.apps import pool_profiles
+    from repro.smt.machine import PhaseTables
+    from repro.smt.scan_engine import ScanPolicy
+
+    method = isc.SYNPA4_R_FEBE
+    model = models["SYNPA4_R-FEBE"]
+    pool = pool_profiles()
+    tables = PhaseTables.build(pool)
+    mean_service_q = mean_service_quanta(machine)
+    out: Dict[str, Dict] = {}
+    for n in sizes:
+        n_cores = n // 2
+        quanta = QUANTA.get(n, 30) if not smoke else 30
+        arrivals = PoissonArrivals(
+            rate=CHURN["med"] * n / mean_service_q, n_pool=len(pool)
+        )
+        row: Dict[str, Dict] = {}
+        base_slowdown = None
+        for fname, fp in _fault_profiles(n_cores, quanta).items():
+            if engine == "scan":
+                policy = ScanPolicy(kind="synpa", method=method,
+                                    model=model, name="synpa4-device")
+            else:
+                policy = StreamingAllocator(method, model,
+                                            name="synpa4-stream")
+            sim = ClusterSim(
+                machine, pool, n_cores, policy, arrivals,
+                seed=11, target_scale=TARGET_SCALE, tables=tables,
+                faults=fp, **({"engine": "scan"}
+                              if engine == "scan" else {}),
+            )
+            stats = sim.run(quanta)
+            cell = stats.summary()
+            xs, ys = stats.ccdf()
+            cell["slowdown_ccdf"] = {
+                "slowdown": [float(v) for v in xs],
+                "ccdf": [float(v) for v in ys],
+            }
+            if fp is not None:
+                grid_r, ccdf_r = stats.retry_ccdf()
+                cell["retry_ccdf"] = {
+                    "retries": [int(v) for v in grid_r],
+                    "ccdf": [float(v) for v in ccdf_r],
+                }
+            if fname == "none":
+                base_slowdown = cell["mean_slowdown"]
+            cell["degradation_x"] = (
+                cell["mean_slowdown"] / max(base_slowdown, 1e-12)
+            )
+            row[fname] = cell
+        out[str(n)] = row
+    return out
+
+
 def record_device_ab(machine, models, sizes=(256, 1024), rho: float = 1.0,
                      rounds: int = 5) -> Dict:
     """Back-to-back host-vs-device open-system A/B; medians recorded.
@@ -348,7 +439,7 @@ def record_device_ab(machine, models, sizes=(256, 1024), rho: float = 1.0,
 
 def main(smoke: bool = False, full: bool = False, quick: bool = False,
          race_cold_at_full: bool = False, engine: str = "vector",
-         device_ab: bool = False) -> str:
+         device_ab: bool = False, faults: bool = False) -> str:
     machine, models, _wls = get_env(fast=smoke)
     t_total = time.perf_counter()
     cold_max_n = max(FULL_SIZES) if race_cold_at_full else COLD_MAX_N
@@ -387,6 +478,22 @@ def main(smoke: bool = False, full: bool = False, quick: bool = False,
         save_stamped("online_churn_ccdf.json"
                      if engine == "vector" else "online_churn_ccdf_scan.json",
                      ccdfs, engine=engine)
+    if faults:
+        fg = fault_grid(machine, models, sizes, smoke, engine=engine)
+        if not smoke:
+            # Fault results are additionally tied to the fault-schedule
+            # stream version (``faults=True`` stamps it).
+            save_stamped("online_churn_faults.json"
+                         if engine == "vector"
+                         else "online_churn_faults_scan.json",
+                         fg, engine=engine, faults=True)
+        n_f = str(max(int(k) for k in fg))
+        for fname, cell in fg[n_f].items():
+            print(f"# faults N={n_f} {fname}: "
+                  f"degradation {cell['degradation_x']:.2f}x, "
+                  f"evicted {cell.get('n_evicted', 0):.0f}, "
+                  f"requeued {cell.get('n_requeued', 0):.0f}, "
+                  f"dropped {cell.get('n_dropped', 0):.0f}")
     if device_ab and smoke:
         print("# --record-device-ab ignored under --smoke: the recorded "
               "A/B is a full-size fitted-model measurement")
@@ -446,7 +553,14 @@ if __name__ == "__main__":
                     help="record the back-to-back host-vs-device "
                     "open-system A/B (medians) to "
                     "results/device_sim_speedup.json")
+    ap.add_argument("--faults", action="store_true",
+                    help="add the graceful-degradation sweep: the rho=1.0 "
+                    "cell per size under a fault-profile grid (crash wave, "
+                    "MTTF/MTTR churn, stragglers, combined), recording "
+                    "per-profile slowdown + requeue CCDFs and degradation "
+                    "ratios to results/online_churn_faults*.json")
     args = ap.parse_args()
     print(main(smoke=args.smoke, full=args.full, quick=args.quick,
                race_cold_at_full=args.race_cold_at_full,
-               engine=args.engine, device_ab=args.record_device_ab))
+               engine=args.engine, device_ab=args.record_device_ab,
+               faults=args.faults))

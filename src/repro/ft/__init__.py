@@ -1,2 +1,11 @@
 from repro.ft.elastic import ElasticTopology, replan_after_failure
 from repro.ft.heartbeat import HeartbeatMonitor
+from repro.ft.straggler import StragglerDetector, rebalanced_shares
+
+__all__ = [
+    "ElasticTopology",
+    "replan_after_failure",
+    "HeartbeatMonitor",
+    "StragglerDetector",
+    "rebalanced_shares",
+]

@@ -25,15 +25,23 @@ class HeartbeatMonitor:
         self._dead: Set[str] = set()
 
     def beat(self, host: str, now: Optional[float] = None) -> None:
+        if host not in self._last:
+            raise KeyError(
+                f"heartbeat from unknown host {host!r}: hosts join through "
+                "admit(), a beat never implicitly registers one"
+            )
         if host in self._dead:
             return  # must rejoin through admit()
         self._last[host] = time.monotonic() if now is None else now
 
     def admit(self, host: str, now: Optional[float] = None) -> None:
-        """(Re-)admit a host after restart/replacement."""
+        """(Re-)admit a host after restart/replacement.
+
+        Always refreshes the timestamp — a rejoining host starts a fresh
+        timeout window, it does not inherit its pre-failure silence.
+        """
         self._dead.discard(host)
-        if host not in self._last or True:
-            self._last[host] = time.monotonic() if now is None else now
+        self._last[host] = time.monotonic() if now is None else now
         if host not in self.hosts:
             self.hosts.append(host)
 

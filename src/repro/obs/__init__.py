@@ -30,6 +30,7 @@ from repro.obs.metrics import (  # noqa: F401
 )
 from repro.obs.telemetry import (  # noqa: F401
     CLOSED_FIELDS,
+    FAULT_FIELDS,
     FUSED_DIAG_FIELDS,
     OPEN_FIELDS,
     TelemetryLog,

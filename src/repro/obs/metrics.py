@@ -41,14 +41,19 @@ from typing import Dict, List, Optional
 OBS_SCHEMA_VERSION = 1
 
 
-def version_stamp(engine: Optional[str] = None) -> Dict:
+def version_stamp(engine: Optional[str] = None,
+                  faults: bool = False) -> Dict:
     """Stamp dict for a recorded result: the profiling-campaign stream
     version always; the scan-engine threefry layout version whenever the
-    result involves the device tiers (``engine`` is recorded verbatim).
+    result involves the device tiers (``engine`` is recorded verbatim);
+    the fault-schedule stream version when ``faults`` is set (the run
+    injected a ``repro.online.faults.FaultProfile``).
 
     A recorded median is only comparable to a re-measurement when both
     ran under the same RNG stream layouts — the same reason the model
-    caches are stamped and refused on mismatch.
+    caches are stamped and refused on mismatch.  ``check_stamp`` only
+    validates keys present in the recorded object, so the optional fault
+    stamp stays backward compatible with faults-free exports.
     """
     from repro.smt.training import RNG_STREAM_VERSION
 
@@ -59,6 +64,10 @@ def version_stamp(engine: Optional[str] = None) -> Dict:
         from repro.smt.scan_engine import SCAN_RNG_STREAM_VERSION
 
         stamp["scan_rng_stream_version"] = SCAN_RNG_STREAM_VERSION
+    if faults:
+        from repro.online.faults import FAULT_RNG_STREAM_VERSION
+
+        stamp["fault_rng_stream_version"] = FAULT_RNG_STREAM_VERSION
     return stamp
 
 
@@ -84,6 +93,14 @@ def check_stamp(obj: Dict, label: str = "run") -> bool:
                   f"v{obj['scan_rng_stream_version']} != "
                   f"v{SCAN_RNG_STREAM_VERSION}; re-record it")
             return False
+    if "fault_rng_stream_version" in obj:
+        from repro.online.faults import FAULT_RNG_STREAM_VERSION
+
+        if obj["fault_rng_stream_version"] != FAULT_RNG_STREAM_VERSION:
+            print(f"# refusing {label}: fault stream "
+                  f"v{obj['fault_rng_stream_version']} != "
+                  f"v{FAULT_RNG_STREAM_VERSION}; re-record it")
+            return False
     return True
 
 
@@ -95,6 +112,7 @@ def export_run(
     telemetry: Optional[Dict] = None,
     spans: Optional[List[Dict]] = None,
     meta: Optional[Dict] = None,
+    faults: bool = False,
 ) -> Dict:
     """Build a run export (the schema in the module docstring).
 
@@ -107,7 +125,7 @@ def export_run(
         "obs_schema_version": OBS_SCHEMA_VERSION,
         "name": name,
         "recorded_unix": time.time(),
-        **version_stamp(engine),
+        **version_stamp(engine, faults=faults),
         "metrics": {k: float(v) for k, v in metrics.items()},
     }
     if timelines:

@@ -42,6 +42,20 @@ CLOSED_FIELDS = (
     "two_opt_rounds",      # device-matcher parallel swap rounds
 ) + FUSED_DIAG_FIELDS
 
+#: Fault/resilience counters of the open-system ring.  Like ``departures``
+#: they are filled host-side after the fetch (failures/recoveries/straggling
+#: are pure fault-schedule data; evictions/requeues ride the scan ``ys`` as
+#: integer counts) — the in-graph vector carries zeros for these columns,
+#: which keeps the shadow-recompute-behind-integer-barrier doctrine intact
+#: (``docs/observability.md``) and the faults-off graph unchanged.
+FAULT_FIELDS = (
+    "failures",            # cores newly down this quantum
+    "recoveries",          # cores newly back up this quantum
+    "evictions",           # jobs evicted off failed cores this quantum
+    "requeues",            # evicted jobs re-admitted this quantum
+    "straggling",          # up cores running degraded (speed < 1)
+)
+
 #: Open-system ring (``repro.online.device_sim``), one vector per quantum.
 OPEN_FIELDS = (
     "queue_head",          # jobs admitted so far (queue head index)
@@ -56,7 +70,7 @@ OPEN_FIELDS = (
     "pred_cost_mean",      # mean predicted pair slowdown of the matching
     "repair_dirty",        # churn-repair dirty vertices re-paired
     "two_opt_rounds",      # device-matcher parallel swap rounds
-) + FUSED_DIAG_FIELDS
+) + FUSED_DIAG_FIELDS + FAULT_FIELDS
 
 
 class TelemetryLog:

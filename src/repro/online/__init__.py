@@ -21,6 +21,10 @@ Entry points:
                                — traffic models (:func:`presample`
                                  materialises any of them for the device
                                  tier, bit-identically to the host stream).
+* :class:`FaultProfile`        — seeded fault injection (core failure/
+                                 recovery, stragglers, eviction/requeue
+                                 with bounded retries) shared bit-for-bit
+                                 by both engines; see ``docs/resilience.md``.
 """
 
 from repro.online.admission import SynergyAdmission
@@ -43,12 +47,20 @@ from repro.online.allocator import (
     cold_config,
     exact_config,
 )
+from repro.online.faults import (
+    FAULT_RNG_STREAM_VERSION,
+    FaultProfile,
+    FaultSchedule,
+)
 from repro.online.sim import ClusterSim
 
 __all__ = [
     "AdjacentOnline",
     "ArrivalProcess",
     "ClusterSim",
+    "FAULT_RNG_STREAM_VERSION",
+    "FaultProfile",
+    "FaultSchedule",
     "IDLE_COST",
     "InitialBatch",
     "LinuxOnline",

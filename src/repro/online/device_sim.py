@@ -91,7 +91,7 @@ from __future__ import annotations
 import functools
 import time
 from collections import OrderedDict
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -103,6 +103,7 @@ from repro.core.synpa import fused_pad, make_fused_step
 from repro.obs import trace as obs_trace
 from repro.obs.telemetry import OPEN_FIELDS, TelemetryLog
 from repro.online.arrivals import presample
+from repro.online.faults import RETRY_NEVER
 from repro.smt.metrics import OnlineStats
 from repro.smt.scan_engine import (
     DeviceTables,
@@ -138,8 +139,22 @@ class _OpenCarry(NamedTuple):
     finish_q: jnp.ndarray     # (J,) f32  fractional finish quantum (inf)
 
 
+class _FaultCarry(NamedTuple):
+    """Per-job retry bookkeeping of a faulted run (``repro.online.faults``).
+    Absent (None in the carry tuple) when the run has no FaultProfile, so
+    the faults-off carry pytree — and therefore the compiled graph — is
+    exactly the historical one."""
+
+    retries: jnp.ndarray      # (J,) i32  evictions suffered so far
+    retry_at: jnp.ndarray     # (J,) i32  quantum eligible for re-admission
+    #                         #           (RETRY_NEVER = not waiting)
+    saved: jnp.ndarray        # (J,) f32  progress to restore on re-admission
+
+
 def _build_race(spec: ScanPolicy, params, capacity: int, n_quanta: int,
-                j_pad: int, admission: str, telemetry: bool = False):
+                j_pad: int, admission: str, telemetry: bool = False,
+                faults_cfg: Optional[Tuple[int, int, bool]] = None,
+                segment: bool = False):
     """Compile-ready open-system run: one jitted function, one dispatch.
 
     Returns ``race(dt, job_pool, job_arrive, job_target, syn_cost,
@@ -159,7 +174,30 @@ def _build_race(spec: ScanPolicy, params, capacity: int, n_quanta: int,
     Telemetry rides the scan ``ys`` only — never the carry — and the off
     path traces today's graph unchanged, so trajectories are
     bit-identical either way.
+
+    ``faults_cfg`` (static) — ``(max_retries, backoff_quanta,
+    preserve_progress)`` of a :class:`repro.online.faults.FaultProfile` —
+    compiles the fault path in: the race takes two extra traced arrays
+    (``fup (Q, C)`` bool membership, ``fspeed (Q, C)`` f32 capability,
+    the pre-sampled schedule expanded to contexts), evicts jobs on down
+    cores before admission, re-admits the retry pool ahead of the fresh
+    FIFO queue, scales retirement by ``fspeed[q]``, and returns two extra
+    job logs (``retries``, ``retry_at``) plus per-quantum
+    eviction/requeue counts.  ``None`` (the default) traces the
+    historical faults-off graph *unchanged* — no masks, no multiplies by
+    one, no extra carry leaves — which is what the pinned-trajectory
+    bit-identity tests hold the engine to.
+
+    ``segment`` (static) builds the checkpoint/resume variant instead:
+    the returned race takes an explicit ``(carry, q0)`` and scans quanta
+    ``[q0, q0 + n_quanta)`` (``n_quanta`` is then the *segment* length),
+    returning the full final carry so
+    :func:`run_device_sim_checkpointed` can snapshot it at quantum
+    boundaries and resume bit-identically.
     """
+    faults = faults_cfg is not None
+    if faults:
+        max_retries, backoff, preserve = faults_cfg
     c = capacity
     p = fused_pad(c)
     idx = jnp.arange(c, dtype=jnp.int32)
@@ -181,9 +219,10 @@ def _build_race(spec: ScanPolicy, params, capacity: int, n_quanta: int,
     full_budget = 4 * (p // 2)
 
     # ------------------------------------------------------------ admission
-    def admit_fifo(app_id, job_at, head, tail, job_pool):
-        """k-th dequeued job -> k-th lowest free context (the host rule)."""
-        free = app_id < 0
+    def admit_fifo(app_id, job_at, free, head, tail, job_pool):
+        """k-th dequeued job -> k-th lowest free context (the host rule).
+        ``free`` is passed in so the fault path can restrict it to up
+        contexts not already taken by retry re-admissions."""
         n_admit = jnp.minimum(tail - head, jnp.sum(free))
         frank = jnp.cumsum(free.astype(jnp.int32)) - 1
         take = free & (frank < n_admit)
@@ -239,10 +278,13 @@ def _build_race(spec: ScanPolicy, params, capacity: int, n_quanta: int,
 
     # ------------------------------------------------ open machine quantum
     def open_quantum(dt, aid, active, phase_idx, phase_left, progress,
-                     target, partner, mkey, q):
+                     target, partner, mkey, q, speed=None):
         """Membership-masked quantum: the in-graph
         :meth:`repro.smt.machine.SMTMachine.open_quantum` (departures, no
-        relaunch).  Draws are per (context, quantum) — stream layout v2."""
+        relaunch).  Draws are per (context, quantum) — stream layout v2.
+        ``speed`` (straggler capability, host twin's keyword) scales
+        retirement only; the static None default keeps the faults-off
+        graph literally free of the multiply."""
         aid_safe = jnp.maximum(aid, 0)
         nph = dt.n_phases[aid_safe]
         ph = phase_idx % nph
@@ -251,6 +293,8 @@ def _build_race(spec: ScanPolicy, params, capacity: int, n_quanta: int,
                                        aid=aid_safe)
         cpi = comps.sum(axis=-1)
         retired = jnp.where(active, cycles / cpi * dt.retire[aid_safe], 0.0)
+        if speed is not None:
+            retired = retired * speed
         after = progress + retired
         done = active & (after >= target)
         frac = jnp.clip(
@@ -300,21 +344,80 @@ def _build_race(spec: ScanPolicy, params, capacity: int, n_quanta: int,
 
     # ----------------------------------------------------------- scan body
     def body(dt, job_pool, job_arrive, job_target, syn_cost, syn_mean,
-             syn_stacks, mkey, carry: _OpenCarry, q):
+             syn_stacks, mkey, fup, fspeed, carry_t, q):
+        carry, fc = carry_t
         # 1. Arrivals: the queue tail is a masked count over the sorted
         # job array — no state to update.
         tail = jnp.sum(job_arrive <= q).astype(jnp.int32)
 
+        app_id, job_at = carry.app_id, carry.job_at
+        if faults:
+            # 1b. Fault eviction: jobs on cores that are down this quantum
+            # leave *before* admission (the host heartbeat order).  A core
+            # stays masked while down, so only transition quanta evict.
+            upq = fup[q]
+            speedq = fspeed[q]
+            evict = (app_id >= 0) & ~upq
+            ej = jnp.where(evict, job_at, j_pad)
+            ej_safe = jnp.clip(ej, 0, j_pad - 1)
+            retries = fc.retries.at[ej].add(1, mode="drop")
+            over = retries[ej_safe] > max_retries
+            requeue_c = evict & ~over     # dropped past max_retries
+            retry_at = fc.retry_at.at[
+                jnp.where(requeue_c, ej, j_pad)
+            ].set(q + backoff, mode="drop")
+            saved_val = carry.progress if preserve else jnp.zeros(
+                c, jnp.float32
+            )
+            saved = fc.saved.at[ej].set(saved_val, mode="drop")
+            n_evict = jnp.sum(evict).astype(jnp.int32)
+            app_id = jnp.where(evict, -1, app_id)
+            job_at = jnp.where(evict, -1, job_at)
+
         # 2. Admission into free contexts (FIFO dequeue order either way).
+        if faults:
+            free = (app_id < 0) & upq
+            # 2a. Retry pool ahead of the fresh queue: the r-th eligible
+            # victim (ascending job id) re-enters on the r-th lowest free
+            # up context — the host rule as a rank-matching scatter.
+            elig = retry_at <= q
+            n_take = jnp.minimum(jnp.sum(elig), jnp.sum(free)).astype(
+                jnp.int32
+            )
+            erank = jnp.cumsum(elig.astype(jnp.int32)) - 1
+            take_j = elig & (erank < n_take)
+            job_of_rank = jnp.full(c, j_pad, jnp.int32).at[
+                jnp.where(take_j, erank, c)
+            ].set(jnp.arange(j_pad, dtype=jnp.int32), mode="drop")
+            frank = jnp.cumsum(free.astype(jnp.int32)) - 1
+            rtake = free & (frank < n_take)
+            jr = jnp.where(rtake, job_of_rank[jnp.clip(frank, 0, c - 1)],
+                           j_pad)
+            app_id = jnp.where(
+                rtake, job_pool[jnp.clip(jr, 0, j_pad - 1)], app_id
+            )
+            job_at = jnp.where(rtake, jr, job_at)
+            retry_at = retry_at.at[jnp.where(rtake, jr, j_pad)].set(
+                RETRY_NEVER, mode="drop"
+            )
+            n_requeue = jnp.sum(rtake).astype(jnp.int32)
+            free = free & ~rtake
+        else:
+            free = app_id < 0
         if admission == "synergy":
-            app_id, job_at, took, head = admit_synergy(
-                carry.app_id, carry.job_at, carry.head, tail, job_pool,
+            app_id, job_at, took_f, head = admit_synergy(
+                app_id, job_at, carry.head, tail, job_pool,
                 syn_cost, syn_mean,
             )
         else:
-            app_id, job_at, took, head = admit_fifo(
-                carry.app_id, carry.job_at, carry.head, tail, job_pool,
+            app_id, job_at, took_f, head = admit_fifo(
+                app_id, job_at, free, carry.head, tail, job_pool,
             )
+        # ``took`` covers every newly-placed context (fresh + retry) —
+        # slot-state reset and the policy's fresh mask; ``took_f`` is the
+        # fresh subset — queue head/admit_q/admission counts stay
+        # first-admission-only so queue identities keep holding.
+        took = (took_f | rtake) if faults else took_f
         jidx = jnp.where(took, job_at, j_pad)
         target = jnp.where(
             took, job_target[jnp.clip(jidx, 0, j_pad - 1)], carry.target
@@ -323,8 +426,18 @@ def _build_race(spec: ScanPolicy, params, capacity: int, n_quanta: int,
         phase_left = jnp.where(
             took, dt.duration[jnp.maximum(app_id, 0), 0], carry.phase_left
         )
-        progress = jnp.where(took, 0.0, carry.progress)
-        admit_q = carry.admit_q.at[jidx].set(q, mode="drop")
+        if faults:
+            # Re-admissions restart at phase 0 with saved (or zero)
+            # progress; fresh admissions start from zero as always.
+            progress = jnp.where(
+                rtake, saved[jnp.clip(jidx, 0, j_pad - 1)],
+                jnp.where(took_f, 0.0, carry.progress),
+            )
+        else:
+            progress = jnp.where(took, 0.0, carry.progress)
+        admit_q = carry.admit_q.at[
+            jnp.where(took_f, job_at, j_pad) if faults else jidx
+        ].set(q, mode="drop")
         st = carry.st
         if use_hints:
             # ST-hint seeding: a newcomer's estimate is its profiled solo
@@ -406,7 +519,7 @@ def _build_race(spec: ScanPolicy, params, capacity: int, n_quanta: int,
             )
         counters, after, done, frac, phase_idx, phase_left = open_quantum(
             dt, app_id, active, phase_idx, phase_left, progress, target,
-            partner, mkey, q,
+            partner, mkey, q, speed=speedq if faults else None,
         )
         finish_q = carry.finish_q.at[jnp.where(done, job_at, j_pad)].set(
             q.astype(jnp.float32) + frac, mode="drop"
@@ -428,6 +541,12 @@ def _build_race(spec: ScanPolicy, params, capacity: int, n_quanta: int,
             admit_q=admit_q,
             finish_q=finish_q,
         )
+        fc_new = _FaultCarry(
+            retries=retries, retry_at=retry_at, saved=saved
+        ) if faults else None
+        outs = (queue_depth, n_active, n_solo)
+        if faults:
+            outs = outs + (n_evict, n_requeue)
         if telemetry:
             f32 = lambda v: v.astype(jnp.float32)  # noqa: E731
             # ``done`` is derived from a float comparison, and *any*
@@ -436,23 +555,25 @@ def _build_race(spec: ScanPolicy, params, capacity: int, n_quanta: int,
             # run its bit-identity — so the departures column is left
             # zero here and filled host-side from the fetched finish
             # log (``run_device_sim``), where it is exactly
-            # ``bincount(floor(finish_q))``.
+            # ``bincount(floor(finish_q))``.  The fault columns follow the
+            # same doctrine (zeros in-graph, host-filled): failures/
+            # recoveries/straggling are pure schedule data, and eviction/
+            # requeue counts already ride the ``ys`` as integers.
             tvec = jnp.concatenate([
                 jnp.stack([
                     f32(head), f32(tail), f32(queue_depth),
-                    f32(jnp.sum(took)), jnp.float32(0.0),
+                    f32(jnp.sum(took_f)), jnp.float32(0.0),
                     f32(n_active), f32(n_solo),
                     slow_mean, slow_max,
                 ]),
                 pol_diag,
+                jnp.zeros(5, jnp.float32),
             ])
-            return new, (queue_depth, n_active, n_solo, tvec)
-        return new, (queue_depth, n_active, n_solo)
+            outs = outs + (tvec,)
+        return (new, fc_new), outs
 
-    @jax.jit
-    def race(dt: DeviceTables, job_pool, job_arrive, job_target, syn_cost,
-             syn_mean, syn_stacks, mkey):
-        carry0 = _OpenCarry(
+    def carry0():
+        ocarry = _OpenCarry(
             app_id=jnp.full(c, -1, jnp.int32),
             job_at=jnp.full(c, -1, jnp.int32),
             phase_idx=jnp.zeros(c, jnp.int32),
@@ -468,17 +589,47 @@ def _build_race(spec: ScanPolicy, params, capacity: int, n_quanta: int,
             admit_q=jnp.full(j_pad, -1, jnp.int32),
             finish_q=jnp.full(j_pad, jnp.inf, jnp.float32),
         )
-        fn = functools.partial(body, dt, job_pool, job_arrive, job_target,
-                               syn_cost, syn_mean, syn_stacks, mkey)
-        final, ys = lax.scan(
-            fn, carry0, jnp.arange(n_quanta, dtype=jnp.int32)
-        )
+        fc = _FaultCarry(
+            retries=jnp.zeros(j_pad, jnp.int32),
+            retry_at=jnp.full(j_pad, RETRY_NEVER, jnp.int32),
+            saved=jnp.zeros(j_pad, jnp.float32),
+        ) if faults else None
+        return (ocarry, fc)
+
+    def unpack(final, ys):
+        ocarry, fcarry = final
+        res = (ocarry.admit_q, ocarry.finish_q) + ys[:3]
+        if faults:
+            res = res + (fcarry.retries, fcarry.retry_at) + ys[3:5]
         if telemetry:
-            queue_depth, n_active, n_solo, tlm = ys
-            return (final.admit_q, final.finish_q, queue_depth, n_active,
-                    n_solo, tlm)
-        queue_depth, n_active, n_solo = ys
-        return final.admit_q, final.finish_q, queue_depth, n_active, n_solo
+            res = res + (ys[-1],)
+        return res
+
+    if segment:
+        @jax.jit
+        def race_seg(dt: DeviceTables, job_pool, job_arrive, job_target,
+                     syn_cost, syn_mean, syn_stacks, mkey, fup, fspeed,
+                     carry_t, q0):
+            fn = functools.partial(body, dt, job_pool, job_arrive,
+                                   job_target, syn_cost, syn_mean,
+                                   syn_stacks, mkey, fup, fspeed)
+            final, ys = lax.scan(
+                fn, carry_t, q0 + jnp.arange(n_quanta, dtype=jnp.int32)
+            )
+            return final, ys
+
+        return race_seg
+
+    @jax.jit
+    def race(dt: DeviceTables, job_pool, job_arrive, job_target, syn_cost,
+             syn_mean, syn_stacks, mkey, fup=None, fspeed=None):
+        fn = functools.partial(body, dt, job_pool, job_arrive, job_target,
+                               syn_cost, syn_mean, syn_stacks, mkey,
+                               fup, fspeed)
+        final, ys = lax.scan(
+            fn, carry0(), jnp.arange(n_quanta, dtype=jnp.int32)
+        )
+        return unpack(final, ys)
 
     return race
 
@@ -495,11 +646,94 @@ _RACE_CACHE_MAX = 16
 
 
 def _race_key(spec: ScanPolicy, capacity: int, n_quanta: int, j_pad: int,
-              admission: str, telemetry: bool = False) -> Tuple:
+              admission: str, telemetry: bool = False,
+              faults_cfg: Optional[Tuple[int, int, bool]] = None,
+              segment: bool = False) -> Tuple:
     return (
         spec.kind, id(spec.method), id(spec.model), spec.pair_impl,
         spec.solver, spec.matcher, spec.refine_eps, spec.refine_rounds,
         spec.first_match, capacity, n_quanta, j_pad, admission, telemetry,
+        faults_cfg, segment,
+    )
+
+
+def _prepare_inputs(sim, n_quanta: int):
+    """Host-side prologue shared by the one-dispatch and checkpointed
+    runners: pre-sample arrivals (and the fault schedule when the sim
+    carries a FaultProfile), build the flat job arrays and the synergy
+    tables.  Everything returned is plain numpy — committed to device by
+    the caller."""
+    machine = sim.machine
+    pool = sim.pool
+    with obs_trace.span("device_sim.presample", quanta=n_quanta):
+        rng_arr = np.random.default_rng(sim.seed + 4242)
+        arrive_q, pids = presample(sim.arrivals, n_quanta, rng_arr)
+    j = int(pids.size)
+    # Jobs pad to the next power of two so re-runs of the same cell — and
+    # nearby traffic levels — reuse the compiled race.
+    j_pad = max(8, 1 << (j - 1).bit_length()) if j else 8
+    pool_target = np.array(
+        [machine.target_instructions(pr) for pr in pool]
+    ) * sim.target_scale
+    pool_rate = np.array([machine.solo_retire_rate(pr) for pr in pool])
+    job_pool = np.zeros(j_pad, np.int32)
+    job_arrive = np.full(j_pad, n_quanta, np.int32)  # padding never arrives
+    job_target = np.full(j_pad, np.inf, np.float32)
+    if j:
+        job_pool[:j] = pids
+        job_arrive[:j] = arrive_q
+        job_target[:j] = pool_target[pids]
+    n_apps = sim.tables.n_apps
+    if sim.admission == "synergy":
+        syn_cost = np.asarray(sim.synergy.pool_cost, np.float32)
+        syn_mean = np.asarray(sim.synergy.mean_cost, np.float32)
+        syn_stacks = np.asarray(sim.synergy.stacks, np.float32)
+    else:
+        syn_cost = np.zeros((n_apps, n_apps), np.float32)
+        syn_mean = np.zeros(n_apps, np.float32)
+        syn_stacks = np.zeros((n_apps, isc.N_CATS), np.float32)
+    faults = getattr(sim, "faults", None)
+    if faults is not None:
+        sched = faults.schedule(n_quanta, sim.n_cores, sim.seed)
+        fcfg = faults.static_config
+        fup = sched.ctx_up()
+        fspeed = sched.ctx_speed()
+    else:
+        sched, fcfg, fup, fspeed = None, None, None, None
+    return dict(
+        arrive_q=arrive_q, pids=pids, j=j, j_pad=j_pad,
+        pool_rate=pool_rate, job_pool=job_pool, job_arrive=job_arrive,
+        job_target=job_target, syn_cost=syn_cost, syn_mean=syn_mean,
+        syn_stacks=syn_stacks, faults=faults, sched=sched, fcfg=fcfg,
+        fup=fup, fspeed=fspeed,
+    )
+
+
+def _check_conservation(prep, n_quanta, admit, finish, retries, retry_at):
+    """The job-conservation invariant of a faulted run: every *arrived*
+    job is exactly one of completed / in flight / queued / waiting out a
+    retry backoff / dropped — no duplicates, no losses.  Cheap (a few
+    masks over the job log), so the engine asserts it on every fetch
+    rather than leaving it to the property tests."""
+    j = prep["j"]
+    if not j:
+        return
+    max_retries = prep["fcfg"][0]
+    admit = admit[:j]
+    finish = finish[:j]
+    retries = retries[:j]
+    retry_at = retry_at[:j]
+    completed = np.isfinite(finish)
+    waiting = retry_at < int(RETRY_NEVER)
+    dropped = retries > max_retries
+    queued = admit < 0
+    in_flight = (~completed) & (~waiting) & (~dropped) & (~queued)
+    states = (completed.astype(int) + waiting.astype(int)
+              + dropped.astype(int) + queued.astype(int)
+              + in_flight.astype(int))
+    assert (states == 1).all(), (
+        "job-conservation violation: some job is in "
+        f"{int((states != 1).sum())} states"
     )
 
 
@@ -537,43 +771,24 @@ def run_device_sim(sim, n_quanta: int, repeats: int = 1,
     pool = sim.pool
     tables = sim.tables
 
-    # Pre-sample the arrival stream (bit-identical to the host run).
-    with obs_trace.span("device_sim.presample", quanta=n_quanta):
-        rng_arr = np.random.default_rng(sim.seed + 4242)
-        arrive_q, pids = presample(sim.arrivals, n_quanta, rng_arr)
-    j = int(pids.size)
-    # Jobs pad to the next power of two so re-runs of the same cell — and
-    # nearby traffic levels — reuse the compiled race.
-    j_pad = max(8, 1 << (j - 1).bit_length()) if j else 8
-    pool_target = np.array(
-        [machine.target_instructions(pr) for pr in pool]
-    ) * sim.target_scale
-    pool_rate = np.array([machine.solo_retire_rate(pr) for pr in pool])
-    job_pool = np.zeros(j_pad, np.int32)
-    job_arrive = np.full(j_pad, n_quanta, np.int32)  # padding never arrives
-    job_target = np.full(j_pad, np.inf, np.float32)
-    if j:
-        job_pool[:j] = pids
-        job_arrive[:j] = arrive_q
-        job_target[:j] = pool_target[pids]
-    n_apps = tables.n_apps
-    if sim.admission == "synergy":
-        syn_cost = np.asarray(sim.synergy.pool_cost, np.float32)
-        syn_mean = np.asarray(sim.synergy.mean_cost, np.float32)
-        syn_stacks = np.asarray(sim.synergy.stacks, np.float32)
-    else:
-        syn_cost = np.zeros((n_apps, n_apps), np.float32)
-        syn_mean = np.zeros(n_apps, np.float32)
-        syn_stacks = np.zeros((n_apps, isc.N_CATS), np.float32)
+    # Pre-sample arrivals (and any fault schedule) — bit-identical to the
+    # host run of the same seed.
+    prep = _prepare_inputs(sim, n_quanta)
+    j, j_pad = prep["j"], prep["j_pad"]
+    arrive_q, pids = prep["arrive_q"], prep["pids"]
+    job_target, pool_rate = prep["job_target"], prep["pool_rate"]
+    fcfg = prep["fcfg"]
+    faulted = fcfg is not None
 
-    key = _race_key(spec, c, n_quanta, j_pad, sim.admission, telemetry)
+    key = _race_key(spec, c, n_quanta, j_pad, sim.admission, telemetry,
+                    fcfg)
     ent = _RACE_CACHE.get(key)
     if ent is None:
         with obs_trace.span("device_sim.compile_build", capacity=c,
                             quanta=n_quanta, telemetry=telemetry):
             ent = (spec.method, spec.model, _build_race(
                 spec, params, c, n_quanta, j_pad, sim.admission,
-                telemetry=telemetry,
+                telemetry=telemetry, faults_cfg=fcfg,
             ))
         _RACE_CACHE[key] = ent
         while len(_RACE_CACHE) > _RACE_CACHE_MAX:
@@ -586,14 +801,21 @@ def run_device_sim(sim, n_quanta: int, repeats: int = 1,
         dt = jax.device_put(DeviceTables.build(tables))
         args = (
             dt,
-            jax.device_put(jnp.asarray(job_pool)),
-            jax.device_put(jnp.asarray(job_arrive)),
-            jax.device_put(jnp.asarray(job_target)),
-            jax.device_put(jnp.asarray(syn_cost)),
-            jax.device_put(jnp.asarray(syn_mean)),
-            jax.device_put(jnp.asarray(syn_stacks)),
+            jax.device_put(jnp.asarray(prep["job_pool"])),
+            jax.device_put(jnp.asarray(prep["job_arrive"])),
+            jax.device_put(jnp.asarray(prep["job_target"])),
+            jax.device_put(jnp.asarray(prep["syn_cost"])),
+            jax.device_put(jnp.asarray(prep["syn_mean"])),
+            jax.device_put(jnp.asarray(prep["syn_stacks"])),
             jax.device_put(jax.random.PRNGKey(sim.seed)),
         )
+        if faulted:
+            # The schedule ships once with the inputs (faults are data);
+            # the scan indexes it per quantum on device.
+            args = args + (
+                jax.device_put(jnp.asarray(prep["fup"])),
+                jax.device_put(jnp.asarray(prep["fspeed"])),
+            )
     out = None
     if warmup:
         with obs_trace.span("device_sim.compile"):
@@ -612,10 +834,14 @@ def run_device_sim(sim, n_quanta: int, repeats: int = 1,
 
     with obs_trace.span("device_sim.fetch"):
         fetched = tuple(np.asarray(o) for o in out)
+    admit, finish, queue_depth, n_active, n_solo = fetched[:5]
+    retries = retry_at = evictions = requeues = None
+    if faulted:
+        retries, retry_at, evictions, requeues = fetched[5:9]
+        _check_conservation(prep, n_quanta, admit, finish, retries,
+                            retry_at)
     if telemetry:
-        admit, finish, queue_depth, n_active, n_solo, tlm = fetched
-    else:
-        admit, finish, queue_depth, n_active, n_solo = fetched
+        tlm = fetched[-1]
     solo_s = (
         job_target[:j] / pool_rate[pids] * params.quantum_s
         if j else np.zeros(0)
@@ -636,13 +862,274 @@ def run_device_sim(sim, n_quanta: int, repeats: int = 1,
             active=n_active,
             policy_s=np.full(n_quanta, per_quantum),
             solo_quanta=n_solo,
+            retries=retries[:j] if faulted else None,
         )
+    if faulted:
+        _attach_fault_stats(stats, prep, retries, retry_at, evictions,
+                            requeues)
     if telemetry:
         # The in-graph ring leaves the departures column zero (counting
         # ``done`` in-graph would perturb the quantum's float fusion and
         # break telemetry-off bit-identity); fill it here from the
-        # reconstructed traffic timeline so the ring is complete.
+        # reconstructed traffic timeline so the ring is complete.  The
+        # fault columns are filled the same way: schedule data plus the
+        # integer eviction/requeue counts off the ``ys``.
         tlm = np.array(tlm)
         tlm[:, OPEN_FIELDS.index("departures")] = stats.departures
+        if faulted:
+            for nm in ("failures", "recoveries", "evictions", "requeues",
+                       "straggling"):
+                tlm[:, OPEN_FIELDS.index(nm)] = getattr(stats, nm)
+        stats.telemetry = TelemetryLog(OPEN_FIELDS, tlm, policy=name)
+    return stats
+
+
+def _attach_fault_stats(stats: OnlineStats, prep, retries, retry_at,
+                        evictions, requeues) -> None:
+    """Fill the fault timelines/scalars of a device run's stats from the
+    fetched job logs and the (host-side) fault schedule."""
+    sched = prep["sched"]
+    j = prep["j"]
+    max_retries = prep["fcfg"][0]
+    stats.failures = sched.failures()
+    stats.recoveries = sched.recoveries()
+    stats.straggling = sched.straggling()
+    stats.evictions = np.asarray(evictions, np.float64)
+    stats.requeues = np.asarray(requeues, np.float64)
+    stats.n_dropped = int((retries[:j] > max_retries).sum()) if j else 0
+    stats.n_retry_waiting = int(
+        (retry_at[:j] < int(RETRY_NEVER)).sum()
+    ) if j else 0
+    # In flight = admitted but neither completed, dropped, nor waiting —
+    # the residual of the conservation partition checked on fetch.
+    stats.n_in_flight = (stats.n_admitted - stats.n_completed
+                         - stats.n_dropped - stats.n_retry_waiting)
+
+
+def _host_carry0(spec: ScanPolicy, capacity: int, j_pad: int, faults_cfg):
+    """The initial scan carry, built host-side for the segmented runner
+    (the one-dispatch race constructs the identical carry inside jit)."""
+    c = capacity
+    p = fused_pad(c)
+    ncat = spec.method.n_categories if spec.kind == "synpa" else 4
+    ocarry = _OpenCarry(
+        app_id=jnp.full(c, -1, jnp.int32),
+        job_at=jnp.full(c, -1, jnp.int32),
+        phase_idx=jnp.zeros(c, jnp.int32),
+        phase_left=jnp.zeros(c, jnp.float32),
+        progress=jnp.zeros(c, jnp.float32),
+        target=jnp.full(c, jnp.inf, jnp.float32),
+        head=jnp.int32(0),
+        counters=jnp.zeros((c, 5), jnp.float32),
+        ran=jnp.zeros(c, bool),
+        partner_prev=jnp.arange(c, dtype=jnp.int32),
+        mpart=jnp.arange(p, dtype=jnp.int32),
+        st=jnp.tile(jnp.asarray(isc.uniform_stack(ncat))[None, :], (c, 1)),
+        admit_q=jnp.full(j_pad, -1, jnp.int32),
+        finish_q=jnp.full(j_pad, jnp.inf, jnp.float32),
+    )
+    fc = _FaultCarry(
+        retries=jnp.zeros(j_pad, jnp.int32),
+        retry_at=jnp.full(j_pad, RETRY_NEVER, jnp.int32),
+        saved=jnp.zeros(j_pad, jnp.float32),
+    ) if faults_cfg is not None else None
+    return (ocarry, fc)
+
+
+def run_device_sim_checkpointed(sim, n_quanta: int, seg_len: int,
+                                ckpt_dir: str, keep: int = 3,
+                                resume: bool = True,
+                                telemetry: bool = False,
+                                max_segments: Optional[int] = None
+                                ) -> Optional[OnlineStats]:
+    """Device run with checkpoint/resume: the horizon is scanned in
+    ``n_quanta / seg_len`` segments, snapshotting the full scan carry (and
+    the accumulated per-quantum outputs) through ``repro.checkpoint`` at
+    every segment boundary.  A run killed between segments resumes from
+    the newest valid snapshot (corrupt/partial ones are skipped and
+    removed by the manager) and finishes **bit-identical** to the same
+    segmented run left uninterrupted: the fault schedule and job arrays
+    are pure functions of the seed, and the RNG streams are keyed per
+    (context, quantum) — position in the horizon, not position in the
+    process lifetime.  Against :func:`run_device_sim` the integer
+    timelines match exactly and f32 finish times to rounding (~1 ulp):
+    the segment race is a *different compiled program*, so XLA's
+    fusion/FMA choices may differ.
+
+    The trade against :func:`run_device_sim` is dispatch count: one
+    dispatch and one host round-trip *per segment* (the checkpoint write
+    is host I/O by definition), so this is the long-horizon/preemptible
+    mode, not the benchmark mode.  ``n_quanta`` must divide evenly into
+    segments — padding jobs carry ``arrive_q == n_quanta``, so a segment
+    scanning past the horizon would spuriously admit them.
+
+    ``max_segments`` stops after that many segments *this call* and
+    returns None (the interrupted-run hook the resume tests use);
+    ``resume=False`` ignores existing snapshots and restarts from
+    quantum 0.
+    """
+    from repro.checkpoint import CheckpointManager
+
+    machine = sim.machine
+    spec: ScanPolicy = sim.policy
+    assert spec.kind in DEVICE_SIM_KINDS, spec.kind
+    assert seg_len > 0 and n_quanta % seg_len == 0, (
+        f"horizon {n_quanta} must be a whole number of segments "
+        f"(seg_len={seg_len})"
+    )
+    params = machine.params
+    c = sim.capacity
+    pool = sim.pool
+    prep = _prepare_inputs(sim, n_quanta)
+    j, j_pad = prep["j"], prep["j_pad"]
+    fcfg = prep["fcfg"]
+    faulted = fcfg is not None
+
+    key = _race_key(spec, c, seg_len, j_pad, sim.admission, telemetry,
+                    fcfg, segment=True)
+    ent = _RACE_CACHE.get(key)
+    if ent is None:
+        with obs_trace.span("device_sim.compile_build", capacity=c,
+                            quanta=seg_len, segment=True):
+            ent = (spec.method, spec.model, _build_race(
+                spec, params, c, seg_len, j_pad, sim.admission,
+                telemetry=telemetry, faults_cfg=fcfg, segment=True,
+            ))
+        _RACE_CACHE[key] = ent
+        while len(_RACE_CACHE) > _RACE_CACHE_MAX:
+            _RACE_CACHE.popitem(last=False)
+    else:
+        _RACE_CACHE.move_to_end(key)
+    race = ent[2]
+
+    with obs_trace.span("device_sim.commit"):
+        dt = jax.device_put(DeviceTables.build(sim.tables))
+        args = (
+            dt,
+            jax.device_put(jnp.asarray(prep["job_pool"])),
+            jax.device_put(jnp.asarray(prep["job_arrive"])),
+            jax.device_put(jnp.asarray(prep["job_target"])),
+            jax.device_put(jnp.asarray(prep["syn_cost"])),
+            jax.device_put(jnp.asarray(prep["syn_mean"])),
+            jax.device_put(jnp.asarray(prep["syn_stacks"])),
+            jax.device_put(jax.random.PRNGKey(sim.seed)),
+            None if not faulted else jax.device_put(
+                jnp.asarray(prep["fup"])
+            ),
+            None if not faulted else jax.device_put(
+                jnp.asarray(prep["fspeed"])
+            ),
+        )
+
+    ys_names = ["queue_depth", "n_active", "n_solo"]
+    if faulted:
+        ys_names += ["evictions", "requeues"]
+    if telemetry:
+        ys_names += ["telemetry"]
+
+    mgr = CheckpointManager(ckpt_dir, keep=keep)
+    # The config fingerprint a snapshot must match to be resumable —
+    # refuse-don't-migrate, like every recorded artefact in this repo.
+    meta_want = {
+        "n_quanta": int(n_quanta), "seg_len": int(seg_len),
+        "seed": int(sim.seed), "capacity": int(c), "j_pad": int(j_pad),
+        "admission": sim.admission, "kind": spec.kind,
+        "telemetry": bool(telemetry), "faulted": bool(faulted),
+    }
+    carry = _host_carry0(spec, c, j_pad, fcfg)
+    ys_acc = {nm: [] for nm in ys_names}
+    q0 = 0
+    if resume:
+        step, nested, meta = mgr.restore_latest()
+        if step is not None:
+            got = {k: meta.get(k) for k in meta_want}
+            assert got == meta_want, (
+                f"checkpoint config mismatch under {ckpt_dir}: "
+                f"{got} vs {meta_want}"
+            )
+            oc = _OpenCarry(**{
+                k: jnp.asarray(v) for k, v in nested["ocarry"].items()
+            })
+            fc = _FaultCarry(**{
+                k: jnp.asarray(v) for k, v in nested["fcarry"].items()
+            }) if faulted else None
+            carry = (oc, fc)
+            ys_acc = {
+                nm: [np.asarray(nested["ys"][nm])] for nm in ys_names
+            }
+            q0 = step
+
+    t0 = time.perf_counter()
+    segs_run = 0
+    while q0 < n_quanta:
+        if max_segments is not None and segs_run >= max_segments:
+            return None          # interrupted on purpose; resume later
+        with obs_trace.span("device_sim.dispatch", q0=q0, segment=True):
+            final, ys = race(*args, carry, jnp.int32(q0))
+            final = jax.block_until_ready(final)
+        carry = final
+        for nm, y in zip(ys_names, ys):
+            ys_acc[nm].append(np.asarray(y))
+        q0 += seg_len
+        segs_run += 1
+        tree = {
+            "ocarry": {k: np.asarray(v)
+                       for k, v in final[0]._asdict().items()},
+            "ys": {nm: np.concatenate(ys_acc[nm], axis=0)
+                   for nm in ys_names},
+        }
+        if faulted:
+            tree["fcarry"] = {
+                k: np.asarray(v) for k, v in final[1]._asdict().items()
+            }
+        with obs_trace.span("device_sim.checkpoint", step=q0):
+            mgr.save(q0, tree, meta=meta_want)
+    wall = time.perf_counter() - t0
+    per_quantum = wall / max(segs_run * seg_len, 1)
+
+    ocarry, fcarry = carry
+    admit = np.asarray(ocarry.admit_q)
+    finish = np.asarray(ocarry.finish_q)
+    series = {nm: np.concatenate(ys_acc[nm], axis=0) for nm in ys_names}
+    retries = retry_at = None
+    if faulted:
+        retries = np.asarray(fcarry.retries)
+        retry_at = np.asarray(fcarry.retry_at)
+        _check_conservation(prep, n_quanta, admit, finish, retries,
+                            retry_at)
+    arrive_q, pids = prep["arrive_q"], prep["pids"]
+    job_target, pool_rate = prep["job_target"], prep["pool_rate"]
+    solo_s = (
+        job_target[:j] / pool_rate[pids] * params.quantum_s
+        if j else np.zeros(0)
+    )
+    name = spec.name or f"scan-{spec.kind}"
+    with obs_trace.span("device_sim.stats"):
+        stats = OnlineStats.from_device_logs(
+            policy_name=name,
+            quantum_s=params.quantum_s,
+            quanta=n_quanta,
+            app_names=[pool[int(pid)].name for pid in pids],
+            arrive_q=arrive_q,
+            admit_q=admit[:j],
+            finish_q=finish[:j],
+            targets=job_target[:j],
+            solo_s=solo_s,
+            queue_depth=series["queue_depth"],
+            active=series["n_active"],
+            policy_s=np.full(n_quanta, per_quantum),
+            solo_quanta=series["n_solo"],
+            retries=retries[:j] if faulted else None,
+        )
+    if faulted:
+        _attach_fault_stats(stats, prep, retries, retry_at,
+                            series["evictions"], series["requeues"])
+    if telemetry:
+        tlm = np.array(series["telemetry"])
+        tlm[:, OPEN_FIELDS.index("departures")] = stats.departures
+        if faulted:
+            for nm in ("failures", "recoveries", "evictions", "requeues",
+                       "straggling"):
+                tlm[:, OPEN_FIELDS.index(nm)] = getattr(stats, nm)
         stats.telemetry = TelemetryLog(OPEN_FIELDS, tlm, policy=name)
     return stats

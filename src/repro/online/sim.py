@@ -21,8 +21,10 @@ from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.ft import HeartbeatMonitor, StragglerDetector
 from repro.obs import trace as obs_trace
 from repro.online.arrivals import ArrivalProcess
+from repro.online.faults import FaultProfile
 from repro.smt.apps import AppProfile
 from repro.smt.machine import PhaseTables, SMTMachine, _VectorState
 from repro.smt.metrics import JobRecord, OnlineStats
@@ -54,6 +56,15 @@ class ClusterSim:
                must then be a :class:`repro.smt.scan_engine.ScanPolicy`
                of a supported kind, and ``run`` accepts ``repeats`` /
                ``transfer_guard``.
+    faults:    optional :class:`repro.online.faults.FaultProfile` — core
+               failure/recovery and straggler events, pre-sampled like
+               arrivals and shared bit-identically by both engines.  The
+               host loop *detects* faults through the ``repro.ft``
+               heartbeat/straggler state machines (the schedule drives
+               beats, the monitor drives evictions); the device engine
+               consumes the same schedule as masks.  Requires FIFO
+               admission (synergy placement across a failing membership
+               is future work — see ``docs/resilience.md``).
     """
 
     def __init__(
@@ -69,8 +80,14 @@ class ClusterSim:
         admission: str = "fifo",
         synergy=None,
         engine: str = "host",
+        faults: Optional[FaultProfile] = None,
     ):
         assert n_cores >= 1
+        assert faults is None or admission == "fifo", (
+            "fault injection requires admission='fifo' (synergy placement "
+            "across a failing membership is out of scope; docs/resilience.md)"
+        )
+        self.faults = faults
         self.machine = machine
         self.pool = list(pool)
         self.n_cores = n_cores
@@ -161,6 +178,32 @@ class ClusterSim:
         admissions_t = np.zeros(n_quanta)
         departures_t = np.zeros(n_quanta)
 
+        # Fault machinery: the pre-sampled schedule is ground truth shared
+        # with the device engine; *detection* runs through the ``repro.ft``
+        # state machines on a quantum-index clock (a live core beats once
+        # per quantum, so one quantum of silence exceeds timeout_s=0.5 and
+        # the monitor's newly-dead verdict drives eviction).
+        sched = None
+        if self.faults is not None:
+            fp = self.faults
+            sched = fp.schedule(n_quanta, self.n_cores, self.seed)
+            ctx_up = sched.ctx_up()
+            ctx_speed = sched.ctx_speed()
+            core_names = [f"core{k}" for k in range(self.n_cores)]
+            core_idx = {nm: k for k, nm in enumerate(core_names)}
+            hb = HeartbeatMonitor(list(core_names), timeout_s=0.5)
+            for nm in core_names:
+                hb.admit(nm, now=-1.0)      # rebase onto the quantum clock
+            sdet = StragglerDetector(list(core_names), patience=3)
+            retry_pool: Dict[int, int] = {}    # job_id -> eligible quantum
+            saved_prog: Dict[int, float] = {}  # job_id -> progress to restore
+            n_dropped = 0
+            failures_t = np.zeros(n_quanta)
+            recoveries_t = np.zeros(n_quanta)
+            evictions_t = np.zeros(n_quanta)
+            requeues_t = np.zeros(n_quanta)
+            straggler_flags_t = np.zeros(n_quanta)
+
         for q in range(n_quanta):
             # 1. Arrivals enter the queue (per-pool targets precomputed in
             # __init__ — the record build is O(1) per job).
@@ -178,6 +221,88 @@ class ClusterSim:
                 pool_of.append(pid)
                 queue.append(rec)
 
+            # 1b. Fault transitions.  The schedule drives heartbeats; the
+            # monitor's newly-dead verdict drives evictions — detection
+            # semantics live in ``repro.ft``, this loop only relays beats
+            # (and the invariant below proves verdict == schedule).
+            arrived_slots: List[int] = []
+            hints: Dict[int, np.ndarray] = {}
+            avail = app_id < 0
+            if sched is not None:
+                upq = ctx_up[q]
+                for k, nm in enumerate(core_names):
+                    if sched.up[q, k]:
+                        if nm in hb.dead:
+                            hb.admit(nm, now=float(q))   # recovery rejoin
+                            recoveries_t[q] += 1
+                        else:
+                            hb.beat(nm, now=float(q))
+                newly_dead = hb.check(now=float(q))
+                failures_t[q] = len(newly_dead)
+                for nm in sorted(newly_dead, key=core_idx.get):
+                    kc = core_idx[nm]
+                    for s in (2 * kc, 2 * kc + 1):
+                        if app_id[s] < 0:
+                            continue
+                        jid = int(job_at[s])
+                        rec = records[jid]
+                        rec.retries += 1
+                        evictions_t[q] += 1
+                        if rec.retries > fp.max_retries:
+                            n_dropped += 1   # work lost — counted, not hidden
+                        else:
+                            retry_pool[jid] = q + fp.backoff_quanta
+                            saved_prog[jid] = (
+                                float(st.progress[s])
+                                if fp.preserve_progress else 0.0
+                            )
+                        app_id[s] = -1
+                        job_at[s] = -1
+                        # Fault churn is departure churn to the allocator.
+                        pending_departed.append(s)
+                if pending_departed:
+                    gone = set(pending_departed)
+                    prev_pairs = [p for p in prev_pairs
+                                  if not (p[0] in gone and p[1] in gone)]
+                    if prev_solo in gone:
+                        prev_solo = None
+                assert (app_id[~upq] < 0).all(), (
+                    "heartbeat detection must evict every job on a down core"
+                )
+                flagged = sdet.observe({
+                    nm: 1.0 / float(sched.speed[q, k])
+                    for k, nm in enumerate(core_names) if sched.up[q, k]
+                })
+                straggler_flags_t[q] = len(flagged)
+                avail = (app_id < 0) & upq
+
+                # 2a. Retry re-admission before the fresh queue: eligible
+                # victims enter ascending job id into the lowest free up
+                # contexts (the device engine's rank-matching scatter
+                # implements the same order).
+                elig = sorted(j for j, at in retry_pool.items() if at <= q)
+                (free,) = np.nonzero(avail)
+                k = min(len(elig), int(free.size))
+                if k:
+                    slots = free[:k]
+                    jids = np.array(elig[:k], np.int64)
+                    pids = np.array([pool_of[j] for j in jids], np.int64)
+                    app_id[slots] = pids
+                    job_at[slots] = jids
+                    st.phase_idx[slots] = 0          # phase state was lost
+                    st.phase_left[slots] = self._pool_dur0[pids]
+                    st.progress[slots] = [saved_prog[int(j)] for j in jids]
+                    st.target[slots] = self._pool_target[pids]
+                    st.first_finish_q[slots] = np.inf
+                    # total_retired/total_cycles keep accumulating across
+                    # retries: they meter machine work spent, not progress.
+                    for j in jids:
+                        del retry_pool[int(j)]
+                        saved_prog.pop(int(j), None)
+                    arrived_slots.extend(int(s) for s in slots)
+                    requeues_t[q] = k
+                    avail[slots] = False
+
             # 2. Admission: FIFO dequeue into free contexts.  "fifo" takes
             # the k lowest free slots in one batch; "synergy" places each
             # job on the free context with the best predicted co-runner
@@ -188,10 +313,8 @@ class ClusterSim:
             # write per field, so the bookkeeping stays array work per
             # admission batch — the host tier remains a usable parity
             # oracle past N=4096 under high churn.
-            arrived_slots: List[int] = []
-            hints: Dict[int, np.ndarray] = {}
             if queue:
-                (free,) = np.nonzero(app_id < 0)
+                (free,) = np.nonzero(avail)
                 k = min(len(queue), int(free.size))
                 recs = [queue.popleft() for _ in range(k)]
                 pids = np.array(
@@ -223,7 +346,7 @@ class ClusterSim:
                     st.total_cycles[slots] = 0.0
                     for rec in recs:
                         rec.admit_q = q
-                    arrived_slots = [int(s) for s in slots]
+                    arrived_slots.extend(int(s) for s in slots)
                 admissions_t[q] = k
 
             (active,) = np.nonzero(app_id >= 0)
@@ -265,6 +388,7 @@ class ClusterSim:
                     np.asarray(pairs, np.int64).reshape(-1, 2),
                     np.asarray([] if solo is None else [solo], np.int64),
                     rng, q,
+                    speed=None if sched is None else ctx_speed[q],
                 )
             ran[:] = False
             ran[np.asarray(scheduled, np.int64)] = True
@@ -295,7 +419,7 @@ class ClusterSim:
                 if prev_solo in gone:
                     prev_solo = None
 
-        return OnlineStats(
+        stats = OnlineStats(
             policy_name=getattr(self.policy, "name", "policy"),
             quantum_s=quantum_s,
             quanta=n_quanta,
@@ -310,3 +434,23 @@ class ClusterSim:
             admissions=admissions_t,
             departures=departures_t,
         )
+        if sched is not None:
+            n_in_flight = int((app_id >= 0).sum())
+            n_waiting = len(retry_pool)
+            # Job conservation: every arrival is exactly one of queued,
+            # in flight, completed, dropped, or waiting out a backoff.
+            assert len(records) == (len(queue) + n_in_flight + len(completed)
+                                    + n_dropped + n_waiting), (
+                len(records), len(queue), n_in_flight, len(completed),
+                n_dropped, n_waiting,
+            )
+            stats.failures = failures_t
+            stats.recoveries = recoveries_t
+            stats.evictions = evictions_t
+            stats.requeues = requeues_t
+            stats.straggling = sched.straggling()
+            stats.straggler_flags = straggler_flags_t
+            stats.n_dropped = n_dropped
+            stats.n_retry_waiting = n_waiting
+            stats.n_in_flight = n_in_flight
+        return stats

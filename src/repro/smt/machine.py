@@ -705,6 +705,7 @@ class SMTMachine:
         solo: np.ndarray,
         rng: np.random.Generator,
         q: int,
+        speed: Optional[np.ndarray] = None,
     ) -> Tuple[np.ndarray, np.ndarray]:
         """One quantum of an *open* system (the ``repro.online`` subsystem).
 
@@ -719,7 +720,12 @@ class SMTMachine:
         st:      per-slot :class:`_VectorState`; ``target`` holds absolute
                  retired-instruction targets (departure, not relaunch);
         pairs:   (K, 2) slot pairs sharing a core this quantum;
-        solo:    (S,) slots running alone this quantum.
+        solo:    (S,) slots running alone this quantum;
+        speed:   optional (C,) per-slot capability multiplier (straggler
+                 cores, ``repro.online.faults``): retired instructions
+                 scale by it, PMU counters and interference do not — the
+                 model is a clock-throttled core.  ``None`` (the default)
+                 is the nominal machine, not a multiply-by-one.
 
         Returns ``(counters, finished)``: the (C, 5) PMU counter matrix
         (rows of inactive slots are zero) and a (C,) bool mask of slots whose
@@ -765,6 +771,8 @@ class SMTMachine:
         # Instruction advance + departure bookkeeping (no relaunch).
         cpi = comps[active].sum(axis=-1)
         retired = self.params.quantum_cycles / cpi * tables.retire[aid]
+        if speed is not None:
+            retired = retired * np.asarray(speed, np.float64)[active]
         before = st.progress[active]
         after = before + retired
         st.progress[active] = after

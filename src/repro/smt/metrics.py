@@ -101,6 +101,7 @@ class JobRecord:
     finish_q: float                 # fractional quantum it completed (inf if not)
     target: float                   # retired-instruction target
     solo_s: float                   # solo execution time for the same target
+    retries: int = 0                # fault evictions survived (repro.online.faults)
 
     def turnaround_s(self, quantum_s: float) -> float:
         return (self.finish_q - self.arrive_q) * quantum_s
@@ -156,6 +157,44 @@ class OnlineStats:
     #: Device telemetry ring (``repro.obs.telemetry.TelemetryLog``) when
     #: the run was launched with ``telemetry=True``; None otherwise.
     telemetry: Optional[object] = None
+    #: Fault/resilience timelines + scalars (``repro.online.faults``); all
+    #: None / 0 when the run had no FaultProfile.  failures/recoveries/
+    #: straggling are fault-schedule data (identical on both engines by
+    #: construction); evictions/requeues are counted by the engines.
+    failures: Optional[np.ndarray] = None     # (Q,) cores newly down
+    recoveries: Optional[np.ndarray] = None   # (Q,) cores newly up
+    evictions: Optional[np.ndarray] = None    # (Q,) jobs evicted
+    requeues: Optional[np.ndarray] = None     # (Q,) retry re-admissions
+    straggling: Optional[np.ndarray] = None   # (Q,) degraded up cores
+    #: Host-engine detector diagnostics: per-quantum count of cores the
+    #: ``repro.ft.StragglerDetector`` EWMA state machine currently flags.
+    #: Host oracle only (the device engine has no EWMA state) — None there.
+    straggler_flags: Optional[np.ndarray] = None
+    n_dropped: int = 0              # jobs that exhausted max_retries
+    n_retry_waiting: int = 0        # jobs in retry backoff at horizon end
+    n_in_flight: int = 0            # jobs still on a context at horizon end
+
+    @property
+    def n_evicted(self) -> int:
+        return int(self.evictions.sum()) if self.evictions is not None else 0
+
+    @property
+    def n_requeued(self) -> int:
+        return int(self.requeues.sum()) if self.requeues is not None else 0
+
+    @property
+    def has_faults(self) -> bool:
+        return self.evictions is not None
+
+    def retry_ccdf(self) -> Tuple[np.ndarray, np.ndarray]:
+        """CCDF of retries over completed jobs: ``P[retries > k]`` for
+        k = 0..max observed (the requeue tail of a fault profile)."""
+        r = np.array([j.retries for j in self.completed], np.int64)
+        hi = int(r.max()) if r.size else 0
+        grid = np.arange(hi + 1, dtype=np.float64)
+        if r.size == 0:
+            return grid, np.zeros_like(grid)
+        return grid, (r[None, :] > grid[:, None]).mean(axis=1)
 
     # ------------------------------------------------------------- scalars
     @property
@@ -221,7 +260,9 @@ class OnlineStats:
             "active": np.asarray(self.active),
             "solo_quanta": np.asarray(self.solo_quanta),
         }
-        for name in ("arrivals", "admissions", "departures"):
+        for name in ("arrivals", "admissions", "departures", "failures",
+                     "recoveries", "evictions", "requeues", "straggling",
+                     "straggler_flags"):
             v = getattr(self, name)
             if v is not None:
                 out[name] = np.asarray(v)
@@ -247,6 +288,7 @@ class OnlineStats:
         active: np.ndarray,
         policy_s: np.ndarray,
         solo_quanta: np.ndarray,
+        retries: Optional[np.ndarray] = None,
     ) -> "OnlineStats":
         """Reconstruct the per-run stats from a device run's flat job logs.
 
@@ -269,6 +311,7 @@ class OnlineStats:
                 finish_q=float(finish_q[j]),
                 target=float(targets[j]),
                 solo_s=float(solo_s[j]),
+                retries=int(retries[j]) if retries is not None else 0,
             )
             for j in range(len(arrive_q))
         ]
@@ -310,8 +353,10 @@ class OnlineStats:
         )
 
     def summary(self) -> Dict[str, float]:
-        """Flat dict for benchmark JSON output."""
-        return {
+        """Flat dict for benchmark JSON output.  Fault scalars appear only
+        when the run carried a fault profile, so faults-off summaries keep
+        their historical key set (recorded baselines still diff cleanly)."""
+        out = {
             "n_arrived": self.n_arrived,
             "n_completed": self.n_completed,
             "mean_turnaround_s": self.mean_turnaround_s,
@@ -323,3 +368,18 @@ class OnlineStats:
             "policy_us_per_quantum": self.policy_us_per_quantum,
             "policy_us_per_quantum_median": self.policy_us_per_quantum_median,
         }
+        if self.has_faults:
+            out.update({
+                "n_evicted": float(self.n_evicted),
+                "n_requeued": float(self.n_requeued),
+                "n_dropped": float(self.n_dropped),
+                "n_retry_waiting": float(self.n_retry_waiting),
+                "n_in_flight": float(self.n_in_flight),
+                "total_failures": float(self.failures.sum()),
+                "total_recoveries": float(self.recoveries.sum()),
+                "straggling_core_quanta": float(self.straggling.sum()),
+                "mean_retries_completed": float(
+                    np.mean([j.retries for j in self.completed])
+                ) if self.completed else 0.0,
+            })
+        return out

@@ -49,6 +49,12 @@ RNG stream layout (bump :data:`SCAN_RNG_STREAM_VERSION` when changing it):
   a pure extension of the layout.  Arrivals are *pre-sampled on host*
   from ``numpy.default_rng(seed + 4242)`` — the host ``ClusterSim``
   stream, bit for bit — and shipped as data with the initial carry.
+* **Fault schedules** (``repro.online.faults``) follow the same
+  faults-are-data convention on a *separate* host stream,
+  ``numpy.default_rng(seed + 6007)``, versioned independently as
+  ``FAULT_RNG_STREAM_VERSION`` — injecting faults never perturbs the
+  threefry draws above (or the arrival stream), which is what keeps a
+  faulted run's surviving contexts on their faults-off trajectories.
 
 All K policies of a race face a bit-identical workload, as in
 ``run_quanta_multi``.  The scan engine's guarantee is in fact stronger:

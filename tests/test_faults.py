@@ -1,0 +1,389 @@
+"""Fault-injection / graceful-degradation tests (``repro.online.faults``).
+
+The resilience contract (module docstring of ``faults``):
+
+* faults are *data*: a seeded, versioned ``FaultProfile`` materialises
+  host-side into per-quantum ``(up, speed)`` arrays that both engines
+  consume bit-identically — explicit events never shift the MTTF/MTTR
+  draws, and the device threefry streams are untouched;
+* eviction/requeue semantics are shared verbatim by both engines, so a
+  deterministic parity configuration matches trajectory-for-trajectory
+  *with faults enabled*;
+* job conservation: every arrived job is exactly one of completed /
+  in flight / queued / retry-waiting / dropped (property-tested on both
+  engines; the engines also assert it internally);
+* the faults-off path is bit-identical to the historical engine (pinned
+  f32 trajectories below) and keeps the one-dispatch transfer-guard
+  contract with faults on;
+* checkpoint/resume (``run_device_sim_checkpointed``) is bit-identical
+  to the *uninterrupted segmented run* after a kill, and matches the
+  one-dispatch run exactly on integer timelines / to f32 rounding on
+  finish times (two distinct XLA programs fuse f32 differently).
+"""
+
+import dataclasses
+import hashlib
+
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+
+from repro.online import (
+    AdjacentOnline,
+    ClusterSim,
+    FaultProfile,
+    PoissonArrivals,
+)
+from repro.online.device_sim import (
+    run_device_sim,
+    run_device_sim_checkpointed,
+)
+from repro.online.faults import FAULT_RNG_STREAM_VERSION, RETRY_NEVER
+from repro.smt import machine as mc
+from repro.smt.apps import pool_profiles
+from repro.smt.scan_engine import ScanPolicy
+
+
+@pytest.fixture(scope="module")
+def machine():
+    return mc.SMTMachine(mc.MachineParams(), seed=0)
+
+
+@pytest.fixture(scope="module")
+def pool1():
+    """Single-phase pool: deterministic-parity configurations pin the
+    whole trajectory bit-for-bit (no poisson phase draws)."""
+    return [dataclasses.replace(p, phases=(p.phases[0],))
+            for p in pool_profiles()]
+
+
+#: The deterministic-parity fault profile used across this file: two
+#: explicit failures, staggered recoveries, one straggler window.
+PROFILE = FaultProfile(
+    fail=((5, 1), (9, 0)), recover=((12, 1), (15, 0)),
+    straggle=((2, 4, 20, 0.5),), max_retries=2, backoff_quanta=2,
+)
+
+
+def _sim(machine, pool, policy, n_cores=4, seed=3, rate=0.5, faults=None,
+         **kw):
+    return ClusterSim(
+        machine, pool, n_cores, policy,
+        PoissonArrivals(rate=rate, n_pool=len(pool)), seed=seed,
+        target_scale=kw.pop("target_scale", 0.1), faults=faults, **kw
+    )
+
+
+def _assert_partition(stats):
+    """Job conservation: admitted jobs partition into the four live
+    states; queued is the arrival/admission residual."""
+    assert stats.n_admitted == (
+        stats.n_completed + stats.n_dropped + stats.n_retry_waiting
+        + stats.n_in_flight
+    )
+    assert stats.n_arrived >= stats.n_admitted
+    assert stats.n_dropped >= 0 and stats.n_retry_waiting >= 0
+    assert stats.n_in_flight >= 0
+
+
+# ---------------------------------------------------- schedule unit tests
+class TestFaultSchedule:
+    def test_explicit_events_flip_and_persist(self):
+        fp = FaultProfile(fail=((3, 1),), recover=((7, 1),))
+        s = fp.schedule(10, 2, seed=0)
+        assert s.up[:3, 1].all() and s.up[7:, 1].all()
+        assert not s.up[3:7, 1].any()
+        assert s.up[:, 0].all()          # untouched core stays up
+
+    def test_explicit_events_consume_no_rng(self):
+        fp = FaultProfile(fail=((2, 0),), recover=((5, 0),))
+        a = fp.schedule(12, 3, seed=1)
+        b = fp.schedule(12, 3, seed=999)
+        np.testing.assert_array_equal(a.up, b.up)
+        np.testing.assert_array_equal(a.speed, b.speed)
+
+    def test_mttf_draws_seeded_and_event_invariant(self):
+        base = FaultProfile(mttf_quanta=5.0, mttr_quanta=3.0)
+        a = base.schedule(40, 4, seed=2)
+        assert not a.up.all()            # something failed
+        np.testing.assert_array_equal(
+            a.up, base.schedule(40, 4, seed=2).up)       # same seed
+        assert not np.array_equal(a.up, base.schedule(40, 4, seed=3).up)
+        # one uniform row per quantum *always*: forcing core 0 down
+        # never shifts the draws the other cores see
+        forced = dataclasses.replace(base, fail=((0, 0),))
+        b = forced.schedule(40, 4, seed=2)
+        np.testing.assert_array_equal(a.up[:, 1:], b.up[:, 1:])
+
+    def test_straggle_window_and_ctx_views(self):
+        fp = FaultProfile(straggle=((1, 2, 5, 0.25),))
+        s = fp.schedule(8, 2, seed=0)
+        assert (s.speed[2:5, 1] == np.float32(0.25)).all()
+        assert (s.speed[:2, 1] == 1.0).all() and (s.speed[5:, 1] == 1.0).all()
+        cu, cs = s.ctx_up(), s.ctx_speed()
+        assert cu.shape == (8, 4) and cs.shape == (8, 4)
+        np.testing.assert_array_equal(cu[:, 2], cu[:, 3])  # core -> 2 ctx
+        np.testing.assert_array_equal(cs[:, 2], cs[:, 3])
+        np.testing.assert_array_equal(s.straggling(),
+                                      [0, 0, 1, 1, 1, 0, 0, 0])
+
+    def test_transition_timelines(self):
+        s = PROFILE.schedule(30, 4, seed=3)
+        f, r = s.failures(), s.recoveries()
+        assert f.sum() == 2 and r.sum() == 2
+        assert f[5] == 1 and f[9] == 1 and r[12] == 1 and r[15] == 1
+        # net transitions reconcile with the final state
+        assert f.sum() - r.sum() == (~s.up[-1]).sum()
+
+    def test_validation(self):
+        with pytest.raises(AssertionError):
+            FaultProfile(straggle=((0, 1, 2, 0.0),))   # speed out of range
+        with pytest.raises(AssertionError):
+            FaultProfile(straggle=((0, 5, 2, 0.5),))   # start > end
+        with pytest.raises(AssertionError):
+            FaultProfile(fail=((1, 9),)).schedule(4, 2, 0)  # core range
+        with pytest.raises(AssertionError):
+            FaultProfile(max_retries=-1)
+
+    def test_version_stamp_carries_fault_stream(self):
+        from repro.obs.metrics import check_stamp, version_stamp
+
+        stamp = version_stamp(engine="scan", faults=True)
+        assert stamp["fault_rng_stream_version"] == FAULT_RNG_STREAM_VERSION
+        assert check_stamp(dict(stamp))
+        stale = dict(stamp, fault_rng_stream_version=-1)
+        assert not check_stamp(stale)
+        # faults-free stamps stay backward compatible (no fault key)
+        assert "fault_rng_stream_version" not in version_stamp(engine="scan")
+
+
+# ------------------------------------------------------- host fault path
+class TestHostFaults:
+    def test_eviction_requeue_and_counters(self, machine, pool1):
+        sim = _sim(machine, pool1, AdjacentOnline(), faults=PROFILE,
+                   rate=1.0)
+        stats = sim.run(30)
+        sched = PROFILE.schedule(30, 4, seed=3)
+        np.testing.assert_array_equal(stats.failures, sched.failures())
+        np.testing.assert_array_equal(stats.recoveries, sched.recoveries())
+        np.testing.assert_array_equal(stats.straggling, sched.straggling())
+        assert stats.n_evicted > 0 and stats.n_requeued > 0
+        assert stats.n_evicted == stats.evictions.sum()
+        assert stats.n_requeued == stats.requeues.sum()
+        assert stats.has_faults
+        _assert_partition(stats)
+        s = stats.summary()
+        assert s["n_evicted"] == stats.n_evicted
+        assert s["total_failures"] == 2.0
+
+    def test_drop_after_max_retries(self, machine, pool1):
+        # a core that dies and never recovers, with zero retry budget:
+        # its victims are dropped, not retried forever
+        fp = FaultProfile(fail=((4, 0), (4, 1)), max_retries=0,
+                          backoff_quanta=0)
+        sim = _sim(machine, pool1, AdjacentOnline(), n_cores=2, rate=1.0,
+                   faults=fp)
+        stats = sim.run(20)
+        assert stats.n_evicted > 0
+        assert stats.n_dropped == stats.n_evicted  # every eviction drops
+        assert stats.n_requeued == 0
+        _assert_partition(stats)
+
+    def test_retry_ccdf(self, machine, pool1):
+        stats = _sim(machine, pool1, AdjacentOnline(), faults=PROFILE,
+                     rate=1.0).run(30)
+        grid, ccdf = stats.retry_ccdf()
+        assert (np.diff(ccdf) <= 0).all()       # nonincreasing
+        assert ccdf[0] <= 1.0 and ccdf[-1] >= 0.0
+
+    def test_faults_require_fifo(self, machine, pool1):
+        with pytest.raises(AssertionError, match="fifo"):
+            ClusterSim(
+                machine, pool1, 4, AdjacentOnline(),
+                PoissonArrivals(rate=0.5, n_pool=len(pool1)), seed=0,
+                admission="synergy", faults=PROFILE,
+            )
+
+
+# --------------------------------------------- host/device fault parity
+class TestFaultParity:
+    def test_full_trajectory_parity_with_faults(self, machine, pool1):
+        """The deterministic-parity configuration of test_device_sim, now
+        with faults on: every timeline — including the fault counters —
+        and every per-job retry count matches host vs device."""
+        host = _sim(machine, pool1, AdjacentOnline(), faults=PROFILE)
+        dev = _sim(machine, pool1, ScanPolicy(kind="adjacent"),
+                   faults=PROFILE, engine="scan")
+        hs, ds = host.run(30), dev.run(30)
+        for nm in ("queue_depth", "active", "solo_quanta", "arrivals",
+                   "admissions", "evictions", "requeues", "failures",
+                   "recoveries", "straggling"):
+            np.testing.assert_array_equal(
+                getattr(hs, nm), getattr(ds, nm), err_msg=nm)
+        assert (hs.n_arrived, hs.n_admitted, hs.n_completed,
+                hs.n_dropped, hs.n_retry_waiting, hs.n_in_flight) == \
+            (ds.n_arrived, ds.n_admitted, ds.n_completed,
+             ds.n_dropped, ds.n_retry_waiting, ds.n_in_flight)
+        assert hs.n_evicted == ds.n_evicted > 0
+        ha = {r.job_id: (r.admit_q, r.retries) for r in hs.completed}
+        da = {r.job_id: (r.admit_q, r.retries) for r in ds.completed}
+        assert ha == da
+        hf = {r.job_id: r.finish_q for r in hs.completed}
+        df = {r.job_id: r.finish_q for r in ds.completed}
+        for j in hf:
+            assert hf[j] == pytest.approx(df[j], rel=1e-4, abs=1e-4)
+
+
+# -------------------------------------------------- conservation property
+class TestConservationProperty:
+    @hypothesis.settings(max_examples=20, deadline=None)
+    @hypothesis.given(
+        seed=st.integers(min_value=0, max_value=10_000),
+        rate=st.floats(min_value=0.3, max_value=1.5),
+        mttf=st.sampled_from([0.0, 4.0, 10.0]),
+        max_retries=st.integers(min_value=0, max_value=3),
+        backoff=st.integers(min_value=0, max_value=3),
+        preserve=st.booleans(),
+    )
+    def test_host_conserves_jobs(self, machine, pool1, seed, rate, mttf,
+                                 max_retries, backoff, preserve):
+        fp = FaultProfile(
+            fail=((2, 0),), recover=((8, 0),), straggle=((1, 3, 9, 0.5),),
+            mttf_quanta=mttf, mttr_quanta=3.0 if mttf else 0.0,
+            max_retries=max_retries, backoff_quanta=backoff,
+            preserve_progress=preserve,
+        )
+        sim = _sim(machine, pool1, AdjacentOnline(), n_cores=2, seed=seed,
+                   rate=rate, faults=fp)
+        stats = sim.run(24)    # the run also asserts conservation itself
+        _assert_partition(stats)
+        assert stats.n_arrived == stats.arrivals.sum()
+        assert stats.n_admitted == stats.admissions.sum()
+
+    @hypothesis.settings(max_examples=6, deadline=None)
+    @hypothesis.given(
+        seed=st.integers(min_value=0, max_value=500),
+        mttf=st.sampled_from([0.0, 6.0]),
+    )
+    def test_device_conserves_jobs(self, machine, pool1, seed, mttf):
+        # static_config is held fixed so examples share one compiled race
+        fp = FaultProfile(
+            fail=((2, 0),), recover=((8, 0),),
+            mttf_quanta=mttf, mttr_quanta=4.0 if mttf else 0.0,
+            max_retries=2, backoff_quanta=1,
+        )
+        sim = _sim(machine, pool1, ScanPolicy(kind="adjacent"), n_cores=2,
+                   seed=seed, rate=1.0, faults=fp, engine="scan")
+        stats = sim.run(24)    # fetch asserts the per-job partition
+        _assert_partition(stats)
+
+
+# ------------------------------------- faults-off bit-identity (pinned)
+def _traj_sig(stats):
+    """Bit-identity signature of a device trajectory: integer timeline
+    sums + a hash of the raw f32 finish quanta."""
+    fin = np.sort(np.array(
+        [np.float32(r.finish_q) for r in stats.completed], np.float32))
+    return (
+        int(stats.queue_depth.sum()), int(stats.active.sum()),
+        int(stats.solo_quanta.sum()), stats.n_completed,
+        hashlib.sha256(fin.tobytes()).hexdigest()[:16],
+    )
+
+
+class TestFaultsOffBitIdentity:
+    """Pinned f32 trajectories of the faults-off device engine.  The fault
+    path is compiled in only when a FaultProfile is present; these pins
+    hold the default path to the exact pre-fault-PR graph (a change here
+    means the faults-off trace itself changed — a contract break, not a
+    re-pin)."""
+
+    def test_pinned_small(self, machine, pool1):
+        sim = _sim(machine, pool1, ScanPolicy(kind="adjacent"), seed=11,
+                   rate=1.0, engine="scan")
+        assert _traj_sig(sim.run(40)) == PIN_SMALL
+
+    @pytest.mark.slow
+    def test_pinned_n256(self, machine, pool1):
+        # 128 cores -> 256 hardware contexts: the cluster-scale shape
+        sim = _sim(machine, pool1, ScanPolicy(kind="adjacent"),
+                   n_cores=128, seed=11, rate=24.0, engine="scan")
+        assert _traj_sig(sim.run(24)) == PIN_N256
+
+    def test_transfer_guard_with_faults(self, machine, pool1):
+        """Faults on: the run is still one dispatch with zero per-quantum
+        host transfers — the schedule ships once with the inputs."""
+        sim = _sim(machine, pool1, ScanPolicy(kind="adjacent"),
+                   faults=PROFILE, engine="scan")
+        stats = run_device_sim(sim, 30, transfer_guard=True)
+        assert stats.n_evicted > 0
+
+
+#: Recorded from the faults-off engine at the time the fault path landed
+#: (seed 11; see the class docstring for what a mismatch means).
+PIN_SMALL = (132, 296, 8, 27, "d1bfc168e0fb670c")
+PIN_N256 = (0, 4452, 16, 355, "980a812573445654")
+
+
+# ------------------------------------------------- checkpoint / resume
+class TestCheckpointResume:
+    def test_segmented_matches_one_dispatch(self, machine, pool1, tmp_path):
+        """Integer timelines exact; finish times to f32 rounding — the
+        segment race is a *different XLA program* than the one-dispatch
+        race, so fusion/FMA choices can drift finish_q by ~1 ulp."""
+        sim = _sim(machine, pool1, ScanPolicy(kind="adjacent"),
+                   faults=PROFILE, engine="scan")
+        ref = run_device_sim(sim, 32)
+        seg = run_device_sim_checkpointed(
+            _sim(machine, pool1, ScanPolicy(kind="adjacent"),
+                 faults=PROFILE, engine="scan"),
+            32, 8, str(tmp_path / "ck"))
+        for nm in ("queue_depth", "active", "solo_quanta", "evictions",
+                   "requeues"):
+            np.testing.assert_array_equal(
+                getattr(ref, nm), getattr(seg, nm), err_msg=nm)
+        rf = np.sort([np.float32(r.finish_q) for r in ref.completed])
+        sf = np.sort([np.float32(r.finish_q) for r in seg.completed])
+        np.testing.assert_allclose(rf, sf, rtol=1e-5, atol=0)
+
+    def test_kill_and_resume_bit_identical(self, machine, pool1, tmp_path):
+        """The resume contract proper: a run killed between segments and
+        resumed is *bit-identical* to the uninterrupted segmented run
+        (same compiled program, same carry at every boundary)."""
+        mk = lambda: _sim(machine, pool1, ScanPolicy(kind="adjacent"),
+                          faults=PROFILE, engine="scan")
+        ref = run_device_sim_checkpointed(mk(), 32, 8,
+                                          str(tmp_path / "ck_ref"))
+        ck = str(tmp_path / "ck")
+        # "crash" after 2 of 4 segments ...
+        assert run_device_sim_checkpointed(mk(), 32, 8, ck,
+                                           max_segments=2) is None
+        # ... and resume from the snapshot to the identical trajectory
+        res = run_device_sim_checkpointed(mk(), 32, 8, ck)
+        for nm in ("queue_depth", "active", "evictions", "requeues"):
+            np.testing.assert_array_equal(
+                getattr(ref, nm), getattr(res, nm), err_msg=nm)
+        assert {r.job_id: r.retries for r in ref.completed} == \
+            {r.job_id: r.retries for r in res.completed}
+        rf = np.sort([np.float32(r.finish_q) for r in ref.completed])
+        sf = np.sort([np.float32(r.finish_q) for r in res.completed])
+        np.testing.assert_array_equal(rf, sf)   # bit-equal f32
+
+    def test_config_mismatch_refused(self, machine, pool1, tmp_path):
+        ck = str(tmp_path / "ck")
+        mk = lambda seed: _sim(machine, pool1, ScanPolicy(kind="adjacent"),
+                               seed=seed, engine="scan")
+        assert run_device_sim_checkpointed(mk(3), 32, 8, ck,
+                                           max_segments=1) is None
+        with pytest.raises(AssertionError, match="mismatch"):
+            run_device_sim_checkpointed(mk(4), 32, 8, ck)
+        # resume=False ignores the stale snapshot instead
+        stats = run_device_sim_checkpointed(mk(4), 32, 8, ck, resume=False)
+        assert stats is not None
+
+    def test_horizon_must_divide(self, machine, pool1, tmp_path):
+        sim = _sim(machine, pool1, ScanPolicy(kind="adjacent"),
+                   engine="scan")
+        with pytest.raises(AssertionError, match="whole number"):
+            run_device_sim_checkpointed(sim, 30, 8, str(tmp_path / "ck"))

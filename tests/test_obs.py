@@ -127,8 +127,12 @@ class TestTelemetryLog:
         # schema change and must bump OBS_SCHEMA_VERSION
         assert CLOSED_FIELDS.index("real_slowdown_mean") == 0
         assert len(CLOSED_FIELDS) == 8
-        assert len(OPEN_FIELDS) == 16
+        assert len(OPEN_FIELDS) == 21
         assert set(CLOSED_FIELDS) < set(OPEN_FIELDS)
+        # the five fault counters ride at the tail (PR 8 extension)
+        assert OPEN_FIELDS[-5:] == (
+            "failures", "recoveries", "evictions", "requeues", "straggling"
+        )
 
 
 # -------------------------------------------------------- metrics registry

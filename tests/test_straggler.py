@@ -2,7 +2,7 @@
 
 import numpy as np
 
-from repro.ft.straggler import StragglerDetector, rebalanced_shares
+from repro.ft import StragglerDetector, rebalanced_shares
 
 
 def test_detects_persistent_straggler():

@@ -86,6 +86,28 @@ class TestFaultTolerance:
         mon.admit("h2", now=now + 14)
         assert "h2" not in mon.dead
 
+    def test_beat_from_unknown_host_is_an_error(self):
+        mon = HeartbeatMonitor(hosts=["h0"], timeout_s=10)
+        with pytest.raises(KeyError, match="admit"):
+            mon.beat("ghost", now=1.0)
+        # admit() is the registration path — afterwards beats are fine
+        mon.admit("ghost", now=1.0)
+        mon.beat("ghost", now=2.0)
+        assert "ghost" in mon.alive
+
+    def test_rejoin_starts_fresh_timeout_window(self):
+        mon = HeartbeatMonitor(hosts=["h0", "h1"], timeout_s=10)
+        mon.beat("h0", now=0.0)
+        mon.beat("h1", now=0.0)
+        assert mon.check(now=11.0) == {"h0", "h1"}
+        # h1 rejoins at t=12: its pre-failure silence must not count
+        # against the new incarnation
+        mon.admit("h1", now=12.0)
+        assert mon.check(now=13.0) == set()
+        assert mon.alive == ["h1"]
+        # ... but a rejoined host that goes silent again dies again
+        assert mon.check(now=23.0) == {"h1"}
+
     def test_elastic_replan_drops_broken_groups(self):
         groups = {f"g{i}": [f"h{2 * i}", f"h{2 * i + 1}"] for i in range(8)}
         topo = replan_after_failure(

@@ -7,7 +7,11 @@ wall time of the single-dispatch scan engine
 (``repro.smt.scan_engine.run_quanta_scan``, machine+policy indivisible),
 the per-quantum wall time of the device-resident open system
 (``ClusterSim(engine="scan")`` on a rho=1.0 churn cell, one dispatch per
-run), *and* the telemetry-ring overhead of the scan engine
+run — **faults off**, so this number is the steady-state guard the
+fault-injection PR holds itself to), the same cell with a light
+``FaultProfile`` injected (the fault path compiles extra mask work into
+the race; this arm keeps its cost honest), *and* the telemetry-ring
+overhead of the scan engine
 (``telemetry=True`` vs off on the same race) — and fails (exit 1) if any
 timing regresses more than ``MAX_REGRESSION``x over the recorded
 baseline in ``benchmarks/results/policy_time_n256.json``.
@@ -74,7 +78,12 @@ def measure(record: bool = False) -> dict:
     from benchmarks.online_churn import TARGET_SCALE, mean_service_quanta
     from repro.core import isc
     from repro.obs import metrics as obs_metrics
-    from repro.online import ClusterSim, PoissonArrivals, StreamingScheduler
+    from repro.online import (
+        ClusterSim,
+        FaultProfile,
+        PoissonArrivals,
+        StreamingScheduler,
+    )
     from repro.smt import workloads
     from repro.smt.apps import pool_profiles
     from repro.smt.scan_engine import ScanPolicy
@@ -94,6 +103,18 @@ def measure(record: bool = False) -> dict:
         machine, pool, N_APPS // 2, device_spec,
         PoissonArrivals(rate=rate, n_pool=len(pool)),
         seed=11, target_scale=TARGET_SCALE, engine="scan",
+    )
+    # Same cell with a light fault profile (MTTF/MTTR draws + one
+    # straggler window): guards the compiled-in fault path's cost.  The
+    # faults-off ``dev_sim`` above stays the steady-state guard.
+    fault_sim = ClusterSim(
+        machine, pool, N_APPS // 2, device_spec,
+        PoissonArrivals(rate=rate, n_pool=len(pool)),
+        seed=11, target_scale=TARGET_SCALE, engine="scan",
+        faults=FaultProfile(
+            mttf_quanta=4.0 * N_QUANTA, mttr_quanta=N_QUANTA / 2,
+            straggle=((0, 2, N_QUANTA, 0.5),),
+        ),
     )
 
     def scan_race(telemetry: bool) -> float:
@@ -124,6 +145,8 @@ def measure(record: bool = False) -> dict:
     # passes, and only when jitter pushed the ratio past its budget.
     scan_us = scan_race(telemetry=False)
     scan_tlm_us = scan_race(telemetry=True)
+    faulted = fault_sim.run(N_QUANTA, repeats=SCAN_REPEATS)
+    device_faults_us = float(np.median(faulted.policy_s)) * 1e6
     if record:
         for _ in range(2):
             if scan_tlm_us / scan_us <= TELEMETRY_BUDGET_X:
@@ -140,8 +163,10 @@ def measure(record: bool = False) -> dict:
             "scan_telemetry_median_us": scan_tlm_us,
             "telemetry_overhead_x": scan_tlm_us / scan_us,
             "device_sim_median_us": device_us,
+            "device_sim_faulted_median_us": device_faults_us,
         },
         meta={"n": N_APPS, "quanta": N_QUANTA, "repeats": SCAN_REPEATS},
+        faults=True,
     )
 
 
@@ -203,7 +228,9 @@ def main() -> int:
 
     scan_ok = _guard("scan_total_median_us", "scan-engine")
     tlm_ok = _guard("scan_telemetry_median_us", "scan-telemetry")
-    device_ok = _guard("device_sim_median_us", "device-sim")
+    device_ok = _guard("device_sim_median_us", "device-sim (faults off)")
+    faults_ok = _guard("device_sim_faulted_median_us",
+                       "device-sim (faults on)")
     # The live overhead ratio gets the same 2x jitter headroom as the
     # absolute timings; the strict 1.10x contract binds the *recorded*
     # value (enforced at --record time and by tests/test_obs.py).
@@ -216,7 +243,8 @@ def main() -> int:
         f"(live budget {ratio_budget:.2f}x) -> "
         f"{'OK' if ratio_ok else 'REGRESSION'}"
     )
-    return 0 if (ok and scan_ok and tlm_ok and device_ok and ratio_ok) else 1
+    return 0 if (ok and scan_ok and tlm_ok and device_ok and faults_ok
+                 and ratio_ok) else 1
 
 
 if __name__ == "__main__":

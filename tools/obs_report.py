@@ -41,6 +41,15 @@ sys.path.insert(0, _ROOT)
 
 _SPARK = "▁▂▃▄▅▆▇█"
 
+#: Metric-name suffixes of the fault/resilience counters
+#: (``OnlineStats.summary`` under a FaultProfile; arm prefixes allowed).
+#: Exports carrying any of them get a dedicated report block.
+_FAULT_METRICS = (
+    "n_evicted", "n_requeued", "n_dropped", "n_retry_waiting",
+    "n_in_flight", "total_failures", "total_recoveries",
+    "straggling_core_quanta", "mean_retries_completed",
+)
+
 
 def sparkline(values, width: int = 48) -> str:
     """Downsample a series to ``width`` buckets of unicode bars."""
@@ -85,6 +94,8 @@ def render(run: Dict) -> str:
         f"rng v{run.get('rng_stream_version')}"
         + (f"  scan v{run['scan_rng_stream_version']}"
            if "scan_rng_stream_version" in run else "")
+        + (f"  fault v{run['fault_rng_stream_version']}"
+           if "fault_rng_stream_version" in run else "")
         + (f"  engine={run['engine']}" if "engine" in run else "")
         + f"  recorded {stamp}"
     )
@@ -93,6 +104,15 @@ def render(run: Dict) -> str:
     width = max((len(k) for k in run["metrics"]), default=0)
     for k, v in run["metrics"].items():
         out.append(f"  {k:<{width}}  {v:>14.6g}")
+    fault_rows = [
+        (k, v) for k, v in run["metrics"].items()
+        if any(k.endswith(suffix) for suffix in _FAULT_METRICS)
+    ]
+    if fault_rows:
+        out.append("")
+        out.append("resilience (fault-injection counters):")
+        for k, v in fault_rows:
+            out.append(f"  {k:<{width}}  {v:>14.6g}")
     for arm, tl in (run.get("timelines") or {}).items():
         out.append("")
         out.append(f"timeline {arm} ({len(tl)} quanta, "

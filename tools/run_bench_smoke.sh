@@ -9,6 +9,10 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
 python benchmarks/online_churn.py --smoke
 python benchmarks/online_churn.py --smoke --engine scan
+# Fault-injection arm: the graceful-degradation sweep on the one-dispatch
+# engine — exercises eviction/requeue, stragglers and the degradation
+# headline end to end (results are not recorded under --smoke).
+python benchmarks/online_churn.py --smoke --engine scan --faults
 python benchmarks/cluster_scale.py --smoke
 python benchmarks/cluster_scale.py --smoke --engine scan
 # Telemetry arm: run both engines with the device ring + span tracing on,
