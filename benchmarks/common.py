@@ -24,6 +24,52 @@ os.makedirs(RESULTS_DIR, exist_ok=True)
 _CACHE = os.path.join(RESULTS_DIR, "synpa_models.pkl")
 _CACHE_FAST = os.path.join(RESULTS_DIR, "synpa_models_fast.pkl")
 
+#: Default home of the JAX persistent compilation cache (opt out with
+#: ``REPRO_NO_COMPILE_CACHE=1``; relocate with ``REPRO_COMPILE_CACHE_DIR``).
+COMPILE_CACHE_DIR = os.path.join(
+    os.path.dirname(__file__), os.pardir, ".jax_cache"
+)
+
+_compile_cache_enabled: Optional[bool] = None
+
+
+def enable_compile_cache() -> bool:
+    """Point JAX at an on-disk compilation cache so repeated bench/smoke
+    invocations stop paying the multi-second ``jit`` warm-up for races
+    they already compiled in an earlier *process*.
+
+    Idempotent; returns whether the cache is active.  Opt out with
+    ``REPRO_NO_COMPILE_CACHE=1`` (e.g. to measure true cold-compile
+    cost — the compile-vs-steady split the recorded A/Bs report is
+    measured within one process and is unaffected either way).  The
+    cache key includes the XLA backend and version, so upgrades
+    invalidate naturally rather than deserialising stale executables.
+    """
+    global _compile_cache_enabled
+    if _compile_cache_enabled is not None:
+        return _compile_cache_enabled
+    if os.environ.get("REPRO_NO_COMPILE_CACHE"):
+        _compile_cache_enabled = False
+        return False
+    import jax
+
+    cache_dir = os.environ.get("REPRO_COMPILE_CACHE_DIR") or os.path.abspath(
+        COMPILE_CACHE_DIR
+    )
+    try:
+        os.makedirs(cache_dir, exist_ok=True)
+        jax.config.update("jax_compilation_cache_dir", cache_dir)
+        # Every race here is worth caching: the open-system scan compiles
+        # for tens of seconds at N=256, and the smoke tier's small races
+        # still dominate its wall time.
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+        _compile_cache_enabled = True
+    except Exception as e:  # pragma: no cover - jax without the knobs
+        print(f"# persistent compilation cache unavailable: {e}")
+        _compile_cache_enabled = False
+    return _compile_cache_enabled
+
 
 def _load_cache(path: str):
     """Load a model cache; return None when missing, unstamped or stale.
@@ -92,6 +138,7 @@ def get_env(force: bool = False, fast: bool = False):
     from repro.smt import machine as mc
     from repro.smt import training, workloads
 
+    enable_compile_cache()
     machine = mc.SMTMachine(mc.MachineParams(), seed=0)
     wls = workloads.make_workloads(machine)
     cache = _CACHE_FAST if fast else _CACHE
@@ -130,37 +177,54 @@ def load_json(name: str):
 # stamp logic itself lives in ``repro.obs.metrics`` (the run-export
 # layer); these wrappers keep the historic benchmark API.
 # ---------------------------------------------------------------------------
-def version_stamp(engine: Optional[str] = None,
-                  faults: bool = False) -> Dict:
+def version_stamp(engine: Optional[str] = None, faults: bool = False,
+                  batched: bool = False,
+                  lanes: Optional[int] = None) -> Dict:
     """Stamp dict for a result JSON (``repro.obs.metrics.version_stamp``)."""
     from repro.obs.metrics import version_stamp as _stamp
 
-    return _stamp(engine, faults=faults)
+    return _stamp(engine, faults=faults, batched=batched, lanes=lanes)
 
 
 def save_stamped(name: str, obj: Dict, engine: Optional[str] = None,
-                 faults: bool = False) -> str:
-    """``save_json`` with the version stamp merged in (stamp keys win).
+                 faults: bool = False, batched: bool = False,
+                 lanes: Optional[int] = None) -> str:
+    """``save_json`` with the version stamp merged in.
     ``faults=True`` adds the fault-schedule stream stamp — results of
-    fault-injected runs are tied to ``FAULT_RNG_STREAM_VERSION`` too."""
-    return save_json(name, {**obj, **version_stamp(engine, faults=faults)})
+    fault-injected runs are tied to ``FAULT_RNG_STREAM_VERSION`` too.
+    ``batched``/``lanes`` mark lane-batched measurements, which are
+    refused when loaded with a single-lane expectation (and vice
+    versa).  Payload keys may not collide with stamp keys — a silent
+    merge once cost a recorded A/B its whole ``batched`` arm (the
+    stamp's ``batched: True`` flag ate the measurement dict), so the
+    collision is now an error: nest payload under a sub-dict instead."""
+    stamp = version_stamp(engine, faults=faults, batched=batched,
+                          lanes=lanes)
+    clash = sorted(set(obj) & set(stamp))
+    if clash:
+        raise ValueError(
+            f"save_stamped({name!r}): payload keys {clash} collide with "
+            "version-stamp keys; nest them under a sub-dict")
+    return save_json(name, {**obj, **stamp})
 
 
-def load_stamped(name: str) -> Optional[Dict]:
+def load_stamped(name: str, batched: Optional[bool] = None,
+                 lanes: Optional[int] = None) -> Optional[Dict]:
     """Load a recorded result; refuse it when its stamps are stale.
 
     Returns None (and says why) when the file is missing, unstamped, or
     stamped with a different stream version than the current code — a
     recorded A/B under another RNG layout is not comparable and must be
     re-recorded, exactly like a stale model cache is refit.  The checks
-    are ``repro.obs.metrics.check_stamp``.
+    are ``repro.obs.metrics.check_stamp``; ``batched``/``lanes`` state
+    the measurement-protocol expectation (see there).
     """
     from repro.obs.metrics import check_stamp
 
     obj = load_json(name)
     if obj is None:
         return None
-    if not check_stamp(obj, label=name):
+    if not check_stamp(obj, label=name, batched=batched, lanes=lanes):
         return None
     return obj
 

@@ -904,12 +904,18 @@ def _partner_to_pair_arrays(partner, valid):
     p = partner.shape[0]
     idx = jnp.arange(p, dtype=jnp.int32)
     first = partner > idx
-    rank = jnp.cumsum(first.astype(jnp.int32)) - 1
-    safe = jnp.where(first, rank, p // 2)
-    i_arr = jnp.zeros(p // 2, jnp.int32).at[safe].set(idx, mode="drop")
-    j_arr = jnp.zeros(p // 2, jnp.int32).at[safe].set(
-        partner.astype(jnp.int32), mode="drop"
-    )
+    # Compact the first-endpoints by argsort, not scatter: a scatter with
+    # computed indices lowers to a serial per-element loop on XLA:CPU and
+    # serializes across lanes under vmap, while the sort stays
+    # vectorized.  Keys are unique (index, firsts ahead), so the order is
+    # total; ranks past the first count keep the scatter form's zero
+    # fill.
+    order = jnp.argsort(jnp.where(first, idx, p + idx)).astype(jnp.int32)
+    nf = jnp.sum(first.astype(jnp.int32))
+    lead = order[: p // 2]
+    kk = jnp.arange(p // 2, dtype=jnp.int32)
+    i_arr = jnp.where(kk < nf, lead, 0)
+    j_arr = jnp.where(kk < nf, partner.astype(jnp.int32)[lead], 0)
     return i_arr, j_arr, valid[i_arr]
 
 
@@ -965,10 +971,19 @@ def device_two_opt_partner(cost, partner, valid, eps=1e-9,
         use1 = alt1[rows, b] <= alt2[rows, b]
         # Row a keeps i_a and takes i_b (alt1) or j_b (alt2); row b keeps
         # the old j_a as its i and j_b (alt1) or i_b (alt2) as its j.
-        tgt = jnp.where(commit, b, q)
-        i_n = i.at[tgt].set(j, mode="drop")
+        # The row-b side is written by *gather*, not scatter: commits are
+        # mutual (a < b = best[a], best[b] == a), so row r receives a
+        # write exactly when its own best row commits back into it, and
+        # the written values are gatherable through best[r].  A scatter
+        # with computed indices lowers to a serial per-element loop on
+        # XLA:CPU — and serializes over lanes under vmap — while the
+        # gather/select form stays vectorized and writes the same values
+        # (commit and recv rows are disjoint: a < b).
+        recv = commit[b] & (b[b] == rows)
+        use1_b = use1[b]
+        i_n = jnp.where(recv, jb, i)
         j_n = jnp.where(commit, jnp.where(use1, ib, jb), j)
-        j_n = j_n.at[tgt].set(jnp.where(use1, jb, ib), mode="drop")
+        j_n = jnp.where(recv, jnp.where(use1_b, j, i), j_n)
         any_commit = jnp.any(commit)
         return i_n, j_n, k + 1, any_commit
 
@@ -979,8 +994,14 @@ def device_two_opt_partner(cost, partner, valid, eps=1e-9,
     i, j, k, _imp = lax.while_loop(
         cond, body, (i0, j0, jnp.int32(0), jnp.bool_(True))
     )
-    idx = jnp.arange(partner.shape[0], dtype=jnp.int32)
-    out = idx.at[i].set(j).at[j].set(i)
+    # Rebuild the partner involution by sort, not scatter (serial on
+    # XLA:CPU, see body): the input contract makes ``partner`` a
+    # fixed-point-free involution, so concat(i, j) is a permutation of
+    # the vertices and gathering its mates through the argsort writes
+    # exactly what the two scatters wrote.
+    vert = jnp.concatenate([i, j])
+    mate = jnp.concatenate([j, i])
+    out = mate[jnp.argsort(vert)]
     if with_rounds:
         return out, k
     return out
@@ -1055,7 +1076,11 @@ def device_repair_partner(cost, partner, valid, eps=1e-9,
         pos < nd, nd - 1 - pos,
         jnp.where(pos < nd + ninv, nd + ((pos - nd) ^ 1), pos),
     )
-    repaired = jnp.zeros(p, jnp.int32).at[order].set(order[mate_pos])
+    # ``order`` is a permutation (argsort of unique keys), so the seed
+    # scatter inverts into a gather through its argsort — the scatter
+    # form lowers to a serial loop on XLA:CPU and serializes across
+    # lanes under vmap.
+    repaired = order[mate_pos][jnp.argsort(order)]
     repaired = jnp.where(keep, pt, repaired)
     if with_diag:
         out, rounds = device_two_opt_partner(

@@ -548,10 +548,12 @@ def inverse(
     *replace* the start rather than adding a second trajectory, because the
     LM iteration is start-insensitive on this problem).  Rows that are still
     descending at budget end (or went non-finite) trigger an in-graph
-    ``lax.cond`` fallback: the retained heavy-ball gradient path runs with
+    fallback: the retained heavy-ball gradient path runs with
     the full ``n_steps`` budget from both classic starts and the per-row
     lower-residual solution wins.  The whole solve — fallback included — is
-    one jit-able graph; the fallback branch costs nothing unless taken.
+    one jit-able graph; the fallback branch costs nothing unless taken
+    (phrased as a 0/1-trip ``while_loop`` rather than ``lax.cond`` so it
+    stays conditional under ``vmap`` — see :func:`_run_at_most_once`).
 
     ``solver="hb"``: the pre-GN behaviour, bit for bit — two heavy-ball
     trajectories of ``n_steps`` each from (a) the measured fractions and
@@ -609,6 +611,65 @@ def _hb_best_of(model: CategoryModel, frac_i, frac_j, n_steps: int,
     return to_simplex(z_i), to_simplex(z_j)
 
 
+def _register_barrier_batching() -> None:
+    """Give ``lax.optimization_barrier`` a ``vmap`` rule when the
+    installed jax lacks one (0.4.x): identity per operand, batch dims
+    pass through untouched.  The barrier pins the *compiler* (no hoist,
+    no CSE); batching it per-lane changes nothing about that contract.
+    Registered here because :func:`_gn_with_fallback` barriers its
+    fallback inputs and must stay ``vmap``-able without importing the
+    higher layers (``repro.smt.scan_engine`` keeps its own guarded
+    call for import-order independence)."""
+    try:
+        from jax._src.lax import lax as _lax_impl
+        from jax.interpreters import batching as _batching
+
+        prim = _lax_impl.optimization_barrier_p
+        if prim not in _batching.primitive_batchers:
+            def _identity_batcher(args, dims, **params):
+                return prim.bind(*args, **params), list(dims)
+
+            _batching.primitive_batchers[prim] = _identity_batcher
+    except Exception:  # pragma: no cover - newer jax ships its own rule
+        pass
+
+
+_register_barrier_batching()
+
+
+def _run_at_most_once(pred, fn, init):
+    """``lax.cond(pred, fn, identity, init)`` phrased as a 0/1-trip
+    ``lax.while_loop`` so the conditional survives ``vmap``.
+
+    ``cond``'s batching rule executes BOTH branches for every lane and
+    selects — under a lane-batched caller (``repro.online.batch_sim``)
+    that puts the heavy-ball fallback on the hot path of every quantum,
+    roughly doubling the per-lane cost of the open-system race.
+    ``while_loop``'s batching rule instead keeps the trip conditional
+    (the loop body runs only while *some* lane's predicate holds, and
+    each lane's carry is select-masked by its own predicate), so lanes
+    that never need the fallback never pay for it.  Unbatched, XLA skips
+    the body exactly as it skipped the cond branch.  Either way the
+    selected values are unchanged — bit-identity contracts hold.
+
+    Caveat: ``fn``'s expensive subgraph must *depend on the carried
+    state*, not only on closure captures — XLA hoists loop-invariant
+    nested loops out of a batched-pred while and runs them
+    unconditionally, which silently re-creates the cost this helper
+    exists to avoid.  Tie captures to ``state`` through one
+    ``lax.optimization_barrier`` (an identity, so values are unchanged)
+    as :func:`_gn_with_fallback` does."""
+    def _cond(state):
+        return state[0]
+
+    def _body(state):
+        _, x = state
+        return jnp.zeros((), bool), fn(x)
+
+    _, out = jax.lax.while_loop(_cond, _body, (jnp.asarray(pred), init))
+    return out
+
+
 def _gn_with_fallback(model: CategoryModel, frac_i, frac_j,
                       gn_steps: int = GN_STEPS, hb_steps: int = 80,
                       lr: float = 1.5, init_i=None, init_j=None,
@@ -641,43 +702,46 @@ def _gn_with_fallback(model: CategoryModel, frac_i, frac_j,
     need_fb = jnp.any(not_converged | ~jnp.isfinite(res))
 
     if return_diag:
-        def _with_fallback_d(_):
-            hb_i, hb_j = _hb_best_of(model, frac_i, frac_j, hb_steps, lr,
+        def _with_fallback_d(state):
+            si, sj, r, _fb = state
+            fi_b, fj_b, si, sj = jax.lax.optimization_barrier(
+                (frac_i, frac_j, si, sj)
+            )
+            hb_i, hb_j = _hb_best_of(model, fi_b, fj_b, hb_steps, lr,
                                      init_i=init_i, init_j=init_j)
-            res_hb = inverse_residual(model, frac_i, frac_j, hb_i, hb_j)
-            better = res_hb < res
+            res_hb = inverse_residual(model, fi_b, fj_b, hb_i, hb_j)
+            better = res_hb < r
             bx = better[..., None]
             return (
-                jnp.where(bx, hb_i, st_i),
-                jnp.where(bx, hb_j, st_j),
-                jnp.where(better, res_hb, res),
+                jnp.where(bx, hb_i, si),
+                jnp.where(bx, hb_j, sj),
+                jnp.where(better, res_hb, r),
                 better,
             )
 
-        def _keep_gn_d(_):
-            return st_i, st_j, res, jnp.zeros(res.shape, bool)
-
-        out_i, out_j, out_res, fb = jax.lax.cond(
-            need_fb, _with_fallback_d, _keep_gn_d, None
+        out_i, out_j, out_res, fb = _run_at_most_once(
+            need_fb, _with_fallback_d,
+            (st_i, st_j, res, jnp.zeros(res.shape, bool)),
         )
         return out_i, out_j, InverseDiag(
             iters=iters, residual=out_res, fallback=fb
         )
 
-    def _with_fallback(_):
-        hb_i, hb_j = _hb_best_of(model, frac_i, frac_j, hb_steps, lr,
+    def _with_fallback(state):
+        si, sj = state
+        fi_b, fj_b, si, sj = jax.lax.optimization_barrier(
+            (frac_i, frac_j, si, sj)
+        )
+        hb_i, hb_j = _hb_best_of(model, fi_b, fj_b, hb_steps, lr,
                                  init_i=init_i, init_j=init_j)
-        res_hb = inverse_residual(model, frac_i, frac_j, hb_i, hb_j)
+        res_hb = inverse_residual(model, fi_b, fj_b, hb_i, hb_j)
         better = (res_hb < res)[..., None]
         return (
-            jnp.where(better, hb_i, st_i),
-            jnp.where(better, hb_j, st_j),
+            jnp.where(better, hb_i, si),
+            jnp.where(better, hb_j, sj),
         )
 
-    def _keep_gn(_):
-        return st_i, st_j
-
-    return jax.lax.cond(need_fb, _with_fallback, _keep_gn, None)
+    return _run_at_most_once(need_fb, _with_fallback, (st_i, st_j))
 
 
 def inverse_residual(model: CategoryModel, frac_i, frac_j, st_i, st_j):

@@ -219,9 +219,22 @@ def make_fused_step(
                     ),
                     fallback=jnp.zeros(valid.shape, bool),
                 )
-        st = prev_st
-        st = st.at[take].set(jnp.where(v1, si, st[take]))
-        st = st.at[p_take].set(jnp.where(valid[:, None], sj, st[p_take]))
+        # Deliver the pair solves by gather, not scatter (a scatter with
+        # computed indices lowers to a serial per-element loop on
+        # XLA:CPU and serializes across lanes under vmap): slot s is the
+        # solving side of pair rank[s] when ``first[s]`` (estimate si),
+        # and the partner side of pair rank[partner[s]] when its partner
+        # solves (estimate sj); every other slot keeps ``prev_st``.  The
+        # take order is the firsts in index order (stable argsort), so
+        # ``rank`` — the cumsum rank among firsts — is each first's row
+        # in the solve batch, and the written values match the old
+        # scatters bit for bit.
+        rank = jnp.cumsum(first.astype(jnp.int32)) - 1
+        k1 = jnp.clip(rank, 0, n // 2 - 1)
+        k2 = jnp.clip(rank[partner], 0, n // 2 - 1)
+        sec = first[partner]
+        st = jnp.where(first[:, None], si[k1],
+                       jnp.where(sec[:, None], sj[k2], prev_st))
         # A slot that ran alone measured its ST stack directly.
         st = jnp.where(solo_mask[:, None], frac, st)
         # Arrivals reset to the uniform placeholder (their slot may carry a

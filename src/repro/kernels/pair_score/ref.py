@@ -27,5 +27,8 @@ def pair_cost_ref(st, coeffs, n_categories: int = 4):
                     MIN_SLOWDOWN, MAX_SLOWDOWN)
     cost = s_ij + s_ij.T
     n = st.shape[0]
+    # Masked select, not an iota scatter: the scatter form lowers to a
+    # serial per-row loop on XLA:CPU (and serializes across lanes under
+    # vmap); the values are identical.
     idx = jnp.arange(n)
-    return cost.at[idx, idx].set(DIAG)
+    return jnp.where(idx[:, None] == idx[None, :], DIAG, cost)

@@ -42,12 +42,23 @@ OBS_SCHEMA_VERSION = 1
 
 
 def version_stamp(engine: Optional[str] = None,
-                  faults: bool = False) -> Dict:
+                  faults: bool = False,
+                  batched: bool = False,
+                  lanes: Optional[int] = None) -> Dict:
     """Stamp dict for a recorded result: the profiling-campaign stream
     version always; the scan-engine threefry layout version whenever the
     result involves the device tiers (``engine`` is recorded verbatim);
     the fault-schedule stream version when ``faults`` is set (the run
     injected a ``repro.online.faults.FaultProfile``).
+
+    ``batched`` marks results measured through the lane-batched path
+    (``repro.online.batch_sim`` / ``run_quanta_multi_batched``), with
+    ``lanes`` the lane count of the dispatch.  Per-lane *trajectories*
+    are bit-identical to single dispatches, but per-scenario *timings*
+    are a share of a fused whole-grid wall — a different measurement
+    protocol, so batched and single-lane recordings must never be
+    compared silently (``check_stamp`` refuses the mismatch, and
+    ``tools/obs_report.py --diff`` refuses cross-batched diffs).
 
     A recorded median is only comparable to a re-measurement when both
     ran under the same RNG stream layouts — the same reason the model
@@ -68,17 +79,42 @@ def version_stamp(engine: Optional[str] = None,
         from repro.online.faults import FAULT_RNG_STREAM_VERSION
 
         stamp["fault_rng_stream_version"] = FAULT_RNG_STREAM_VERSION
+    if batched:
+        stamp["batched"] = True
+        if lanes is not None:
+            stamp["lanes"] = int(lanes)
     return stamp
 
 
-def check_stamp(obj: Dict, label: str = "run") -> bool:
-    """True when ``obj``'s stamps match the current code; says why not."""
+def check_stamp(obj: Dict, label: str = "run",
+                batched: Optional[bool] = None,
+                lanes: Optional[int] = None) -> bool:
+    """True when ``obj``'s stamps match the current code; says why not.
+
+    ``batched``/``lanes``: when the caller states an expectation, a
+    recording measured through the other path (or at a different lane
+    count) is refused — whole-grid-share timings and single-dispatch
+    medians are not comparable numbers.  ``None`` (the default) skips
+    the check, keeping single-lane callers and historical exports
+    (which carry no ``batched`` key) working unchanged.
+    """
     from repro.smt.training import RNG_STREAM_VERSION
 
     if obj.get("obs_schema_version") not in (None, OBS_SCHEMA_VERSION):
         print(f"# refusing {label}: obs schema "
               f"v{obj.get('obs_schema_version')} != v{OBS_SCHEMA_VERSION}; "
               "re-record it")
+        return False
+    if batched is not None and bool(obj.get("batched", False)) != batched:
+        got = "batched" if obj.get("batched") else "single-lane"
+        want = "batched" if batched else "single-lane"
+        print(f"# refusing {label}: {got} recording, {want} expected "
+              "(per-scenario timings are not comparable across the two "
+              "measurement protocols); re-record it")
+        return False
+    if lanes is not None and obj.get("lanes") != lanes:
+        print(f"# refusing {label}: lane count {obj.get('lanes')} != "
+              f"{lanes}; re-record it")
         return False
     if obj.get("rng_stream_version") != RNG_STREAM_VERSION:
         print(f"# refusing {label}: rng stream "
@@ -113,6 +149,9 @@ def export_run(
     spans: Optional[List[Dict]] = None,
     meta: Optional[Dict] = None,
     faults: bool = False,
+    batched: bool = False,
+    lanes: Optional[int] = None,
+    lane_metrics: Optional[Dict[str, Dict[str, float]]] = None,
 ) -> Dict:
     """Build a run export (the schema in the module docstring).
 
@@ -120,14 +159,28 @@ def export_run(
     instances (or already-serialised dicts); ``timelines`` maps names to
     per-quantum sequences.  Everything is coerced to JSON-native types so
     the export round-trips losslessly.
+
+    ``batched``/``lanes`` stamp lane-batched measurements (see
+    :func:`version_stamp`); ``lane_metrics`` carries the cross-lane
+    aggregation — ``{metric: {"mean": .., "lo": .., "hi": .., "n": ..}}``
+    — which ``tools/obs_report.py`` renders as mean ± CI columns and
+    diffs interval-aware.  The flat ``metrics`` block stays
+    floats-only either way.
     """
     run: Dict = {
         "obs_schema_version": OBS_SCHEMA_VERSION,
         "name": name,
         "recorded_unix": time.time(),
-        **version_stamp(engine, faults=faults),
+        **version_stamp(engine, faults=faults, batched=batched,
+                        lanes=lanes),
         "metrics": {k: float(v) for k, v in metrics.items()},
     }
+    if lane_metrics:
+        run["lane_metrics"] = {
+            k: {kk: (int(vv) if kk == "n" else float(vv))
+                for kk, vv in v.items()}
+            for k, v in lane_metrics.items()
+        }
     if timelines:
         run["timelines"] = {
             k: [float(x) for x in v] for k, v in timelines.items()

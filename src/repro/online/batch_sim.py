@@ -1,0 +1,366 @@
+"""Batched device-resident open system — the whole scenario grid as ONE
+``jit``-of-``vmap``-of-``scan`` dispatch.
+
+``run_device_sim`` (PR 5) made one *scenario* one dispatch; the churn
+grid (`benchmarks/online_churn.py`) still looped scenarios — seeds, load
+points, admission rules — through independent dispatches, paying a host
+round-trip and a dispatch per cell and leaving confidence intervals too
+expensive to afford on a jittery container.  This module batches the
+scenario axis itself: every per-scenario input of the open-system race
+(job arrays, RNG key, admission rule, fault schedule, retry knobs) is
+stacked on a leading **lane** axis and the shared scan body of
+``device_sim._make_open_ops`` is ``vmap``-ed over it, so S×R scenarios
+execute as a single compiled program.  Host exits only at stats
+extraction — the transfer-guard contract of the single-lane engine,
+unchanged.
+
+What varies per lane and what is shared:
+
+* **Shared (``in_axes=None``)** — the profiled :class:`DeviceTables`,
+  the synergy admission tables, the machine params and every
+  shape-bearing static (capacity, horizon, padded job count, policy
+  spec).  One copy serves all lanes; lanes are scenarios over the same
+  machine and pool, not different machines.
+* **Per lane (``in_axes=0``)** — the pre-sampled job arrays
+  (arrival quantum / pool id / target, re-padded to the max ``j_pad``
+  across lanes; padding jobs carry ``arrive_q == n_quanta`` so a wider
+  pad never changes a trajectory), the threefry key, the admission flag,
+  and — when any lane is faulted — the expanded fault schedule and the
+  retry knobs.
+
+**Divergent control flow is masked data.**  The single-lane race picks
+its admission rule and fault constants at trace time (Python branches —
+the static graphs the pinned bit-identity tests hold).  A batch cannot:
+lanes disagree.  ``_make_open_ops(admission="lane")`` computes *both*
+admission rules each quantum and selects by a traced per-lane flag, and
+``faults_cfg="lane"`` reads ``max_retries``/``backoff``/``preserve`` off
+traced scalars.  Unfaulted lanes in a mixed batch ride an all-up,
+unit-speed schedule — eviction never fires, and scaling retirement by
+exactly 1.0f keeps f32 values identical to the multiply-free graph.
+
+**The parity contract, one axis up** (held by
+``tests/test_batch_sim.py``): every lane of a batched run is
+**f32-bit-identical** to the same scenario run through
+:func:`repro.online.device_sim.run_device_sim` — admission quanta,
+fractional finish times, queue/active/solo timelines, retry logs and
+the telemetry ring all match bitwise, faulted lanes included.  This
+holds because the lane body performs the *same arithmetic on the same
+values* as each static graph (the un-selected admission rule's outputs
+are dead values; XLA's batching rule for every op in the body —
+including the threefry stream and the bounded matcher loops — is
+elementwise over lanes), and because a lane's inputs are bit-identical
+to the single run's by construction.  Lane count is a shape, not a
+value: adding lanes never changes another lane's trajectory.  (The
+closed-race sibling, ``repro.smt.scan_engine.run_quanta_multi_batched``,
+promises f32 round-off rather than bitwise at multiple lanes — its
+batched dots lower with different SIMD tails; see its docstring.)
+
+Timing note: the lanes of one dispatch are indivisible, so per-lane
+``policy_s`` reports the whole-grid wall time divided by ``L * quanta``
+— the *per-scenario cost* the batched path is measured on
+(``results/batched_grid_speedup.json``; expect sublinear wins on 2 CPUs,
+near-linear lane throughput is the accelerator story).
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from collections import OrderedDict
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.obs import trace as obs_trace
+from repro.obs.telemetry import OPEN_FIELDS, TelemetryLog
+from repro.online.device_sim import (
+    DEVICE_SIM_KINDS,
+    _attach_fault_stats,
+    _check_conservation,
+    _LaneCfg,
+    _make_open_ops,
+    _prepare_inputs,
+)
+from repro.smt.metrics import OnlineStats
+from repro.smt.scan_engine import DeviceTables, ScanPolicy
+
+
+def _build_batched_race(spec: ScanPolicy, params, capacity: int,
+                        n_quanta: int, j_pad: int, telemetry: bool,
+                        faulted: bool):
+    """One jitted, lane-batched open-system race.
+
+    ``race(dt, syn_cost, syn_mean, syn_stacks, job_pool (L, J),
+    job_arrive (L, J), job_target (L, J), mkey (L, 2), is_syn (L,),
+    fup, fspeed, max_retries, backoff, preserve)`` -> per-lane outputs,
+    every array of the single-lane race with a leading lane axis.  Lane
+    count is a trace-time shape: the same Python callable recompiles per
+    distinct L, and per-lane trajectories are L-invariant (vmap batches
+    every op elementwise over lanes).
+    """
+    body, carry0, unpack = _make_open_ops(
+        spec, params, capacity, j_pad, "lane", telemetry,
+        "lane" if faulted else None,
+    )
+
+    def lane_race(dt, syn_cost, syn_mean, syn_stacks, job_pool,
+                  job_arrive, job_target, mkey, is_syn, fup, fspeed,
+                  max_retries, backoff, preserve):
+        lane_cfg = _LaneCfg(is_syn, max_retries, backoff, preserve)
+        fn = functools.partial(body, dt, job_pool, job_arrive, job_target,
+                               syn_cost, syn_mean, syn_stacks, mkey,
+                               fup, fspeed, lane_cfg)
+        final, ys = lax.scan(
+            fn, carry0(), jnp.arange(n_quanta, dtype=jnp.int32)
+        )
+        return unpack(final, ys)
+
+    fax = 0 if faulted else None
+    batched = jax.vmap(
+        lane_race,
+        in_axes=(None, None, None, None, 0, 0, 0, 0, 0,
+                 fax, fax, fax, fax, fax),
+    )
+    return jax.jit(batched)
+
+
+# Compiled batched races keyed by their static configuration (the lane
+# count is a shape, handled by jit itself).  Same identity-keyed
+# method/model discipline as device_sim._RACE_CACHE.
+_BATCH_CACHE: "OrderedDict[Tuple, Tuple]" = OrderedDict()
+_BATCH_CACHE_MAX = 8
+
+
+def _batch_key(spec: ScanPolicy, capacity: int, n_quanta: int, j_pad: int,
+               telemetry: bool, faulted: bool) -> Tuple:
+    return (
+        spec.kind, id(spec.method), id(spec.model), spec.pair_impl,
+        spec.solver, spec.matcher, spec.refine_eps, spec.refine_rounds,
+        spec.first_match, capacity, n_quanta, j_pad, telemetry, faulted,
+    )
+
+
+def _spec_statics(spec: ScanPolicy) -> Tuple:
+    return (spec.kind, id(spec.method), id(spec.model), spec.pair_impl,
+            spec.solver, spec.matcher, spec.refine_eps, spec.refine_rounds,
+            spec.first_match)
+
+
+def _repad(arr: np.ndarray, j_pad: int, fill) -> np.ndarray:
+    out = np.full(j_pad, fill, arr.dtype)
+    out[: arr.size] = arr
+    return out
+
+
+def run_device_sim_batched(sims: Sequence, n_quanta: int,
+                           repeats: int = 1,
+                           transfer_guard: bool = False,
+                           warmup: bool = True,
+                           telemetry: bool = False,
+                           ) -> List[OnlineStats]:
+    """Run a list of :class:`repro.online.sim.ClusterSim` scenarios as
+    ONE batched dispatch; returns per-lane :class:`OnlineStats` in input
+    order, each f32-bit-identical to ``run_device_sim`` of that scenario.
+
+    The scenarios must share everything shape- or compile-bearing —
+    machine params, capacity, profiled tables, policy statics
+    (method/model by identity) — and may differ in seed, arrival
+    process, admission rule and fault profile.  Synergy lanes must agree
+    on their admission tables (they ship once, shared across lanes).
+
+    ``repeats``/``warmup``/``transfer_guard``/``telemetry`` follow
+    :func:`run_device_sim`; per-lane ``policy_s`` spreads the
+    whole-grid median wall over ``L * n_quanta`` (per-scenario cost).
+    """
+    assert len(sims) >= 1, "batched run needs at least one scenario lane"
+    base = sims[0]
+    spec: ScanPolicy = base.policy
+    params = base.machine.params
+    c = base.capacity
+    statics = _spec_statics(spec)
+    for s in sims:
+        assert s.engine == "scan", "batched lanes must be scan-engine sims"
+        assert s.policy.kind in DEVICE_SIM_KINDS, s.policy.kind
+        assert s.capacity == c, (
+            f"lane capacity mismatch: {s.capacity} != {c}"
+        )
+        assert s.machine.params == params, "lane machine params differ"
+        assert _spec_statics(s.policy) == statics, (
+            "batched lanes must share policy statics (method/model by "
+            f"identity): {s.policy} vs {spec}"
+        )
+        assert s.tables is base.tables, (
+            "batched lanes must share one profiled PhaseTables instance"
+        )
+
+    with obs_trace.span("batch_sim.presample", lanes=len(sims),
+                        quanta=n_quanta):
+        preps = [_prepare_inputs(s, n_quanta) for s in sims]
+    L = len(sims)
+    j_pad = max(p["j_pad"] for p in preps)
+    faulted_lane = [p["fcfg"] is not None for p in preps]
+    faulted = any(faulted_lane)
+
+    # Synergy tables ship once; fifo lanes' selected path never reads
+    # them, so sharing is value-neutral — but synergy lanes must agree.
+    syn_lanes = [i for i, s in enumerate(sims) if s.admission == "synergy"]
+    if syn_lanes:
+        p0 = preps[syn_lanes[0]]
+        syn_cost, syn_mean = p0["syn_cost"], p0["syn_mean"]
+        syn_stacks = p0["syn_stacks"]
+        for i in syn_lanes[1:]:
+            assert (
+                np.array_equal(preps[i]["syn_cost"], syn_cost)
+                and np.array_equal(preps[i]["syn_mean"], syn_mean)
+                and np.array_equal(preps[i]["syn_stacks"], syn_stacks)
+            ), "synergy lanes must share admission tables"
+    else:
+        syn_cost = preps[0]["syn_cost"]
+        syn_mean = preps[0]["syn_mean"]
+        syn_stacks = preps[0]["syn_stacks"]
+
+    job_pool = np.stack(
+        [_repad(p["job_pool"], j_pad, 0) for p in preps]
+    )
+    job_arrive = np.stack(
+        [_repad(p["job_arrive"], j_pad, n_quanta) for p in preps]
+    )
+    job_target = np.stack(
+        [_repad(p["job_target"], j_pad, np.inf) for p in preps]
+    )
+    mkeys = np.stack(
+        [np.asarray(jax.random.PRNGKey(s.seed)) for s in sims]
+    )
+    is_syn = np.array(
+        [s.admission == "synergy" for s in sims], dtype=bool
+    )
+    if faulted:
+        # Unfaulted lanes ride an all-up unit-speed schedule: eviction
+        # never fires and the speed multiply is exactly 1.0f — values
+        # stay bit-identical to the multiply-free single-lane graph.
+        fup = np.stack([
+            p["fup"] if f else np.ones((n_quanta, c), bool)
+            for p, f in zip(preps, faulted_lane)
+        ])
+        fspeed = np.stack([
+            p["fspeed"] if f else np.ones((n_quanta, c), np.float32)
+            for p, f in zip(preps, faulted_lane)
+        ])
+        max_retries = np.array([
+            p["fcfg"][0] if f else 0
+            for p, f in zip(preps, faulted_lane)
+        ], np.int32)
+        backoff = np.array([
+            p["fcfg"][1] if f else 0
+            for p, f in zip(preps, faulted_lane)
+        ], np.int32)
+        preserve = np.array([
+            bool(p["fcfg"][2]) if f else True
+            for p, f in zip(preps, faulted_lane)
+        ], bool)
+    else:
+        fup = fspeed = max_retries = backoff = preserve = None
+
+    key = _batch_key(spec, c, n_quanta, j_pad, telemetry, faulted)
+    ent = _BATCH_CACHE.get(key)
+    if ent is None:
+        with obs_trace.span("batch_sim.compile_build", capacity=c,
+                            quanta=n_quanta, lanes=L):
+            ent = (spec.method, spec.model, _build_batched_race(
+                spec, params, c, n_quanta, j_pad, telemetry, faulted,
+            ))
+        _BATCH_CACHE[key] = ent
+        while len(_BATCH_CACHE) > _BATCH_CACHE_MAX:
+            _BATCH_CACHE.popitem(last=False)
+    else:
+        _BATCH_CACHE.move_to_end(key)
+    race = ent[2]
+
+    with obs_trace.span("batch_sim.commit", lanes=L):
+        dev = lambda a: jax.device_put(jnp.asarray(a))  # noqa: E731
+        args = (
+            jax.device_put(DeviceTables.build(base.tables)),
+            dev(syn_cost), dev(syn_mean), dev(syn_stacks),
+            dev(job_pool), dev(job_arrive), dev(job_target),
+            dev(mkeys), dev(is_syn),
+        )
+        if faulted:
+            args = args + (dev(fup), dev(fspeed), dev(max_retries),
+                           dev(backoff), dev(preserve))
+        else:
+            args = args + (None, None, None, None, None)
+    out = None
+    if warmup:
+        with obs_trace.span("batch_sim.compile", lanes=L):
+            out = jax.block_until_ready(race(*args))
+    walls = []
+    for _ in range(max(int(repeats), 1)):
+        t0 = time.perf_counter()
+        with obs_trace.span("batch_sim.dispatch", lanes=L):
+            if transfer_guard:
+                with jax.transfer_guard("disallow"):
+                    out = jax.block_until_ready(race(*args))
+            else:
+                out = jax.block_until_ready(race(*args))
+        walls.append(time.perf_counter() - t0)
+    # Per-scenario cost: the grid is indivisible, so each lane carries
+    # an equal share of the whole-grid median wall.
+    per_quantum = float(np.median(walls)) / max(L * n_quanta, 1)
+
+    with obs_trace.span("batch_sim.fetch", lanes=L):
+        fetched = tuple(np.asarray(o) for o in out)
+    admit, finish, queue_depth, n_active, n_solo = fetched[:5]
+    retries = retry_at = evictions = requeues = None
+    if faulted:
+        retries, retry_at, evictions, requeues = fetched[5:9]
+    tlm = fetched[-1] if telemetry else None
+
+    stats_out: List[OnlineStats] = []
+    with obs_trace.span("batch_sim.stats", lanes=L):
+        for i, (sim, prep) in enumerate(zip(sims, preps)):
+            j = prep["j"]
+            arrive_q, pids = prep["arrive_q"], prep["pids"]
+            jt, pool_rate = prep["job_target"], prep["pool_rate"]
+            lane_faulted = faulted_lane[i]
+            if lane_faulted:
+                _check_conservation(prep, n_quanta, admit[i], finish[i],
+                                    retries[i], retry_at[i])
+            solo_s = (
+                jt[:j] / pool_rate[pids] * params.quantum_s
+                if j else np.zeros(0)
+            )
+            lane_spec = sim.policy
+            name = lane_spec.name or f"scan-{lane_spec.kind}"
+            stats = OnlineStats.from_device_logs(
+                policy_name=name,
+                quantum_s=params.quantum_s,
+                quanta=n_quanta,
+                app_names=[sim.pool[int(pid)].name for pid in pids],
+                arrive_q=arrive_q,
+                admit_q=admit[i, :j],
+                finish_q=finish[i, :j],
+                targets=jt[:j],
+                solo_s=solo_s,
+                queue_depth=queue_depth[i],
+                active=n_active[i],
+                policy_s=np.full(n_quanta, per_quantum),
+                solo_quanta=n_solo[i],
+                retries=retries[i, :j] if lane_faulted else None,
+            )
+            if lane_faulted:
+                _attach_fault_stats(stats, prep, retries[i], retry_at[i],
+                                    evictions[i], requeues[i])
+            if telemetry:
+                ring = np.array(tlm[i])
+                ring[:, OPEN_FIELDS.index("departures")] = stats.departures
+                if lane_faulted:
+                    for nm in ("failures", "recoveries", "evictions",
+                               "requeues", "straggling"):
+                        ring[:, OPEN_FIELDS.index(nm)] = getattr(stats, nm)
+                stats.telemetry = TelemetryLog(OPEN_FIELDS, ring,
+                                               policy=name)
+            stats_out.append(stats)
+    return stats_out

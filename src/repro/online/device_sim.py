@@ -151,58 +151,45 @@ class _FaultCarry(NamedTuple):
     saved: jnp.ndarray        # (J,) f32  progress to restore on re-admission
 
 
-def _build_race(spec: ScanPolicy, params, capacity: int, n_quanta: int,
-                j_pad: int, admission: str, telemetry: bool = False,
-                faults_cfg: Optional[Tuple[int, int, bool]] = None,
-                segment: bool = False):
-    """Compile-ready open-system run: one jitted function, one dispatch.
+class _LaneCfg(NamedTuple):
+    """Per-lane traced scenario knobs of the batched (``vmap``) path —
+    the divergent per-scenario control flow (admission rule, retry
+    policy) of ``repro.online.batch_sim``, carried as data.  ``None`` in
+    the single-lane path, where those choices are static Python."""
 
-    Returns ``race(dt, job_pool, job_arrive, job_target, syn_cost,
-    syn_mean, syn_stacks, mkey)`` -> ``(admit_q (J,), finish_q (J,),
-    queue_depth (Q,), n_active (Q,), n_solo (Q,))``.  All shape-bearing
-    configuration (capacity, horizon, padded job count, admission rule,
-    policy spec) is static; tables, job data and keys are traced, so one
-    compiled race serves every run of the same configuration.
+    is_syn: jnp.ndarray                  # ()  bool  synergy admission
+    max_retries: Optional[jnp.ndarray]   # ()  i32   retry cap (faulted)
+    backoff: Optional[jnp.ndarray]       # ()  i32   requeue backoff
+    preserve: Optional[jnp.ndarray]      # ()  bool  keep progress on evict
 
-    ``telemetry`` (static) appends a per-quantum ring output,
-    ``(n_quanta, len(OPEN_FIELDS))``: queue indices, admission/departure
-    counts, realized-slowdown stats (a barrier-isolated shadow of the
-    quantum's interference transform — see
-    ``scan_engine._slow_stats`` for why it is recomputed rather than
-    read off the original intermediates), predicted pair cost,
-    churn-repair dirty count, 2-opt rounds and GN solver diagnostics.
-    Telemetry rides the scan ``ys`` only — never the carry — and the off
-    path traces today's graph unchanged, so trajectories are
-    bit-identical either way.
 
-    ``faults_cfg`` (static) — ``(max_retries, backoff_quanta,
-    preserve_progress)`` of a :class:`repro.online.faults.FaultProfile` —
-    compiles the fault path in: the race takes two extra traced arrays
-    (``fup (Q, C)`` bool membership, ``fspeed (Q, C)`` f32 capability,
-    the pre-sampled schedule expanded to contexts), evicts jobs on down
-    cores before admission, re-admits the retry pool ahead of the fresh
-    FIFO queue, scales retirement by ``fspeed[q]``, and returns two extra
-    job logs (``retries``, ``retry_at``) plus per-quantum
-    eviction/requeue counts.  ``None`` (the default) traces the
-    historical faults-off graph *unchanged* — no masks, no multiplies by
-    one, no extra carry leaves — which is what the pinned-trajectory
-    bit-identity tests hold the engine to.
+def _make_open_ops(spec: ScanPolicy, params, capacity: int, j_pad: int,
+                   admission: str, telemetry: bool = False,
+                   faults_cfg=None, segment: bool = False):
+    """Build the per-quantum scan ``body`` (plus ``carry0``/``unpack``)
+    shared by the single-lane race (:func:`_build_race`) and the batched
+    race (:func:`repro.online.batch_sim._build_batched_race`).
 
-    ``segment`` (static) builds the checkpoint/resume variant instead:
-    the returned race takes an explicit ``(carry, q0)`` and scans quanta
-    ``[q0, q0 + n_quanta)`` (``n_quanta`` is then the *segment* length),
-    returning the full final carry so
-    :func:`run_device_sim_checkpointed` can snapshot it at quantum
-    boundaries and resume bit-identically.
-    """
+    ``admission`` extends the public rule set (``"fifo"``/``"synergy"``)
+    with ``"lane"``: both rules are computed each quantum and a traced
+    per-lane flag (``lane_cfg.is_syn``) selects between them — divergent
+    per-scenario control flow as masked data, which is what makes the
+    body ``vmap``-able over a scenario axis.  ``faults_cfg`` likewise
+    accepts the sentinel ``"lane"``: the fault path compiles in with the
+    retry knobs (``max_retries``/``backoff``/``preserve``) read off
+    ``lane_cfg`` as traced scalars instead of Python constants.  The
+    static modes trace the exact historical graphs — the pinned
+    f32-trajectory tests hold them to it."""
+    lane = admission == "lane"
+    lane_faults = faults_cfg == "lane"
     faults = faults_cfg is not None
-    if faults:
-        max_retries, backoff, preserve = faults_cfg
+    if faults and not lane_faults:
+        s_max_retries, s_backoff, s_preserve = faults_cfg
     c = capacity
     p = fused_pad(c)
     idx = jnp.arange(c, dtype=jnp.int32)
     cycles = jnp.float32(params.quantum_cycles)
-    use_hints = admission == "synergy" and spec.kind == "synpa"
+    use_hints = spec.kind == "synpa" and (admission == "synergy" or lane)
     if spec.kind == "synpa":
         assert spec.method is not None and spec.model is not None, (
             "synpa device sim needs a stack method and a fitted model"
@@ -236,15 +223,34 @@ def _build_race(spec: ScanPolicy, params, capacity: int, n_quanta: int,
         )
 
     def admit_synergy(app_id, job_at, head, tail, job_pool, syn_cost,
-                      syn_mean):
+                      syn_mean, trip_gate=None):
         """FIFO dequeue order, predicted-best placement — the
         ``SynergyAdmission.place`` rule as a bounded in-graph loop (each
-        dequeued job sees the residents the previous one placed)."""
-        n_admit = jnp.minimum(tail - head, jnp.sum(app_id < 0))
+        dequeued job sees the residents the previous one placed).
 
-        def body(k, state):
-            app_id, job_at = state
-            do = k < n_admit
+        The loop runs ``n_admit`` trips (a ``while_loop``, not a full
+        ``fori_loop(0, c)`` of masked no-op trips): in the steady state
+        admissions per quantum are far below capacity, and the skipped
+        trips were value-free by construction (``k >= n_admit`` left the
+        state untouched), so trajectories are unchanged bit for bit.
+        Under the lane-batched graph the trip count is the max over
+        lanes, with each lane's state select-masked by its own
+        ``k < n_admit`` — the vmap rule of ``while_loop``.
+
+        ``trip_gate`` (lane mode) zeroes the *loop bound* for lanes
+        whose synergy outputs are dead anyway (fifo lanes: the
+        ``is_syn`` select discards them), so the batched trip count is
+        the max over the synergy lanes only instead of the whole grid.
+        The returned ``head`` advance keeps the ungated ``n_admit`` —
+        it is the value the live lanes select — and gated lanes return
+        their inputs untouched, exactly what the select replaces."""
+        n_admit = jnp.minimum(tail - head, jnp.sum(app_id < 0))
+        n_trip = n_admit if trip_gate is None else jnp.where(
+            trip_gate, n_admit, 0
+        )
+
+        def body(state):
+            k, app_id, job_at = state
             j = head + k
             pid = job_pool[jnp.clip(j, 0, j_pad - 1)]
             mate = app_id[idx ^ 1]
@@ -253,12 +259,21 @@ def _build_race(spec: ScanPolicy, params, capacity: int, n_quanta: int,
             )
             cost_s = jnp.where(app_id < 0, mcost, jnp.inf)
             s = jnp.argmin(cost_s).astype(jnp.int32)  # ties -> lowest slot
+            # Placement as a full-width masked select, not a 1-slot
+            # scatter: same values, but the select stays a vector op
+            # under the lane-batched (vmap) graph where a scatter with
+            # per-lane indices lowers to a serial per-lane loop.
+            put = idx == s
             return (
-                jnp.where(do, app_id.at[s].set(pid), app_id),
-                jnp.where(do, job_at.at[s].set(j), job_at),
+                k + 1,
+                jnp.where(put, pid, app_id),
+                jnp.where(put, j, job_at),
             )
 
-        app_id2, job_at2 = lax.fori_loop(0, c, body, (app_id, job_at))
+        _k, app_id2, job_at2 = lax.while_loop(
+            lambda s: s[0] < n_trip, body,
+            (jnp.zeros((), jnp.int32), app_id, job_at),
+        )
         return app_id2, job_at2, job_at2 != job_at, head + n_admit
 
     # ------------------------------------------------------------ policies
@@ -344,7 +359,7 @@ def _build_race(spec: ScanPolicy, params, capacity: int, n_quanta: int,
 
     # ----------------------------------------------------------- scan body
     def body(dt, job_pool, job_arrive, job_target, syn_cost, syn_mean,
-             syn_stacks, mkey, fup, fspeed, carry_t, q):
+             syn_stacks, mkey, fup, fspeed, lane_cfg, carry_t, q):
         carry, fc = carry_t
         # 1. Arrivals: the queue tail is a masked count over the sorted
         # job array — no state to update.
@@ -355,6 +370,14 @@ def _build_race(spec: ScanPolicy, params, capacity: int, n_quanta: int,
             # 1b. Fault eviction: jobs on cores that are down this quantum
             # leave *before* admission (the host heartbeat order).  A core
             # stays masked while down, so only transition quanta evict.
+            # Lane mode reads the retry knobs off the per-lane config —
+            # they only enter comparisons and adds, so traced scalars
+            # reproduce the static graph's values exactly.
+            if lane_faults:
+                max_retries = lane_cfg.max_retries
+                backoff = lane_cfg.backoff
+            else:
+                max_retries, backoff = s_max_retries, s_backoff
             upq = fup[q]
             speedq = fspeed[q]
             evict = (app_id >= 0) & ~upq
@@ -366,9 +389,14 @@ def _build_race(spec: ScanPolicy, params, capacity: int, n_quanta: int,
             retry_at = fc.retry_at.at[
                 jnp.where(requeue_c, ej, j_pad)
             ].set(q + backoff, mode="drop")
-            saved_val = carry.progress if preserve else jnp.zeros(
-                c, jnp.float32
-            )
+            if lane_faults:
+                saved_val = jnp.where(
+                    lane_cfg.preserve, carry.progress, 0.0
+                )
+            else:
+                saved_val = carry.progress if s_preserve else jnp.zeros(
+                    c, jnp.float32
+                )
             saved = fc.saved.at[ej].set(saved_val, mode="drop")
             n_evict = jnp.sum(evict).astype(jnp.int32)
             app_id = jnp.where(evict, -1, app_id)
@@ -409,6 +437,22 @@ def _build_race(spec: ScanPolicy, params, capacity: int, n_quanta: int,
                 app_id, job_at, carry.head, tail, job_pool,
                 syn_cost, syn_mean,
             )
+        elif lane:
+            # Both rules run every quantum; the per-lane flag selects.
+            # The un-selected rule's outputs are dead values, so fifo
+            # lanes are value-independent of the (shared) synergy tables.
+            s_app, s_job, s_took, s_head = admit_synergy(
+                app_id, job_at, carry.head, tail, job_pool,
+                syn_cost, syn_mean, trip_gate=lane_cfg.is_syn,
+            )
+            f_app, f_job, f_took, f_head = admit_fifo(
+                app_id, job_at, free, carry.head, tail, job_pool,
+            )
+            is_syn = lane_cfg.is_syn
+            app_id = jnp.where(is_syn, s_app, f_app)
+            job_at = jnp.where(is_syn, s_job, f_job)
+            took_f = jnp.where(is_syn, s_took, f_took)
+            head = jnp.where(is_syn, s_head, f_head)
         else:
             app_id, job_at, took_f, head = admit_fifo(
                 app_id, job_at, free, carry.head, tail, job_pool,
@@ -435,15 +479,26 @@ def _build_race(spec: ScanPolicy, params, capacity: int, n_quanta: int,
             )
         else:
             progress = jnp.where(took, 0.0, carry.progress)
-        admit_q = carry.admit_q.at[
-            jnp.where(took_f, job_at, j_pad) if faults else jidx
-        ].set(q, mode="drop")
+        # Fresh admissions are exactly the contiguous queue window
+        # [carry.head, head) of the sorted job array (both admission
+        # rules dequeue in arrival order; retries don't move the head),
+        # so the admit log is a vectorized range select — the equivalent
+        # scatter over per-slot job indices lowers to a serial
+        # per-source loop on XLA:CPU and serializes across lanes under
+        # vmap.  Values are identical.
+        jobs_idx = jnp.arange(j_pad, dtype=jnp.int32)
+        admit_q = jnp.where(
+            (jobs_idx >= carry.head) & (jobs_idx < head), q, carry.admit_q
+        )
         st = carry.st
         if use_hints:
             # ST-hint seeding: a newcomer's estimate is its profiled solo
             # stack, not the uniform placeholder (fresh-mask skipped below).
+            # Lane mode masks the hint to synergy lanes — fifo lanes keep
+            # the uniform start and the fresh-solve path.
+            hint_m = (took & lane_cfg.is_syn) if lane else took
             st = jnp.where(
-                took[:, None], syn_stacks[jnp.maximum(app_id, 0)], st
+                hint_m[:, None], syn_stacks[jnp.maximum(app_id, 0)], st
             )
 
         active = app_id >= 0
@@ -463,7 +518,12 @@ def _build_race(spec: ScanPolicy, params, capacity: int, n_quanta: int,
         else:
             solve = carry.ran & (carry.partner_prev != idx)
             solo_m = carry.ran & (carry.partner_prev == idx)
-            fresh = jnp.zeros(c, bool) if use_hints else took
+            if lane:
+                # Hinted (synergy) lanes skip the fresh solve; fifo lanes
+                # flag newcomers — the two static graphs, selected per lane.
+                fresh = jnp.where(lane_cfg.is_syn, False, took)
+            else:
+                fresh = jnp.zeros(c, bool) if use_hints else took
             masks = jnp.stack([solve, solo_m, active, fresh])
             if telemetry:
                 cost, st, fdiag = fstep(carry.counters, carry.partner_prev,
@@ -521,9 +581,23 @@ def _build_race(spec: ScanPolicy, params, capacity: int, n_quanta: int,
             dt, app_id, active, phase_idx, phase_left, progress, target,
             partner, mkey, q, speed=speedq if faults else None,
         )
-        finish_q = carry.finish_q.at[jnp.where(done, job_at, j_pad)].set(
-            q.astype(jnp.float32) + frac, mode="drop"
-        )
+        if segment:
+            # Checkpoint variant: the finish log must live in the carry
+            # (snapshots restore it), so it keeps the per-quantum
+            # scatter.  Values match the streamed variant exactly.
+            finish_q = carry.finish_q.at[
+                jnp.where(done, job_at, j_pad)
+            ].set(q.astype(jnp.float32) + frac, mode="drop")
+        else:
+            # One-dispatch variant: a (J,)-indexed scatter per quantum
+            # lowers to a serial per-source loop on XLA:CPU and
+            # serializes across lanes under vmap — so the finish events
+            # ride the scan ``ys`` as (slot-indexed job, value) pairs
+            # and ``unpack`` rebuilds the log once post-scan with a
+            # sort + binary-search gather.  Carry value is untouched.
+            finish_q = carry.finish_q
+        fin_j = jnp.where(done, job_at, j_pad)
+        fin_v = q.astype(jnp.float32) + frac
         n_solo = jnp.sum(active & (partner == idx)).astype(jnp.int32)
         new = _OpenCarry(
             app_id=jnp.where(done, -1, app_id),
@@ -545,6 +619,8 @@ def _build_race(spec: ScanPolicy, params, capacity: int, n_quanta: int,
             retries=retries, retry_at=retry_at, saved=saved
         ) if faults else None
         outs = (queue_depth, n_active, n_solo)
+        if not segment:
+            outs = outs + (fin_j, fin_v)
         if faults:
             outs = outs + (n_evict, n_requeue)
         if telemetry:
@@ -598,12 +674,84 @@ def _build_race(spec: ScanPolicy, params, capacity: int, n_quanta: int,
 
     def unpack(final, ys):
         ocarry, fcarry = final
-        res = (ocarry.admit_q, ocarry.finish_q) + ys[:3]
+        if segment:
+            finish_q, k = ocarry.finish_q, 3
+        else:
+            # Rebuild the finish log from the streamed (job, value)
+            # events: each job departs at most once, so a stable sort
+            # by job index followed by a binary-search gather is exact.
+            # Sentinel rows (``j_pad``) sort past every real job and
+            # can never match.  No scatter anywhere.
+            flat_j = ys[3].reshape(-1)
+            flat_v = ys[4].reshape(-1)
+            order = jnp.argsort(flat_j)
+            sj, sv = flat_j[order], flat_v[order]
+            jobs = jnp.arange(j_pad, dtype=sj.dtype)
+            pos = jnp.clip(jnp.searchsorted(sj, jobs), 0, sj.shape[0] - 1)
+            finish_q = jnp.where(sj[pos] == jobs, sv[pos], jnp.inf)
+            k = 5
+        res = (ocarry.admit_q, finish_q) + ys[:3]
         if faults:
-            res = res + (fcarry.retries, fcarry.retry_at) + ys[3:5]
+            res = res + (fcarry.retries, fcarry.retry_at) + ys[k:k + 2]
         if telemetry:
             res = res + (ys[-1],)
         return res
+
+    return body, carry0, unpack
+
+
+def _build_race(spec: ScanPolicy, params, capacity: int, n_quanta: int,
+                j_pad: int, admission: str, telemetry: bool = False,
+                faults_cfg: Optional[Tuple[int, int, bool]] = None,
+                segment: bool = False):
+    """Compile-ready open-system run: one jitted function, one dispatch.
+
+    Returns ``race(dt, job_pool, job_arrive, job_target, syn_cost,
+    syn_mean, syn_stacks, mkey)`` -> ``(admit_q (J,), finish_q (J,),
+    queue_depth (Q,), n_active (Q,), n_solo (Q,))``.  All shape-bearing
+    configuration (capacity, horizon, padded job count, admission rule,
+    policy spec) is static; tables, job data and keys are traced, so one
+    compiled race serves every run of the same configuration.
+
+    ``telemetry`` (static) appends a per-quantum ring output,
+    ``(n_quanta, len(OPEN_FIELDS))``: queue indices, admission/departure
+    counts, realized-slowdown stats (a barrier-isolated shadow of the
+    quantum's interference transform — see
+    ``scan_engine._slow_stats`` for why it is recomputed rather than
+    read off the original intermediates), predicted pair cost,
+    churn-repair dirty count, 2-opt rounds and GN solver diagnostics.
+    Telemetry rides the scan ``ys`` only — never the carry — and the off
+    path traces today's graph unchanged, so trajectories are
+    bit-identical either way.
+
+    ``faults_cfg`` (static) — ``(max_retries, backoff_quanta,
+    preserve_progress)`` of a :class:`repro.online.faults.FaultProfile` —
+    compiles the fault path in: the race takes two extra traced arrays
+    (``fup (Q, C)`` bool membership, ``fspeed (Q, C)`` f32 capability,
+    the pre-sampled schedule expanded to contexts), evicts jobs on down
+    cores before admission, re-admits the retry pool ahead of the fresh
+    FIFO queue, scales retirement by ``fspeed[q]``, and returns two extra
+    job logs (``retries``, ``retry_at``) plus per-quantum
+    eviction/requeue counts.  ``None`` (the default) traces the
+    historical faults-off graph *unchanged* — no masks, no multiplies by
+    one, no extra carry leaves — which is what the pinned-trajectory
+    bit-identity tests hold the engine to.
+
+    ``segment`` (static) builds the checkpoint/resume variant instead:
+    the returned race takes an explicit ``(carry, q0)`` and scans quanta
+    ``[q0, q0 + n_quanta)`` (``n_quanta`` is then the *segment* length),
+    returning the full final carry so
+    :func:`run_device_sim_checkpointed` can snapshot it at quantum
+    boundaries and resume bit-identically.
+
+    The scan body itself lives in :func:`_make_open_ops`, shared with
+    the batched race of ``repro.online.batch_sim`` (``lane_cfg`` is None
+    here: this is the single-lane path with static admission/faults).
+    """
+    body, carry0, unpack = _make_open_ops(
+        spec, params, capacity, j_pad, admission, telemetry, faults_cfg,
+        segment,
+    )
 
     if segment:
         @jax.jit
@@ -612,7 +760,7 @@ def _build_race(spec: ScanPolicy, params, capacity: int, n_quanta: int,
                      carry_t, q0):
             fn = functools.partial(body, dt, job_pool, job_arrive,
                                    job_target, syn_cost, syn_mean,
-                                   syn_stacks, mkey, fup, fspeed)
+                                   syn_stacks, mkey, fup, fspeed, None)
             final, ys = lax.scan(
                 fn, carry_t, q0 + jnp.arange(n_quanta, dtype=jnp.int32)
             )
@@ -625,7 +773,7 @@ def _build_race(spec: ScanPolicy, params, capacity: int, n_quanta: int,
              syn_mean, syn_stacks, mkey, fup=None, fspeed=None):
         fn = functools.partial(body, dt, job_pool, job_arrive, job_target,
                                syn_cost, syn_mean, syn_stacks, mkey,
-                               fup, fspeed)
+                               fup, fspeed, None)
         final, ys = lax.scan(
             fn, carry0(), jnp.arange(n_quanta, dtype=jnp.int32)
         )

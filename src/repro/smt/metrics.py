@@ -383,3 +383,83 @@ class OnlineStats:
                 ) if self.completed else 0.0,
             })
         return out
+
+
+def bootstrap_ci(values: Sequence[float], n_boot: int = 2000,
+                 alpha: float = 0.05, seed: int = 0,
+                 stat: Callable = np.mean) -> Tuple[float, float, float]:
+    """``(point, lo, hi)`` — percentile-bootstrap confidence interval of
+    ``stat`` over ``values`` (seeded, so recorded CIs are reproducible).
+
+    The point estimate is ``stat`` of the sample itself; ``lo``/``hi``
+    are the ``alpha/2`` / ``1 - alpha/2`` percentiles of ``n_boot``
+    bootstrap replicates.  A sample of one collapses to a degenerate
+    ``[point, point]`` interval — single-seed callers stay valid, they
+    just carry no width.  ``stat`` must accept an ``axis`` argument
+    (``np.mean``/``np.median`` do)."""
+    vals = np.asarray(list(values), np.float64)
+    if vals.size == 0:
+        return float("nan"), float("nan"), float("nan")
+    point = float(stat(vals))
+    if vals.size == 1:
+        return point, point, point
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, vals.size, size=(int(n_boot), vals.size))
+    reps = stat(vals[idx], axis=1)
+    lo, hi = np.percentile(reps, [100.0 * alpha / 2,
+                                  100.0 * (1.0 - alpha / 2)])
+    return point, float(lo), float(hi)
+
+
+@dataclasses.dataclass
+class GridStats:
+    """Multi-seed aggregation of a scenario grid — the statistics layer
+    of the batched simulator (``repro.online.batch_sim``).
+
+    Each *cell* (a scenario label: policy, load point, admission…) holds
+    the per-seed :class:`OnlineStats` runs of that scenario;
+    :meth:`summary` reduces every flat metric of
+    :meth:`OnlineStats.summary` to a mean plus a seeded percentile-
+    bootstrap CI, the shape the recorded churn-grid JSONs carry
+    (``benchmarks/online_churn.py --seeds K``)."""
+
+    cells: Dict[str, List[OnlineStats]] = dataclasses.field(
+        default_factory=dict
+    )
+
+    def add(self, cell: str, stats: OnlineStats) -> None:
+        self.cells.setdefault(cell, []).append(stats)
+
+    def summary(self, n_boot: int = 2000, alpha: float = 0.05,
+                seed: int = 0) -> Dict[str, Dict[str, object]]:
+        """``{cell: {metric: mean, ..., "ci": {metric: [lo, hi]},
+        "seeds": K}}`` — metric means stay top-level floats so existing
+        readers of single-seed summaries keep working unchanged."""
+        out: Dict[str, Dict[str, object]] = {}
+        for cell, runs in self.cells.items():
+            summaries = [r.summary() for r in runs]
+            keys = [k for k in summaries[0]
+                    if all(k in s for s in summaries)]
+            entry: Dict[str, object] = {}
+            ci: Dict[str, List[float]] = {}
+            for k in keys:
+                vals = [float(s[k]) for s in summaries]
+                point, lo, hi = bootstrap_ci(
+                    vals, n_boot=n_boot, alpha=alpha, seed=seed
+                )
+                entry[k] = point
+                ci[k] = [lo, hi]
+            entry["ci"] = ci
+            entry["seeds"] = len(runs)
+            out[cell] = entry
+        return out
+
+    def pooled_slowdowns(self, cell: str) -> np.ndarray:
+        """All completed-job slowdowns of a cell, pooled across seeds —
+        the sample the cross-seed CCDF is computed on."""
+        runs = self.cells.get(cell, [])
+        return np.concatenate(
+            [np.asarray([j.slowdown(r.quantum_s) for j in r.completed],
+                        np.float64)
+             for r in runs]
+        ) if runs else np.zeros(0)

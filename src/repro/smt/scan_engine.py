@@ -80,7 +80,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, NamedTuple, Optional, Sequence
+from typing import Dict, List, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -104,6 +104,32 @@ from repro.smt.machine import (
 #: draws are bit-identical to v1, so v1-recorded closed-race A/Bs remain
 #: valid under v2.
 SCAN_RNG_STREAM_VERSION = 2
+
+
+def _register_barrier_batching() -> None:
+    """Give ``lax.optimization_barrier`` a ``vmap`` rule when the
+    installed jax lacks one (0.4.x): identity per operand, batch dims
+    pass through untouched.  The barrier exists to pin the *compiler*
+    (no CSE between the telemetry shadow recompute and the quantum's own
+    arithmetic — see ``_scan_telemetry``); batching it per-lane changes
+    nothing about that contract, and without the rule the batched-
+    scenario dispatches of ``repro.online.batch_sim`` cannot carry
+    telemetry rings."""
+    try:
+        from jax._src.lax import lax as _lax_impl
+        from jax.interpreters import batching as _batching
+
+        prim = _lax_impl.optimization_barrier_p
+        if prim not in _batching.primitive_batchers:
+            def _identity_batcher(args, dims, **params):
+                return prim.bind(*args, **params), list(dims)
+
+            _batching.primitive_batchers[prim] = _identity_batcher
+    except Exception:  # pragma: no cover - newer jax ships its own rule
+        pass
+
+
+_register_barrier_batching()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -725,6 +751,127 @@ def run_quanta_scan(
                     if telemetry else None
                 ),
             )
+    return results
+
+
+def run_quanta_multi_batched(
+    machine,
+    profiles,
+    policies: Dict[str, ScanPolicy],
+    seeds: Sequence[int],
+    n_quanta: int = 20,
+    tables: Optional[PhaseTables] = None,
+    repeats: int = 1,
+    transfer_guard: bool = False,
+    telemetry: bool = False,
+) -> Dict[str, List[ThroughputResult]]:
+    """The closed race over a batch of seeds as ONE dispatch —
+    ``jit``-of-``vmap``-of-:func:`build_race` over a leading seed-lane
+    axis.
+
+    Every per-seed input of the race (initial pairing, initial ST
+    estimates, machine and policy keys) stacks on the lane axis; the
+    profiled :class:`DeviceTables` ship once, shared.  Returns
+    ``{policy_name: [ThroughputResult, ...]}`` in ``seeds`` order.
+
+    Parity: every lane consumes bit-identical inputs and RNG draws as
+    ``run_quanta_scan`` of that seed (threefry under ``vmap`` is
+    bitwise), and a single-lane batch reproduces the single dispatch
+    **bit-for-bit**.  At multiple lanes XLA:CPU may lower some batched
+    dots/transcendentals with a different SIMD reduction tail than the
+    unbatched graph, so multi-lane results are guaranteed equal to
+    within f32 round-off (last-ulp; ``tests/test_batch_sim.py`` pins
+    both strengths).  The *open-system* batched path
+    (``repro.online.batch_sim``) holds strict per-lane bit-identity —
+    its per-context arithmetic lowers identically either way.
+
+    Per-lane ``machine_s_per_quantum`` spreads the whole-batch median
+    wall over ``len(seeds) * n_quanta`` — the per-scenario cost of the
+    batch.
+    """
+    params = machine.params
+    tables = tables if tables is not None else PhaseTables.build(profiles)
+    n = tables.n_apps
+    p_pad = fused_pad(n)
+    specs = list(policies.values())
+    seeds = [int(s) for s in seeds]
+    S = len(seeds)
+    assert S >= 1, "batched race needs at least one seed lane"
+    with obs_trace.span("scan.compile_build", n=n, quanta=n_quanta,
+                        telemetry=telemetry, lanes=S):
+        race = build_race(tables, params, specs, n_quanta,
+                          telemetry=telemetry)
+        batched = jax.jit(jax.vmap(race, in_axes=(None, 0, 0, 0, 0)))
+
+    init_mpart = np.stack([
+        np.stack([
+            _initial_mpart(n, p_pad, np.random.default_rng(seed + 7919))
+            for _ in specs
+        ])
+        for seed in seeds
+    ])
+    init_st = np.stack(
+        [np.stack([_uniform_stacks(s, n) for s in specs])] * S
+    )
+    mkeys = np.stack([np.asarray(jax.random.PRNGKey(s)) for s in seeds])
+    pkeys = np.stack(
+        [np.asarray(jax.random.PRNGKey(s + 7919)) for s in seeds]
+    )
+
+    with obs_trace.span("scan.commit", lanes=S):
+        dt = jax.device_put(DeviceTables.build(tables))
+        args = (
+            dt,
+            jax.device_put(jnp.asarray(init_mpart, jnp.int32)),
+            jax.device_put(jnp.asarray(init_st, jnp.float32)),
+            jax.device_put(jnp.asarray(mkeys)),
+            jax.device_put(jnp.asarray(pkeys)),
+        )
+
+    with obs_trace.span("scan.compile", lanes=S):
+        out = jax.block_until_ready(batched(*args))
+    walls = []
+    for _ in range(max(int(repeats), 1)):
+        t0 = time.perf_counter()
+        with obs_trace.span("scan.dispatch", lanes=S):
+            if transfer_guard:
+                with jax.transfer_guard("disallow"):
+                    out = jax.block_until_ready(batched(*args))
+            else:
+                out = jax.block_until_ready(batched(*args))
+        walls.append(time.perf_counter() - t0)
+    per_quantum = float(np.median(walls)) / max(S * n_quanta, 1)
+
+    with obs_trace.span("scan.fetch", lanes=S):
+        fetched = tuple(np.asarray(o) for o in out)
+    if telemetry:
+        retired, cycles, slow_sum, tlm = fetched
+    else:
+        retired, cycles, slow_sum = fetched
+    results: Dict[str, List[ThroughputResult]] = {
+        name: [] for name in policies
+    }
+    with obs_trace.span("scan.stats", lanes=S):
+        for si in range(S):
+            for k, name in enumerate(policies):
+                ipc = retired[si, k] / np.maximum(cycles[si, k], 1.0)
+                results[name].append(ThroughputResult(
+                    n_apps=n,
+                    quanta=n_quanta,
+                    ipc=ipc,
+                    total_retired=float(retired[si, k].sum()),
+                    mean_true_slowdown=(
+                        float(slow_sum[si, k]) / max(n_quanta, 1)
+                    ),
+                    sched_s_per_quantum=0.0,
+                    sched_s_per_quantum_median=0.0,
+                    machine_s_per_quantum=per_quantum,
+                    telemetry=(
+                        TelemetryLog(CLOSED_FIELDS, tlm[si, k],
+                                     policy=name)
+                        if telemetry else None
+                    ),
+                ))
     return results
 
 

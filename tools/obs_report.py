@@ -17,7 +17,17 @@ smoke tier can pin a benchmark run against its recorded baseline.
 
 Both modes refuse exports whose schema or RNG stream stamps do not
 match the current code (``repro.obs.metrics.load_run``) — a report
-over a stale recording would compare incomparable numbers.
+over a stale recording would compare incomparable numbers.  Diffing a
+lane-batched export (``batched`` stamp, ``repro.online.batch_sim``)
+against a single-lane one — or two batched exports at different lane
+counts — is refused for the same reason: per-scenario timings under
+the two measurement protocols are different quantities.
+
+Lane-batched exports may carry a ``lane_metrics`` block
+(``{metric: {mean, lo, hi, n}}``): report mode renders it as
+mean ± CI columns, and diff mode treats overlapping intervals as
+agreement — a seed-resampled re-measurement whose CI covers the
+baseline's is not a drift, however the point means wiggle.
 
 Examples::
 
@@ -97,6 +107,8 @@ def render(run: Dict) -> str:
         + (f"  fault v{run['fault_rng_stream_version']}"
            if "fault_rng_stream_version" in run else "")
         + (f"  engine={run['engine']}" if "engine" in run else "")
+        + (f"  batched lanes={run.get('lanes', '?')}"
+           if run.get("batched") else "")
         + f"  recorded {stamp}"
     )
     out.append("")
@@ -104,6 +116,16 @@ def render(run: Dict) -> str:
     width = max((len(k) for k in run["metrics"]), default=0)
     for k, v in run["metrics"].items():
         out.append(f"  {k:<{width}}  {v:>14.6g}")
+    lane_metrics = run.get("lane_metrics") or {}
+    if lane_metrics:
+        out.append("")
+        out.append("lane metrics (cross-lane mean ± bootstrap CI):")
+        lw = max(len(k) for k in lane_metrics)
+        for k, v in lane_metrics.items():
+            out.append(
+                f"  {k:<{lw}}  {v['mean']:>12.6g}  "
+                f"[{v['lo']:.6g}, {v['hi']:.6g}]  n={v.get('n', '?')}"
+            )
     fault_rows = [
         (k, v) for k, v in run["metrics"].items()
         if any(k.endswith(suffix) for suffix in _FAULT_METRICS)
@@ -144,6 +166,38 @@ def render(run: Dict) -> str:
     return "\n".join(out)
 
 
+def _protocol_mismatch(base: Dict, new: Dict) -> Optional[str]:
+    """Why two exports must not be diffed, or None when they may.
+
+    Batched and single-lane recordings measure per-scenario cost under
+    different protocols (whole-grid share vs single-dispatch median);
+    two batched recordings at different lane counts likewise."""
+    b_batched = bool(base.get("batched", False))
+    n_batched = bool(new.get("batched", False))
+    if b_batched != n_batched:
+        bb = "batched" if b_batched else "single-lane"
+        nn = "batched" if n_batched else "single-lane"
+        return (f"base is {bb}, new is {nn} — per-scenario timings are "
+                "not comparable across the two measurement protocols")
+    if b_batched and base.get("lanes") != new.get("lanes"):
+        return (f"lane counts differ ({base.get('lanes')} vs "
+                f"{new.get('lanes')}) — the whole-grid wall is shared "
+                "over a different number of scenarios")
+    return None
+
+
+def _ci_of(run: Dict, key: str) -> Optional[Tuple[float, float]]:
+    """The [lo, hi] interval a run carries for ``key``, if any — from
+    ``lane_metrics`` or from ``<key>_ci_lo``/``_ci_hi`` metric rows."""
+    lm = (run.get("lane_metrics") or {}).get(key)
+    if lm is not None:
+        return float(lm["lo"]), float(lm["hi"])
+    m = run["metrics"]
+    if key + "_ci_lo" in m and key + "_ci_hi" in m:
+        return float(m[key + "_ci_lo"]), float(m[key + "_ci_hi"])
+    return None
+
+
 def diff(base: Dict, new: Dict, time_budget: float, rel: float) -> int:
     """Print a metric-by-metric comparison; count of breaches returned."""
     bm, nm = base["metrics"], new["metrics"]
@@ -171,6 +225,13 @@ def diff(base: Dict, new: Dict, time_budget: float, rel: float) -> int:
             delta = abs(n - b) / denom
             ok = delta <= rel
             verdict = "OK" if ok else f"DRIFT > {rel:.0%}"
+            if not ok:
+                # Interval-aware second chance: when both sides carry a
+                # CI for this metric and the intervals overlap, the
+                # drift is within seed-resampling noise.
+                bci, nci = _ci_of(base, k), _ci_of(new, k)
+                if bci and nci and not (nci[1] < bci[0] or nci[0] > bci[1]):
+                    ok, verdict = True, "OK (CI overlap)"
             print(f"  {k:<{width}}  {b:>12.5g} -> {n:>12.5g}  "
                   f"({delta:>6.2%})  {verdict}")
         breaches += 0 if ok else 1
@@ -205,6 +266,11 @@ def main(argv: Optional[List[str]] = None) -> int:
         if len(runs) != 2:
             print("obs_report: --diff needs exactly two exports",
                   file=sys.stderr)
+            return 1
+        why = _protocol_mismatch(runs[0], runs[1])
+        if why:
+            print(f"obs_report: refusing diff: {why}; re-record one side "
+                  "under the other's protocol", file=sys.stderr)
             return 1
         breaches = diff(runs[0], runs[1], args.time_budget, args.rel)
         if breaches:

@@ -13,6 +13,11 @@ python benchmarks/online_churn.py --smoke --engine scan
 # engine — exercises eviction/requeue, stragglers and the degradation
 # headline end to end (results are not recorded under --smoke).
 python benchmarks/online_churn.py --smoke --engine scan --faults
+# Batched-scenario arm: a tiny rho x admission x seed grid as ONE
+# vmap-batched, transfer-guarded dispatch, asserted f32-bit-identical
+# lane by lane against the sequential dispatches it replaces
+# (repro.online.batch_sim; unrecorded under --smoke).
+python benchmarks/online_churn.py --smoke --batched --seeds 2
 python benchmarks/cluster_scale.py --smoke
 python benchmarks/cluster_scale.py --smoke --engine scan
 # Telemetry arm: run both engines with the device ring + span tracing on,
