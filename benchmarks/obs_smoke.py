@@ -11,9 +11,19 @@ Drives the whole ``repro.obs`` stack end to end on a small grid:
 * host span tracing (``repro.obs.trace``) around both, captured into
   the export's ``spans`` block.
 
-The export (``results/obs_smoke.json``) carries the metrics, the
-timelines, both telemetry rings and the spans — render or diff it with
-``tools/obs_report.py``.  ``--record`` writes the baseline copy
+Both engines run with the per-app rings on (``app_telemetry=True``),
+and the export carries per-arm ``accuracy`` blocks
+(``repro.obs.accuracy.accuracy_report``: per-app/per-pair MAPE stacks,
+error CCDF, drift windows) plus their flat scalars (``open_acc_mape``
+etc.) in the metrics table — so the baseline diff pins prediction
+accuracy with the same 5% tolerance as the other deterministic
+metrics, and a model/policy change that degrades Eq.4 error fails the
+smoke.  The raw rings stay out of the export (the accuracy block is
+the aggregated view) to keep it light.
+
+The live export lands in the *untracked* ``results/smoke/`` directory —
+re-running the smoke tier must leave the working tree clean —
+while ``--record`` writes the tracked baseline copy
 (``results/obs_smoke_baseline.json``) the smoke tier diffs against:
 non-timing metrics are deterministic given the RNG stream stamps, so
 any drift there is a real behaviour change, while wall-time metrics
@@ -37,13 +47,17 @@ from benchmarks.common import RESULTS_DIR, get_env  # noqa: E402
 N_APPS = 32          # closed-race population
 N_CORES = 8          # open-system capacity: 16 contexts
 N_QUANTA = 40
-EXPORT = os.path.join(RESULTS_DIR, "obs_smoke.json")
+#: Untracked smoke-tier output directory: live exports churn on every
+#: run, so they must never live next to the tracked baselines.
+SMOKE_DIR = os.path.join(RESULTS_DIR, "smoke")
+EXPORT = os.path.join(SMOKE_DIR, "obs_smoke.json")
 BASELINE = os.path.join(RESULTS_DIR, "obs_smoke_baseline.json")
 
 
 def run_export():
     """One telemetry-on pass of both engines -> a run export dict."""
     from repro.core import isc
+    from repro.obs import accuracy as obs_accuracy
     from repro.obs import metrics as obs_metrics
     from repro.obs import trace as obs_trace
     from repro.online import ClusterSim, PoissonArrivals
@@ -66,21 +80,28 @@ def run_export():
                 PoissonArrivals(rate=1.5, n_pool=len(pool)),
                 seed=13, target_scale=0.1, engine="scan",
             )
-            stats = sim.run(N_QUANTA, telemetry=True)
+            stats = sim.run(N_QUANTA, telemetry=True, app_telemetry=True)
         with obs_trace.span("obs_smoke.closed"):
             profs = workloads.scaled_workload(N_APPS, seed=N_APPS)
             res = machine.run_quanta_multi(
                 profs, {"synpa4-scan": spec}, n_quanta=N_QUANTA, seed=3,
-                engine="scan", telemetry=True,
+                engine="scan", telemetry=True, app_telemetry=True,
             )["synpa4-scan"]
     finally:
         obs_trace.disable()
 
+    accuracy = {
+        "open": obs_accuracy.accuracy_report(stats.app_telemetry),
+        "closed": obs_accuracy.accuracy_report(res.app_telemetry),
+    }
     metrics = {
         **obs_metrics.stats_metrics(stats, prefix="open_"),
         **{f"open_{k}": v for k, v in stats.telemetry.summary().items()},
         **obs_metrics.throughput_metrics(res, prefix="closed_"),
         **{f"closed_{k}": v for k, v in res.telemetry.summary().items()},
+        **obs_accuracy.report_metrics(accuracy["open"], prefix="open_"),
+        **obs_accuracy.report_metrics(accuracy["closed"],
+                                      prefix="closed_"),
     }
     timelines = {f"open_{k}": v for k, v in stats.timelines().items()
                  if not k.startswith("tlm_")}
@@ -90,6 +111,7 @@ def run_export():
         metrics=metrics,
         timelines=timelines,
         telemetry={"open": stats.telemetry, "closed": res.telemetry},
+        accuracy=accuracy,
         spans=obs_trace.events(),
         meta={"n_apps": N_APPS, "n_cores": N_CORES, "quanta": N_QUANTA},
     )
@@ -108,6 +130,7 @@ def main() -> int:
     from repro.obs import metrics as obs_metrics
 
     run = run_export()
+    os.makedirs(SMOKE_DIR, exist_ok=True)
     obs_metrics.save_run(EXPORT, run)
     print(f"# wrote {EXPORT}")
     if args.record:

@@ -17,22 +17,36 @@ away.  This package closes the loop with three layers:
   export format (``export_run``/``save_run``/``load_run``) unifying the
   ad-hoc benchmark JSON fields, rendered and diffed by
   ``tools/obs_report.py``.
+* :mod:`repro.obs.accuracy` — per-application prediction accuracy over
+  the app rings (``app_telemetry=True``): MAPE/bias/RMSE stacks per app
+  and per pair, error CCDFs, and a windowed drift detector against a
+  recorded budget.
 
 See ``docs/observability.md`` for the counter catalogue and span schema.
 """
 
+from repro.obs.accuracy import (  # noqa: F401
+    accuracy_report,
+    drift_windows,
+    error_ccdf,
+    error_stack,
+    report_metrics,
+)
 from repro.obs.metrics import (  # noqa: F401
     OBS_SCHEMA_VERSION,
+    READABLE_SCHEMAS,
     export_run,
     load_run,
     save_run,
     version_stamp,
 )
 from repro.obs.telemetry import (  # noqa: F401
+    APP_FIELDS,
     CLOSED_FIELDS,
     FAULT_FIELDS,
     FUSED_DIAG_FIELDS,
     OPEN_FIELDS,
+    AppTelemetryLog,
     TelemetryLog,
 )
 from repro.obs.trace import span  # noqa: F401

@@ -6,7 +6,7 @@ per script, the policy-budget guard's private flat file.  A *run export*
 unifies them:
 
     {
-      "obs_schema_version": 1,
+      "obs_schema_version": 2,
       "name": "...",                      # what was run
       "rng_stream_version": ...,          # stamps (version_stamp below)
       "scan_rng_stream_version": ...,     #   (device runs only)
@@ -15,6 +15,7 @@ unifies them:
       "metrics":   {flat name -> float},  # the comparable numbers
       "timelines": {name -> [per-quantum floats]},
       "telemetry": {arm -> TelemetryLog.to_dict()},
+      "accuracy":  {arm -> accuracy_report()},   # v2: per-app panels
       "spans":     [chrome trace events],
       "meta":      {free-form context},
     }
@@ -37,8 +38,17 @@ import time
 from typing import Dict, List, Optional
 
 #: Version of the run-export schema above.  Bump on layout changes;
-#: loaders refuse mismatches instead of migrating.
-OBS_SCHEMA_VERSION = 1
+#: loaders refuse mismatches instead of migrating.  v2 (ISSUE 10) adds
+#: the optional per-arm ``accuracy`` block (per-app MAPE stacks, error
+#: CCDFs and drift windows from ``repro.obs.accuracy``).
+OBS_SCHEMA_VERSION = 2
+
+#: Schemas :func:`load_run` accepts *read-only*.  v1 exports carry no
+#: ``accuracy`` block but are otherwise layout-compatible, so reading
+#: (rendering a report, trend history) keeps working; anything that
+#: *writes* or *diffs* against the current schema passes ``write=True``
+#: and refuses the old version instead.
+READABLE_SCHEMAS = (1, 2)
 
 
 def version_stamp(engine: Optional[str] = None,
@@ -88,7 +98,8 @@ def version_stamp(engine: Optional[str] = None,
 
 def check_stamp(obj: Dict, label: str = "run",
                 batched: Optional[bool] = None,
-                lanes: Optional[int] = None) -> bool:
+                lanes: Optional[int] = None,
+                write: bool = False) -> bool:
     """True when ``obj``'s stamps match the current code; says why not.
 
     ``batched``/``lanes``: when the caller states an expectation, a
@@ -97,13 +108,20 @@ def check_stamp(obj: Dict, label: str = "run",
     medians are not comparable numbers.  ``None`` (the default) skips
     the check, keeping single-lane callers and historical exports
     (which carry no ``batched`` key) working unchanged.
+
+    ``write``: a caller that will *update or diff against* the export
+    demands the current schema exactly; the read-only default accepts
+    any version in :data:`READABLE_SCHEMAS`.
     """
     from repro.smt.training import RNG_STREAM_VERSION
 
-    if obj.get("obs_schema_version") not in (None, OBS_SCHEMA_VERSION):
+    allowed = ((None, OBS_SCHEMA_VERSION) if write
+               else (None,) + READABLE_SCHEMAS)
+    if obj.get("obs_schema_version") not in allowed:
+        what = (f"!= v{OBS_SCHEMA_VERSION} (write path)" if write
+                else f"not readable (know {READABLE_SCHEMAS})")
         print(f"# refusing {label}: obs schema "
-              f"v{obj.get('obs_schema_version')} != v{OBS_SCHEMA_VERSION}; "
-              "re-record it")
+              f"v{obj.get('obs_schema_version')} {what}; re-record it")
         return False
     if batched is not None and bool(obj.get("batched", False)) != batched:
         got = "batched" if obj.get("batched") else "single-lane"
@@ -152,6 +170,7 @@ def export_run(
     batched: bool = False,
     lanes: Optional[int] = None,
     lane_metrics: Optional[Dict[str, Dict[str, float]]] = None,
+    accuracy: Optional[Dict[str, Dict]] = None,
 ) -> Dict:
     """Build a run export (the schema in the module docstring).
 
@@ -166,6 +185,11 @@ def export_run(
     — which ``tools/obs_report.py`` renders as mean ± CI columns and
     diffs interval-aware.  The flat ``metrics`` block stays
     floats-only either way.
+
+    ``accuracy`` (schema v2) maps arm names to
+    :func:`repro.obs.accuracy.accuracy_report` dicts — the per-app
+    MAPE/bias stacks, error CCDF and drift windows rendered by the
+    report tool's per-app panel.
     """
     run: Dict = {
         "obs_schema_version": OBS_SCHEMA_VERSION,
@@ -190,6 +214,8 @@ def export_run(
             k: (v.to_dict() if hasattr(v, "to_dict") else v)
             for k, v in telemetry.items()
         }
+    if accuracy:
+        run["accuracy"] = {k: dict(v) for k, v in accuracy.items()}
     if spans:
         run["spans"] = list(spans)
     if meta:
@@ -207,8 +233,14 @@ def save_run(path: str, run: Dict) -> str:
     return path
 
 
-def load_run(path: str) -> Optional[Dict]:
-    """Load a run export; None when missing, unreadable or stale-stamped."""
+def load_run(path: str, write: bool = False) -> Optional[Dict]:
+    """Load a run export; None when missing, unreadable or stale-stamped.
+
+    The default is read-only and accepts any schema in
+    :data:`READABLE_SCHEMAS` (v1 exports render and trend fine); pass
+    ``write=True`` when the caller will update or diff against the
+    export — old-schema files are then refused with a re-record notice.
+    """
     if not os.path.exists(path):
         return None
     try:
@@ -221,7 +253,7 @@ def load_run(path: str) -> Optional[Dict]:
         print(f"# refusing {os.path.basename(path)}: not a run export "
               "(no 'metrics' block); re-record it")
         return None
-    if not check_stamp(obj, label=os.path.basename(path)):
+    if not check_stamp(obj, label=os.path.basename(path), write=write):
         return None
     return obj
 

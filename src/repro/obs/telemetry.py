@@ -73,6 +73,30 @@ OPEN_FIELDS = (
 ) + FUSED_DIAG_FIELDS + FAULT_FIELDS
 
 
+#: Per-application ring (``app_telemetry=True`` on either engine), one
+#: ``(S, F)`` block per quantum where ``S`` is the machine's context count
+#: (closed race: the N hardware contexts; open system: the capacity).  The
+#: identity and ground-truth columns are produced inside the same integer
+#: barrier as the scalar ring's slowdown stats; the prediction columns
+#: reuse the scalar ring's ``cost`` gather, so the per-app ring adds no
+#: new doctrine surface (see ``docs/observability.md``).
+APP_FIELDS = (
+    "app_id",           # occupant app id (closed: slot index; -1 = empty)
+    "partner_app_id",   # co-runner's app id, -1 when solo/empty
+    "pred_cost",        # predicted per-app slowdown (Eq.4 pair cost / 2)
+    "real_slowdown",    # ground-truth slowdown this quantum (0 = empty)
+    "residual",         # pred_cost - real_slowdown where both exist
+    "st_c1",            # ST-estimated performance-stack share, category 1
+    "st_c2",            # ... category 2
+    "st_c3",            # ... category 3
+    "st_c4",            # ... category 4 (zero under 3-category models)
+)
+
+#: Width of the ST stack slice in :data:`APP_FIELDS` — models with fewer
+#: categories are zero-padded so the ring shape is model-independent.
+APP_ST_WIDTH = 4
+
+
 class TelemetryLog:
     """Host-side view of a fetched ``(Q, F)`` telemetry ring.
 
@@ -122,3 +146,59 @@ class TelemetryLog:
     def __repr__(self) -> str:
         return (f"TelemetryLog(policy={self.policy!r}, "
                 f"quanta={self.quanta}, fields={len(self.fields)})")
+
+
+class AppTelemetryLog:
+    """Host-side view of a fetched ``(Q, S, F)`` per-application ring.
+
+    ``Q`` quanta, ``S`` contexts/slots, ``F == len(fields)`` counters per
+    occupant (:data:`APP_FIELDS`).  A slot with ``app_id < 0`` held no job
+    that quantum; its remaining columns are zero and excluded by
+    :meth:`valid`.  Like :class:`TelemetryLog` this is a plain container
+    built after the transfer-guard region exits — all aggregation
+    (MAPE/bias stacks, CCDFs, drift windows) lives in
+    :mod:`repro.obs.accuracy`.
+    """
+
+    def __init__(self, fields: Sequence[str], data, policy: str = ""):
+        self.fields = tuple(fields)
+        self.data = np.asarray(data, np.float64)
+        self.policy = policy
+        assert self.data.ndim == 3 and self.data.shape[2] == len(
+            self.fields
+        ), (self.data.shape, len(self.fields))
+
+    @property
+    def quanta(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def slots(self) -> int:
+        return self.data.shape[1]
+
+    def series(self, name: str) -> np.ndarray:
+        """The (Q, S) per-quantum, per-slot series of one counter."""
+        return self.data[:, :, self.fields.index(name)]
+
+    def valid(self) -> np.ndarray:
+        """(Q, S) bool mask: the slot held a job that quantum."""
+        return self.series("app_id") >= 0
+
+    def to_dict(self) -> Dict:
+        """JSON-ready payload (the ``app_telemetry`` block of an export)."""
+        return {
+            "policy": self.policy,
+            "fields": list(self.fields),
+            "data": [[[float(v) for v in slot] for slot in row]
+                     for row in self.data],
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "AppTelemetryLog":
+        return cls(d["fields"], np.asarray(d["data"], np.float64),
+                   policy=d.get("policy", ""))
+
+    def __repr__(self) -> str:
+        return (f"AppTelemetryLog(policy={self.policy!r}, "
+                f"quanta={self.quanta}, slots={self.slots}, "
+                f"fields={len(self.fields)})")

@@ -52,13 +52,19 @@ def _annotation(name: str):
 
 
 def enable(clear: bool = True) -> None:
-    """Start recording spans (optionally clearing previous events)."""
+    """Start recording spans (optionally clearing previous events).
+
+    Also installs the :func:`install_jax_monitoring` listeners (once per
+    process, best-effort) so traced runs pick up persistent-cache
+    hit/miss and backend compile-time events without extra wiring.
+    """
     global _enabled, _t0
     with _lock:
         if clear:
             _events.clear()
         _t0 = time.perf_counter()
         _enabled = True
+    install_jax_monitoring()
 
 
 def disable() -> None:
@@ -133,6 +139,101 @@ def save(path: str) -> str:
     with open(path, "w") as f:
         json.dump(to_chrome_trace(), f)
     return path
+
+
+def instant(name: str, **args) -> None:
+    """Record an instant ("i") event — a point-in-time marker with an
+    args payload (dispatch cost stats, cache hit/miss notifications)."""
+    if not _enabled:
+        return
+    ev = {
+        "name": name,
+        "ph": "i",
+        "s": "p",
+        "ts": (time.perf_counter() - _t0) * 1e6,
+        "pid": os.getpid(),
+        "tid": threading.get_ident(),
+    }
+    if args:
+        ev["args"] = {k: _jsonable(v) for k, v in args.items()}
+    with _lock:
+        _events.append(ev)
+
+
+def dispatch_cost(name: str, jitted, *args, **kwargs) -> Optional[Dict]:
+    """Attach the compiled dispatch's XLA cost analysis to the trace.
+
+    Lowers+compiles ``jitted`` for ``args`` (a persistent-compilation-
+    cache hit when the engines already compiled it this process) and
+    records flops / bytes-accessed / memory footprints as an instant
+    event named ``<name>.cost``.  Best-effort across jax versions:
+    returns the stat dict, or ``None`` when tracing is disabled or the
+    AOT cost APIs are unavailable — never raises into the engine.
+    """
+    if not _enabled:
+        return None
+    try:
+        compiled = jitted.lower(*args, **kwargs).compile()
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0] if ca else {}
+        stats: Dict[str, float] = {}
+        for key in ("flops", "bytes accessed", "optimal_seconds"):
+            v = ca.get(key) if hasattr(ca, "get") else None
+            if isinstance(v, (int, float)):
+                stats[key.replace(" ", "_")] = float(v)
+        try:
+            mem = compiled.memory_analysis()
+            for attr in ("output_size_in_bytes", "temp_size_in_bytes",
+                         "argument_size_in_bytes"):
+                v = getattr(mem, attr, None)
+                if isinstance(v, (int, float)):
+                    stats[attr] = float(v)
+        except Exception:
+            pass
+    except Exception:
+        return None
+    instant(f"{name}.cost", **stats)
+    return stats
+
+
+_monitoring_installed: Optional[bool] = None
+
+
+def install_jax_monitoring() -> bool:
+    """Forward ``jax.monitoring`` events into the trace — persistent
+    compilation-cache hits/misses and backend compile-time durations
+    become instant/complete events next to the engine spans.
+
+    Idempotent and best-effort (the monitoring API and its event names
+    vary across jax versions); listeners record nothing while tracing
+    is disabled.  Returns whether a listener is installed.
+    """
+    global _monitoring_installed
+    if _monitoring_installed is not None:
+        return _monitoring_installed
+    try:
+        from jax import monitoring
+
+        def _keep(event: str) -> bool:
+            return ("compilation_cache" in event
+                    or "backend_compile" in event)
+
+        def _on_event(event: str, **kw) -> None:
+            if _enabled and _keep(event):
+                instant("jax" + event.replace("/", "."))
+
+        def _on_duration(event: str, duration: float, **kw) -> None:
+            if _enabled and _keep(event):
+                instant("jax" + event.replace("/", "."),
+                        duration_s=float(duration))
+
+        monitoring.register_event_listener(_on_event)
+        monitoring.register_event_duration_secs_listener(_on_duration)
+        _monitoring_installed = True
+    except Exception:  # pragma: no cover - jax without monitoring
+        _monitoring_installed = False
+    return _monitoring_installed
 
 
 def breakdown(evs: Optional[List[Dict]] = None) -> Dict[str, Dict]:

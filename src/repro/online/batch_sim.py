@@ -75,7 +75,12 @@ import numpy as np
 from jax import lax
 
 from repro.obs import trace as obs_trace
-from repro.obs.telemetry import OPEN_FIELDS, TelemetryLog
+from repro.obs.telemetry import (
+    APP_FIELDS,
+    AppTelemetryLog,
+    OPEN_FIELDS,
+    TelemetryLog,
+)
 from repro.online.device_sim import (
     DEVICE_SIM_KINDS,
     _attach_fault_stats,
@@ -90,7 +95,7 @@ from repro.smt.scan_engine import DeviceTables, ScanPolicy
 
 def _build_batched_race(spec: ScanPolicy, params, capacity: int,
                         n_quanta: int, j_pad: int, telemetry: bool,
-                        faulted: bool):
+                        faulted: bool, app_telemetry: bool = False):
     """One jitted, lane-batched open-system race.
 
     ``race(dt, syn_cost, syn_mean, syn_stacks, job_pool (L, J),
@@ -103,7 +108,7 @@ def _build_batched_race(spec: ScanPolicy, params, capacity: int,
     """
     body, carry0, unpack = _make_open_ops(
         spec, params, capacity, j_pad, "lane", telemetry,
-        "lane" if faulted else None,
+        "lane" if faulted else None, app_telemetry=app_telemetry,
     )
 
     def lane_race(dt, syn_cost, syn_mean, syn_stacks, job_pool,
@@ -135,11 +140,13 @@ _BATCH_CACHE_MAX = 8
 
 
 def _batch_key(spec: ScanPolicy, capacity: int, n_quanta: int, j_pad: int,
-               telemetry: bool, faulted: bool) -> Tuple:
+               telemetry: bool, faulted: bool,
+               app_telemetry: bool = False) -> Tuple:
     return (
         spec.kind, id(spec.method), id(spec.model), spec.pair_impl,
         spec.solver, spec.matcher, spec.refine_eps, spec.refine_rounds,
         spec.first_match, capacity, n_quanta, j_pad, telemetry, faulted,
+        app_telemetry,
     )
 
 
@@ -160,6 +167,7 @@ def run_device_sim_batched(sims: Sequence, n_quanta: int,
                            transfer_guard: bool = False,
                            warmup: bool = True,
                            telemetry: bool = False,
+                           app_telemetry: bool = False,
                            ) -> List[OnlineStats]:
     """Run a list of :class:`repro.online.sim.ClusterSim` scenarios as
     ONE batched dispatch; returns per-lane :class:`OnlineStats` in input
@@ -174,7 +182,11 @@ def run_device_sim_batched(sims: Sequence, n_quanta: int,
     ``repeats``/``warmup``/``transfer_guard``/``telemetry`` follow
     :func:`run_device_sim`; per-lane ``policy_s`` spreads the
     whole-grid median wall over ``L * n_quanta`` (per-scenario cost).
+    ``app_telemetry`` (implies ``telemetry``) attaches each lane's
+    per-application ring as ``OnlineStats.app_telemetry`` — per-lane
+    rings are bit-identical to the single-dispatch twin's.
     """
+    telemetry = telemetry or app_telemetry
     assert len(sims) >= 1, "batched run needs at least one scenario lane"
     base = sims[0]
     spec: ScanPolicy = base.policy
@@ -264,13 +276,16 @@ def run_device_sim_batched(sims: Sequence, n_quanta: int,
     else:
         fup = fspeed = max_retries = backoff = preserve = None
 
-    key = _batch_key(spec, c, n_quanta, j_pad, telemetry, faulted)
+    key = _batch_key(spec, c, n_quanta, j_pad, telemetry, faulted,
+                     app_telemetry=app_telemetry)
     ent = _BATCH_CACHE.get(key)
     if ent is None:
         with obs_trace.span("batch_sim.compile_build", capacity=c,
-                            quanta=n_quanta, lanes=L):
+                            quanta=n_quanta, lanes=L,
+                            app_telemetry=app_telemetry):
             ent = (spec.method, spec.model, _build_batched_race(
                 spec, params, c, n_quanta, j_pad, telemetry, faulted,
+                app_telemetry=app_telemetry,
             ))
         _BATCH_CACHE[key] = ent
         while len(_BATCH_CACHE) > _BATCH_CACHE_MAX:
@@ -296,6 +311,7 @@ def run_device_sim_batched(sims: Sequence, n_quanta: int,
     if warmup:
         with obs_trace.span("batch_sim.compile", lanes=L):
             out = jax.block_until_ready(race(*args))
+        obs_trace.dispatch_cost("batch_sim.race", race, *args)
     walls = []
     for _ in range(max(int(repeats), 1)):
         t0 = time.perf_counter()
@@ -313,10 +329,17 @@ def run_device_sim_batched(sims: Sequence, n_quanta: int,
     with obs_trace.span("batch_sim.fetch", lanes=L):
         fetched = tuple(np.asarray(o) for o in out)
     admit, finish, queue_depth, n_active, n_solo = fetched[:5]
+    fi = 5
     retries = retry_at = evictions = requeues = None
     if faulted:
-        retries, retry_at, evictions, requeues = fetched[5:9]
-    tlm = fetched[-1] if telemetry else None
+        retries, retry_at, evictions, requeues = fetched[fi:fi + 4]
+        fi += 4
+    tlm = app_tlm = None
+    if telemetry:
+        tlm = fetched[fi]
+        fi += 1
+    if app_telemetry:
+        app_tlm = fetched[fi]
 
     stats_out: List[OnlineStats] = []
     with obs_trace.span("batch_sim.stats", lanes=L):
@@ -362,5 +385,8 @@ def run_device_sim_batched(sims: Sequence, n_quanta: int,
                         ring[:, OPEN_FIELDS.index(nm)] = getattr(stats, nm)
                 stats.telemetry = TelemetryLog(OPEN_FIELDS, ring,
                                                policy=name)
+            if app_telemetry:
+                stats.app_telemetry = AppTelemetryLog(
+                    APP_FIELDS, app_tlm[i], policy=name)
             stats_out.append(stats)
     return stats_out

@@ -101,7 +101,13 @@ from jax import lax
 from repro.core import isc, matching
 from repro.core.synpa import fused_pad, make_fused_step
 from repro.obs import trace as obs_trace
-from repro.obs.telemetry import OPEN_FIELDS, TelemetryLog
+from repro.obs.telemetry import (
+    APP_FIELDS,
+    APP_ST_WIDTH,
+    AppTelemetryLog,
+    OPEN_FIELDS,
+    TelemetryLog,
+)
 from repro.online.arrivals import presample
 from repro.online.faults import RETRY_NEVER
 from repro.smt.metrics import OnlineStats
@@ -165,7 +171,8 @@ class _LaneCfg(NamedTuple):
 
 def _make_open_ops(spec: ScanPolicy, params, capacity: int, j_pad: int,
                    admission: str, telemetry: bool = False,
-                   faults_cfg=None, segment: bool = False):
+                   faults_cfg=None, segment: bool = False,
+                   app_telemetry: bool = False):
     """Build the per-quantum scan ``body`` (plus ``carry0``/``unpack``)
     shared by the single-lane race (:func:`_build_race`) and the batched
     race (:func:`repro.online.batch_sim._build_batched_race`).
@@ -179,7 +186,18 @@ def _make_open_ops(spec: ScanPolicy, params, capacity: int, j_pad: int,
     retry knobs (``max_retries``/``backoff``/``preserve``) read off
     ``lane_cfg`` as traced scalars instead of Python constants.  The
     static modes trace the exact historical graphs — the pinned
-    f32-trajectory tests hold them to it."""
+    f32-trajectory tests hold them to it.
+
+    ``app_telemetry`` (static, implies ``telemetry``) appends the
+    per-application ring (``repro.obs.telemetry.APP_FIELDS``) as one
+    more scan output: per-context occupant/partner identity, predicted
+    vs ground-truth slowdown, signed residual, and the policy's ST
+    stack estimates.  Identity/ground-truth columns come out of the
+    ``open_slow_stats`` barrier shadow; the prediction column reuses
+    the scalar ring's ``cost`` gather — no new doctrine surface."""
+    assert telemetry or not app_telemetry, (
+        "app_telemetry implies telemetry in the open-system ops"
+    )
     lane = admission == "lane"
     lane_faults = faults_cfg == "lane"
     faults = faults_cfg is not None
@@ -337,13 +355,20 @@ def _make_open_ops(spec: ScanPolicy, params, capacity: int, j_pad: int,
         return counters, after, done, frac, new_idx, new_left
 
     # ------------------------------------------------- telemetry shadow
-    def open_slow_stats(dt, aid, active, phase_idx, partner):
+    def open_slow_stats(dt, aid, active, phase_idx, partner,
+                        per_ctx: bool = False):
         """``[mean, max]`` realized slowdown over the active contexts —
         the open-system twin of ``scan_engine._slow_stats``, recomputed
         behind an integer ``optimization_barrier`` so the quantum's own
         float subgraph keeps its exact consumer set (f32 reductions are
         not associative; an extra consumer changes XLA's fusion choices
-        and would cost the telemetry-on run its bit-identity)."""
+        and would cost the telemetry-on run its bit-identity).
+
+        ``per_ctx=True`` (static, the ``app_telemetry`` ring)
+        additionally returns the un-reduced ``(C,)`` ratio vector plus
+        the barriered occupant ids and the co-runner's app id (``-1``
+        when solo or empty) — all already live inside the shadow, so
+        emitting them adds nothing outside the barrier."""
         aid_b, act_b, ph_b, pt_b = lax.optimization_barrier(
             (aid, active, phase_idx, partner)
         )
@@ -355,7 +380,12 @@ def _make_open_ops(spec: ScanPolicy, params, capacity: int, j_pad: int,
         solo_cpi = dt.comps[aid_safe, ph].sum(axis=-1)
         ratio = jnp.where(act_b, comps.sum(axis=-1) / solo_cpi, 0.0)
         na = jnp.maximum(jnp.sum(act_b.astype(jnp.float32)), 1.0)
-        return jnp.sum(ratio) / na, jnp.max(ratio)
+        stats = (jnp.sum(ratio) / na, jnp.max(ratio))
+        if per_ctx:
+            co = act_b & act_b[pt_b] & (pt_b != idx)
+            partner_app = jnp.where(co, aid_b[pt_b], -1)
+            return stats + (ratio, aid_b, partner_app)
+        return stats
 
     # ----------------------------------------------------------- scan body
     def body(dt, job_pool, job_arrive, job_target, syn_cost, syn_mean,
@@ -509,6 +539,7 @@ def _make_open_ops(spec: ScanPolicy, params, capacity: int, j_pad: int,
         # 3. Policy: pair the active population off the *previous*
         # quantum's counters (the host event-loop order).
         pol_diag = None
+        pred_ctx = jnp.zeros(c, jnp.float32) if app_telemetry else None
         if spec.kind == "adjacent":
             partner = adjacent_partner(active, n_active)
             mpart = carry.mpart
@@ -561,19 +592,34 @@ def _make_open_ops(spec: ScanPolicy, params, capacity: int, j_pad: int,
                 # Mean predicted cost per committed pair (each pair's
                 # entry appears twice over n_valid/2 pairs; factors of 2
                 # cancel).
-                pred = jnp.sum(jnp.where(
+                gathered = jnp.where(
                     valid_p, cost[jnp.arange(p), mpart], 0.0
-                )) / n_valid
+                )
+                pred = jnp.sum(gathered) / n_valid
                 pol_diag = jnp.concatenate([
                     jnp.stack([pred, dirty, rounds.astype(jnp.float32)]),
                     fdiag,
                 ])
+                if app_telemetry:
+                    # Per-context predicted slowdown: cost[i, j] is
+                    # slowdown(i|j) + slowdown(j|i), so a context's own
+                    # share of its committed pair is half its gathered
+                    # entry (masked to co-running contexts when the ring
+                    # row is built below).
+                    pred_ctx = gathered[:c] * 0.5
             partner = jnp.where(active, _machine_partner_of(mpart, c), idx)
 
         # 4. One membership-masked machine quantum + 5. departures.
-        if telemetry:
+        if app_telemetry:
             # Shadow slowdown stats use the pre-quantum phases/pairing —
-            # exactly what the quantum below is about to run.
+            # exactly what the quantum below is about to run.  The
+            # per-app variant also emits the per-context ratio and the
+            # (barriered) occupant/partner identities.
+            (slow_mean, slow_max, ratio_ctx, aid_ctx,
+             partner_app) = open_slow_stats(
+                dt, app_id, active, phase_idx, partner, per_ctx=True
+            )
+        elif telemetry:
             slow_mean, slow_max = open_slow_stats(
                 dt, app_id, active, phase_idx, partner
             )
@@ -646,6 +692,33 @@ def _make_open_ops(spec: ScanPolicy, params, capacity: int, j_pad: int,
                 jnp.zeros(5, jnp.float32),
             ])
             outs = outs + (tvec,)
+        if app_telemetry:
+            # Per-app ring row: identities and ground truth off the
+            # barrier shadow, prediction off the policy's cost gather,
+            # ST stacks off the policy carry.  Empty contexts record
+            # app_id -1 and zeros.
+            co_ctx = partner_app >= 0
+            # Barriers: the residual must combine the *recorded*
+            # (rounded) tensors, not FMA-fused upstream products.
+            pred_col, real_col = lax.optimization_barrier(
+                (jnp.where(co_ctx, pred_ctx, 0.0), ratio_ctx))
+            resid_col = jnp.where(pred_col > 0.0, pred_col - real_col,
+                                  0.0)
+            st4 = st[:, :APP_ST_WIDTH]
+            if st4.shape[1] < APP_ST_WIDTH:
+                st4 = jnp.concatenate(
+                    [st4, jnp.zeros((c, APP_ST_WIDTH - st4.shape[1]),
+                                    jnp.float32)], axis=1)
+            st4 = jnp.where((aid_ctx >= 0)[:, None], st4, 0.0)
+            avec = jnp.concatenate([
+                jnp.stack([
+                    aid_ctx.astype(jnp.float32),
+                    partner_app.astype(jnp.float32),
+                    pred_col, real_col, resid_col,
+                ], axis=1),
+                st4,
+            ], axis=1)
+            outs = outs + (avec,)
         return (new, fc_new), outs
 
     def carry0():
@@ -693,8 +766,12 @@ def _make_open_ops(spec: ScanPolicy, params, capacity: int, j_pad: int,
         res = (ocarry.admit_q, finish_q) + ys[:3]
         if faults:
             res = res + (fcarry.retries, fcarry.retry_at) + ys[k:k + 2]
+            k += 2
         if telemetry:
-            res = res + (ys[-1],)
+            res = res + (ys[k],)
+            k += 1
+        if app_telemetry:
+            res = res + (ys[k],)
         return res
 
     return body, carry0, unpack
@@ -703,7 +780,7 @@ def _make_open_ops(spec: ScanPolicy, params, capacity: int, j_pad: int,
 def _build_race(spec: ScanPolicy, params, capacity: int, n_quanta: int,
                 j_pad: int, admission: str, telemetry: bool = False,
                 faults_cfg: Optional[Tuple[int, int, bool]] = None,
-                segment: bool = False):
+                segment: bool = False, app_telemetry: bool = False):
     """Compile-ready open-system run: one jitted function, one dispatch.
 
     Returns ``race(dt, job_pool, job_arrive, job_target, syn_cost,
@@ -750,7 +827,7 @@ def _build_race(spec: ScanPolicy, params, capacity: int, n_quanta: int,
     """
     body, carry0, unpack = _make_open_ops(
         spec, params, capacity, j_pad, admission, telemetry, faults_cfg,
-        segment,
+        segment, app_telemetry=app_telemetry,
     )
 
     if segment:
@@ -796,12 +873,13 @@ _RACE_CACHE_MAX = 16
 def _race_key(spec: ScanPolicy, capacity: int, n_quanta: int, j_pad: int,
               admission: str, telemetry: bool = False,
               faults_cfg: Optional[Tuple[int, int, bool]] = None,
-              segment: bool = False) -> Tuple:
+              segment: bool = False,
+              app_telemetry: bool = False) -> Tuple:
     return (
         spec.kind, id(spec.method), id(spec.model), spec.pair_impl,
         spec.solver, spec.matcher, spec.refine_eps, spec.refine_rounds,
         spec.first_match, capacity, n_quanta, j_pad, admission, telemetry,
-        faults_cfg, segment,
+        faults_cfg, segment, app_telemetry,
     )
 
 
@@ -888,7 +966,8 @@ def _check_conservation(prep, n_quanta, admit, finish, retries, retry_at):
 def run_device_sim(sim, n_quanta: int, repeats: int = 1,
                    transfer_guard: bool = False,
                    warmup: bool = True,
-                   telemetry: bool = False) -> OnlineStats:
+                   telemetry: bool = False,
+                   app_telemetry: bool = False) -> OnlineStats:
     """Run a :class:`repro.online.sim.ClusterSim` configuration on device.
 
     One ``lax.scan`` dispatch executes the whole run; ``repeats``
@@ -910,7 +989,13 @@ def run_device_sim(sim, n_quanta: int, repeats: int = 1,
     attaches it to the returned stats as ``OnlineStats.telemetry`` — the
     trajectory stays bit-identical to a telemetry-off run and the
     one-dispatch transfer-guard contract is unchanged.
+
+    ``app_telemetry=True`` (implies ``telemetry``) additionally records
+    the per-application ring (``repro.obs.telemetry.APP_FIELDS``) and
+    attaches it as ``OnlineStats.app_telemetry`` — same contract, same
+    single dispatch.
     """
+    telemetry = telemetry or app_telemetry
     machine = sim.machine
     spec: ScanPolicy = sim.policy
     assert spec.kind in DEVICE_SIM_KINDS, spec.kind
@@ -929,14 +1014,16 @@ def run_device_sim(sim, n_quanta: int, repeats: int = 1,
     faulted = fcfg is not None
 
     key = _race_key(spec, c, n_quanta, j_pad, sim.admission, telemetry,
-                    fcfg)
+                    fcfg, app_telemetry=app_telemetry)
     ent = _RACE_CACHE.get(key)
     if ent is None:
         with obs_trace.span("device_sim.compile_build", capacity=c,
-                            quanta=n_quanta, telemetry=telemetry):
+                            quanta=n_quanta, telemetry=telemetry,
+                            app_telemetry=app_telemetry):
             ent = (spec.method, spec.model, _build_race(
                 spec, params, c, n_quanta, j_pad, sim.admission,
                 telemetry=telemetry, faults_cfg=fcfg,
+                app_telemetry=app_telemetry,
             ))
         _RACE_CACHE[key] = ent
         while len(_RACE_CACHE) > _RACE_CACHE_MAX:
@@ -968,6 +1055,7 @@ def run_device_sim(sim, n_quanta: int, repeats: int = 1,
     if warmup:
         with obs_trace.span("device_sim.compile"):
             out = jax.block_until_ready(race(*args))  # compile + first run
+        obs_trace.dispatch_cost("device_sim.race", race, *args)
     walls = []
     for _ in range(max(int(repeats), 1)):
         t0 = time.perf_counter()
@@ -983,13 +1071,18 @@ def run_device_sim(sim, n_quanta: int, repeats: int = 1,
     with obs_trace.span("device_sim.fetch"):
         fetched = tuple(np.asarray(o) for o in out)
     admit, finish, queue_depth, n_active, n_solo = fetched[:5]
+    fi = 5
     retries = retry_at = evictions = requeues = None
     if faulted:
-        retries, retry_at, evictions, requeues = fetched[5:9]
+        retries, retry_at, evictions, requeues = fetched[fi:fi + 4]
+        fi += 4
         _check_conservation(prep, n_quanta, admit, finish, retries,
                             retry_at)
     if telemetry:
-        tlm = fetched[-1]
+        tlm = fetched[fi]
+        fi += 1
+    if app_telemetry:
+        app_ring = fetched[fi]
     solo_s = (
         job_target[:j] / pool_rate[pids] * params.quantum_s
         if j else np.zeros(0)
@@ -1029,6 +1122,9 @@ def run_device_sim(sim, n_quanta: int, repeats: int = 1,
                        "straggling"):
                 tlm[:, OPEN_FIELDS.index(nm)] = getattr(stats, nm)
         stats.telemetry = TelemetryLog(OPEN_FIELDS, tlm, policy=name)
+    if app_telemetry:
+        stats.app_telemetry = AppTelemetryLog(APP_FIELDS, app_ring,
+                                              policy=name)
     return stats
 
 
@@ -1088,6 +1184,7 @@ def run_device_sim_checkpointed(sim, n_quanta: int, seg_len: int,
                                 ckpt_dir: str, keep: int = 3,
                                 resume: bool = True,
                                 telemetry: bool = False,
+                                app_telemetry: bool = False,
                                 max_segments: Optional[int] = None
                                 ) -> Optional[OnlineStats]:
     """Device run with checkpoint/resume: the horizon is scanned in
@@ -1118,6 +1215,7 @@ def run_device_sim_checkpointed(sim, n_quanta: int, seg_len: int,
     """
     from repro.checkpoint import CheckpointManager
 
+    telemetry = telemetry or app_telemetry
     machine = sim.machine
     spec: ScanPolicy = sim.policy
     assert spec.kind in DEVICE_SIM_KINDS, spec.kind
@@ -1134,14 +1232,16 @@ def run_device_sim_checkpointed(sim, n_quanta: int, seg_len: int,
     faulted = fcfg is not None
 
     key = _race_key(spec, c, seg_len, j_pad, sim.admission, telemetry,
-                    fcfg, segment=True)
+                    fcfg, segment=True, app_telemetry=app_telemetry)
     ent = _RACE_CACHE.get(key)
     if ent is None:
         with obs_trace.span("device_sim.compile_build", capacity=c,
-                            quanta=seg_len, segment=True):
+                            quanta=seg_len, segment=True,
+                            app_telemetry=app_telemetry):
             ent = (spec.method, spec.model, _build_race(
                 spec, params, c, seg_len, j_pad, sim.admission,
                 telemetry=telemetry, faults_cfg=fcfg, segment=True,
+                app_telemetry=app_telemetry,
             ))
         _RACE_CACHE[key] = ent
         while len(_RACE_CACHE) > _RACE_CACHE_MAX:
@@ -1174,6 +1274,8 @@ def run_device_sim_checkpointed(sim, n_quanta: int, seg_len: int,
         ys_names += ["evictions", "requeues"]
     if telemetry:
         ys_names += ["telemetry"]
+    if app_telemetry:
+        ys_names += ["app_telemetry"]
 
     mgr = CheckpointManager(ckpt_dir, keep=keep)
     # The config fingerprint a snapshot must match to be resumable —
@@ -1183,6 +1285,7 @@ def run_device_sim_checkpointed(sim, n_quanta: int, seg_len: int,
         "seed": int(sim.seed), "capacity": int(c), "j_pad": int(j_pad),
         "admission": sim.admission, "kind": spec.kind,
         "telemetry": bool(telemetry), "faulted": bool(faulted),
+        "app_telemetry": bool(app_telemetry),
     }
     carry = _host_carry0(spec, c, j_pad, fcfg)
     ys_acc = {nm: [] for nm in ys_names}
@@ -1280,4 +1383,7 @@ def run_device_sim_checkpointed(sim, n_quanta: int, seg_len: int,
                        "straggling"):
                 tlm[:, OPEN_FIELDS.index(nm)] = getattr(stats, nm)
         stats.telemetry = TelemetryLog(OPEN_FIELDS, tlm, policy=name)
+    if app_telemetry:
+        stats.app_telemetry = AppTelemetryLog(
+            APP_FIELDS, series["app_telemetry"], policy=name)
     return stats

@@ -135,14 +135,17 @@ class ClusterSim:
     # ------------------------------------------------------------------ run
     def run(self, n_quanta: int, repeats: int = 1,
             transfer_guard: bool = False,
-            telemetry: bool = False) -> OnlineStats:
+            telemetry: bool = False,
+            app_telemetry: bool = False) -> OnlineStats:
         if self.engine == "scan":
             from repro.online.device_sim import run_device_sim
 
             return run_device_sim(self, n_quanta, repeats=repeats,
                                   transfer_guard=transfer_guard,
-                                  telemetry=telemetry)
-        assert repeats == 1 and not transfer_guard and not telemetry, (
+                                  telemetry=telemetry,
+                                  app_telemetry=app_telemetry)
+        assert (repeats == 1 and not transfer_guard and not telemetry
+                and not app_telemetry), (
             "repeats/transfer_guard/telemetry are scan-engine knobs; the "
             "host event loop is impure (one pass per call), always "
             "transfers, and records its timelines directly"

@@ -1010,6 +1010,9 @@ class ThroughputResult:
     #: None otherwise.  A default keeps every existing construction site
     #: valid.
     telemetry: Optional[object] = None
+    #: Per-application ring (``repro.obs.telemetry.AppTelemetryLog``)
+    #: when launched with ``app_telemetry=True``; None otherwise.
+    app_telemetry: Optional[object] = None
 
     @property
     def ipc_geomean(self) -> float:

@@ -157,6 +157,9 @@ class OnlineStats:
     #: Device telemetry ring (``repro.obs.telemetry.TelemetryLog``) when
     #: the run was launched with ``telemetry=True``; None otherwise.
     telemetry: Optional[object] = None
+    #: Per-application ring (``repro.obs.telemetry.AppTelemetryLog``)
+    #: when launched with ``app_telemetry=True``; None otherwise.
+    app_telemetry: Optional[object] = None
     #: Fault/resilience timelines + scalars (``repro.online.faults``); all
     #: None / 0 when the run had no FaultProfile.  failures/recoveries/
     #: straggling are fault-schedule data (identical on both engines by

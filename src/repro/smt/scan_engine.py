@@ -90,7 +90,13 @@ from jax import lax
 from repro.core import isc, matching
 from repro.core.synpa import fused_pad, make_fused_step
 from repro.obs import trace as obs_trace
-from repro.obs.telemetry import CLOSED_FIELDS, TelemetryLog
+from repro.obs.telemetry import (
+    APP_FIELDS,
+    APP_ST_WIDTH,
+    AppTelemetryLog,
+    CLOSED_FIELDS,
+    TelemetryLog,
+)
 from repro.smt.machine import (
     MachineParams,
     PhaseTables,
@@ -356,9 +362,16 @@ def _make_machine_quantum(dt: DeviceTables, params: MachineParams):
 
 
 def _slow_stats(dt: DeviceTables, params: MachineParams, phase_idx,
-                partner, aid=None):
+                partner, aid=None, per_slot: bool = False):
     """Telemetry shadow of the quantum's true-slowdown computation:
     ``[mean, max]`` of the per-slot slowdown ratio, ``(2,)`` f32.
+
+    ``per_slot=True`` (static, the ``app_telemetry`` ring) additionally
+    returns the un-reduced ``(n,)`` ratio vector and the barriered
+    partner vector.  Both already exist inside the shadow — only the
+    final reduction discards them — so emitting them adds no new
+    consumer of the quantum's own float intermediates and the doctrine
+    below is untouched.
 
     Recomputed from scratch behind an ``optimization_barrier`` on the
     *integer* inputs (phase indices + pairing) rather than read off the
@@ -385,7 +398,10 @@ def _slow_stats(dt: DeviceTables, params: MachineParams, phase_idx,
     cpi = comps.sum(axis=-1)
     solo_cpi = dt.comps[aid_b, ph].sum(axis=-1)
     ratio = cpi / solo_cpi
-    return jnp.stack([jnp.mean(ratio), jnp.max(ratio)])
+    stats = jnp.stack([jnp.mean(ratio), jnp.max(ratio)])
+    if per_slot:
+        return stats, ratio, pb
+    return stats
 
 
 def _machine_partner_of(mpart, n):
@@ -396,7 +412,8 @@ def _machine_partner_of(mpart, n):
 
 
 def _make_policy_step(spec: ScanPolicy, n: int, p_pad: int,
-                      valid_p: jnp.ndarray, telemetry: bool = False):
+                      valid_p: jnp.ndarray, telemetry: bool = False,
+                      app_telemetry: bool = False):
     """Closure: (q, counters, mpart, st, pkey, first=False) -> (mpart', st').
 
     ``first`` is a *static* Python flag marking the first quantum with
@@ -411,13 +428,25 @@ def _make_policy_step(spec: ScanPolicy, n: int, p_pad: int,
     ``(6,)`` f32 vector (predicted pair cost, 2-opt rounds, GN solver
     diagnostics).  The kinds without a solver/matcher report zeros.  The
     off path builds today's graph exactly.
+
+    ``app_telemetry`` (static, implies ``telemetry``) appends a fourth
+    output: the per-machine-slot predicted slowdown, ``(n,)`` f32 — half
+    the committed pair's Eq.4 cost, read off the *same* ``cost`` gather
+    the scalar ring already performs (zero for the kinds that predict
+    nothing).
     """
+    assert telemetry or not app_telemetry, (
+        "app_telemetry implies telemetry in the policy step"
+    )
     idx = jnp.arange(n, dtype=jnp.int32)
     odd = n % 2 == 1
     pol_zeros = jnp.zeros(6, jnp.float32)
+    pred_zeros = jnp.zeros(n, jnp.float32)
 
     if spec.kind == "static":
         def step(q, counters, mpart, st, pkey, first=False):
+            if app_telemetry:
+                return mpart, st, pol_zeros, pred_zeros
             if telemetry:
                 return mpart, st, pol_zeros
             return mpart, st
@@ -442,6 +471,8 @@ def _make_policy_step(spec: ScanPolicy, n: int, p_pad: int,
                 .at[py].set(x).at[x].set(py)
             )
             out = jnp.where(do, swapped, mpart)
+            if app_telemetry:
+                return out, st, pol_zeros, pred_zeros
             if telemetry:
                 return out, st, pol_zeros
             return out, st
@@ -500,12 +531,16 @@ def _make_policy_step(spec: ScanPolicy, n: int, p_pad: int,
             # Mean predicted cost per committed pair: each pair's entry
             # appears twice (i->j and j->i) over n_valid/2 pairs, so the
             # two factors of 2 cancel.
-            pred = jnp.sum(
-                jnp.where(valid_p, cost[p_idx, mpart], 0.0)
-            ) / n_valid
+            gathered = jnp.where(valid_p, cost[p_idx, mpart], 0.0)
+            pred = jnp.sum(gathered) / n_valid
             pol = jnp.concatenate(
                 [jnp.stack([pred, rounds.astype(jnp.float32)]), fdiag]
             )
+            if app_telemetry:
+                # Per-slot predicted slowdown: cost[i, j] is
+                # slowdown(i|j) + slowdown(j|i), so each slot's share of
+                # its committed pair is half the gathered entry.
+                return mpart, st, pol, gathered[:n] * 0.5
             return mpart, st, pol
         return matched, st
 
@@ -542,6 +577,7 @@ def build_race(
     policies: Sequence[ScanPolicy],
     n_quanta: int,
     telemetry: bool = False,
+    app_telemetry: bool = False,
 ):
     """Compile-ready K-policy race: one jitted function, one dispatch.
 
@@ -558,7 +594,19 @@ def build_race(
     fetched with the rest of the results in the same single dispatch.
     Telemetry never feeds the carry, and the off path traces today's
     graph unchanged, so trajectories are bit-identical either way.
+
+    ``app_telemetry`` (static, implies ``telemetry``) appends a fifth
+    output: the per-application ring, ``(K, n_quanta, N,
+    len(APP_FIELDS))`` — occupant identity, predicted vs ground-truth
+    slowdown, signed residual, and the policy's ST stack estimates for
+    every hardware slot every quantum.  The identity/ground-truth
+    columns come from the same integer-barrier shadow as the scalar
+    ring; predictions reuse the scalar ring's ``cost`` gather — same
+    doctrine, same bit-identity guarantee.
     """
+    assert telemetry or not app_telemetry, (
+        "app_telemetry implies telemetry in build_race"
+    )
     n = tables.n_apps
     p_pad = fused_pad(n)
     valid_np = np.zeros(p_pad, bool)
@@ -566,8 +614,49 @@ def build_race(
     if n % 2 == 1:
         valid_np[n] = True
     valid_p = jnp.asarray(valid_np)
-    steps = [_make_policy_step(s, n, p_pad, valid_p, telemetry=telemetry)
+    steps = [_make_policy_step(s, n, p_pad, valid_p, telemetry=telemetry,
+                               app_telemetry=app_telemetry)
              for s in policies]
+    idx_n = jnp.arange(n, dtype=jnp.int32)
+
+    def app_rows(ratio, pb, pred_slot, st):
+        """One quantum's ``(N, len(APP_FIELDS))`` per-app ring block.
+
+        ``ratio``/``pb`` come out of the ``_slow_stats`` barrier shadow;
+        ``pred_slot`` is the policy step's per-slot cost gather (zeros
+        when no policy ran).  Closed race: ``app_id`` *is* the slot
+        index; a slot paired with the idle vertex (odd N) runs solo and
+        records no partner/prediction.
+        """
+        co = pb != idx_n
+        partner_app = jnp.where(co, pb, -1).astype(jnp.float32)
+        # The barriers pin the *recorded* (rounded) tensors as the
+        # residual's operands — without them XLA fuses the upstream
+        # multiplies into FMAs and the residual column disagrees with
+        # pred - real by an ulp.
+        pred, real = lax.optimization_barrier(
+            (jnp.where(co, pred_slot, 0.0), ratio))
+        resid = jnp.where(pred > 0.0, pred - real, 0.0)
+        st4 = st[:, :APP_ST_WIDTH]
+        if st4.shape[1] < APP_ST_WIDTH:
+            st4 = jnp.concatenate(
+                [st4, jnp.zeros((n, APP_ST_WIDTH - st4.shape[1]),
+                                jnp.float32)], axis=1)
+        head = jnp.stack(
+            [idx_n.astype(jnp.float32), partner_app, pred, real, resid],
+            axis=1,
+        )
+        return jnp.concatenate([head, st4], axis=1)
+
+    def ring_rows(dt, phase_idx, partner, pol, pred_slot, st):
+        """(scalar ring row, per-app ring block or None) for one quantum."""
+        if app_telemetry:
+            stats, ratio, pb = _slow_stats(dt, params, phase_idx, partner,
+                                           per_slot=True)
+            return (jnp.concatenate([stats, pol]),
+                    app_rows(ratio, pb, pred_slot, st))
+        return (jnp.concatenate(
+            [_slow_stats(dt, params, phase_idx, partner), pol]), None)
 
     def run_one(dt, quantum, policy_step, mpart0, st0, mkey, pkey):
         state = _MachineState(
@@ -576,14 +665,15 @@ def build_race(
             total_retired=jnp.zeros(n, jnp.float32),
             total_cycles=jnp.zeros(n, jnp.float32),
         )
+        pol_zeros = jnp.zeros(6, jnp.float32)
+        pred_zeros = jnp.zeros(n, jnp.float32)
         # Quantum 0: the initial random pairing, no counters yet.
         partner0 = _machine_partner_of(mpart0, n)
         if telemetry:
             # No policy ran at quantum 0: policy fields are zero.
-            tvecs = [jnp.concatenate(
-                [_slow_stats(dt, params, state.phase_idx, partner0),
-                 jnp.zeros(6, jnp.float32)]
-            )]
+            tvec0, avec0 = ring_rows(dt, state.phase_idx, partner0,
+                                     pol_zeros, pred_zeros, st0)
+            tvecs, avecs = [tvec0], [avec0]
         counters, state, slow_sum = quantum(state, partner0, mkey, 0)
         mpart, st = mpart0, st0
         if n_quanta >= 2:
@@ -591,13 +681,15 @@ def build_race(
             # runs its (once-per-race) full seed + 2-opt re-match here
             # as straight-line code rather than a per-quantum cond branch.
             if telemetry:
-                mpart, st, pol1 = policy_step(1, counters, mpart, st, pkey,
-                                              first=True)
+                stepped = policy_step(1, counters, mpart, st, pkey,
+                                      first=True)
+                mpart, st, pol1 = stepped[:3]
+                pred1 = stepped[3] if app_telemetry else pred_zeros
                 partner = _machine_partner_of(mpart, n)
-                tvecs.append(jnp.concatenate(
-                    [_slow_stats(dt, params, state.phase_idx, partner),
-                     pol1]
-                ))
+                tvec1, avec1 = ring_rows(dt, state.phase_idx, partner,
+                                         pol1, pred1, st)
+                tvecs.append(tvec1)
+                avecs.append(avec1)
                 counters, state, slow1 = quantum(state, partner, mkey, 1)
             else:
                 mpart, st = policy_step(1, counters, mpart, st, pkey,
@@ -610,14 +702,16 @@ def build_race(
         def body(carry, q):
             state, counters, mpart, st = carry
             if telemetry:
-                mpart, st, pol = policy_step(q, counters, mpart, st, pkey)
+                stepped = policy_step(q, counters, mpart, st, pkey)
+                mpart, st, pol = stepped[:3]
+                pred = stepped[3] if app_telemetry else pred_zeros
                 partner = _machine_partner_of(mpart, n)
-                tvec = jnp.concatenate(
-                    [_slow_stats(dt, params, state.phase_idx, partner),
-                     pol]
-                )
+                tvec, avec = ring_rows(dt, state.phase_idx, partner,
+                                       pol, pred, st)
                 counters, state, slow = quantum(state, partner, mkey, q)
-                return (state, counters, mpart, st), (slow, tvec)
+                ys = ((slow, tvec, avec) if app_telemetry
+                      else (slow, tvec))
+                return (state, counters, mpart, st), ys
             mpart, st = policy_step(q, counters, mpart, st, pkey)
             partner = _machine_partner_of(mpart, n)
             counters, state, slow = quantum(state, partner, mkey, q)
@@ -628,14 +722,22 @@ def build_race(
             jnp.arange(2, n_quanta),
         )
         if telemetry:
-            slows, tscan = ys
+            if app_telemetry:
+                slows, tscan, ascan = ys
+            else:
+                slows, tscan = ys
             tlm = jnp.concatenate([jnp.stack(tvecs), tscan], axis=0)
-            return (
+            out = [
                 state.total_retired,
                 state.total_cycles,
                 slow_sum + jnp.sum(slows),
                 tlm,
-            )
+            ]
+            if app_telemetry:
+                out.append(
+                    jnp.concatenate([jnp.stack(avecs), ascan], axis=0)
+                )
+            return tuple(out)
         slows = ys
         return (
             state.total_retired,
@@ -643,7 +745,7 @@ def build_race(
             slow_sum + jnp.sum(slows),
         )
 
-    n_out = 4 if telemetry else 3
+    n_out = 3 + int(telemetry) + int(app_telemetry)
 
     @jax.jit
     def race(dt: DeviceTables, init_mpart, init_st, mkey, pkey):
@@ -668,6 +770,7 @@ def run_quanta_scan(
     repeats: int = 1,
     transfer_guard: bool = False,
     telemetry: bool = False,
+    app_telemetry: bool = False,
 ) -> Dict[str, ThroughputResult]:
     """The scan twin of ``SMTMachine.run_quanta_multi`` — one dispatch.
 
@@ -684,16 +787,22 @@ def run_quanta_scan(
     bit-identical to a telemetry-off run and the one-dispatch
     transfer-guard contract is unchanged (the ring travels with the
     existing result fetch).
+
+    ``app_telemetry=True`` (implies ``telemetry``) additionally records
+    the per-application ring (``repro.obs.telemetry.APP_FIELDS``) and
+    attaches it as ``ThroughputResult.app_telemetry`` — same contract,
+    same single dispatch.
     """
+    telemetry = telemetry or app_telemetry
     params = machine.params
     tables = tables if tables is not None else PhaseTables.build(profiles)
     n = tables.n_apps
     p_pad = fused_pad(n)
     specs = list(policies.values())
     with obs_trace.span("scan.compile_build", n=n, quanta=n_quanta,
-                        telemetry=telemetry):
+                        telemetry=telemetry, app_telemetry=app_telemetry):
         race = build_race(tables, params, specs, n_quanta,
-                          telemetry=telemetry)
+                          telemetry=telemetry, app_telemetry=app_telemetry)
 
     init_mpart = np.stack(
         [
@@ -715,6 +824,7 @@ def run_quanta_scan(
 
     with obs_trace.span("scan.compile"):
         out = jax.block_until_ready(race(*args))  # compile + first run
+    obs_trace.dispatch_cost("scan.race", race, *args)
     walls = []
     for _ in range(max(int(repeats), 1)):
         t0 = time.perf_counter()
@@ -729,10 +839,9 @@ def run_quanta_scan(
 
     with obs_trace.span("scan.fetch"):
         fetched = tuple(np.asarray(o) for o in out)
-    if telemetry:
-        retired, cycles, slow_sum, tlm = fetched
-    else:
-        retired, cycles, slow_sum = fetched
+    retired, cycles, slow_sum = fetched[:3]
+    tlm = fetched[3] if telemetry else None
+    app = fetched[4] if app_telemetry else None
     results: Dict[str, ThroughputResult] = {}
     with obs_trace.span("scan.stats"):
         for k, name in enumerate(policies):
@@ -750,6 +859,10 @@ def run_quanta_scan(
                     TelemetryLog(CLOSED_FIELDS, tlm[k], policy=name)
                     if telemetry else None
                 ),
+                app_telemetry=(
+                    AppTelemetryLog(APP_FIELDS, app[k], policy=name)
+                    if app_telemetry else None
+                ),
             )
     return results
 
@@ -764,6 +877,7 @@ def run_quanta_multi_batched(
     repeats: int = 1,
     transfer_guard: bool = False,
     telemetry: bool = False,
+    app_telemetry: bool = False,
 ) -> Dict[str, List[ThroughputResult]]:
     """The closed race over a batch of seeds as ONE dispatch —
     ``jit``-of-``vmap``-of-:func:`build_race` over a leading seed-lane
@@ -789,6 +903,7 @@ def run_quanta_multi_batched(
     wall over ``len(seeds) * n_quanta`` — the per-scenario cost of the
     batch.
     """
+    telemetry = telemetry or app_telemetry
     params = machine.params
     tables = tables if tables is not None else PhaseTables.build(profiles)
     n = tables.n_apps
@@ -798,9 +913,10 @@ def run_quanta_multi_batched(
     S = len(seeds)
     assert S >= 1, "batched race needs at least one seed lane"
     with obs_trace.span("scan.compile_build", n=n, quanta=n_quanta,
-                        telemetry=telemetry, lanes=S):
+                        telemetry=telemetry, app_telemetry=app_telemetry,
+                        lanes=S):
         race = build_race(tables, params, specs, n_quanta,
-                          telemetry=telemetry)
+                          telemetry=telemetry, app_telemetry=app_telemetry)
         batched = jax.jit(jax.vmap(race, in_axes=(None, 0, 0, 0, 0)))
 
     init_mpart = np.stack([
@@ -830,6 +946,7 @@ def run_quanta_multi_batched(
 
     with obs_trace.span("scan.compile", lanes=S):
         out = jax.block_until_ready(batched(*args))
+    obs_trace.dispatch_cost("scan.race.batched", batched, *args)
     walls = []
     for _ in range(max(int(repeats), 1)):
         t0 = time.perf_counter()
@@ -844,10 +961,9 @@ def run_quanta_multi_batched(
 
     with obs_trace.span("scan.fetch", lanes=S):
         fetched = tuple(np.asarray(o) for o in out)
-    if telemetry:
-        retired, cycles, slow_sum, tlm = fetched
-    else:
-        retired, cycles, slow_sum = fetched
+    retired, cycles, slow_sum = fetched[:3]
+    tlm = fetched[3] if telemetry else None
+    app = fetched[4] if app_telemetry else None
     results: Dict[str, List[ThroughputResult]] = {
         name: [] for name in policies
     }
@@ -870,6 +986,11 @@ def run_quanta_multi_batched(
                         TelemetryLog(CLOSED_FIELDS, tlm[si, k],
                                      policy=name)
                         if telemetry else None
+                    ),
+                    app_telemetry=(
+                        AppTelemetryLog(APP_FIELDS, app[si, k],
+                                        policy=name)
+                        if app_telemetry else None
                     ),
                 ))
     return results

@@ -1,0 +1,478 @@
+"""Per-application accuracy observability tests (ISSUE 10).
+
+The load-bearing contract extends ISSUE 7's telemetry doctrine one
+level down: ``app_telemetry=True`` records a fixed-shape **per-app**
+ring — identity, committed pair prediction, ground-truth slowdown,
+signed residual and the ISC stack — as extra scan ``ys`` on BOTH
+engines, and stays a pure observer:
+
+* **Bit-identity** — rings on, the trajectories (IPC, retired, queue
+  depths, job logs) stay f32-bit-identical to rings-off, on the closed
+  race (odd N included), the open system (faulted runs included),
+  vmapped lanes in ``batch_sim`` and the checkpointed runner.  The
+  per-slot columns come from the same integer-barrier shadows as the
+  scalar ring — only the *reduction* was being discarded before.
+* **One dispatch** — the transfer-guard contract holds with the
+  per-app ring enabled, single and batched.
+* **Host aggregation** — ``repro.obs.accuracy`` turns a ring into
+  MAPE/bias stacks, error CCDFs and drift windows; the v2 run export
+  carries them and ``tools/obs_report.py`` renders/diffs them (v1
+  exports stay readable, but never writable or diffable).
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import isc, regression
+from repro.obs import accuracy as obs_accuracy
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.telemetry import APP_FIELDS, APP_ST_WIDTH, AppTelemetryLog
+from repro.online import ClusterSim, FaultProfile, PoissonArrivals
+from repro.online.batch_sim import run_device_sim_batched
+from repro.online.device_sim import (
+    run_device_sim,
+    run_device_sim_checkpointed,
+)
+from repro.smt import machine as mc
+from repro.smt import workloads
+from repro.smt.apps import pool_profiles
+from repro.smt.machine import PhaseTables
+from repro.smt.scan_engine import ScanPolicy
+
+
+def _toy_model(n_categories=4):
+    coeffs = np.zeros((4, 4), np.float32)
+    coeffs[isc.CAT_DI] = [0.007, 0.91, 0.004, 0.03]
+    coeffs[isc.CAT_FE] = [0.02, 1.41, 0.0, 0.0]
+    coeffs[isc.CAT_BE] = [0.0, 0.24, 1.07, 0.5]
+    coeffs[isc.CAT_HW] = [0.03, 1.22, 0.33, 0.0]
+    return regression.CategoryModel(
+        coeffs=jnp.asarray(coeffs), mse=jnp.zeros(4),
+        n_categories=n_categories,
+    )
+
+
+@pytest.fixture(scope="module")
+def machine():
+    return mc.SMTMachine(mc.MachineParams(), seed=0)
+
+
+@pytest.fixture(scope="module")
+def pool():
+    return pool_profiles()
+
+
+@pytest.fixture(scope="module")
+def model():
+    return _toy_model()
+
+
+@pytest.fixture(scope="module")
+def tables(pool):
+    return PhaseTables.build(pool)
+
+
+@pytest.fixture(scope="module")
+def spec(model):
+    return ScanPolicy(kind="synpa", method=isc.SYNPA4_R_FEBE, model=model)
+
+
+@pytest.fixture(autouse=True)
+def _trace_off():
+    yield
+    obs_trace.disable()
+    obs_trace.clear()
+
+
+def _sim(machine, pool, spec, tables, seed, rate=1.4, n_cores=4,
+         faults=None, **kw):
+    return ClusterSim(
+        machine, pool, n_cores, spec,
+        PoissonArrivals(rate=rate, n_pool=len(pool)),
+        seed=seed, target_scale=0.1, tables=tables, faults=faults,
+        engine="scan", **kw,
+    )
+
+
+def _assert_same_open(a, b):
+    np.testing.assert_array_equal(a.queue_depth, b.queue_depth)
+    np.testing.assert_array_equal(a.active, b.active)
+    np.testing.assert_array_equal(a.solo_quanta, b.solo_quanta)
+    ja = {j.job_id: (j.arrive_q, j.admit_q, j.finish_q)
+          for j in a.completed}
+    jb = {j.job_id: (j.arrive_q, j.admit_q, j.finish_q)
+          for j in b.completed}
+    assert ja == jb
+
+
+def _assert_ring_semantics(log, n_quanta):
+    """Invariants every app ring must satisfy, both engines."""
+    pred = log.series("pred_cost")
+    real = log.series("real_slowdown")
+    resid = log.series("residual")
+    part = log.series("partner_app_id")
+    valid = log.valid()
+    assert log.data.shape[0] == n_quanta
+    assert log.data.shape[2] == len(APP_FIELDS)
+    # empty cells are fully zeroed, co-run markers only on valid cells
+    assert np.all(pred[~valid] == 0) and np.all(real[~valid] == 0)
+    co = part >= 0
+    assert np.all(valid[co])
+    # residual is exactly pred - real where a prediction was committed
+    # (at f32 — the engines' arithmetic width; the log widens to f64)
+    m = pred > 0
+    np.testing.assert_array_equal(
+        resid[m].astype(np.float32),
+        pred[m].astype(np.float32) - real[m].astype(np.float32))
+    assert np.all(resid[~m] == 0)
+    assert np.all(pred[~co] == 0)
+    # the ST stack is a distribution on valid cells, zero elsewhere
+    st = np.stack([log.series(f"st_c{i}")
+                   for i in range(1, APP_ST_WIDTH + 1)], axis=-1)
+    ssum = st.sum(axis=-1)
+    assert np.allclose(ssum[valid], 1.0, atol=1e-4)
+    assert np.all(ssum[~valid] == 0)
+
+
+# --------------------------------------------------------------- schema
+class TestAppRingSchema:
+    def test_field_catalogue(self):
+        # the engines build rows in exactly this order; a reorder is a
+        # schema change and must bump OBS_SCHEMA_VERSION
+        assert APP_FIELDS[:5] == (
+            "app_id", "partner_app_id", "pred_cost", "real_slowdown",
+            "residual",
+        )
+        assert APP_FIELDS[5:] == tuple(
+            f"st_c{i}" for i in range(1, APP_ST_WIDTH + 1))
+
+    def test_log_api_roundtrip(self):
+        data = np.arange(2 * 3 * len(APP_FIELDS), dtype=np.float64)
+        data = data.reshape(2, 3, len(APP_FIELDS))
+        data[0, 1, 0] = -1.0
+        log = AppTelemetryLog(APP_FIELDS, data, policy="p")
+        assert log.quanta == 2 and log.slots == 3
+        assert log.series("app_id").shape == (2, 3)
+        assert not log.valid()[0, 1] and log.valid()[1, 2]
+        clone = AppTelemetryLog.from_dict(log.to_dict())
+        assert clone.fields == log.fields and clone.policy == "p"
+        np.testing.assert_array_equal(clone.data, log.data)
+
+
+# --------------------------------------------------------- closed engine
+class TestClosedEngine:
+    def _run(self, machine, model, profs, n_quanta=8, **kw):
+        return machine.run_quanta_multi(
+            profs,
+            {"synpa": ScanPolicy(kind="synpa", method=isc.SYNPA4_R_FEBE,
+                                 model=model),
+             "static": ScanPolicy(kind="static")},
+            n_quanta=n_quanta, seed=3, engine="scan", **kw,
+        )
+
+    def test_odd_n_bit_identity_and_semantics(self, machine, model):
+        profs = workloads.scaled_workload(18, seed=18)[:-1]  # N=17
+        off = self._run(machine, model, profs)
+        on = self._run(machine, model, profs, app_telemetry=True)
+        for name in ("synpa", "static"):
+            np.testing.assert_array_equal(off[name].ipc, on[name].ipc)
+            assert off[name].total_retired == on[name].total_retired
+            assert off[name].mean_true_slowdown == \
+                on[name].mean_true_slowdown
+            assert off[name].app_telemetry is None
+            log = on[name].app_telemetry
+            assert log is not None
+            # app_telemetry implies the scalar ring
+            assert on[name].telemetry is not None
+            _assert_ring_semantics(log, 8)
+            # closed race: every slot is always resident, app_id == slot
+            assert np.all(log.valid())
+            np.testing.assert_array_equal(
+                log.series("app_id"),
+                np.broadcast_to(np.arange(17), (8, 17)))
+            # odd N: exactly one solo slot per quantum
+            solo = (log.series("partner_app_id") < 0).sum(axis=1)
+            np.testing.assert_array_equal(solo, np.ones(8))
+        # static commits no pair predictions
+        assert np.all(on["static"].app_telemetry.series("pred_cost") == 0)
+        # synpa predicts on co-run slots from the first repartition on
+        assert (on["synpa"].app_telemetry.series("pred_cost") > 0).any()
+
+    @pytest.mark.slow
+    def test_n256_bit_identity(self, machine, model):
+        profs = workloads.scaled_workload(256, seed=256)
+        off = self._run(machine, model, profs, n_quanta=6)
+        on = self._run(machine, model, profs, n_quanta=6,
+                       app_telemetry=True)
+        for name in ("synpa", "static"):
+            np.testing.assert_array_equal(off[name].ipc, on[name].ipc)
+            assert off[name].mean_true_slowdown == \
+                on[name].mean_true_slowdown
+            _assert_ring_semantics(on[name].app_telemetry, 6)
+            # even N: no solo slots
+            assert np.all(on[name].app_telemetry.valid())
+            assert np.all(
+                on[name].app_telemetry.series("partner_app_id") >= 0)
+
+
+# ----------------------------------------------------------- open engine
+class TestOpenEngine:
+    def test_bit_identity_and_semantics(self, machine, pool, spec,
+                                        tables):
+        off = run_device_sim(
+            _sim(machine, pool, spec, tables, seed=7, rate=1.2,
+                 n_cores=8), 12)
+        on = run_device_sim(
+            _sim(machine, pool, spec, tables, seed=7, rate=1.2,
+                 n_cores=8), 12, app_telemetry=True)
+        _assert_same_open(off, on)
+        assert off.app_telemetry is None
+        log = on.app_telemetry
+        assert log is not None and on.telemetry is not None
+        assert log.data.shape == (12, 16, len(APP_FIELDS))
+        _assert_ring_semantics(log, 12)
+        # resident contexts per quantum == the active-jobs trajectory
+        np.testing.assert_array_equal(log.valid().sum(axis=1), on.active)
+        # co-run partners point at resident apps, pairwise
+        co = log.series("partner_app_id") >= 0
+        assert np.all((co.sum(axis=1) % 2) == 0)
+        assert (log.series("pred_cost") > 0).any()
+
+    def test_faulted_bit_identity(self, machine, pool, spec, tables):
+        crash = FaultProfile(fail=((3, 0), (4, 1)), recover=((8, 0),),
+                             max_retries=2)
+        off = run_device_sim(
+            _sim(machine, pool, spec, tables, seed=5, faults=crash), 12)
+        on = run_device_sim(
+            _sim(machine, pool, spec, tables, seed=5, faults=crash), 12,
+            app_telemetry=True)
+        _assert_same_open(off, on)
+        assert off.summary()["n_evicted"] == on.summary()["n_evicted"]
+        _assert_ring_semantics(on.app_telemetry, 12)
+
+    def test_transfer_guard_with_rings(self, machine, pool, spec,
+                                       tables):
+        st = run_device_sim(
+            _sim(machine, pool, spec, tables, seed=11, n_cores=8), 12,
+            transfer_guard=True, app_telemetry=True)
+        assert st.app_telemetry is not None
+
+    def test_batched_lanes_match_single_dispatch_twins(
+            self, machine, pool, spec, tables):
+        crash = FaultProfile(fail=((3, 0), (4, 1)), recover=((8, 0),),
+                             max_retries=2)
+        mk = [
+            lambda: _sim(machine, pool, spec, tables, seed=3),
+            lambda: _sim(machine, pool, spec, tables, seed=9, rate=1.8),
+            lambda: _sim(machine, pool, spec, tables, seed=5,
+                         faults=crash),
+        ]
+        batched = run_device_sim_batched(
+            [f() for f in mk], 12, transfer_guard=True,
+            app_telemetry=True)
+        for b, f in zip(batched, mk):
+            single = run_device_sim(f(), 12, app_telemetry=True)
+            _assert_same_open(b, single)
+            np.testing.assert_array_equal(b.app_telemetry.data,
+                                          single.app_telemetry.data)
+            np.testing.assert_array_equal(b.telemetry.data,
+                                          single.telemetry.data)
+        # and the batched trajectories match a rings-off batch
+        plain = run_device_sim_batched([f() for f in mk], 12)
+        for b, p in zip(batched, plain):
+            _assert_same_open(b, p)
+
+    def test_checkpointed_ring_matches_straight_run(
+            self, machine, pool, spec, tables, tmp_path):
+        straight = run_device_sim(
+            _sim(machine, pool, spec, tables, seed=7, rate=1.2), 12,
+            app_telemetry=True)
+        ck = run_device_sim_checkpointed(
+            _sim(machine, pool, spec, tables, seed=7, rate=1.2), 12, 4,
+            str(tmp_path), app_telemetry=True)
+        _assert_same_open(straight, ck)
+        np.testing.assert_array_equal(ck.app_telemetry.data,
+                                      straight.app_telemetry.data)
+
+
+# ------------------------------------------------------- host aggregation
+def _synthetic_log():
+    """A hand-built ring with known errors: two apps co-running for 4
+    quanta (pred 1.2 vs real 1.0 -> +20% for app 0; pred 0.9 vs real
+    1.0 -> -10% for app 1), a solo third app, one empty context."""
+    q, s, f = 4, 4, len(APP_FIELDS)
+    data = np.zeros((q, s, f), np.float64)
+    data[:, :, 0] = [0, 1, 2, -1]           # app ids, last ctx empty
+    data[:, 3, :] = 0.0
+    data[:, 3, 0] = -1.0
+    data[:, 0, 1] = 1                        # partners: 0 <-> 1
+    data[:, 1, 1] = 0
+    data[:, 2, 1] = -1                       # app 2 solo
+    data[:, 0, 2] = 1.2                      # pred
+    data[:, 1, 2] = 0.9
+    data[:, :3, 3] = 1.0                     # real
+    data[:, :, 4] = data[:, :, 2] - np.where(
+        data[:, :, 2] > 0, data[:, :, 3], 0.0)
+    data[:, :3, 5] = 1.0                     # st_c1 distribution
+    return AppTelemetryLog(APP_FIELDS, data, policy="toy")
+
+
+class TestAccuracy:
+    def test_error_stacks(self):
+        log = _synthetic_log()
+        ov = obs_accuracy.error_stack(log)
+        assert ov["n"] == 8                  # 2 predicted apps x 4 quanta
+        assert ov["mape"] == pytest.approx(0.15)       # (0.2 + 0.1) / 2
+        assert ov["bias"] == pytest.approx(0.05)       # (0.2 - 0.1) / 2
+        per_app = obs_accuracy.error_stack(log, by="app")
+        assert set(per_app) == {"0", "1"}    # solo app 2 never scored
+        assert per_app["0"]["mape"] == pytest.approx(0.2)
+        assert per_app["1"]["bias"] == pytest.approx(-0.1)
+        per_pair = obs_accuracy.error_stack(log, by="pair")
+        assert set(per_pair) == {"0+1"} and per_pair["0+1"]["n"] == 8
+        named = obs_accuracy.error_stack(
+            log, by="app", app_names=["alpha", "beta", "gamma"])
+        assert set(named) == {"alpha", "beta"}
+
+    def test_ccdf_and_drift(self):
+        log = _synthetic_log()
+        ccdf = obs_accuracy.error_ccdf(log, grid=(0.05, 0.15, 0.25))
+        assert ccdf["p_gt"] == [1.0, 0.5, 0.0]
+        # every window sits at MAPE 0.15; a budget above passes, one
+        # below flags every populated window
+        d_ok = obs_accuracy.drift_windows(log, window=2, budget=0.2)
+        assert d_ok["flagged"] == [] and len(d_ok["mape"]) == 2
+        d_bad = obs_accuracy.drift_windows(log, window=2, budget=0.1)
+        assert d_bad["flagged"] == [0, 1]
+        # default budget is self-referential (1.5x overall) -> no flags
+        assert obs_accuracy.drift_windows(log, window=2)["flagged"] == []
+
+    def test_empty_ring_degenerates_cleanly(self):
+        data = np.zeros((2, 2, len(APP_FIELDS)))
+        data[:, :, 0] = -1.0
+        log = AppTelemetryLog(APP_FIELDS, data)
+        assert obs_accuracy.error_stack(log) == {
+            "mape": 0.0, "bias": 0.0, "rmse": 0.0, "n": 0}
+        assert obs_accuracy.error_stack(log, by="app") == {}
+        rep = obs_accuracy.accuracy_report(log)
+        flat = obs_accuracy.report_metrics(rep)
+        assert flat["acc_n"] == 0 and flat["acc_mape"] == 0.0
+
+    def test_report_is_json_native(self):
+        rep = obs_accuracy.accuracy_report(_synthetic_log(), window=2)
+        json.dumps(rep)  # must not raise
+        flat = obs_accuracy.report_metrics(rep, prefix="x_")
+        assert flat["x_acc_mape"] == pytest.approx(0.15)
+        assert flat["x_acc_mape_worst_app"] == pytest.approx(0.2)
+        assert flat["x_acc_drift_flagged"] == 0.0
+
+
+# ------------------------------------------------- schema v2 + report tool
+class TestSchemaV2:
+    def _export(self):
+        rep = obs_accuracy.accuracy_report(_synthetic_log(), window=2)
+        return obs_metrics.export_run(
+            "v2run", metrics=obs_accuracy.report_metrics(rep),
+            accuracy={"toy": rep},
+        )
+
+    def test_v2_roundtrip(self, tmp_path):
+        path = str(tmp_path / "r.json")
+        run = self._export()
+        assert run["obs_schema_version"] == 2
+        obs_metrics.save_run(path, run)
+        back = obs_metrics.load_run(path)
+        assert back is not None
+        assert back["accuracy"]["toy"]["overall"]["n"] == 8
+        assert obs_metrics.load_run(path, write=True) is not None
+
+    def test_v1_reads_but_refuses_writes(self, tmp_path, capsys):
+        path = str(tmp_path / "v1.json")
+        run = self._export()
+        run["obs_schema_version"] = 1
+        obs_metrics.save_run(path, run)
+        assert obs_metrics.load_run(path) is not None
+        assert obs_metrics.load_run(path, write=True) is None
+        assert "re-record" in capsys.readouterr().out
+
+    def test_unknown_schema_refused_even_readonly(self, tmp_path):
+        path = str(tmp_path / "v9.json")
+        run = self._export()
+        run["obs_schema_version"] = 9
+        obs_metrics.save_run(path, run)
+        assert obs_metrics.load_run(path) is None
+
+    def test_cross_schema_diff_refused(self, tmp_path, capsys):
+        from tools.obs_report import main as report_main
+
+        a = str(tmp_path / "a.json")
+        b = str(tmp_path / "b.json")
+        run = self._export()
+        obs_metrics.save_run(b, run)
+        old = dict(run)
+        old["obs_schema_version"] = 1
+        obs_metrics.save_run(a, old)
+        # v1 still renders...
+        assert report_main([a]) == 0
+        # ...but a cross-schema diff is refused loudly
+        assert report_main(["--diff", a, b]) == 1
+        assert "schema versions differ" in capsys.readouterr().err
+
+    def test_render_and_diff_accuracy_panel(self, tmp_path, capsys):
+        from tools.obs_report import main as report_main
+
+        a = str(tmp_path / "a.json")
+        b = str(tmp_path / "b.json")
+        run = self._export()
+        obs_metrics.save_run(a, run)
+        assert report_main([a]) == 0
+        out = capsys.readouterr().out
+        assert "accuracy[toy]" in out and "MAPE 15.00%" in out
+        assert "per-app" in out and "no drift" in out
+        # a degraded re-measurement breaches the 5% accuracy tolerance
+        worse = self._export()
+        worse["metrics"]["acc_mape"] *= 1.5
+        obs_metrics.save_run(b, worse)
+        assert report_main(["--diff", a, b]) == 1
+        assert "DRIFT" in capsys.readouterr().out
+
+
+# ----------------------------------------------------- perf-history ledger
+class TestPerfHistory:
+    def _line(self, mape, us, extra=None):
+        run = obs_metrics.export_run(
+            "policy_time_n256",
+            metrics={"scan_total_median_us": us, "acc_open_mape": mape,
+                     **(extra or {})},
+        )
+        return json.dumps(run)
+
+    def test_trend_and_gate(self, tmp_path, capsys):
+        from tools.check_policy_budget import append_history
+        from tools.perf_history import main as history_main
+
+        ledger = str(tmp_path / "ledger.jsonl")
+        for mape, us in ((0.08, 900.0), (0.07, 850.0), (0.09, 2000.0)):
+            append_history(json.loads(self._line(mape, us)), path=ledger)
+        with open(ledger, "a") as f:
+            f.write("{corrupt\n")            # must be skipped, not fatal
+        assert history_main([ledger]) == 0
+        out = capsys.readouterr().out
+        assert "3 record(s)" in out and "scan_total_median_us" in out
+        # last timing (2000) > best (850) x 2.0 -> gated failure
+        assert history_main([ledger, "--fail-threshold", "2.0"]) == 1
+        # accuracy metric alone stays within 2x of its best
+        assert history_main(
+            [ledger, "--metric", "acc_open_mape",
+             "--fail-threshold", "2.0"]) == 0
+
+    def test_empty_ledger_fails_loudly(self, tmp_path):
+        from tools.perf_history import main as history_main
+
+        assert history_main([str(tmp_path / "missing.jsonl")]) == 1

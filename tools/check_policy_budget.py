@@ -32,13 +32,26 @@ retries the measurement and refuses to write a baseline that breaches
 it, and ``tests/test_obs.py`` asserts the recorded value stays inside
 the budget.
 
+Beyond timing, the guard also measures prediction *accuracy*: a small
+open churn cell per seed in ``ACC_SEEDS`` runs with the per-app rings
+on (``app_telemetry=True``) and the cross-seed overall Eq.4 MAPE is
+guarded against the recorded baseline with the tight
+``ACC_REGRESSION`` budget — accuracy carries no wall-clock jitter, so a
+breach means the policy's predictions actually got worse, not that the
+box was busy.  The whole measurement runs under ``repro.obs.trace`` so
+the baseline records its compile/steady split
+(``compile_total_ms``/``compile_spans`` next to the steady medians).
+
 Run via ``tools/run_bench_smoke.sh`` (and the slow-marked
 ``tests/test_bench_smoke.py``), so a change that quietly de-fuses the hot
 path — or breaks the scan loop back into per-quantum dispatches, or
-makes the telemetry ring expensive — cannot land without tier-1
-noticing.  ``--record`` refreshes the baseline instead of checking
-against it (use after an intentional change, on an otherwise quiet
-machine).
+makes the telemetry ring expensive, or silently degrades the pair
+predictor — cannot land without tier-1 noticing.  ``--record``
+refreshes the baseline instead of checking against it (use after an
+intentional change, on an otherwise quiet machine) and appends the
+recorded export as one line to the append-only
+``benchmarks/results/history/policy_time_n256.jsonl`` ledger, trended
+by ``tools/perf_history.py``.
 
 The measurement uses the fast-campaign models (the smoke tier's cache):
 model coefficients only steer *which* local minimum the solver walks to,
@@ -60,12 +73,27 @@ sys.path.insert(0, _ROOT)
 
 BASELINE = os.path.join(_ROOT, "benchmarks", "results",
                         "policy_time_n256.json")
+#: Append-only ledger of recorded baselines (one JSON line per
+#: ``--record``), trended by ``tools/perf_history.py``.
+HISTORY = os.path.join(_ROOT, "benchmarks", "results", "history",
+                       "policy_time_n256.jsonl")
 N_APPS = 256
 N_QUANTA = 12          # median over the horizon absorbs the compile quantum
 SCAN_REPEATS = 3       # scan: median over re-dispatches (compile excluded)
 MAX_REGRESSION = 2.0
 #: Recorded telemetry-on / telemetry-off dispatch-time ratio budget.
 TELEMETRY_BUDGET_X = 1.10
+#: Prediction-accuracy guard cell: a small open-system churn cell per
+#: seed, rings on, overall Eq.4 MAPE aggregated across seeds.
+ACC_SEEDS = (13, 17, 19)
+ACC_QUANTA = 40
+ACC_CORES = 8
+ACC_RATE = 1.5
+#: Allowed live-MAPE growth over the recorded baseline's CI upper edge.
+#: Accuracy is deterministic given the stamps (no wall-clock jitter), so
+#: the budget is much tighter than the 2x timing headroom — it exists to
+#: absorb genuine model-cache refreshes, not measurement noise.
+ACC_REGRESSION = 1.25
 
 
 def measure(record: bool = False) -> dict:
@@ -83,7 +111,9 @@ def measure(record: bool = False) -> dict:
     from benchmarks.common import get_env
     from benchmarks.online_churn import TARGET_SCALE, mean_service_quanta
     from repro.core import isc
+    from repro.obs import accuracy as obs_accuracy
     from repro.obs import metrics as obs_metrics
+    from repro.obs import trace as obs_trace
     from repro.online import (
         ClusterSim,
         FaultProfile,
@@ -133,6 +163,14 @@ def measure(record: bool = False) -> dict:
         )["synpa4-scan"]
         return res.machine_s_per_quantum * 1e6
 
+    # Trace the whole measurement: the span table gives the recorded
+    # compile/steady split (compile cost is real user-visible latency
+    # but must never leak into the steady medians the guard compares),
+    # and enabling tracing arms the dispatch-cost / jax.monitoring
+    # instants for free.
+    trace_was_on = obs_trace.enabled()
+    obs_trace.enable(clear=not trace_was_on)
+
     samples: dict = {
         "stream_median_us": [],
         "stream_mean_us": [],
@@ -173,6 +211,23 @@ def measure(record: bool = False) -> dict:
                 scan_race(telemetry=False))
             samples["scan_telemetry_median_us"].append(
                 scan_race(telemetry=True))
+    # Prediction-accuracy arm: a small open churn cell per seed with the
+    # per-app rings on; the guard metric is the cross-seed mean of each
+    # run's overall Eq.4 MAPE (deterministic given the stamps — the CI
+    # covers seed-to-seed workload spread, not clock noise).
+    acc_mapes, acc_worsts = [], []
+    for s in ACC_SEEDS:
+        cell = ClusterSim(
+            machine, pool, ACC_CORES, device_spec,
+            PoissonArrivals(rate=ACC_RATE, n_pool=len(pool)),
+            seed=s, target_scale=TARGET_SCALE, engine="scan",
+        )
+        st = cell.run(ACC_QUANTA, app_telemetry=True)
+        rep = obs_accuracy.accuracy_report(st.app_telemetry)
+        acc_mapes.append(rep["overall"]["mape"])
+        acc_worsts.append(max(
+            (v["mape"] for v in rep["per_app"].values()), default=0.0))
+
     # Point estimate stays best-of-passes (a load spike inflates one
     # pass, a real regression inflates all); the bootstrap interval over
     # the passes is what the guard compares against — a noisy baseline
@@ -190,15 +245,50 @@ def measure(record: bool = False) -> dict:
         metrics["scan_telemetry_median_us"]
         / metrics["scan_total_median_us"]
     )
+    point = float(np.mean(acc_mapes))
+    _, lo, hi = bootstrap_ci(acc_mapes, stat=np.mean)
+    metrics["acc_open_mape"] = point
+    metrics["acc_open_mape_ci_lo"] = lo
+    metrics["acc_open_mape_ci_hi"] = hi
+    metrics["acc_open_mape_worst_app"] = float(np.mean(acc_worsts))
+    # The compile/steady split: total wall spent in compile-tagged spans
+    # across the measurement (a cold persistent cache pays it, a warm one
+    # mostly skips it) next to the steady medians above.
+    bd = obs_trace.breakdown()
+    compile_rows = {k: v for k, v in bd.items() if "compile" in k}
+    metrics["compile_total_ms"] = float(
+        sum(v["total_us"] for v in compile_rows.values()) / 1e3)
+    metrics["compile_spans"] = float(
+        sum(v["count"] for v in compile_rows.values()))
+    if not trace_was_on:
+        obs_trace.disable()
     return obs_metrics.export_run(
         name="policy_time_n256",
         engine="scan",
         metrics=metrics,
         meta={"n": N_APPS, "quanta": N_QUANTA, "repeats": SCAN_REPEATS,
+              "acc_seeds": list(ACC_SEEDS), "acc_quanta": ACC_QUANTA,
               "ci": "seeded percentile bootstrap over back-to-back "
-                    "passes, stat=min"},
+                    "passes, stat=min (timings) / mean (accuracy)"},
         faults=True,
     )
+
+
+def append_history(run: dict, path: str = HISTORY) -> str:
+    """Append one JSON line for a recorded baseline to the perf ledger.
+
+    The ledger is append-only — every ``--record`` adds a line (stamps,
+    the full metric block with CI bounds, and the compile/steady split)
+    and never rewrites old ones, so ``tools/perf_history.py`` can trend
+    steady cost and prediction accuracy across the PR sequence even as
+    the baseline file itself is overwritten in place.
+    """
+    import json
+
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "a") as f:
+        f.write(json.dumps(run, sort_keys=True) + "\n")
+    return path
 
 
 def main() -> int:
@@ -220,14 +310,22 @@ def main() -> int:
             )
             return 1
         obs_metrics.save_run(BASELINE, run)
+        append_history(run)
         print(f"policy_guard: recorded baseline "
               f"{got['stream_median_us']:.0f} us/quantum (median, N={N_APPS})"
               f", scan {got['scan_total_median_us']:.0f} us/quantum, "
               f"device sim {got['device_sim_median_us']:.0f} us/quantum, "
-              f"telemetry overhead {got['telemetry_overhead_x']:.3f}x")
+              f"telemetry overhead {got['telemetry_overhead_x']:.3f}x, "
+              f"open MAPE {got['acc_open_mape']:.2%} "
+              f"(compile {got['compile_total_ms']:.0f} ms across "
+              f"{got['compile_spans']:.0f} spans); history -> "
+              f"{os.path.relpath(HISTORY, _ROOT)}")
         return 0
 
-    base_run = obs_metrics.load_run(BASELINE)
+    # The guard *diffs against* (and --record overwrites) the baseline:
+    # write path, so a schema-v1 baseline is refused with a re-record
+    # notice instead of being compared across schemas.
+    base_run = obs_metrics.load_run(BASELINE, write=True)
     if base_run is None:
         print(f"policy_guard: no usable baseline at {BASELINE} (missing, "
               "stale-stamped or pre-obs format); run with --record first",
@@ -273,8 +371,28 @@ def main() -> int:
         f"(live budget {ratio_budget:.2f}x) -> "
         f"{'OK' if ratio_ok else 'REGRESSION'}"
     )
+    # Prediction-accuracy arm: same CI-anchored machinery as the timing
+    # guards, but with the tight ACC_REGRESSION budget — MAPE carries no
+    # wall-clock jitter, so growth past the recorded CI edge means the
+    # model/policy surface actually got less accurate.
+    if "acc_open_mape" not in base:
+        print("policy_guard: baseline has no accuracy entry; run "
+              "--record to start guarding prediction error")
+        acc_ok = True
+    else:
+        anchor = max(base["acc_open_mape"],
+                     base.get("acc_open_mape_ci_hi",
+                              base["acc_open_mape"]))
+        budget = anchor * ACC_REGRESSION
+        acc_ok = got["acc_open_mape"] <= budget
+        print(
+            f"policy_guard: open-cell MAPE {got['acc_open_mape']:.2%} vs "
+            f"baseline {base['acc_open_mape']:.2%} "
+            f"(ci-hi budget {budget:.2%}) -> "
+            f"{'OK' if acc_ok else 'ACCURACY REGRESSION'}"
+        )
     return 0 if (ok and scan_ok and tlm_ok and device_ok and faults_ok
-                 and ratio_ok) else 1
+                 and ratio_ok and acc_ok) else 1
 
 
 if __name__ == "__main__":

@@ -154,6 +154,8 @@ def render(run: Dict) -> str:
                 f"  {f:<{fw}}  {sparkline(col, width=32)}  "
                 f"mean {col.mean():>10.4g}  max {col.max():>10.4g}"
             )
+    for arm, rep in (run.get("accuracy") or {}).items():
+        out.extend(_accuracy_panel(arm, rep))
     spans = run.get("spans") or []
     if spans:
         rows = span_breakdown(spans)
@@ -166,12 +168,64 @@ def render(run: Dict) -> str:
     return "\n".join(out)
 
 
+def _accuracy_panel(arm: str, rep: Dict, top: int = 10) -> List[str]:
+    """Per-app accuracy panel rows for one arm's accuracy report
+    (``repro.obs.accuracy.accuracy_report``): the overall MAPE/bias
+    stack, the worst-``top`` per-app rows, the error-CCDF tail and the
+    drift-window verdict."""
+    out: List[str] = [""]
+    ov = rep.get("overall", {})
+    out.append(
+        f"accuracy[{arm}] policy={rep.get('policy', '')!r}: "
+        f"MAPE {ov.get('mape', 0.0):.2%}  bias {ov.get('bias', 0.0):+.2%}"
+        f"  rmse {ov.get('rmse', 0.0):.4g}  n={ov.get('n', 0)}"
+    )
+    per_app = rep.get("per_app") or {}
+    if per_app:
+        rows = sorted(per_app.items(), key=lambda kv: -kv[1]["mape"])
+        shown = rows[:top]
+        aw = max(len(k) for k, _ in shown)
+        out.append(f"  per-app (worst {len(shown)} of {len(rows)}):")
+        for name, st in shown:
+            out.append(
+                f"    app {name:<{aw}}  MAPE {st['mape']:>7.2%}  "
+                f"bias {st['bias']:>+8.2%}  n={st['n']}"
+            )
+    ccdf = rep.get("ccdf") or {}
+    if ccdf.get("grid"):
+        tail = "  ".join(
+            f">{g:.0%}:{p:.2f}"
+            for g, p in zip(ccdf["grid"], ccdf["p_gt"])
+        )
+        out.append(f"  |rel err| CCDF  {tail}")
+    drift = rep.get("drift") or {}
+    if drift.get("mape") is not None:
+        flagged = drift.get("flagged", [])
+        verdict = (f"DRIFT in windows {flagged}" if flagged
+                   else "no drift")
+        out.append(
+            f"  drift (window={drift.get('window')}, budget "
+            f"{drift.get('budget', 0.0):.2%}): "
+            f"{sparkline(drift['mape'], width=32)}  {verdict}"
+        )
+    return out
+
+
 def _protocol_mismatch(base: Dict, new: Dict) -> Optional[str]:
     """Why two exports must not be diffed, or None when they may.
 
     Batched and single-lane recordings measure per-scenario cost under
     different protocols (whole-grid share vs single-dispatch median);
-    two batched recordings at different lane counts likewise."""
+    two batched recordings at different lane counts likewise.  Exports
+    at different schema versions are refused too: old-schema baselines
+    stay *readable* (render, trend) but a cross-schema diff would
+    compare runs whose recorded surface differs — re-record the
+    baseline under the current schema instead."""
+    b_schema = base.get("obs_schema_version")
+    n_schema = new.get("obs_schema_version")
+    if b_schema != n_schema:
+        return (f"schema versions differ (v{b_schema} vs v{n_schema}) — "
+                "old exports are readable but not diffable")
     b_batched = bool(base.get("batched", False))
     n_batched = bool(new.get("batched", False))
     if b_batched != n_batched:

@@ -1,0 +1,181 @@
+"""Trend and regression report over the perf-history ledger.
+
+``tools/check_policy_budget.py --record`` appends every recorded
+baseline as one JSON line to
+``benchmarks/results/history/policy_time_n256.jsonl`` (stamps, the full
+metric block with bootstrap-CI bounds, the compile/steady split).  The
+baseline *file* is overwritten in place on each record, so the ledger is
+the only place the trajectory survives: this tool renders it as a
+per-metric trend table — first / best / last / last-over-best ratio and
+a unicode sparkline — and can gate on it.
+
+``--fail-threshold R`` exits 1 when any *timing* metric's latest value
+exceeds its historical best by more than ``R``x (accuracy metrics use
+the same check; CI bound and count columns are trend-only).  That turns
+the ledger into a slow-moving regression guard complementary to the
+per-run policy budget: the budget compares against the previous record,
+the ledger catches a boiled-frog drift across many records each of
+which individually passed.
+
+Ledger lines that fail to parse (or aren't dicts with a ``metrics``
+block) are skipped with a notice, never fatal — an append-only file
+interrupted mid-line must not brick the report.
+
+Examples::
+
+    python tools/perf_history.py
+    python tools/perf_history.py --fail-threshold 2.0
+    python tools/perf_history.py path/to/other_ledger.jsonl --metric acc_open_mape
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Optional
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+
+DEFAULT_LEDGER = os.path.join(_ROOT, "benchmarks", "results", "history",
+                              "policy_time_n256.jsonl")
+
+#: Metric suffixes excluded from the trend/gate table: interval bounds
+#: and counts ride along with their parent metric.
+_SKIP_SUFFIXES = ("_ci_lo", "_ci_hi")
+
+
+def load_ledger(path: str) -> List[Dict]:
+    """Parse the ledger; bad lines are skipped with a notice."""
+    if not os.path.exists(path):
+        return []
+    rows: List[Dict] = []
+    with open(path) as f:
+        for ln, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                obj = json.loads(line)
+            except Exception:
+                print(f"# skipping unparsable ledger line {ln}",
+                      file=sys.stderr)
+                continue
+            if not isinstance(obj, dict) or "metrics" not in obj:
+                print(f"# skipping non-export ledger line {ln}",
+                      file=sys.stderr)
+                continue
+            rows.append(obj)
+    return rows
+
+
+def _is_timing(key: str) -> bool:
+    return key.endswith(("_us", "_ms", "_s", "_x")) or "_us_" in key
+
+
+def _gated(key: str) -> bool:
+    """Timing and accuracy metrics gate; bounds/counts are trend-only."""
+    if key.endswith(_SKIP_SUFFIXES):
+        return False
+    return _is_timing(key) or key.startswith("acc_")
+
+
+def trend_table(rows: List[Dict],
+                only: Optional[str] = None) -> List[Dict]:
+    """Per-metric trend rows: series, first/best/last, last/best ratio.
+
+    ``best`` is the minimum — every ledger metric (wall time, MAPE,
+    compile cost) improves downward.  Metrics missing from some records
+    trend over the records that carry them.
+    """
+    keys: List[str] = []
+    for r in rows:
+        for k in r["metrics"]:
+            if k not in keys and not k.endswith(_SKIP_SUFFIXES):
+                keys.append(k)
+    out = []
+    for k in keys:
+        if only and k != only:
+            continue
+        series = [float(r["metrics"][k]) for r in rows
+                  if k in r["metrics"]]
+        if not series:
+            continue
+        best = min(series)
+        out.append({
+            "metric": k,
+            "series": series,
+            "first": series[0],
+            "best": best,
+            "last": series[-1],
+            "ratio": (series[-1] / best) if best else float("inf"),
+            "gated": _gated(k),
+        })
+    return out
+
+
+def render(rows: List[Dict], table: List[Dict],
+           threshold: Optional[float]) -> int:
+    """Print the trend report; count of threshold breaches returned."""
+    from tools.obs_report import sparkline
+
+    first_t = rows[0].get("recorded_unix", 0)
+    last_t = rows[-1].get("recorded_unix", 0)
+    span_days = max(0.0, (last_t - first_t) / 86400.0)
+    print(f"perf history: {len(rows)} record(s) over {span_days:.1f} "
+          f"day(s), last recorded "
+          + time.strftime("%Y-%m-%d %H:%M:%S", time.localtime(last_t)))
+    width = max(len(t["metric"]) for t in table)
+    breaches = 0
+    for t in table:
+        verdict = ""
+        if threshold is not None and t["gated"]:
+            if t["ratio"] > threshold:
+                verdict = f"  REGRESSION > {threshold:.2f}x best"
+                breaches += 1
+            else:
+                verdict = "  OK"
+        print(
+            f"  {t['metric']:<{width}}  "
+            f"first {t['first']:>10.4g}  best {t['best']:>10.4g}  "
+            f"last {t['last']:>10.4g}  ({t['ratio']:>5.2f}x best)  "
+            f"{sparkline(t['series'], width=24)}{verdict}"
+        )
+    return breaches
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("ledger", nargs="?", default=DEFAULT_LEDGER,
+                    help="ledger .jsonl (default: the policy-budget one)")
+    ap.add_argument("--metric", default=None,
+                    help="trend a single metric instead of all")
+    ap.add_argument("--fail-threshold", type=float, default=None,
+                    help="exit 1 when any gated metric's last value "
+                         "exceeds its historical best by this ratio")
+    args = ap.parse_args(argv)
+
+    rows = load_ledger(args.ledger)
+    if not rows:
+        print(f"perf_history: no usable records in {args.ledger}",
+              file=sys.stderr)
+        return 1
+    table = trend_table(rows, only=args.metric)
+    if not table:
+        print(f"perf_history: metric {args.metric!r} not in the ledger",
+              file=sys.stderr)
+        return 1
+    breaches = render(rows, table, args.fail_threshold)
+    if breaches:
+        print(f"perf_history: {breaches} metric(s) regressed past the "
+              "threshold", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -20,14 +20,19 @@ python benchmarks/online_churn.py --smoke --engine scan --faults
 python benchmarks/online_churn.py --smoke --batched --seeds 2
 python benchmarks/cluster_scale.py --smoke
 python benchmarks/cluster_scale.py --smoke --engine scan
-# Telemetry arm: run both engines with the device ring + span tracing on,
-# render the run report, and diff it against the recorded baseline.  The
-# deterministic metrics get the tight 5% tolerance; wall-time metrics get
-# 4x here (single-shot run on a jittery box — check_policy_budget below
-# guards timing properly, best-of-two).
+# Telemetry + accuracy arm: run both engines with the device ring, the
+# per-app rings and span tracing on, render the run report (per-app
+# MAPE/drift panels included), and diff it against the recorded
+# baseline.  The deterministic metrics — including the per-app accuracy
+# scalars (open_acc_mape etc.), so a prediction-error regression fails
+# the smoke — get the tight 5% tolerance; wall-time metrics get 4x here
+# (single-shot run on a jittery box — check_policy_budget below guards
+# timing properly, best-of-two, plus its own noise-aware accuracy arm).
+# The live export lands in the untracked results/smoke/ directory so a
+# smoke run leaves the working tree clean.
 python benchmarks/obs_smoke.py --smoke
-python tools/obs_report.py benchmarks/results/obs_smoke.json > /dev/null
+python tools/obs_report.py benchmarks/results/smoke/obs_smoke.json > /dev/null
 python tools/obs_report.py --diff \
     benchmarks/results/obs_smoke_baseline.json \
-    benchmarks/results/obs_smoke.json --time-budget 4.0
+    benchmarks/results/smoke/obs_smoke.json --time-budget 4.0
 python tools/check_policy_budget.py
